@@ -1,0 +1,62 @@
+//! Ablation over the compression design space (DESIGN.md "ablation
+//! benches for the design choices"): the paper's THGS against the
+//! §2.1-cited alternatives and the §6 future-work extensions, at equal
+//! data/partition settings:
+//!
+//!   fedavg            dense baseline
+//!   flat              Dryden'16 global Top-k
+//!   thgs              the paper (Alg. 1)
+//!   thgs+dyn          + Eq. 2 dynamic rate
+//!   thgs+mom          + DGC momentum correction + warm-up (§6)
+//!   flat+quant4       Top-k + QSGD 4-bit stochastic quantization
+//!   stc               Sattler'19 sparse ternary compression
+//!
+//!     cargo run --release --example ablation_compression [--quick]
+//! → results/ablation.csv
+
+use fedsparse::config::Partition;
+use fedsparse::coordinator::Algorithm;
+use fedsparse::experiments::{base_config, results_dir, run_labeled, Scale};
+use fedsparse::sparse::thgs::ThgsConfig;
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_args();
+    let csv = results_dir().join("ablation.csv");
+    let _ = std::fs::remove_file(&csv);
+
+    let thgs = Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 });
+    let mut rows = Vec::new();
+
+    type Mutator = fn(&mut fedsparse::config::RunConfig);
+    let variants: Vec<(&str, Algorithm, Mutator)> = vec![
+        ("fedavg", Algorithm::FedAvg, |_| {}),
+        ("flat", Algorithm::FlatSparse { s: 0.05 }, |_| {}),
+        ("thgs", thgs, |_| {}),
+        ("thgs+dyn", thgs, |c| c.dynamic_rate = true),
+        ("thgs+mom", thgs, |c| {
+            c.momentum = 0.9;
+            c.warmup_rounds = 5;
+        }),
+        ("flat+quant4", Algorithm::FlatSparse { s: 0.05 }, |c| {
+            c.quant_bits = Some(4)
+        }),
+        ("stc", Algorithm::Stc { s: 0.05 }, |_| {}),
+    ];
+
+    for (label, alg, mutate) in variants {
+        let mut cfg = base_config("mnist_mlp", scale);
+        cfg.partition = Partition::NonIid(4);
+        cfg.algorithm = alg;
+        mutate(&mut cfg);
+        let s = run_labeled(cfg, label, &csv)?;
+        rows.push((label, s.final_accuracy, s.total_up_bytes));
+    }
+
+    println!("=== compression ablation (Non-IID-4, mnist_mlp) ===");
+    println!("{:<14} {:>10} {:>14}", "variant", "final acc", "upload bytes");
+    for (l, a, b) in &rows {
+        println!("{l:<14} {a:>10.4} {b:>14}");
+    }
+    println!("rows → {}", csv.display());
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Figure 3 reproduction (DESIGN.md E3): Non-IID-{4,6,8} × attenuation
+//! factor α ∈ {0.2, 0.5, 0.8}; contenders per the paper's legend:
+//!
+//!   solid      — FedAvg (dense)
+//!   "- spark"      — conventional flat Top-k
+//!   "- layerspares" — THGS (this paper, Alg. 1)
+//!
+//! Paper's expectation: THGS beats flat sparsification at every α, and
+//! approaches the dense curve as α → 0.8.
+//!
+//!     cargo run --release --example fig3_thgs_beta [--quick]
+//! → results/fig3.csv
+
+use fedsparse::config::Partition;
+use fedsparse::experiments::{base_config, fig3_contenders, results_dir, run_labeled, Scale};
+
+fn main() -> anyhow::Result<()> {
+    let scale = Scale::from_args();
+    let csv = results_dir().join("fig3.csv");
+    let _ = std::fs::remove_file(&csv);
+
+    let noniid: &[usize] = match scale {
+        Scale::Quick => &[4],
+        Scale::Full => &[4, 6, 8],
+    };
+    let alphas: &[f64] = match scale {
+        Scale::Quick => &[0.2, 0.8],
+        Scale::Full => &[0.2, 0.5, 0.8],
+    };
+
+    let mut rows = Vec::new();
+    for &n in noniid {
+        for &alpha in alphas {
+            for (head, alg) in fig3_contenders(alpha) {
+                // fedavg is α-independent: run once per partition
+                if head == "fedavg" && alpha != alphas[0] {
+                    continue;
+                }
+                let mut cfg = base_config("mnist_mlp", scale);
+                cfg.partition = Partition::NonIid(n);
+                cfg.algorithm = alg;
+                let label = format!("{head}-noniid{n}");
+                let s = run_labeled(cfg, &label, &csv)?;
+                rows.push((label, s.final_accuracy));
+            }
+        }
+    }
+
+    println!("=== Fig.3 summary ===");
+    for (l, a) in rows {
+        println!("{l:<28} final acc {a:.4}");
+    }
+    println!("curves → {}", csv.display());
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: train a small federated MNIST-MLP job with THGS
+//! sparsification through the public API, in under a minute.
+//!
+//!     cargo run --release --example quickstart
+
+use fedsparse::config::RunConfig;
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::sparse::thgs::ThgsConfig;
+use fedsparse::util::timer::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    // A CI-sized configuration: 20 clients over a synthetic MNIST-shaped
+    // corpus (drop real IDX files under data/mnist/ to use real MNIST).
+    let mut cfg = RunConfig::default();
+    cfg.model = "mnist_mlp".into();
+    cfg.clients = 20;
+    cfg.clients_per_round = 5;
+    cfg.train_samples = Some(4_000); // synthetic corpus cap
+    cfg.eval_samples = 1_000;
+    cfg.rounds = 30;
+    cfg.eval_every = 5;
+    cfg.algorithm = Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 });
+
+    let mut trainer = Trainer::new(cfg)?;
+    println!("training mnist_mlp ({} params) with THGS…", trainer.model_params());
+    for round in 0..trainer.cfg.rounds {
+        let out = trainer.run_round(round)?;
+        if let Some((eval_loss, acc)) = out.eval {
+            println!(
+                "round {:>3}  train_loss {:.4}  eval_loss {:.4}  acc {:.3}",
+                round, out.mean_train_loss, eval_loss, acc
+            );
+        }
+    }
+    let s = trainer.recorder.summary();
+    println!(
+        "\nfinal accuracy {:.3} | total upload {} (vs dense {})",
+        s.final_accuracy,
+        fmt_bytes(s.total_up_bytes),
+        fmt_bytes(
+            s.rounds
+                * trainer.cfg.clients_per_round as u64
+                * fedsparse::sparse::codec::dense_cost_bytes(trainer.model_params())
+        ),
+    );
+    Ok(())
+}

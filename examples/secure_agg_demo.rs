@@ -1,0 +1,104 @@
+//! Secure-aggregation walkthrough + §4 safety analysis (DESIGN.md E7):
+//!
+//! 1. full DH → pairwise masks → mask-sparsified updates → server sum,
+//!    with the §4 case census (grad-only / mask-only / both / silent);
+//! 2. the gradient-inversion probe showing reconstruction quality
+//!    collapsing as sparsity increases (§3.1's security claim);
+//! 3. the mask-exposure sweep (case-1 rate vs mask ratio k, Eq. 4).
+//!
+//!     cargo run --release --example secure_agg_demo
+
+use std::collections::HashMap;
+
+use fedsparse::attack::inversion::InversionReport;
+use fedsparse::secagg::protocol::{full_setup, SecAggConfig};
+use fedsparse::sparse::topk::threshold_for_topk_abs;
+use fedsparse::util::rng::Rng;
+use fedsparse::util::timer::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let x = 6usize;
+    let n = 100_000usize;
+    let grad_rate = 0.01;
+
+    println!("=== 1. mask-sparsified secure aggregation ({x} participants, n={n}) ===\n");
+    let cfg = SecAggConfig { mask_ratio_k: 0.5, share_keys: false, ..Default::default() };
+    let (clients, server) = full_setup(x as u32, 42, &cfg);
+    let mut rng = Rng::new(1);
+
+    let mut payloads = Vec::new();
+    let mut expect = vec![0f64; n];
+    let mut total_sparse = 0u64;
+    for c in &clients {
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.05)).collect();
+        let k = ((n as f64 * grad_rate).ceil()) as usize;
+        let delta = threshold_for_topk_abs(&g, k);
+        let keep: Vec<bool> = g.iter().map(|v| v.abs() > delta).collect();
+        let u = c.build_update(&g, &keep, 0, x);
+        let cen = u.census;
+        println!(
+            "client {}: sent {:>6}/{n} ({:.2}%)  grad-only {:>5}  mask-only {:>5}  both {:>4}  exposure {:.1}%",
+            c.id,
+            cen.transmitted(),
+            100.0 * cen.transmitted() as f64 / n as f64,
+            cen.case1_grad_only,
+            cen.case2_mask_only,
+            cen.case3_both,
+            100.0 * cen.exposure_rate()
+        );
+        for j in 0..n {
+            expect[j] += (g[j] - u.residual[j]) as f64;
+        }
+        total_sparse += u.payload.paper_cost_bytes();
+        payloads.push((c.id, u.payload));
+    }
+    let agg = server.aggregate(n, 0, &payloads, &[], &HashMap::new());
+    let max_err = (0..n).map(|j| (agg[j] as f64 - expect[j]).abs()).fold(0.0, f64::max);
+    let dense = fedsparse::sparse::codec::dense_cost_bytes(n) * x as u64;
+    println!("\nserver aggregate max|err| = {max_err:.2e} (pairwise masks cancelled exactly)");
+    println!(
+        "upload: {} masked-sparse vs {} dense secagg → {:.1}%",
+        fmt_bytes(total_sparse),
+        fmt_bytes(dense),
+        100.0 * total_sparse as f64 / dense as f64
+    );
+
+    println!("\n=== 2. gradient-inversion probe (§3.1/§4) ===\n");
+    let input: Vec<f32> = {
+        let mut r = Rng::new(7);
+        (0..784).map(|_| r.next_f32()).collect()
+    };
+    let delta: Vec<f32> = {
+        let mut r = Rng::new(8);
+        (0..10).map(|_| r.normal_f32(0.3)).collect()
+    };
+    let report = InversionReport::sweep(&input, &delta, &[1.0, 0.1, 0.01, 0.001]);
+    println!("{:>10} {:>22}", "sparsity", "reconstruction cosine");
+    for (s, q) in report.rates.iter().zip(&report.quality) {
+        println!("{s:>10} {q:>22.4}");
+    }
+    println!("(1.0 = dense gradient leaks the sample exactly; sparsified uploads degrade the attack)");
+
+    println!("\n=== 3. exposure vs mask ratio k (Eq. 4) ===\n");
+    println!("{:>6} {:>12} {:>14}", "k", "exposure %", "sent % of n");
+    let g: Vec<f32> = {
+        let mut r = Rng::new(9);
+        (0..n).map(|_| r.normal_f32(1.0)).collect()
+    };
+    let kk = (n as f64 * grad_rate).ceil() as usize;
+    let d = threshold_for_topk_abs(&g, kk);
+    let keep: Vec<bool> = g.iter().map(|v| v.abs() > d).collect();
+    for k in [0.1f64, 0.25, 0.5, 1.0, 2.0] {
+        let c2 = SecAggConfig { mask_ratio_k: k, share_keys: false, ..Default::default() };
+        let (cl, _) = full_setup(x as u32, 50, &c2);
+        let u = cl[0].build_update(&g, &keep, 0, x);
+        println!(
+            "{k:>6} {:>12.2} {:>14.2}",
+            100.0 * u.census.exposure_rate(),
+            100.0 * u.census.transmitted() as f64 / n as f64
+        );
+    }
+    println!("\nhigher k → fewer exposed grad-only positions but more transmitted mask noise:");
+    println!("the paper's condition-2 tradeoff (§3.2), tunable per deployment.");
+    Ok(())
+}

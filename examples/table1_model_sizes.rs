@@ -1,0 +1,64 @@
+//! Table 1 reproduction (DESIGN.md E4): model parameter sizes and
+//! dense update volumes, straight from the AOT manifest — plus the
+//! paper's reported numbers for comparison.
+//!
+//!     cargo run --release --example table1_model_sizes
+
+use fedsparse::models::manifest::Manifest;
+use fedsparse::sparse::codec::dense_cost_bytes;
+
+fn human(b: u64) -> String {
+    if b >= 1 << 30 {
+        format!("{:.1}G", b as f64 / (1u64 << 30) as f64)
+    } else {
+        format!("{:.2}M", b as f64 / (1u64 << 20) as f64)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    // (model, paper's reported parameter size; None = not reported)
+    let paper: &[(&str, Option<u64>)] = &[
+        ("mnist_mlp", Some(159_010)),
+        ("mnist_cnn", Some(582_026)),
+        ("cifar_mlp", Some(5_852_170)),
+        ("cifar_vgg16", Some(14_728_266)),
+        ("cifar_cnn", None),
+    ];
+
+    println!("=== Table 1: model parameter sizes and update volumes ===\n");
+    println!(
+        "{:<14} {:>12} {:>12} {:>10} {:>10}",
+        "model", "params", "paper", "update", "Δ%"
+    );
+    for (name, paper_count) in paper {
+        let Some(meta) = manifest.model(name) else {
+            println!("{name:<14} {:>12}", "(not exported)");
+            continue;
+        };
+        let ours = meta.param_count as u64;
+        let update = dense_cost_bytes(meta.param_count); // m · 64 bit (Eq. 8)
+        match paper_count {
+            Some(p) => {
+                let delta = 100.0 * (ours as f64 - *p as f64) / *p as f64;
+                println!(
+                    "{name:<14} {ours:>12} {p:>12} {:>10} {delta:>9.2}%",
+                    human(update)
+                );
+            }
+            None => println!(
+                "{name:<14} {ours:>12} {:>12} {:>10} {:>10}",
+                "—",
+                human(update),
+                "—"
+            ),
+        }
+    }
+    println!(
+        "\nupdate volume = m·64bit (paper Eq. 8; double-precision accounting).\n\
+         mnist_mlp / mnist_cnn / cifar_vgg16 match the paper EXACTLY\n\
+         (VGG16+BN: 14,714,688 conv + 8,448 BN γβ + 5,130 fc = 14,728,266).\n\
+         cifar_mlp layout is unspecified in the paper; ours is within 1%."
+    );
+    Ok(())
+}

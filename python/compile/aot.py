@@ -1,0 +1,139 @@
+"""AOT exporter — lowers L2 graphs (with inlined L1 pallas kernels) to
+HLO *text* artifacts + a manifest the rust runtime consumes.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``:
+jax ≥ 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --outdir ../artifacts [--models m1,m2] [--quick]
+
+Artifacts:
+    <model>_grad.hlo.txt   (params…, x[B], y[B]) → (loss, grads…)
+    <model>_eval.hlo.txt   (params…, x[E], y[E]) → (loss_sum, correct)
+    sparsify_<n>.hlo.txt   (g[n], thr[1]) → (sparse[n], residual[n])
+    masked_agg_<n>.hlo.txt (acc[n], c[n], m[n]) → acc'[n]
+    manifest.json          shapes / layer table / init / artifact index
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as model_mod
+from . import zoo
+from .kernels import masked_agg as magg_k
+from .kernels import sparsify as sp_k
+
+TRAIN_BATCH = 50   # paper §5: local batch size 50
+EVAL_BATCH = 250   # divides the 10k test split evenly
+KERNEL_SIZES = [1024, 16384, 131072]  # standalone L1 kernel exports
+
+DEFAULT_MODELS = ["mnist_mlp", "mnist_cnn", "cifar_cnn", "cifar_mlp", "cifar_vgg16"]
+QUICK_MODELS = ["mnist_mlp", "cifar_cnn"]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(outdir: str, fname: str, text: str) -> None:
+    path = os.path.join(outdir, fname)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {fname}  ({len(text) / 1e6:.2f} MB)", flush=True)
+
+
+def export_model(name: str, outdir: str) -> dict:
+    """Lower grad+eval for one model; return its manifest entry."""
+    t0 = time.time()
+    spec = zoo.MODELS[zoo.resolve(name)]
+
+    grad_fn, _ = model_mod.make_grad_fn(name)
+    lowered = jax.jit(grad_fn).lower(*model_mod.arg_specs(name, TRAIN_BATCH))
+    _write(outdir, f"{name}_grad.hlo.txt", to_hlo_text(lowered))
+
+    eval_fn, _ = model_mod.make_eval_fn(name)
+    lowered = jax.jit(eval_fn).lower(*model_mod.arg_specs(name, EVAL_BATCH))
+    _write(outdir, f"{name}_eval.hlo.txt", to_hlo_text(lowered))
+
+    entry = {
+        "input": spec["input"],
+        "classes": spec["classes"],
+        "params": zoo.param_specs(name),
+        "layers": zoo.layer_table(name),
+        "param_count": zoo.param_count(name),
+        "grad": f"{name}_grad.hlo.txt",
+        "eval": f"{name}_eval.hlo.txt",
+    }
+    print(f"  {name}: {entry['param_count']} params, {time.time() - t0:.1f}s")
+    return entry
+
+
+def export_kernels(outdir: str) -> dict:
+    """Standalone L1 kernel artifacts (rust↔pallas parity tests)."""
+    index = {"sparsify": {}, "masked_agg": {}, "block": sp_k.LANE_BLOCK}
+    for n in KERNEL_SIZES:
+        g = jax.ShapeDtypeStruct((n,), jnp.float32)
+        thr = jax.ShapeDtypeStruct((1,), jnp.float32)
+        lowered = jax.jit(lambda g, t: sp_k.sparsify(g, t)).lower(g, thr)
+        fname = f"sparsify_{n}.hlo.txt"
+        _write(outdir, fname, to_hlo_text(lowered))
+        index["sparsify"][str(n)] = fname
+
+        lowered = jax.jit(lambda a, c, m: magg_k.masked_agg(a, c, m)).lower(g, g, g)
+        fname = f"masked_agg_{n}.hlo.txt"
+        _write(outdir, fname, to_hlo_text(lowered))
+        index["masked_agg"][str(n)] = fname
+    return index
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--models", default=None,
+                    help="comma list; default exports the full zoo")
+    ap.add_argument("--quick", action="store_true",
+                    help="only the small models (CI-speed)")
+    args = ap.parse_args()
+
+    os.makedirs(args.outdir, exist_ok=True)
+    if args.models:
+        names = [m.strip() for m in args.models.split(",") if m.strip()]
+    elif args.quick:
+        names = QUICK_MODELS
+    else:
+        names = DEFAULT_MODELS
+
+    manifest = {
+        "version": 1,
+        "train_batch": TRAIN_BATCH,
+        "eval_batch": EVAL_BATCH,
+        "models": {},
+        "kernels": export_kernels(args.outdir),
+    }
+    for name in names:
+        print(f"exporting {name} …", flush=True)
+        manifest["models"][name] = export_model(name, args.outdir)
+
+    with open(os.path.join(args.outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['models'])} models → {args.outdir}/manifest.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,18 @@
+"""L1 Pallas kernels (build-time only).
+
+Every kernel here is lowered with ``interpret=True`` so the emitted HLO
+contains plain XLA ops runnable on the CPU PJRT plugin (real-TPU pallas
+lowering emits a Mosaic custom-call the CPU client cannot execute; see
+DESIGN.md §Hardware-Adaptation for the TPU mapping).
+
+Kernels:
+  dense       — MXU-tiled matmul + fused bias/activation (custom_vjp so
+                jax.grad differentiates through the pallas calls).
+  sparsify    — threshold-apply half of Top-k sparsification
+                (Alg. 1 lines 7-12 of the paper).
+  masked_agg  — fused masked accumulate used by the secure-aggregation
+                server sum (Eq. 5 application).
+  ref         — pure-jnp oracles for all of the above.
+"""
+
+from . import dense, masked_agg, ref, sparsify  # noqa: F401

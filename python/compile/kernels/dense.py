@@ -1,0 +1,105 @@
+"""Pallas dense-layer kernel (the model's matmul hot-spot).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel tiles the
+output into ``bm × bn`` blocks sized for the MXU systolic array
+(≤128 per side), streaming the full-K slabs of ``x`` and ``w`` through
+VMEM via BlockSpec. fp32 accumulation (``preferred_element_type``).
+Lowered with ``interpret=True`` so the exported HLO runs on CPU PJRT.
+
+``jax.grad`` cannot differentiate through ``pallas_call`` on its own, so
+``dense`` carries a ``custom_vjp`` whose backward pass is *also* built
+from the same pallas matmul kernel:
+
+    dz = dy * act'(z)        (elementwise, at L2)
+    dx = dz @ wᵀ             (pallas matmul)
+    dw = xᵀ @ dz             (pallas matmul)
+    db = Σ_batch dz          (reduction, at L2)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Hardware tile cap: one MXU side. Blocks are the largest divisor of the
+# dim ≤ this cap so every grid cell is full (no masking needed).
+MXU_TILE = 128
+
+
+def pick_block(dim: int, cap: int = MXU_TILE) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``cap``.
+
+    Keeps every pallas grid cell full-sized. All dims in the model zoo
+    are composite enough that this stays ≥ dim/8 in practice.
+    """
+    if dim <= cap:
+        return dim
+    for b in range(cap, 0, -1):
+        if dim % b == 0:
+            return b
+    return 1  # unreachable: 1 divides everything
+
+
+def _mm_kernel(x_ref, w_ref, o_ref):
+    # One (bm, K) × (K, bn) MXU slab per grid cell, f32 accumulate.
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul(x, w, interpret: bool = True):
+    """Tiled pallas matmul ``x[M,K] @ w[K,N] -> [M,N]`` (f32)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {x.shape} @ {w.shape}"
+    bm, bn = pick_block(m), pick_block(n)
+    return pl.pallas_call(
+        _mm_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w)
+
+
+def _act_fwd(z, act: str):
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "none":
+        return z
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def _act_bwd(z, dy, act: str):
+    if act == "relu":
+        return jnp.where(z > 0.0, dy, 0.0)
+    if act == "none":
+        return dy
+    raise ValueError(f"unknown activation {act!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x, w, b, act: str = "relu"):
+    """Fused dense layer ``act(x @ w + b)`` with a pallas matmul core."""
+    return _act_fwd(matmul(x, w) + b, act)
+
+
+def _dense_fwd(x, w, b, act):
+    z = matmul(x, w) + b
+    return _act_fwd(z, act), (x, w, z)
+
+
+def _dense_bwd(act, res, dy):
+    x, w, z = res
+    dz = _act_bwd(z, dy, act)
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

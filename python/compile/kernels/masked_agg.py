@@ -1,0 +1,44 @@
+"""Pallas masked-accumulate kernel (secure-aggregation server sum).
+
+Implements the hot inner loop of the server's Eq. 5 aggregation:
+
+    acc' = acc + contrib ⊙ mask
+
+where ``contrib`` is a client's decoded (masked) update and ``mask`` is
+the transmission mask ``mask_t`` (1 where the client actually sent a
+value). Fused multiply-add, bandwidth-bound; tiled like ``sparsify``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE_BLOCK = 1024
+
+
+def _masked_agg_kernel(a_ref, c_ref, m_ref, o_ref):
+    o_ref[...] = a_ref[...] + c_ref[...] * m_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def masked_agg(acc, contrib, mask, interpret: bool = True, block: int = LANE_BLOCK):
+    """Fused ``acc + contrib * mask`` over flat f32 arrays of equal length.
+
+    Length must be a multiple of ``block`` (AOT pads; rust mirrors).
+    """
+    (n,) = acc.shape
+    if contrib.shape != (n,) or mask.shape != (n,):
+        raise ValueError("masked_agg: shape mismatch")
+    if n % block != 0:
+        raise ValueError(f"masked_agg: n={n} not a multiple of block={block}")
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _masked_agg_kernel,
+        grid=(n // block,),
+        in_specs=[spec, spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(acc, contrib, mask)

@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for the L1 Pallas kernels.
+
+These define the *semantics*; the pallas kernels in ``dense.py``,
+``sparsify.py`` and ``masked_agg.py`` must agree with them to float32
+tolerance. pytest (``python/tests/test_kernel.py``) asserts the
+agreement, including hypothesis-driven shape/value sweeps.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul: ``x @ w`` with f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def dense_ref(x, w, b, act="relu"):
+    """Dense layer oracle: ``act(x @ w + b)``."""
+    z = matmul_ref(x, w) + b
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "none":
+        return z
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def sparsify_ref(g, thr):
+    """Threshold-apply oracle (Alg. 1 lines 7-12).
+
+    Keeps entries with ``|g| > thr`` and splits the rest into the
+    residual so that ``sparse + residual == g`` exactly.
+    Returns ``(sparse, residual)``.
+    """
+    keep = jnp.abs(g) > thr
+    sparse = jnp.where(keep, g, 0.0)
+    return sparse, g - sparse
+
+
+def masked_agg_ref(acc, contrib, mask):
+    """Masked accumulate oracle: ``acc + contrib * mask`` (Eq. 5 apply)."""
+    return acc + contrib * mask
+
+
+def topk_threshold_ref(g, k):
+    """Top-k threshold selection oracle: the k-th largest ``|g|``.
+
+    This is the L2 half of sparsification (the sort/partition half that
+    stays out of the pallas kernel — see DESIGN.md §Hardware-Adaptation).
+    ``k`` is clamped to ``[1, g.size]``.
+    """
+    flat = jnp.abs(jnp.ravel(g))
+    k = max(1, min(int(k), flat.shape[0]))
+    return jnp.sort(flat)[flat.shape[0] - k]

@@ -1,0 +1,71 @@
+"""Pallas threshold-sparsify kernel (Alg. 1 lines 7-12).
+
+The paper's THGS sparsification has two halves:
+
+  1. *threshold selection* — find the k-th largest ``|g|`` in a layer.
+     Sort/partition is not a TPU-friendly primitive, so this stays at
+     L2/L3 (``ref.topk_threshold_ref`` in jax; ``sparse::topk`` in rust).
+  2. *threshold application* — the O(N) sweep producing the sparse
+     update and the residual. This is bandwidth-bound elementwise work
+     and is the pallas kernel below: 1-D lanes tiled in VPU-register
+     multiples (8×128 = 1024 elements per block).
+
+Exact-split invariant: ``sparse + residual == g`` bitwise, because the
+residual is computed as ``g - sparse`` with sparse ∈ {g, 0}.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8 sublanes × 128 lanes — one VPU register tile of f32.
+LANE_BLOCK = 1024
+
+
+def _sparsify_kernel(g_ref, t_ref, s_ref, r_ref):
+    g = g_ref[...]
+    thr = t_ref[0]
+    s = jnp.where(jnp.abs(g) > thr, g, 0.0)
+    s_ref[...] = s
+    r_ref[...] = g - s
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block"))
+def sparsify(g, thr, interpret: bool = True, block: int = LANE_BLOCK):
+    """Apply threshold ``thr`` to flat ``g[n]``.
+
+    ``n`` must be a multiple of ``block`` (the AOT exporter pads layer
+    tails; rust mirrors the padding). ``thr`` is a shape-``[1]`` f32
+    array (a scalar operand would need SMEM prefetch on real TPU; a
+    [1]-ref works on both paths).
+
+    Returns ``(sparse[n], residual[n])``.
+    """
+    (n,) = g.shape
+    if n % block != 0:
+        raise ValueError(f"sparsify: n={n} not a multiple of block={block}")
+    return pl.pallas_call(
+        _sparsify_kernel,
+        grid=(n // block,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_shape=[jax.ShapeDtypeStruct((n,), jnp.float32)] * 2,
+        interpret=interpret,
+    )(g, thr)
+
+
+def sparsify_padded(g, thr, block: int = LANE_BLOCK):
+    """Pad-to-block wrapper for arbitrary-length ``g`` (test helper)."""
+    (n,) = g.shape
+    pad = (-n) % block
+    gp = jnp.pad(g, (0, pad))
+    s, r = sparsify(gp, thr, block=block)
+    return s[:n], r[:n]

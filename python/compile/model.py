@@ -1,0 +1,149 @@
+"""L2 — the paper's models as JAX fwd/bwd graphs, calling L1 kernels.
+
+Every dense layer goes through the pallas ``kernels.dense`` kernel
+(matmul fwd + matmul-based custom-vjp bwd), so the exported HLO contains
+the L1 kernel lowering inline. Convolutions use ``lax.conv`` at L2 (the
+paper's hot spots are the dense layers and the sparsify sweep; see
+DESIGN.md §Hardware-Adaptation).
+
+The two graphs exported per model:
+
+  grad_fn(params…, x, y) → (loss, grads…)     — one local SGD step's work
+  eval_fn(params…, x, y) → (loss_sum, correct) — test-set shard metrics
+
+``params…`` is the flat, manifest-ordered tuple of tensors so the rust
+runtime can feed positional PJRT arguments without pytree logic.
+"""
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import zoo
+from .kernels import dense as dense_k
+
+BN_EPS = 1e-5
+
+
+def _batchnorm(x, gamma, beta):
+    """Training-mode batch norm over N,H,W (per-channel statistics).
+
+    No running averages: federated rounds re-estimate batch statistics
+    locally, and eval reuses batch stats (standard simplification for
+    FL reproductions; affine γ/β are the trained parameters, matching
+    the paper's 14,728,266 VGG16 count).
+    """
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    xhat = (x - mean) * lax.rsqrt(var + BN_EPS)
+    return xhat * gamma + beta
+
+
+def forward(name: str, params: Sequence[jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """Run the model named ``name`` over NHWC batch ``x`` → logits."""
+    spec = zoo.MODELS[zoo.resolve(name)]
+    p = 0
+    h = x
+    for ly in spec["layers"]:
+        kind = ly["kind"]
+        if kind == "flatten":
+            h = h.reshape(h.shape[0], -1)
+        elif kind == "maxpool":
+            s = ly["size"]
+            h = lax.reduce_window(
+                h, -jnp.inf, lax.max, (1, s, s, 1), (1, s, s, 1), "VALID"
+            )
+        elif kind == "dense":
+            w, b = params[p], params[p + 1]
+            p += 2
+            h = dense_k.dense(h, w, b, ly["act"])
+        elif kind == "conv":
+            w, b = params[p], params[p + 1]
+            p += 2
+            h = lax.conv_general_dilated(
+                h, w, window_strides=(1, 1), padding=ly["pad"],
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            ) + b
+            if ly.get("bn"):
+                gamma, beta = params[p], params[p + 1]
+                p += 2
+                h = _batchnorm(h, gamma, beta)
+            if ly["act"] == "relu":
+                h = jnp.maximum(h, 0.0)
+        else:
+            raise ValueError(f"unknown layer kind {kind!r}")
+    assert p == len(params), f"{name}: used {p} of {len(params)} params"
+    return h
+
+
+def _ce_loss(logits: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Mean softmax cross-entropy with integer labels."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+    return jnp.mean(nll)
+
+
+def make_grad_fn(name: str):
+    """(params…, x, y) → (loss, *grads) — flat signature for AOT export."""
+    n_params = len(zoo.param_specs(name))
+
+    def loss_of(params: Tuple, x, y):
+        return _ce_loss(forward(name, params, x), y)
+
+    def grad_fn(*args):
+        params, x, y = args[:n_params], args[n_params], args[n_params + 1]
+        loss, grads = jax.value_and_grad(loss_of)(tuple(params), x, y)
+        return (loss, *grads)
+
+    return grad_fn, n_params
+
+
+def make_eval_fn(name: str):
+    """(params…, x, y) → (loss_sum, correct_count) over an eval shard."""
+    n_params = len(zoo.param_specs(name))
+
+    def eval_fn(*args):
+        params, x, y = args[:n_params], args[n_params], args[n_params + 1]
+        logits = forward(name, tuple(params), x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None].astype(jnp.int32), axis=-1)
+        correct = jnp.sum(
+            (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+        )
+        return jnp.sum(nll), correct
+
+    return eval_fn, n_params
+
+
+def init_params(name: str, seed: int = 0) -> List[jnp.ndarray]:
+    """Reference initializer (tests only — rust owns init at runtime)."""
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for p in zoo.param_specs(name):
+        kind = p["init"]["kind"]
+        shape = tuple(p["shape"])
+        if kind == "normal":
+            key, sub = jax.random.split(key)
+            out.append(jax.random.normal(sub, shape) * p["init"]["std"])
+        elif kind == "zeros":
+            out.append(jnp.zeros(shape))
+        elif kind == "ones":
+            out.append(jnp.ones(shape))
+        else:
+            raise ValueError(f"unknown init {kind!r}")
+    return out
+
+
+def arg_specs(name: str, batch: int):
+    """ShapeDtypeStructs for (params…, x, y) at the given batch size."""
+    spec = zoo.MODELS[zoo.resolve(name)]
+    specs = [
+        jax.ShapeDtypeStruct(tuple(p["shape"]), jnp.float32)
+        for p in zoo.param_specs(name)
+    ]
+    specs.append(jax.ShapeDtypeStruct((batch, *spec["input"]), jnp.float32))
+    specs.append(jax.ShapeDtypeStruct((batch,), jnp.int32))
+    return specs

@@ -1,0 +1,194 @@
+"""Model zoo — architecture specs shared by model.py and the manifest.
+
+Parameter counts match the paper's Table 1 where the architecture can be
+inferred exactly:
+
+  mnist_mlp   784-200-10                                  → 159,010  ✓ exact
+  mnist_cnn   conv5×5×32(valid)-pool-conv5×5×64(valid)-
+              pool-fc1024→512-fc512→10                    → 582,026  ✓ exact
+  cifar_vgg16 VGG16+BN conv stack + fc512→10              → 14,728,266 ✓ exact
+              (the +8,448 over plain VGG16 features is the BN γ/β set,
+               which pins down that the paper used the BN variant)
+  cifar_mlp   3072-1800-200-10                            → 5,893,610
+              (paper: 5,852,170; layout unspecified, ~0.7% off)
+  cifar_cnn   small CIFAR convnet — scaled stand-in for CI-speed runs
+              (not in the paper; documented in DESIGN.md)
+
+A model is a list of layer dicts. Layer kinds:
+  {"kind": "dense",   "in": I, "out": O, "act": "relu"|"none"}
+  {"kind": "conv",    "kh":, "kw":, "cin":, "cout":, "pad": "SAME"|"VALID",
+                      "act": "relu"|"none", "bn": bool}
+  {"kind": "maxpool", "size": 2}
+  {"kind": "flatten"}
+Dense/conv layers carry trainable params; THGS treats each such layer as
+one sparsification group (manifest "layers" table).
+"""
+
+from typing import Dict, List
+
+
+def _dense(i, o, act):
+    return {"kind": "dense", "in": i, "out": o, "act": act}
+
+
+def _conv(cin, cout, k=3, pad="SAME", act="relu", bn=False):
+    return {
+        "kind": "conv", "kh": k, "kw": k, "cin": cin, "cout": cout,
+        "pad": pad, "act": act, "bn": bn,
+    }
+
+
+def _pool():
+    return {"kind": "maxpool", "size": 2}
+
+
+def _flat():
+    return {"kind": "flatten"}
+
+
+def _vgg16_layers() -> List[dict]:
+    cfg = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+           512, 512, 512, "M", 512, 512, 512, "M"]
+    layers: List[dict] = []
+    cin = 3
+    for v in cfg:
+        if v == "M":
+            layers.append(_pool())
+        else:
+            layers.append(_conv(cin, v, k=3, pad="SAME", act="relu", bn=True))
+            cin = v
+    layers.append(_flat())          # 1×1×512 after five pools on 32×32
+    layers.append(_dense(512, 10, "none"))
+    return layers
+
+
+MODELS: Dict[str, dict] = {
+    "mnist_mlp": {
+        "input": [28, 28, 1],
+        "classes": 10,
+        "layers": [
+            _flat(),
+            _dense(784, 200, "relu"),
+            _dense(200, 10, "none"),
+        ],
+    },
+    "mnist_cnn": {
+        "input": [28, 28, 1],
+        "classes": 10,
+        "layers": [
+            _conv(1, 32, k=5, pad="VALID", act="relu"),
+            _pool(),
+            _conv(32, 64, k=5, pad="VALID", act="relu"),
+            _pool(),
+            _flat(),
+            _dense(1024, 512, "relu"),
+            _dense(512, 10, "none"),
+        ],
+    },
+    "cifar_mlp": {
+        "input": [32, 32, 3],
+        "classes": 10,
+        "layers": [
+            _flat(),
+            _dense(3072, 1800, "relu"),
+            _dense(1800, 200, "relu"),
+            _dense(200, 10, "none"),
+        ],
+    },
+    "cifar_cnn": {
+        "input": [32, 32, 3],
+        "classes": 10,
+        "layers": [
+            _conv(3, 16, k=3, pad="SAME", act="relu"),
+            _pool(),
+            _conv(16, 32, k=3, pad="SAME", act="relu"),
+            _pool(),
+            _flat(),
+            _dense(2048, 64, "relu"),
+            _dense(64, 10, "none"),
+        ],
+    },
+    "cifar_vgg16": {
+        "input": [32, 32, 3],
+        "classes": 10,
+        "layers": _vgg16_layers(),
+    },
+}
+
+# fashion-MNIST uses the MNIST architectures verbatim (paper Table 1
+# lists identical parameter sizes); only the dataset differs, which is a
+# rust-side concern. The aliases keep experiment configs readable.
+MODEL_ALIASES = {"fmnist_mlp": "mnist_mlp", "fmnist_cnn": "mnist_cnn"}
+
+
+def resolve(name: str) -> str:
+    return MODEL_ALIASES.get(name, name)
+
+
+def param_specs(name: str) -> List[dict]:
+    """Flat list of parameter tensors for a model, in execution order.
+
+    Each entry: name, shape, init spec ({kind, std}) and the index of
+    the network layer it belongs to (THGS grouping).
+    """
+    spec = MODELS[resolve(name)]
+    out: List[dict] = []
+    layer_idx = 0
+    for ly in spec["layers"]:
+        if ly["kind"] == "dense":
+            fan_in = ly["in"]
+            std = (2.0 / fan_in) ** 0.5 if ly["act"] == "relu" else (1.0 / fan_in) ** 0.5
+            out.append({
+                "name": f"layer{layer_idx}/w", "shape": [ly["in"], ly["out"]],
+                "init": {"kind": "normal", "std": std}, "layer": layer_idx,
+            })
+            out.append({
+                "name": f"layer{layer_idx}/b", "shape": [ly["out"]],
+                "init": {"kind": "zeros", "std": 0.0}, "layer": layer_idx,
+            })
+            layer_idx += 1
+        elif ly["kind"] == "conv":
+            fan_in = ly["kh"] * ly["kw"] * ly["cin"]
+            std = (2.0 / fan_in) ** 0.5
+            out.append({
+                "name": f"layer{layer_idx}/w",
+                "shape": [ly["kh"], ly["kw"], ly["cin"], ly["cout"]],
+                "init": {"kind": "normal", "std": std}, "layer": layer_idx,
+            })
+            out.append({
+                "name": f"layer{layer_idx}/b", "shape": [ly["cout"]],
+                "init": {"kind": "zeros", "std": 0.0}, "layer": layer_idx,
+            })
+            if ly.get("bn"):
+                out.append({
+                    "name": f"layer{layer_idx}/gamma", "shape": [ly["cout"]],
+                    "init": {"kind": "ones", "std": 0.0}, "layer": layer_idx,
+                })
+                out.append({
+                    "name": f"layer{layer_idx}/beta", "shape": [ly["cout"]],
+                    "init": {"kind": "zeros", "std": 0.0}, "layer": layer_idx,
+                })
+            layer_idx += 1
+    return out
+
+
+def param_count(name: str) -> int:
+    total = 0
+    for p in param_specs(name):
+        n = 1
+        for d in p["shape"]:
+            n *= d
+        total += n
+    return total
+
+
+def layer_table(name: str) -> List[dict]:
+    """THGS layer groups: for each network layer, the param indices."""
+    specs = param_specs(name)
+    groups: Dict[int, List[int]] = {}
+    for i, p in enumerate(specs):
+        groups.setdefault(p["layer"], []).append(i)
+    return [
+        {"name": f"layer{k}", "params": v}
+        for k, v in sorted(groups.items())
+    ]

@@ -1,0 +1,98 @@
+"""AOT exporter tests: HLO text validity, manifest schema, kernel
+artifacts — the build-time half of the interchange contract the rust
+runtime depends on (rust/tests/integration.rs covers the load half)."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as model_mod, zoo
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    return str(d)
+
+
+def test_to_hlo_text_produces_parseable_module():
+    fn, _ = model_mod.make_grad_fn("mnist_mlp")
+    lowered = jax.jit(fn).lower(*model_mod.arg_specs("mnist_mlp", 4))
+    text = aot.to_hlo_text(lowered)
+    # HLO text invariants the rust-side parser relies on
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    assert "f32[" in text
+    # return_tuple=True → root is a tuple of (loss, grads…)
+    assert "tuple(" in text or ") tuple" in text or "(f32[]" in text
+
+
+def test_export_model_writes_artifacts_and_entry(outdir):
+    entry = aot.export_model("mnist_mlp", outdir)
+    assert entry["param_count"] == 159_010
+    assert os.path.exists(os.path.join(outdir, entry["grad"]))
+    assert os.path.exists(os.path.join(outdir, entry["eval"]))
+    # layer table covers all params
+    covered = [i for ly in entry["layers"] for i in ly["params"]]
+    assert sorted(covered) == list(range(len(entry["params"])))
+    # init specs carry everything rust init needs
+    for p in entry["params"]:
+        assert p["init"]["kind"] in ("normal", "zeros", "ones")
+        assert all(d > 0 for d in p["shape"])
+
+
+def test_export_kernels_all_sizes(outdir):
+    index = aot.export_kernels(outdir)
+    assert index["block"] == 1024
+    for n in aot.KERNEL_SIZES:
+        assert os.path.exists(os.path.join(outdir, index["sparsify"][str(n)]))
+        assert os.path.exists(os.path.join(outdir, index["masked_agg"][str(n)]))
+
+
+def test_manifest_json_schema(outdir):
+    # emulate main() for one quick model
+    manifest = {
+        "version": 1,
+        "train_batch": aot.TRAIN_BATCH,
+        "eval_batch": aot.EVAL_BATCH,
+        "models": {"mnist_mlp": aot.export_model("mnist_mlp", outdir)},
+        "kernels": aot.export_kernels(outdir),
+    }
+    path = os.path.join(outdir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f)
+    loaded = json.load(open(path))
+    assert loaded["train_batch"] == 50  # paper batch size
+    assert loaded["models"]["mnist_mlp"]["classes"] == 10
+
+
+def test_grad_eval_batch_sizes_fixed():
+    # the rust runtime relies on these exact shapes
+    specs = model_mod.arg_specs("mnist_mlp", aot.TRAIN_BATCH)
+    assert specs[-2].shape == (50, 28, 28, 1)
+    specs = model_mod.arg_specs("mnist_mlp", aot.EVAL_BATCH)
+    assert specs[-2].shape == (250, 28, 28, 1)
+
+
+def test_exported_grad_matches_direct_execution(outdir):
+    """The lowered artifact computes the same numbers as direct jax."""
+    fn, n_params = model_mod.make_grad_fn("mnist_mlp")
+    params = model_mod.init_params("mnist_mlp", seed=0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (aot.TRAIN_BATCH, 28, 28, 1))
+    y = jax.random.randint(jax.random.PRNGKey(2), (aot.TRAIN_BATCH,), 0, 10)
+
+    direct = fn(*params, x, y)
+    compiled = jax.jit(fn)(*params, x, y)
+    assert jnp.allclose(direct[0], compiled[0], rtol=1e-5, atol=1e-5)
+    for d, c in zip(direct[1:], compiled[1:]):
+        assert jnp.allclose(d, c, rtol=1e-4, atol=1e-4)
+
+
+def test_default_zoo_covers_paper_models():
+    for name in ["mnist_mlp", "mnist_cnn", "cifar_mlp", "cifar_vgg16"]:
+        assert name in aot.DEFAULT_MODELS
+    for name in aot.DEFAULT_MODELS:
+        assert zoo.resolve(name) in zoo.MODELS

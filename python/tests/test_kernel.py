@@ -1,0 +1,219 @@
+"""L1 kernel correctness: pallas vs pure-jnp oracle (ref.py).
+
+This is the core correctness signal for the compute layer. Includes
+hypothesis sweeps over shapes/values per the repro brief.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense as dense_k
+from compile.kernels import masked_agg as magg_k
+from compile.kernels import ref
+from compile.kernels import sparsify as sp_k
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------- matmul
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (50, 784, 200),   # mnist_mlp layer 1 fwd
+        (50, 200, 10),    # mnist_mlp layer 2 fwd
+        (200, 50, 784),   # its dw transpose shapes
+        (50, 1024, 512),  # mnist_cnn fc1
+        (50, 3072, 1800), # cifar_mlp fc1
+        (1, 128, 128),
+        (7, 11, 13),      # primes: exercises block fallback to full dim
+    ],
+)
+def test_matmul_matches_ref(m, k, n):
+    x = _rand(1, (m, k))
+    w = _rand(2, (k, n))
+    got = dense_k.matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_pick_block_divides_and_caps():
+    for dim in [1, 2, 10, 50, 128, 200, 250, 512, 784, 1024, 1800, 3072]:
+        b = dense_k.pick_block(dim)
+        assert dim % b == 0
+        assert b <= max(dense_k.MXU_TILE, dim if dim <= dense_k.MXU_TILE else 0) or b <= dense_k.MXU_TILE
+
+
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=25, deadline=None)
+def test_matmul_hypothesis_shapes(m, k, n, seed):
+    x = _rand(seed, (m, k))
+    w = _rand(seed + 1, (k, n))
+    np.testing.assert_allclose(
+        dense_k.matmul(x, w), ref.matmul_ref(x, w), rtol=2e-5, atol=2e-4
+    )
+
+
+# ----------------------------------------------------------------- dense
+
+@pytest.mark.parametrize("act", ["relu", "none"])
+def test_dense_fwd_matches_ref(act):
+    x = _rand(3, (50, 784))
+    w = _rand(4, (784, 200), 0.05)
+    b = _rand(5, (200,), 0.1)
+    got = dense_k.dense(x, w, b, act)
+    want = ref.dense_ref(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("act", ["relu", "none"])
+def test_dense_grad_matches_autodiff_of_ref(act):
+    x = _rand(6, (20, 64))
+    w = _rand(7, (64, 32), 0.1)
+    b = _rand(8, (32,), 0.1)
+
+    def loss_pallas(w, b):
+        return jnp.sum(dense_k.dense(x, w, b, act) ** 2)
+
+    def loss_ref(w, b):
+        return jnp.sum(ref.dense_ref(x, w, b, act) ** 2)
+
+    gw, gb = jax.grad(loss_pallas, argnums=(0, 1))(w, b)
+    gw_r, gb_r = jax.grad(loss_ref, argnums=(0, 1))(w, b)
+    np.testing.assert_allclose(gw, gw_r, rtol=2e-4, atol=2e-3)
+    np.testing.assert_allclose(gb, gb_r, rtol=2e-4, atol=2e-3)
+
+
+def test_dense_grad_wrt_input():
+    x = _rand(9, (8, 16))
+    w = _rand(10, (16, 12), 0.2)
+    b = jnp.zeros((12,))
+    gx = jax.grad(lambda x: jnp.sum(dense_k.dense(x, w, b, "relu") ** 2))(x)
+    gx_r = jax.grad(lambda x: jnp.sum(ref.dense_ref(x, w, b, "relu") ** 2))(x)
+    np.testing.assert_allclose(gx, gx_r, rtol=2e-4, atol=2e-3)
+
+
+def test_dense_jit_composes():
+    x = _rand(11, (10, 32))
+    w = _rand(12, (32, 10), 0.2)
+    b = jnp.zeros((10,))
+    f = jax.jit(lambda x: dense_k.dense(x, w, b, "relu"))
+    np.testing.assert_allclose(f(x), ref.dense_ref(x, w, b, "relu"), rtol=2e-5, atol=2e-4)
+
+
+# -------------------------------------------------------------- sparsify
+
+def test_sparsify_matches_ref_exact():
+    g = _rand(13, (4096,))
+    thr = jnp.array([0.8], jnp.float32)
+    s, r = sp_k.sparsify(g, thr)
+    s_r, r_r = ref.sparsify_ref(g, thr[0])
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_r))
+
+
+def test_sparsify_exact_split_invariant():
+    g = _rand(14, (2048,), 3.0)
+    thr = jnp.array([1.5], jnp.float32)
+    s, r = sp_k.sparsify(g, thr)
+    # bitwise: sparse + residual reconstructs g, and supports are disjoint
+    np.testing.assert_array_equal(np.asarray(s + r), np.asarray(g))
+    assert not np.any((np.asarray(s) != 0) & (np.asarray(r) != 0))
+
+
+def test_sparsify_threshold_zero_keeps_all_nonzero():
+    g = _rand(15, (1024,))
+    s, r = sp_k.sparsify(g, jnp.array([0.0], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(g))
+    np.testing.assert_array_equal(np.asarray(r), np.zeros_like(g))
+
+
+def test_sparsify_threshold_inf_keeps_none():
+    g = _rand(16, (1024,))
+    s, r = sp_k.sparsify(g, jnp.array([np.inf], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(s), np.zeros_like(g))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(g))
+
+
+def test_sparsify_rejects_unpadded():
+    with pytest.raises(ValueError):
+        sp_k.sparsify(jnp.zeros((1000,)), jnp.array([1.0]))
+
+
+def test_sparsify_padded_wrapper():
+    g = _rand(17, (1000,))
+    thr = jnp.array([0.5], jnp.float32)
+    s, r = sp_k.sparsify_padded(g, thr)
+    s_r, r_r = ref.sparsify_ref(g, thr[0])
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_r))
+
+
+@given(
+    n_blocks=st.integers(1, 8),
+    thr=st.floats(0.0, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_sparsify_hypothesis(n_blocks, thr, seed):
+    g = _rand(seed, (n_blocks * sp_k.LANE_BLOCK,), 2.0)
+    t = jnp.array([thr], jnp.float32)
+    s, r = sp_k.sparsify(g, t)
+    s_r, r_r = ref.sparsify_ref(g, t[0])
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(r), np.asarray(r_r))
+
+
+def test_topk_threshold_ref_selects_kth():
+    g = jnp.array([0.1, -5.0, 2.0, -0.3, 4.0, 1.0, -2.5, 0.0])
+    # |g| sorted desc: 5, 4, 2.5, 2, 1, .3, .1, 0
+    assert float(ref.topk_threshold_ref(g, 1)) == 5.0
+    assert float(ref.topk_threshold_ref(g, 3)) == 2.5
+    assert float(ref.topk_threshold_ref(g, 8)) == 0.0
+
+
+# ------------------------------------------------------------ masked_agg
+
+def test_masked_agg_matches_ref():
+    acc = _rand(18, (2048,))
+    c = _rand(19, (2048,))
+    m = (jax.random.uniform(jax.random.PRNGKey(20), (2048,)) > 0.5).astype(jnp.float32)
+    got = magg_k.masked_agg(acc, c, m)
+    want = ref.masked_agg_ref(acc, c, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_masked_agg_zero_mask_is_identity():
+    acc = _rand(21, (1024,))
+    c = _rand(22, (1024,))
+    got = magg_k.masked_agg(acc, c, jnp.zeros((1024,)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(acc))
+
+
+def test_masked_agg_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        magg_k.masked_agg(jnp.zeros((1024,)), jnp.zeros((1024,)), jnp.zeros((2048,)))
+
+
+@given(n_blocks=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_masked_agg_hypothesis(n_blocks, seed):
+    n = n_blocks * magg_k.LANE_BLOCK
+    acc = _rand(seed, (n,))
+    c = _rand(seed + 1, (n,))
+    m = (jax.random.uniform(jax.random.PRNGKey(seed + 2), (n,)) > 0.3).astype(jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(magg_k.masked_agg(acc, c, m)),
+        np.asarray(ref.masked_agg_ref(acc, c, m)),
+        rtol=1e-6, atol=1e-6,
+    )

@@ -1,0 +1,58 @@
+//! Sparse codec benchmarks (Eq. 6 wire path): encode / decode /
+//! scatter-add / deflate, at Fig.1 sparsity rates over the MNIST-MLP
+//! update size.
+
+use fedsparse::sparse::codec::SparseVec;
+use fedsparse::util::bench::{black_box, Bench};
+use fedsparse::util::rng::Rng;
+
+fn sparse_update(seed: u64, n: usize, s: f64) -> SparseVec {
+    let mut rng = Rng::new(seed);
+    let mut dense = vec![0f32; n];
+    let k = (n as f64 * s) as usize;
+    for _ in 0..k {
+        let i = rng.below(n as u64) as usize;
+        dense[i] = rng.normal_f32(0.05);
+    }
+    SparseVec::from_dense(&dense)
+}
+
+fn main() {
+    let mut b = Bench::new("codec");
+    let n = 159_010usize;
+
+    for s in [0.1f64, 0.01, 0.001] {
+        let sv = sparse_update(1, n, s);
+        let nnz = sv.nnz() as u64;
+        b.bench_throughput(&format!("encode/s{s}"), nnz, || {
+            black_box(sv.encode());
+        });
+        let bytes = sv.encode();
+        b.bench_throughput(&format!("decode/s{s}"), nnz, || {
+            black_box(SparseVec::decode(&bytes).unwrap());
+        });
+        b.bench_throughput(&format!("encode_deflate/s{s}"), nnz, || {
+            black_box(sv.encode_compressed());
+        });
+        let mut acc = vec![0f32; n];
+        b.bench_throughput(&format!("scatter_add/s{s}"), nnz, || {
+            sv.add_into(&mut acc);
+            black_box(&acc);
+        });
+        println!(
+            "codec/s{s}: nnz={} wire={}B paper={}B deflate={}B",
+            sv.nnz(),
+            bytes.len(),
+            sv.paper_cost_bytes(),
+            sv.encode_compressed().len()
+        );
+    }
+
+    // dense baseline scatter for contrast
+    let dense = sparse_update(2, n, 1.0);
+    b.bench_throughput("from_dense/full", n as u64, || {
+        black_box(SparseVec::from_dense(&dense.to_dense()));
+    });
+
+    b.finish();
+}

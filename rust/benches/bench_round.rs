@@ -1,0 +1,71 @@
+//! End-to-end round latency per algorithm (paper Table 2's time
+//! dimension): one full federated round — local training through the
+//! PJRT grad artifact, sparsify, (secure) encode, aggregate — for each
+//! contender. Needs `make artifacts`.
+
+use std::path::PathBuf;
+
+use fedsparse::config::RunConfig;
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::sparse::thgs::ThgsConfig;
+use fedsparse::util::bench::{black_box, Bench};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn cfg_for(alg: Algorithm, secure: bool, dir: &PathBuf) -> RunConfig {
+    let mut cfg = RunConfig::smoke("mnist_mlp");
+    cfg.artifacts_dir = dir.clone();
+    cfg.data_dir = None;
+    cfg.rounds = 1_000_000; // bench drives rounds manually
+    cfg.eval_every = u64::MAX; // no eval inside the measured round
+    cfg.clients = 20;
+    cfg.clients_per_round = 10; // paper: 10 clients per round
+    cfg.local_iters = 5;
+    // single-core testbed: extra workers only add scheduling overhead
+    cfg.exec_workers = 2;
+    cfg.client_workers = 2;
+    cfg.algorithm = alg;
+    cfg.secure = secure;
+    cfg
+}
+
+fn main() {
+    let Some(dir) = artifacts() else {
+        eprintln!("bench_round: artifacts missing — run `make artifacts` first");
+        return;
+    };
+    let mut b = Bench::new("round");
+
+    let contenders: Vec<(&str, Algorithm, bool)> = vec![
+        ("fedavg", Algorithm::FedAvg, false),
+        ("fedprox", Algorithm::FedProx { mu: 0.01 }, false),
+        ("flat_s0.01", Algorithm::FlatSparse { s: 0.01 }, false),
+        (
+            "thgs",
+            Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 }),
+            false,
+        ),
+        (
+            "thgs_secure",
+            Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 }),
+            true,
+        ),
+    ];
+
+    for (label, alg, secure) in contenders {
+        let mut trainer = Trainer::new(cfg_for(alg, secure, &dir)).unwrap();
+        let mut round = 0u64;
+        // warm the executable cache before measuring
+        trainer.run_round(round).unwrap();
+        round += 1;
+        b.bench(&format!("mnist_mlp/{label}"), || {
+            black_box(trainer.run_round(round).unwrap());
+            round += 1;
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,63 @@
+//! Secure-aggregation benchmarks (§3.2 costs): DH setup, mask
+//! expansion, sparse-mask build, masked-update construction and server
+//! aggregation, at the paper's MNIST-MLP size.
+
+use std::collections::HashMap;
+
+use fedsparse::secagg::mask::MaskRange;
+use fedsparse::secagg::protocol::{full_setup, SecAggConfig};
+use fedsparse::sparse::topk::threshold_for_topk_abs;
+use fedsparse::util::bench::{black_box, Bench};
+use fedsparse::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("secagg");
+    let n = 159_010usize; // mnist_mlp
+    let x = 10usize; // paper: 10 clients per round
+
+    // one-time setup cost (toy group; full RFC group = `full_dh_setup`)
+    b.bench("setup/toy_dh/10clients", || {
+        let cfg = SecAggConfig { share_keys: false, ..Default::default() };
+        black_box(full_setup(10, 1, &cfg));
+    });
+    b.bench("setup/rfc3526_dh/3clients", || {
+        let cfg = SecAggConfig { full_dh: true, share_keys: false, ..Default::default() };
+        black_box(full_setup(3, 1, &cfg));
+    });
+
+    let cfg = SecAggConfig { mask_ratio_k: 0.5, share_keys: false, ..Default::default() };
+    let (clients, server) = full_setup(x as u32, 2, &cfg);
+
+    // dense mask expansion (the Bonawitz baseline per-round cost)
+    let masker = clients[0].masker_for(&(1..x as u32).collect::<Vec<_>>());
+    b.bench_throughput("mask/dense_combined/159k", n as u64, || {
+        black_box(masker.combined_mask(3, n));
+    });
+
+    // sparse mask expansion (the paper's Alg. 2 path)
+    let sigma = MaskRange::default().sigma(0.5, x);
+    b.bench_throughput("mask/sparse_combined/159k", n as u64, || {
+        black_box(masker.sparse_combined_mask(3, n, sigma));
+    });
+
+    // full client-side masked update
+    let mut rng = Rng::new(3);
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.05)).collect();
+    let k = n / 100;
+    let d = threshold_for_topk_abs(&g, k);
+    let keep: Vec<bool> = g.iter().map(|v| v.abs() > d).collect();
+    b.bench_throughput("client/build_update/159k", n as u64, || {
+        black_box(clients[0].build_update(&g, &keep, 5, x));
+    });
+
+    // server aggregation of x masked payloads
+    let payloads: Vec<_> = clients
+        .iter()
+        .map(|c| (c.id, c.build_update(&g, &keep, 7, x).payload))
+        .collect();
+    b.bench_throughput("server/aggregate/10x159k", (n * x) as u64, || {
+        black_box(server.aggregate(n, 7, &payloads, &[], &HashMap::new()));
+    });
+
+    b.finish();
+}

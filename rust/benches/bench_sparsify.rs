@@ -1,0 +1,61 @@
+//! Sparsification hot-path benchmarks (per paper Table 1/2 model
+//! sizes): flat Top-k, THGS, threshold application, and the Pallas
+//! kernel offload path for comparison.
+//!
+//!     cargo bench --bench bench_sparsify
+//!     FEDSPARSE_BENCH_QUICK=1 cargo bench …   (CI-speed)
+
+use fedsparse::sparse::flat::{apply_threshold, flat_topk_sparsify};
+use fedsparse::sparse::thgs::{thgs_sparsify, ThgsConfig};
+use fedsparse::sparse::topk::threshold_for_topk_abs;
+use fedsparse::util::bench::{black_box, Bench};
+use fedsparse::util::rng::Rng;
+
+fn grad(seed: u64, n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.normal_f32(0.05)).collect()
+}
+
+/// mnist_mlp layer spans (784×200+200, 200×10+10).
+fn mlp_spans() -> Vec<(usize, usize)> {
+    vec![(0, 157_000), (157_000, 2_010)]
+}
+
+fn main() {
+    let mut b = Bench::new("sparsify");
+
+    // paper model sizes: MLP 159k, CNN 582k, CIFAR-MLP 5.85M
+    for (label, n) in [("mlp159k", 159_010usize), ("cnn582k", 582_026), ("cifar5.9M", 5_893_610)] {
+        let g = grad(1, n);
+        b.bench_throughput(&format!("flat_topk/s0.01/{label}"), n as u64, || {
+            black_box(flat_topk_sparsify(&g, 0.01));
+        });
+    }
+
+    // THGS vs flat at the same model (the paper's contribution vs baseline)
+    let g = grad(2, 159_010);
+    let spans = mlp_spans();
+    let cfg = ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 };
+    b.bench_throughput("thgs/mlp159k", 159_010, || {
+        black_box(thgs_sparsify(&g, &spans, &cfg));
+    });
+
+    // split the two halves: selection vs application
+    b.bench_throughput("topk_select/mlp159k", 159_010, || {
+        black_box(threshold_for_topk_abs(&g, 1_590));
+    });
+    let thr = threshold_for_topk_abs(&g, 1_590);
+    b.bench_throughput("apply_threshold/mlp159k", 159_010, || {
+        black_box(apply_threshold(&g, thr));
+    });
+
+    // sparsity-rate sweep (Fig. 1 rates)
+    let g = grad(3, 582_026);
+    for s in [0.1f64, 0.01, 0.001] {
+        b.bench_throughput(&format!("flat_topk/cnn582k/s{s}"), 582_026, || {
+            black_box(flat_topk_sparsify(&g, s));
+        });
+    }
+
+    b.finish();
+}

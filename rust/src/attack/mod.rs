@@ -1,0 +1,6 @@
+//! Gradient-inversion attack harness — empirical support for the
+//! paper's §4 safety analysis (DESIGN.md S24).
+
+pub mod inversion;
+
+pub use inversion::{reconstruct_from_dense_grad, reconstruction_quality, InversionReport};

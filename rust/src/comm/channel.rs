@@ -1,0 +1,87 @@
+//! Bandwidth/latency network model — turns the byte ledger into the
+//! simulated wall-clock argument of §5.1 ("in the same network
+//! environment, the time required to complete a round of sparse
+//! updates is much smaller").
+//!
+//! Default profile mirrors the paper's asymmetric-uplink observation
+//! ("upload bandwidth of the device is generally far less than the
+//! download bandwidth"): 10 Mbps up / 50 Mbps down / 30 ms RTT.
+
+/// Link profile for one client.
+#[derive(Clone, Copy, Debug)]
+pub struct NetworkModel {
+    /// Uplink, bits per second.
+    pub up_bps: f64,
+    /// Downlink, bits per second.
+    pub down_bps: f64,
+    /// Per-message latency, seconds.
+    pub rtt_s: f64,
+}
+
+impl Default for NetworkModel {
+    fn default() -> Self {
+        Self { up_bps: 10e6, down_bps: 50e6, rtt_s: 0.030 }
+    }
+}
+
+impl NetworkModel {
+    /// Seconds to upload `bytes`.
+    pub fn upload_time(&self, bytes: u64) -> f64 {
+        self.rtt_s / 2.0 + bytes as f64 * 8.0 / self.up_bps
+    }
+
+    /// Seconds to download `bytes`.
+    pub fn download_time(&self, bytes: u64) -> f64 {
+        self.rtt_s / 2.0 + bytes as f64 * 8.0 / self.down_bps
+    }
+
+    /// Simulated duration of one synchronous round: every selected
+    /// client downloads the model then uploads its update in parallel;
+    /// the round ends when the **slowest** client finishes (barrier).
+    pub fn round_time(&self, down_bytes_per_client: u64, up_bytes: &[u64]) -> f64 {
+        up_bytes
+            .iter()
+            .map(|&u| self.download_time(down_bytes_per_client) + self.upload_time(u))
+            .fold(0.0, f64::max)
+    }
+
+    /// §5.1's headline ratio: wall-clock speedup of sparse vs dense
+    /// rounds with identical round counts.
+    pub fn speedup(&self, dense_up: u64, sparse_up: u64, down: u64) -> f64 {
+        self.round_time(down, &[dense_up]) / self.round_time(down, &[sparse_up])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asymmetric_links() {
+        let n = NetworkModel::default();
+        let b = 10_000_000u64; // 10 MB
+        assert!(n.upload_time(b) > n.download_time(b));
+    }
+
+    #[test]
+    fn round_time_is_slowest_client() {
+        let n = NetworkModel::default();
+        let t = n.round_time(1000, &[1_000, 1_000_000]);
+        let slow = n.download_time(1000) + n.upload_time(1_000_000);
+        assert!((t - slow).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_speedup_positive() {
+        let n = NetworkModel::default();
+        // 159k params: dense 1.27MB vs 1% sparse ~19kB
+        let s = n.speedup(1_272_080, 19_081, 1_272_080);
+        assert!(s > 1.5, "speedup={s}");
+    }
+
+    #[test]
+    fn latency_floor() {
+        let n = NetworkModel::default();
+        assert!(n.upload_time(0) >= n.rtt_s / 2.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! The paper's communication-cost model (§5.2) and the run ledger.
+//!
+//! Eq. 7/8, per aggregation round with C·K selected clients:
+//!
+//! ```text
+//! c_up   = m·s·96 bit   (sparse)  |  m·64 bit  (dense)
+//! c_down = m·64 bit                 (server → client, always dense)
+//! c_total = n_rounds · C·K · (c_up + c_down)
+//! ```
+//!
+//! The ledger records *both* the paper model (comparable to Table 2)
+//! and the actual wire bytes our codec produced (strictly smaller),
+//! plus per-round accuracy so the "cost to reach 95% of convergence
+//! accuracy" query (Table 2's row definition) is answerable post-hoc.
+
+use crate::sparse::codec;
+
+/// One round's communication record.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundCost {
+    pub round: u64,
+    /// Paper-model upload bytes summed over selected clients.
+    pub up_paper: u64,
+    /// Actual encoded upload bytes.
+    pub up_wire: u64,
+    /// Paper-model download bytes (dense model broadcast).
+    pub down_paper: u64,
+    /// Eval accuracy observed after this round (NaN when not evaled).
+    pub accuracy: f64,
+}
+
+/// Whole-run ledger.
+#[derive(Clone, Debug, Default)]
+pub struct CostLedger {
+    pub rounds: Vec<RoundCost>,
+    /// Total parameter count m (for dense-baseline comparisons).
+    pub model_params: usize,
+}
+
+impl CostLedger {
+    pub fn new(model_params: usize) -> Self {
+        Self { rounds: Vec::new(), model_params }
+    }
+
+    /// Record a round. `client_nnz` = per selected client, the number
+    /// of non-zero update entries uploaded (dense ⇒ `m`); `wire_bytes`
+    /// = actual encoded sizes.
+    pub fn record(
+        &mut self,
+        round: u64,
+        client_nnz: &[usize],
+        wire_bytes: &[usize],
+        dense_upload: bool,
+        accuracy: f64,
+    ) {
+        let m = self.model_params;
+        let up_paper: u64 = client_nnz
+            .iter()
+            .map(|&nnz| {
+                if dense_upload {
+                    codec::dense_cost_bytes(m)
+                } else {
+                    codec::sparse_cost_bytes(nnz)
+                }
+            })
+            .sum();
+        let up_wire: u64 = wire_bytes.iter().map(|&b| b as u64).sum();
+        let down_paper = codec::dense_cost_bytes(m) * client_nnz.len() as u64;
+        self.rounds.push(RoundCost { round, up_paper, up_wire, down_paper, accuracy });
+    }
+
+    /// Record a round with per-client paper costs already computed
+    /// (algorithm-specific wire formats: STC codebook, quantized, …).
+    pub fn record_with_costs(
+        &mut self,
+        round: u64,
+        up_paper_per_client: &[u64],
+        wire_bytes: &[usize],
+        accuracy: f64,
+    ) {
+        let up_paper = up_paper_per_client.iter().sum();
+        let up_wire = wire_bytes.iter().map(|&b| b as u64).sum();
+        let down_paper =
+            codec::dense_cost_bytes(self.model_params) * up_paper_per_client.len() as u64;
+        self.rounds.push(RoundCost { round, up_paper, up_wire, down_paper, accuracy });
+    }
+
+    pub fn total_up_paper(&self) -> u64 {
+        self.rounds.iter().map(|r| r.up_paper).sum()
+    }
+
+    pub fn total_up_wire(&self) -> u64 {
+        self.rounds.iter().map(|r| r.up_wire).sum()
+    }
+
+    pub fn total_down_paper(&self) -> u64 {
+        self.rounds.iter().map(|r| r.down_paper).sum()
+    }
+
+    /// Best accuracy seen over the run ("final average convergence
+    /// accuracy" proxy; the paper averages the converged tail — we use
+    /// the max of a trailing window, see [`Self::converged_accuracy`]).
+    pub fn best_accuracy(&self) -> f64 {
+        self.rounds
+            .iter()
+            .map(|r| r.accuracy)
+            .filter(|a| a.is_finite())
+            .fold(f64::NAN, f64::max)
+    }
+
+    /// Mean accuracy over the last `window` evaluated rounds — the
+    /// paper's "final average convergence accuracy".
+    pub fn converged_accuracy(&self, window: usize) -> f64 {
+        let evaled: Vec<f64> = self
+            .rounds
+            .iter()
+            .map(|r| r.accuracy)
+            .filter(|a| a.is_finite())
+            .collect();
+        if evaled.is_empty() {
+            return f64::NAN;
+        }
+        let tail = &evaled[evaled.len().saturating_sub(window)..];
+        tail.iter().sum::<f64>() / tail.len() as f64
+    }
+
+    /// Table 2's row: cumulative paper-model upload bytes until the
+    /// first evaluated round whose accuracy ≥ `target`. `None` if the
+    /// run never got there.
+    pub fn upload_to_reach(&self, target: f64) -> Option<u64> {
+        let mut cum = 0u64;
+        for r in &self.rounds {
+            cum += r.up_paper;
+            if r.accuracy.is_finite() && r.accuracy >= target {
+                return Some(cum);
+            }
+        }
+        None
+    }
+
+    /// Rounds until accuracy ≥ target (n_percent in Eq. 7).
+    pub fn rounds_to_reach(&self, target: f64) -> Option<u64> {
+        self.rounds
+            .iter()
+            .find(|r| r.accuracy.is_finite() && r.accuracy >= target)
+            .map(|r| r.round + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ledger_with(accs: &[f64]) -> CostLedger {
+        let mut l = CostLedger::new(1000);
+        for (i, &a) in accs.iter().enumerate() {
+            l.record(i as u64, &[100, 100], &[900, 900], false, a);
+        }
+        l
+    }
+
+    #[test]
+    fn paper_model_sparse_vs_dense() {
+        let mut l = CostLedger::new(1000);
+        l.record(0, &[50, 50], &[0, 0], false, f64::NAN);
+        // sparse: 2 clients × 50 nnz × 12 bytes
+        assert_eq!(l.rounds[0].up_paper, 2 * 50 * 12);
+        l.record(1, &[1000, 1000], &[0, 0], true, f64::NAN);
+        // dense: 2 clients × 1000 × 8 bytes
+        assert_eq!(l.rounds[1].up_paper, 2 * 8000);
+        // download always dense per client
+        assert_eq!(l.rounds[0].down_paper, 2 * 8000);
+    }
+
+    #[test]
+    fn upload_to_reach_accumulates() {
+        let l = ledger_with(&[0.2, 0.5, 0.8, 0.9]);
+        let per_round = 2 * 100 * 12;
+        assert_eq!(l.upload_to_reach(0.75), Some(3 * per_round));
+        assert_eq!(l.upload_to_reach(0.95), None);
+        assert_eq!(l.rounds_to_reach(0.5), Some(2));
+    }
+
+    #[test]
+    fn converged_accuracy_tail_mean() {
+        let l = ledger_with(&[0.1, 0.8, 0.9, 1.0]);
+        assert!((l.converged_accuracy(2) - 0.95).abs() < 1e-12);
+        assert!((l.best_accuracy() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skips_nan_accuracy() {
+        let l = ledger_with(&[f64::NAN, 0.5, f64::NAN, 0.7]);
+        assert!((l.converged_accuracy(10) - 0.6).abs() < 1e-12);
+        assert_eq!(l.rounds_to_reach(0.6), Some(4));
+    }
+
+    #[test]
+    fn totals_sum() {
+        let l = ledger_with(&[0.5, 0.6]);
+        assert_eq!(l.total_up_paper(), 2 * 2 * 100 * 12);
+        assert_eq!(l.total_up_wire(), 2 * 2 * 900);
+        assert_eq!(l.total_down_paper(), 2 * 2 * 8000);
+    }
+}

@@ -1,0 +1,13 @@
+//! Communication accounting + simulated network (DESIGN.md S16).
+//!
+//! * [`cost`] — the paper's §5.2 analytic cost model (Eq. 6-8) and the
+//!   per-round ledger behind Table 2
+//! * [`channel`] — bandwidth/latency model turning bytes into simulated
+//!   wall-clock round time (the §5.1 "from the perspective of time"
+//!   argument)
+
+pub mod channel;
+pub mod cost;
+
+pub use channel::NetworkModel;
+pub use cost::{CostLedger, RoundCost};

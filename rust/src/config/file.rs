@@ -1,0 +1,84 @@
+//! INI-style config file support: `key = value` lines, `#`/`;`
+//! comments, optional `[section]` headers flattened to `section.key`.
+//! Used by `fedsparse train --config run.ini`; CLI flags override.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigFileError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("line {0}: expected 'key = value'")]
+    BadLine(usize),
+}
+
+/// Parse INI text to a flat `section.key → value` map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, String>, ConfigFileError> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            continue;
+        }
+        let (k, v) = line.split_once('=').ok_or(ConfigFileError::BadLine(lineno + 1))?;
+        let key = if section.is_empty() {
+            k.trim().to_string()
+        } else {
+            format!("{section}.{}", k.trim())
+        };
+        // strip trailing comments and quotes
+        let mut val = v.trim();
+        if let Some(i) = val.find(" #") {
+            val = val[..i].trim();
+        }
+        let val = val.trim_matches('"').to_string();
+        out.insert(key, val);
+    }
+    Ok(out)
+}
+
+/// Load and parse a config file.
+pub fn load(path: &std::path::Path) -> Result<BTreeMap<String, String>, ConfigFileError> {
+    parse(&std::fs::read_to_string(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let text = r#"
+# comment
+model = mnist_mlp
+rounds = 100
+
+[sparsity]
+s0 = 0.1      # inline comment
+alpha = 0.8
+; another comment
+label = "quoted value"
+"#;
+        let m = parse(text).unwrap();
+        assert_eq!(m["model"], "mnist_mlp");
+        assert_eq!(m["rounds"], "100");
+        assert_eq!(m["sparsity.s0"], "0.1");
+        assert_eq!(m["sparsity.alpha"], "0.8");
+        assert_eq!(m["sparsity.label"], "quoted value");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(matches!(parse("not a kv line"), Err(ConfigFileError::BadLine(1))));
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert!(parse("").unwrap().is_empty());
+    }
+}

@@ -1,0 +1,218 @@
+//! Run configuration (DESIGN.md S18): defaults matching the paper's §5
+//! experimental setup, INI-style config-file loading, and CLI overlay.
+
+pub mod file;
+
+use std::path::PathBuf;
+
+use crate::coordinator::algorithms::Algorithm;
+use crate::sparse::thgs::ThgsConfig;
+
+/// How training data is split across clients (§5's allocation matrix).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partition {
+    Iid,
+    /// Non-IID-n: each client holds exactly n label classes.
+    NonIid(usize),
+}
+
+impl Partition {
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "iid" {
+            return Some(Self::Iid);
+        }
+        // "noniid-4" / "non-iid-4"
+        let tail = s.strip_prefix("noniid-").or_else(|| s.strip_prefix("non-iid-"))?;
+        tail.parse().ok().map(Self::NonIid)
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Self::Iid => "iid".into(),
+            Self::NonIid(n) => format!("noniid-{n}"),
+        }
+    }
+}
+
+/// Full run configuration. Defaults reproduce the paper's §5 setting:
+/// 100 clients, 10 selected per round, 5 local iterations, batch 50.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub model: String,
+    pub dataset: String,
+    /// Directory probed for real datasets (falls back to synthetic).
+    pub data_dir: Option<PathBuf>,
+    pub artifacts_dir: PathBuf,
+    /// Scale-down for CI runs: when Some(n), the synthetic train split
+    /// has n samples (full split otherwise).
+    pub train_samples: Option<usize>,
+    pub eval_samples: usize,
+
+    pub clients: usize,
+    pub clients_per_round: usize,
+    pub local_iters: usize,
+    pub lr: f32,
+    pub rounds: u64,
+    pub eval_every: u64,
+    pub partition: Partition,
+    pub seed: u64,
+
+    pub algorithm: Algorithm,
+    /// Wrap updates in mask-sparsified secure aggregation (§3.2).
+    pub secure: bool,
+    /// Eq. 4 mask keep-ratio numerator k (secure mode).
+    pub mask_ratio_k: f64,
+    /// Eq. 2 dynamic sparsity-rate controller (secure / THGS modes).
+    pub dynamic_rate: bool,
+    pub rate_alpha: f64,
+    pub rate_min: f64,
+    /// QSGD-style stochastic value quantization (§2.1 extension;
+    /// non-secure modes only — quantizing masked values would break
+    /// pairwise cancellation).
+    pub quant_bits: Option<u8>,
+    /// DGC momentum-correction coefficient (0.0 = off; §6 future work).
+    pub momentum: f32,
+    /// DGC warm-up rounds: sparsity relaxed dense→target (0 = off).
+    pub warmup_rounds: u64,
+
+    /// PJRT executor threads.
+    pub exec_workers: usize,
+    /// Client-side worker threads (sparsify/mask/encode).
+    pub client_workers: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            model: "mnist_mlp".into(),
+            dataset: "mnist".into(),
+            data_dir: Some(PathBuf::from("data")),
+            artifacts_dir: PathBuf::from("artifacts"),
+            train_samples: None,
+            eval_samples: 2_500,
+            clients: 100,
+            clients_per_round: 10,
+            local_iters: 5,
+            lr: 0.1,
+            rounds: 100,
+            eval_every: 5,
+            partition: Partition::Iid,
+            seed: 42,
+            algorithm: Algorithm::Thgs(ThgsConfig::default()),
+            secure: false,
+            mask_ratio_k: 1.0,
+            dynamic_rate: false,
+            rate_alpha: 0.8,
+            rate_min: 0.01,
+            quant_bits: None,
+            momentum: 0.0,
+            warmup_rounds: 0,
+            exec_workers: 4,
+            client_workers: 4,
+        }
+    }
+}
+
+impl RunConfig {
+    /// A small, fast configuration for tests: few clients, small
+    /// synthetic corpus, few rounds.
+    pub fn smoke(model: &str) -> Self {
+        Self {
+            model: model.into(),
+            dataset: if model.starts_with("cifar") { "cifar10" } else { "mnist" }.into(),
+            train_samples: Some(2_000),
+            eval_samples: 500,
+            clients: 10,
+            clients_per_round: 4,
+            local_iters: 2,
+            rounds: 6,
+            eval_every: 2,
+            exec_workers: 2,
+            client_workers: 2,
+            ..Self::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.clients_per_round == 0 || self.clients_per_round > self.clients {
+            return Err(format!(
+                "clients_per_round {} outside [1, {}]",
+                self.clients_per_round, self.clients
+            ));
+        }
+        if self.secure && self.clients_per_round < 2 {
+            return Err("secure aggregation needs ≥2 clients per round".into());
+        }
+        if self.rounds == 0 {
+            return Err("rounds must be ≥ 1".into());
+        }
+        if let Algorithm::Thgs(t) = &self.algorithm {
+            t.validate()?;
+        }
+        if self.secure && self.quant_bits.is_some() {
+            return Err("quantization is incompatible with secure masking".into());
+        }
+        if let Some(b) = self.quant_bits {
+            if !(2..=8).contains(&b) {
+                return Err(format!("quant_bits {b} outside 2..=8"));
+            }
+        }
+        if !(0.0..1.0).contains(&self.momentum) {
+            return Err(format!("momentum {} outside [0,1)", self.momentum));
+        }
+        Ok(())
+    }
+
+    /// Short label for metric files: `thgs-s0.1-noniid-4` etc.
+    pub fn run_label(&self) -> String {
+        let alg = self.algorithm.label();
+        let sec = if self.secure { "-secure" } else { "" };
+        format!("{}-{}-{}{}", self.model, alg, self.partition.label(), sec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_setup() {
+        let c = RunConfig::default();
+        assert_eq!(c.clients, 100);
+        assert_eq!(c.clients_per_round, 10);
+        assert_eq!(c.local_iters, 5);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn partition_parsing() {
+        assert_eq!(Partition::parse("iid"), Some(Partition::Iid));
+        assert_eq!(Partition::parse("noniid-4"), Some(Partition::NonIid(4)));
+        assert_eq!(Partition::parse("non-iid-8"), Some(Partition::NonIid(8)));
+        assert_eq!(Partition::parse("bogus"), None);
+    }
+
+    #[test]
+    fn validation_catches_bad_selection() {
+        let mut c = RunConfig::default();
+        c.clients_per_round = 0;
+        assert!(c.validate().is_err());
+        c.clients_per_round = 1000;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn secure_needs_two() {
+        let mut c = RunConfig::default();
+        c.secure = true;
+        c.clients_per_round = 1;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn label_is_stable() {
+        let c = RunConfig::default();
+        assert!(c.run_label().contains("mnist_mlp"));
+        assert!(c.run_label().contains("iid"));
+    }
+}

@@ -1,0 +1,204 @@
+//! The update-compression algorithms under test (§5's contenders).
+
+use crate::sparse::flat::{flat_topk_sparsify, SparsifyOut};
+use crate::sparse::thgs::{thgs_sparsify, ThgsConfig};
+
+/// Which client-update algorithm a run uses.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Algorithm {
+    /// McMahan'17 — dense updates (the paper's main baseline).
+    FedAvg,
+    /// Li'20 — dense updates + proximal term μ (Table 2 baseline).
+    FedProx { mu: f32 },
+    /// Dryden'16 — single global Top-k over the flat update
+    /// (the paper's "- spark" contender in Fig. 3).
+    FlatSparse { s: f64 },
+    /// The paper's contribution (Alg. 1): per-layer Top-k with
+    /// layer-decaying rate ("- layerspares" in Fig. 3).
+    Thgs(ThgsConfig),
+    /// Sattler'19 sparse ternary compression (§2.1 contender; used by
+    /// the ablation harness).
+    Stc { s: f64 },
+}
+
+impl Algorithm {
+    pub fn is_sparse(&self) -> bool {
+        matches!(
+            self,
+            Algorithm::FlatSparse { .. } | Algorithm::Thgs(_) | Algorithm::Stc { .. }
+        )
+    }
+
+    pub fn is_fedprox(&self) -> Option<f32> {
+        match self {
+            Algorithm::FedProx { mu } => Some(*mu),
+            _ => None,
+        }
+    }
+
+    /// Parse CLI form: `fedavg`, `fedprox:0.01`, `flat:0.01`,
+    /// `thgs:0.1,0.8,0.01` (s0, α, s_min).
+    pub fn parse(s: &str) -> Option<Self> {
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h, a),
+            None => (s, ""),
+        };
+        match head {
+            "fedavg" => Some(Algorithm::FedAvg),
+            "fedprox" => Some(Algorithm::FedProx {
+                mu: if args.is_empty() { 0.01 } else { args.parse().ok()? },
+            }),
+            "flat" | "spark" => Some(Algorithm::FlatSparse {
+                s: if args.is_empty() { 0.01 } else { args.parse().ok()? },
+            }),
+            "stc" => Some(Algorithm::Stc {
+                s: if args.is_empty() { 0.01 } else { args.parse().ok()? },
+            }),
+            "thgs" | "layerspares" => {
+                if args.is_empty() {
+                    return Some(Algorithm::Thgs(ThgsConfig::default()));
+                }
+                let parts: Vec<&str> = args.split(',').collect();
+                if parts.len() != 3 {
+                    return None;
+                }
+                Some(Algorithm::Thgs(ThgsConfig {
+                    s0: parts[0].parse().ok()?,
+                    alpha: parts[1].parse().ok()?,
+                    s_min: parts[2].parse().ok()?,
+                }))
+            }
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Algorithm::FedAvg => "fedavg".into(),
+            Algorithm::FedProx { mu } => format!("fedprox-mu{mu}"),
+            Algorithm::FlatSparse { s } => format!("flat-s{s}"),
+            Algorithm::Thgs(t) => format!("thgs-s{}-a{}", t.s0, t.alpha),
+            Algorithm::Stc { s } => format!("stc-s{s}"),
+        }
+    }
+
+    /// Paper-model upload cost of one client's update under this
+    /// algorithm (Eq. 6 / STC codebook form).
+    pub fn paper_cost_bytes(&self, nnz: usize, m: usize, quant_bits: Option<u8>) -> u64 {
+        use crate::sparse::{codec, quant, stc};
+        match self {
+            Algorithm::FedAvg | Algorithm::FedProx { .. } => codec::dense_cost_bytes(m),
+            Algorithm::Stc { .. } => stc::stc_cost_bytes(nnz),
+            _ => match quant_bits {
+                Some(b) => quant::quant_cost_bytes(nnz, b),
+                None => codec::sparse_cost_bytes(nnz),
+            },
+        }
+    }
+
+    /// Apply the algorithm's sparsifier to an update vector.
+    /// `rate_scale` multiplies the configured rate (the Eq. 2 dynamic
+    /// controller's output relative to the configured base; 1.0 when
+    /// static). Dense algorithms return a trivial all-kept split.
+    pub fn sparsify(
+        &self,
+        update: &[f32],
+        layer_spans: &[(usize, usize)],
+        rate_scale: f64,
+    ) -> SparsifyOut {
+        match self {
+            Algorithm::FedAvg | Algorithm::FedProx { .. } => SparsifyOut {
+                sparse: update.to_vec(),
+                residual: vec![0f32; update.len()],
+                nnz: update.len(),
+                thresholds: vec![0.0],
+            },
+            Algorithm::FlatSparse { s } => {
+                flat_topk_sparsify(update, (s * rate_scale).clamp(1e-9, 1.0))
+            }
+            Algorithm::Thgs(t) => {
+                let cfg = ThgsConfig {
+                    s0: (t.s0 * rate_scale).clamp(t.s_min.min(1e-9), 1.0),
+                    ..*t
+                };
+                thgs_sparsify(update, layer_spans, &cfg)
+            }
+            Algorithm::Stc { s } => {
+                crate::sparse::stc::stc_sparsify(update, (s * rate_scale).clamp(1e-9, 1.0))
+                    .sparsify
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(Algorithm::parse("fedavg"), Some(Algorithm::FedAvg));
+        assert_eq!(
+            Algorithm::parse("fedprox:0.05"),
+            Some(Algorithm::FedProx { mu: 0.05 })
+        );
+        assert_eq!(
+            Algorithm::parse("flat:0.001"),
+            Some(Algorithm::FlatSparse { s: 0.001 })
+        );
+        match Algorithm::parse("thgs:0.2,0.5,0.02") {
+            Some(Algorithm::Thgs(t)) => {
+                assert_eq!(t.s0, 0.2);
+                assert_eq!(t.alpha, 0.5);
+                assert_eq!(t.s_min, 0.02);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(Algorithm::parse("nope").is_none());
+        assert!(Algorithm::parse("thgs:1,2").is_none());
+    }
+
+    #[test]
+    fn dense_passthrough() {
+        let u = vec![1.0f32, -2.0, 0.5];
+        let out = Algorithm::FedAvg.sparsify(&u, &[(0, 3)], 1.0);
+        assert_eq!(out.sparse, u);
+        assert_eq!(out.nnz, 3);
+        assert!(out.residual.iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn sparse_split_exact() {
+        let u: Vec<f32> = (0..1000).map(|i| ((i * 37) % 101) as f32 - 50.0).collect();
+        for alg in [
+            Algorithm::FlatSparse { s: 0.05 },
+            Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha: 0.5, s_min: 0.01 }),
+        ] {
+            let out = alg.sparsify(&u, &[(0, 600), (600, 400)], 1.0);
+            for i in 0..u.len() {
+                assert_eq!(out.sparse[i] + out.residual[i], u[i]);
+            }
+            assert!(out.nnz < u.len());
+        }
+    }
+
+    #[test]
+    fn rate_scale_shrinks_nnz() {
+        let u: Vec<f32> = (0..10_000).map(|i| ((i * 7919) % 997) as f32 / 997.0 - 0.5).collect();
+        let alg = Algorithm::FlatSparse { s: 0.1 };
+        let full = alg.sparsify(&u, &[(0, u.len())], 1.0).nnz;
+        let half = alg.sparsify(&u, &[(0, u.len())], 0.5).nnz;
+        assert!(half < full, "half={half} full={full}");
+    }
+
+    #[test]
+    fn labels_roundtrip_through_parse() {
+        for alg in [
+            Algorithm::FedAvg,
+            Algorithm::FlatSparse { s: 0.01 },
+            Algorithm::Thgs(ThgsConfig::default()),
+        ] {
+            assert!(alg.label().len() > 3);
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Per-client persistent state across rounds.
+
+use crate::sparse::dynamic::DynamicRate;
+use crate::sparse::residual::ResidualStore;
+
+/// One simulated federated participant.
+#[derive(Clone, Debug)]
+pub struct ClientState {
+    pub id: u32,
+    /// Indices into the train split this client owns.
+    pub data: Vec<usize>,
+    /// Residual accumulation (Alg. 1 line 12).
+    pub residual: ResidualStore,
+    /// Eq. 2 controller (None when static rates are used).
+    pub rate: Option<DynamicRate>,
+    /// DGC momentum corrector (None when momentum = 0).
+    pub momentum: Option<crate::sparse::momentum::MomentumCorrector>,
+    /// Mean local training loss of the last participating round.
+    pub last_loss: f64,
+    /// Rounds this client was selected (diagnostics).
+    pub participation: u64,
+}
+
+impl ClientState {
+    pub fn new(id: u32, data: Vec<usize>, model_params: usize) -> Self {
+        Self {
+            id,
+            data,
+            residual: ResidualStore::new(model_params),
+            rate: None,
+            momentum: None,
+            last_loss: f64::NAN,
+            participation: 0,
+        }
+    }
+
+    /// Attach the Eq. 2 dynamic rate controller.
+    pub fn with_dynamic_rate(mut self, r0: f64, alpha: f64, total_rounds: u64, r_min: f64) -> Self {
+        self.rate = Some(DynamicRate::new(r0, alpha, total_rounds, r_min));
+        self
+    }
+
+    /// The rate *scale* for this round: dynamic-rate output relative
+    /// to the base rate r0 (1.0 when the controller is off), after
+    /// observing this round's loss.
+    pub fn observe_loss(&mut self, round: u64, loss: f64, base_rate: f64) -> f64 {
+        self.last_loss = loss;
+        self.participation += 1;
+        match &mut self.rate {
+            Some(ctrl) => ctrl.observe(round, loss) / base_rate,
+            None => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn static_client_scale_is_one() {
+        let mut c = ClientState::new(0, vec![1, 2, 3], 10);
+        assert_eq!(c.observe_loss(0, 1.0, 0.1), 1.0);
+        assert_eq!(c.participation, 1);
+        assert_eq!(c.last_loss, 1.0);
+    }
+
+    #[test]
+    fn dynamic_client_scale_tracks_controller() {
+        let mut c = ClientState::new(1, vec![], 10).with_dynamic_rate(0.1, 0.8, 100, 0.01);
+        let s0 = c.observe_loss(0, 2.0, 0.1);
+        assert!(s0 > 0.0 && s0 <= 10.0);
+        // constant loss + α<1 → scale decays
+        let mut last = s0;
+        for t in 1..20 {
+            let s = c.observe_loss(t, 2.0, 0.1);
+            assert!(s <= last + 1e-12);
+            last = s;
+        }
+        assert!(last < s0);
+    }
+
+    #[test]
+    fn residual_sized_to_model() {
+        let c = ClientState::new(2, vec![], 123);
+        assert_eq!(c.residual.len(), 123);
+    }
+}

@@ -1,0 +1,19 @@
+//! Layer-3 coordinator — the federated round loop tying every
+//! substrate together (DESIGN.md S1-S2).
+//!
+//! * [`algorithms`] — FedAvg / FedProx baselines, conventional flat
+//!   Top-k, and the paper's THGS
+//! * [`client`] — per-client persistent state (residuals, Eq. 2 rate
+//!   controller, local loss history)
+//! * [`selection`] — seeded per-round client sampling (C·K of N)
+//! * [`trainer`] — the orchestrator: local training via the PJRT
+//!   runtime, sparsification, (secure) aggregation, eval, metrics
+
+pub mod algorithms;
+pub mod client;
+pub mod selection;
+pub mod trainer;
+
+pub use algorithms::Algorithm;
+pub use client::ClientState;
+pub use trainer::{RoundOutcome, Trainer};

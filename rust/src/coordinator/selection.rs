@@ -1,0 +1,55 @@
+//! Per-round client selection — `C·K` of `N` uniformly at random
+//! (McMahan'17 setting the paper follows: C=0.1, K=100 → 10).
+//!
+//! Selection is a pure function of (seed, round) so any round of any
+//! run can be replayed exactly.
+
+use crate::util::rng::Rng;
+
+/// Select `k` distinct client ids for `round`.
+pub fn select_clients(n_clients: usize, k: usize, seed: u64, round: u64) -> Vec<u32> {
+    assert!(k <= n_clients, "select {k} of {n_clients}");
+    let mut rng = Rng::new(seed ^ 0x5e1e_c700u64 ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut ids = rng.sample_indices(n_clients, k);
+    ids.sort_unstable();
+    ids.into_iter().map(|i| i as u32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_round() {
+        assert_eq!(select_clients(100, 10, 1, 5), select_clients(100, 10, 1, 5));
+        assert_ne!(select_clients(100, 10, 1, 5), select_clients(100, 10, 1, 6));
+    }
+
+    #[test]
+    fn distinct_and_in_range() {
+        let sel = select_clients(100, 10, 2, 0);
+        assert_eq!(sel.len(), 10);
+        let mut s = sel.clone();
+        s.dedup();
+        assert_eq!(s.len(), 10);
+        assert!(sel.iter().all(|&c| c < 100));
+    }
+
+    #[test]
+    fn coverage_over_many_rounds() {
+        // every client should get selected eventually
+        let mut seen = vec![false; 20];
+        for r in 0..200 {
+            for c in select_clients(20, 4, 3, r) {
+                seen[c as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+
+    #[test]
+    fn full_selection() {
+        let sel = select_clients(5, 5, 4, 1);
+        assert_eq!(sel, vec![0, 1, 2, 3, 4]);
+    }
+}

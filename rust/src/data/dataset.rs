@@ -1,0 +1,241 @@
+//! The dataset abstraction the coordinator trains on.
+//!
+//! Prefers real on-disk data (see [`crate::data::idx`]); falls back to
+//! the deterministic synthetic source. Sample access is by index so the
+//! partitioner can hand each simulated client an index set and batches
+//! are materialized lazily (synthetic pixels are pure functions).
+
+use std::path::Path;
+
+use super::idx;
+use super::synth::SynthSource;
+
+/// Which corpus (shapes + split sizes follow the paper's Table 1 setup).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    Mnist,
+    FashionMnist,
+    Cifar10,
+}
+
+impl DatasetKind {
+    pub fn from_name(name: &str) -> Option<Self> {
+        match name {
+            "mnist" => Some(Self::Mnist),
+            "fmnist" | "fashion_mnist" | "fashion-mnist" => Some(Self::FashionMnist),
+            "cifar10" | "cifar" => Some(Self::Cifar10),
+            _ => None,
+        }
+    }
+
+    pub fn shape(&self) -> [usize; 3] {
+        match self {
+            Self::Mnist | Self::FashionMnist => [28, 28, 1],
+            Self::Cifar10 => [32, 32, 3],
+        }
+    }
+
+    pub fn train_size(&self) -> usize {
+        match self {
+            Self::Mnist | Self::FashionMnist => 60_000,
+            Self::Cifar10 => 50_000,
+        }
+    }
+
+    pub fn test_size(&self) -> usize {
+        10_000
+    }
+
+    /// Seed namespace so MNIST ≠ FMNIST synthetic patterns.
+    fn seed_tag(&self) -> u64 {
+        match self {
+            Self::Mnist => 0x1,
+            Self::FashionMnist => 0x2,
+            Self::Cifar10 => 0x3,
+        }
+    }
+
+    /// Subdirectory probed for real files.
+    fn dir_name(&self) -> &'static str {
+        match self {
+            Self::Mnist => "mnist",
+            Self::FashionMnist => "fashion-mnist",
+            Self::Cifar10 => "cifar-10",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+enum Source {
+    Synth(SynthSource),
+    Real(idx::RawData),
+}
+
+/// A dataset split with index-addressable samples.
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub split: Split,
+    source: Source,
+    n: usize,
+}
+
+impl Dataset {
+    /// Load `split`, probing `data_dir/<kind>/` for real files first.
+    /// `seed` parameterizes the synthetic fallback (and is ignored for
+    /// real data).
+    pub fn load(kind: DatasetKind, split: Split, data_dir: Option<&Path>, seed: u64) -> Self {
+        if let Some(dir) = data_dir {
+            let sub = dir.join(kind.dir_name());
+            let real = match (kind, split) {
+                (DatasetKind::Cifar10, Split::Train) => idx::try_load_cifar_split(&sub, true),
+                (DatasetKind::Cifar10, Split::Test) => idx::try_load_cifar_split(&sub, false),
+                (_, Split::Train) => idx::try_load_idx_split(&sub, "train"),
+                (_, Split::Test) => idx::try_load_idx_split(&sub, "t10k"),
+            };
+            if let Some(data) = real {
+                let n = data.n;
+                return Self { kind, split, source: Source::Real(data), n };
+            }
+        }
+        let [h, w, c] = kind.shape();
+        let n = match split {
+            Split::Train => kind.train_size(),
+            Split::Test => kind.test_size(),
+        };
+        // different split → different sample stream
+        let split_tag = match split {
+            Split::Train => 0x7_000,
+            Split::Test => 0x8_000,
+        };
+        let src = SynthSource::new(seed ^ kind.seed_tag() ^ split_tag, n, 10, h, w, c);
+        Self { kind, split, source: Source::Synth(src), n }
+    }
+
+    /// Smaller synthetic split for tests/CI (same pipeline, fewer rows).
+    pub fn synthetic_small(kind: DatasetKind, split: Split, n: usize, seed: u64) -> Self {
+        let [h, w, c] = kind.shape();
+        let split_tag = match split {
+            Split::Train => 0x7_000,
+            Split::Test => 0x8_000,
+        };
+        let src = SynthSource::new(seed ^ kind.seed_tag() ^ split_tag, n, 10, h, w, c);
+        Self { kind, split, source: Source::Synth(src), n }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn sample_len(&self) -> usize {
+        let [h, w, c] = self.kind.shape();
+        h * w * c
+    }
+
+    pub fn is_synthetic(&self) -> bool {
+        matches!(self.source, Source::Synth(_))
+    }
+
+    pub fn label(&self, idx: usize) -> u8 {
+        match &self.source {
+            Source::Synth(s) => s.labels[idx],
+            Source::Real(r) => r.labels[idx],
+        }
+    }
+
+    /// All labels (partitioner input).
+    pub fn labels(&self) -> Vec<u8> {
+        (0..self.n).map(|i| self.label(i)).collect()
+    }
+
+    pub fn fill_sample(&self, idx: usize, out: &mut [f32]) {
+        match &self.source {
+            Source::Synth(s) => s.fill(idx, out),
+            Source::Real(r) => {
+                let m = self.sample_len();
+                out.copy_from_slice(&r.images[idx * m..(idx + 1) * m]);
+            }
+        }
+    }
+
+    /// Materialize a batch: NHWC f32 pixels + i32 labels, in the order
+    /// of `indices`.
+    pub fn batch(&self, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let m = self.sample_len();
+        let mut xs = vec![0f32; indices.len() * m];
+        let mut ys = Vec::with_capacity(indices.len());
+        for (row, &idx) in indices.iter().enumerate() {
+            self.fill_sample(idx, &mut xs[row * m..(row + 1) * m]);
+            ys.push(self.label(idx) as i32);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synthetic_split_sizes() {
+        let d = Dataset::synthetic_small(DatasetKind::Mnist, Split::Train, 500, 1);
+        assert_eq!(d.len(), 500);
+        assert_eq!(d.sample_len(), 784);
+        assert!(d.is_synthetic());
+    }
+
+    #[test]
+    fn batch_shapes_and_labels() {
+        let d = Dataset::synthetic_small(DatasetKind::Cifar10, Split::Train, 100, 2);
+        let (xs, ys) = d.batch(&[0, 5, 9]);
+        assert_eq!(xs.len(), 3 * 3072);
+        assert_eq!(ys.len(), 3);
+        assert_eq!(ys[1], d.label(5) as i32);
+        assert!(xs.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn train_and_test_streams_differ() {
+        let tr = Dataset::synthetic_small(DatasetKind::Mnist, Split::Train, 10, 3);
+        let te = Dataset::synthetic_small(DatasetKind::Mnist, Split::Test, 10, 3);
+        let mut a = vec![0f32; 784];
+        let mut b = vec![0f32; 784];
+        tr.fill_sample(0, &mut a);
+        te.fill_sample(0, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn kinds_have_distinct_patterns() {
+        let m = Dataset::synthetic_small(DatasetKind::Mnist, Split::Train, 10, 3);
+        let f = Dataset::synthetic_small(DatasetKind::FashionMnist, Split::Train, 10, 3);
+        let mut a = vec![0f32; 784];
+        let mut b = vec![0f32; 784];
+        m.fill_sample(0, &mut a);
+        f.fill_sample(0, &mut b);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn from_name_parses() {
+        assert_eq!(DatasetKind::from_name("mnist"), Some(DatasetKind::Mnist));
+        assert_eq!(DatasetKind::from_name("fmnist"), Some(DatasetKind::FashionMnist));
+        assert_eq!(DatasetKind::from_name("cifar10"), Some(DatasetKind::Cifar10));
+        assert_eq!(DatasetKind::from_name("imagenet"), None);
+    }
+
+    #[test]
+    fn full_split_sizes_match_paper() {
+        assert_eq!(DatasetKind::Mnist.train_size(), 60_000);
+        assert_eq!(DatasetKind::Cifar10.train_size(), 50_000);
+        assert_eq!(DatasetKind::Mnist.test_size(), 10_000);
+    }
+}

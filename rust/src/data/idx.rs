@@ -1,0 +1,225 @@
+//! Loaders for the *real* datasets when present on disk:
+//!
+//! * IDX format (MNIST / Fashion-MNIST: `train-images-idx3-ubyte`,
+//!   `train-labels-idx1-ubyte`, `t10k-…`)
+//! * CIFAR-10 binary format (`data_batch_1.bin` … `data_batch_5.bin`,
+//!   `test_batch.bin`; 1 label byte + 3072 CHW pixel bytes per record)
+//!
+//! [`crate::data::dataset::Dataset`] probes these paths and falls back
+//! to the synthetic source when absent (DESIGN.md §Substitutions).
+
+use std::fs;
+use std::path::Path;
+
+#[derive(Debug, thiserror::Error)]
+pub enum IdxError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("bad idx magic {0:#010x}")]
+    BadMagic(u32),
+    #[error("idx payload truncated")]
+    Truncated,
+    #[error("cifar file size {0} not a multiple of record size")]
+    BadCifarSize(usize),
+}
+
+/// In-memory images + labels, pixels already scaled to [0, 1] f32,
+/// layout NHWC.
+pub struct RawData {
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub n: usize,
+    pub shape: [usize; 3], // H, W, C
+}
+
+fn be_u32(b: &[u8], off: usize) -> Result<u32, IdxError> {
+    b.get(off..off + 4)
+        .map(|s| u32::from_be_bytes(s.try_into().unwrap()))
+        .ok_or(IdxError::Truncated)
+}
+
+/// Parse an IDX image file (magic 0x00000803, dims [n, h, w]).
+pub fn load_idx_images(path: &Path) -> Result<RawData, IdxError> {
+    let bytes = fs::read(path)?;
+    let magic = be_u32(&bytes, 0)?;
+    if magic != 0x0000_0803 {
+        return Err(IdxError::BadMagic(magic));
+    }
+    let n = be_u32(&bytes, 4)? as usize;
+    let h = be_u32(&bytes, 8)? as usize;
+    let w = be_u32(&bytes, 12)? as usize;
+    let need = 16 + n * h * w;
+    if bytes.len() < need {
+        return Err(IdxError::Truncated);
+    }
+    let images = bytes[16..need].iter().map(|&b| b as f32 / 255.0).collect();
+    Ok(RawData { images, labels: Vec::new(), n, shape: [h, w, 1] })
+}
+
+/// Parse an IDX label file (magic 0x00000801).
+pub fn load_idx_labels(path: &Path) -> Result<Vec<u8>, IdxError> {
+    let bytes = fs::read(path)?;
+    let magic = be_u32(&bytes, 0)?;
+    if magic != 0x0000_0801 {
+        return Err(IdxError::BadMagic(magic));
+    }
+    let n = be_u32(&bytes, 4)? as usize;
+    if bytes.len() < 8 + n {
+        return Err(IdxError::Truncated);
+    }
+    Ok(bytes[8..8 + n].to_vec())
+}
+
+/// Parse one CIFAR-10 binary batch file. Records are
+/// `label u8 + 3072 bytes CHW`; we convert to NHWC.
+pub fn load_cifar_bin(path: &Path) -> Result<RawData, IdxError> {
+    const REC: usize = 1 + 3072;
+    let bytes = fs::read(path)?;
+    if bytes.len() % REC != 0 {
+        return Err(IdxError::BadCifarSize(bytes.len()));
+    }
+    let n = bytes.len() / REC;
+    let mut images = vec![0f32; n * 3072];
+    let mut labels = Vec::with_capacity(n);
+    for r in 0..n {
+        let rec = &bytes[r * REC..(r + 1) * REC];
+        labels.push(rec[0]);
+        // CHW → HWC
+        for c in 0..3 {
+            for y in 0..32 {
+                for x in 0..32 {
+                    let src = 1 + c * 1024 + y * 32 + x;
+                    let dst = r * 3072 + (y * 32 + x) * 3 + c;
+                    images[dst] = rec[src] as f32 / 255.0;
+                }
+            }
+        }
+    }
+    Ok(RawData { images, labels, n, shape: [32, 32, 3] })
+}
+
+/// Probe for MNIST-style IDX files under `dir` with the given prefix
+/// ("train" or "t10k"). Returns images+labels when both parse.
+pub fn try_load_idx_split(dir: &Path, prefix: &str) -> Option<RawData> {
+    let img = dir.join(format!("{prefix}-images-idx3-ubyte"));
+    let lbl = dir.join(format!("{prefix}-labels-idx1-ubyte"));
+    let mut data = load_idx_images(&img).ok()?;
+    let labels = load_idx_labels(&lbl).ok()?;
+    if labels.len() != data.n {
+        return None;
+    }
+    data.labels = labels;
+    Some(data)
+}
+
+/// Probe for the CIFAR-10 binary split under `dir`.
+pub fn try_load_cifar_split(dir: &Path, train: bool) -> Option<RawData> {
+    if train {
+        let mut all: Option<RawData> = None;
+        for i in 1..=5 {
+            let batch = load_cifar_bin(&dir.join(format!("data_batch_{i}.bin"))).ok()?;
+            match &mut all {
+                None => all = Some(batch),
+                Some(acc) => {
+                    acc.images.extend_from_slice(&batch.images);
+                    acc.labels.extend_from_slice(&batch.labels);
+                    acc.n += batch.n;
+                }
+            }
+        }
+        all
+    } else {
+        load_cifar_bin(&dir.join("test_batch.bin")).ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("fedsparse-idx-{}", std::process::id()));
+        let _ = fs::create_dir_all(&d);
+        d
+    }
+
+    fn write_idx_images(path: &Path, n: u32, h: u32, w: u32) {
+        let mut f = fs::File::create(path).unwrap();
+        f.write_all(&0x0000_0803u32.to_be_bytes()).unwrap();
+        f.write_all(&n.to_be_bytes()).unwrap();
+        f.write_all(&h.to_be_bytes()).unwrap();
+        f.write_all(&w.to_be_bytes()).unwrap();
+        let body: Vec<u8> = (0..(n * h * w)).map(|i| (i % 256) as u8).collect();
+        f.write_all(&body).unwrap();
+    }
+
+    fn write_idx_labels(path: &Path, labels: &[u8]) {
+        let mut f = fs::File::create(path).unwrap();
+        f.write_all(&0x0000_0801u32.to_be_bytes()).unwrap();
+        f.write_all(&(labels.len() as u32).to_be_bytes()).unwrap();
+        f.write_all(labels).unwrap();
+    }
+
+    #[test]
+    fn idx_roundtrip() {
+        let dir = tmpdir();
+        write_idx_images(&dir.join("train-images-idx3-ubyte"), 4, 5, 6);
+        write_idx_labels(&dir.join("train-labels-idx1-ubyte"), &[0, 1, 2, 3]);
+        let data = try_load_idx_split(&dir, "train").unwrap();
+        assert_eq!(data.n, 4);
+        assert_eq!(data.shape, [5, 6, 1]);
+        assert_eq!(data.labels, vec![0, 1, 2, 3]);
+        assert_eq!(data.images.len(), 4 * 5 * 6);
+        assert!((data.images[1] - 1.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn idx_bad_magic_rejected() {
+        let dir = tmpdir();
+        let p = dir.join("bad-images-idx3-ubyte");
+        fs::write(&p, 0xdeadbeefu32.to_be_bytes()).unwrap();
+        assert!(matches!(load_idx_images(&p), Err(IdxError::BadMagic(_))));
+    }
+
+    #[test]
+    fn idx_label_count_mismatch_is_none() {
+        let dir = tmpdir();
+        write_idx_images(&dir.join("t10k-images-idx3-ubyte"), 3, 2, 2);
+        write_idx_labels(&dir.join("t10k-labels-idx1-ubyte"), &[0, 1]);
+        assert!(try_load_idx_split(&dir, "t10k").is_none());
+    }
+
+    #[test]
+    fn cifar_bin_roundtrip() {
+        let dir = tmpdir();
+        let p = dir.join("test_batch.bin");
+        let mut bytes = Vec::new();
+        for r in 0..2u8 {
+            bytes.push(r); // label
+            bytes.extend((0..3072).map(|i| ((i + r as usize) % 256) as u8));
+        }
+        fs::write(&p, &bytes).unwrap();
+        let data = try_load_cifar_split(&dir, false).unwrap();
+        assert_eq!(data.n, 2);
+        assert_eq!(data.shape, [32, 32, 3]);
+        assert_eq!(data.labels, vec![0, 1]);
+        // CHW→HWC: pixel (y=0,x=0) channel 1 comes from offset 1024
+        assert!((data.images[1] - (1024 % 256) as f32 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cifar_bad_size_rejected() {
+        let dir = tmpdir();
+        let p = dir.join("data_batch_1.bin");
+        fs::write(&p, [0u8; 100]).unwrap();
+        assert!(matches!(load_cifar_bin(&p), Err(IdxError::BadCifarSize(_))));
+    }
+
+    #[test]
+    fn missing_files_probe_none() {
+        let dir = tmpdir().join("nonexistent");
+        assert!(try_load_idx_split(&dir, "train").is_none());
+        assert!(try_load_cifar_split(&dir, true).is_none());
+    }
+}

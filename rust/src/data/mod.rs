@@ -1,0 +1,18 @@
+//! Dataset substrate (DESIGN.md S12-S13).
+//!
+//! The paper evaluates on MNIST, Fashion-MNIST and CIFAR-10. This
+//! environment has no network access, so [`synth`] provides
+//! deterministic, learnable synthetic stand-ins with identical tensor
+//! shapes and class counts; [`idx`] auto-loads the *real* datasets
+//! (IDX / CIFAR-10 binary format) whenever the files are present under
+//! `data/`, making the substitution transparent (DESIGN.md
+//! §Substitutions). [`partition`] implements the §5 sample-allocation
+//! matrix: IID and Non-IID-n client splits.
+
+pub mod dataset;
+pub mod idx;
+pub mod partition;
+pub mod synth;
+
+pub use dataset::{Dataset, DatasetKind, Split};
+pub use partition::{iid_partition, noniid_partition};

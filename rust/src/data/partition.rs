@@ -1,0 +1,199 @@
+//! Client data partitioning — the §5 "sample allocation matrix".
+//!
+//! * [`iid_partition`] — shuffle + equal chunks.
+//! * [`noniid_partition`] — Non-IID-n: every client holds samples from
+//!   exactly `n` label classes (the paper's Non-IID-4/6/8 settings),
+//!   with balanced per-client sample counts.
+
+use crate::util::rng::Rng;
+
+/// IID: shuffle all indices, deal equal contiguous chunks.
+/// Remainder samples go one-each to the first clients.
+pub fn iid_partition(n_samples: usize, n_clients: usize, rng: &mut Rng) -> Vec<Vec<usize>> {
+    assert!(n_clients > 0 && n_samples >= n_clients, "bad partition request");
+    let mut idx: Vec<usize> = (0..n_samples).collect();
+    rng.shuffle(&mut idx);
+    let base = n_samples / n_clients;
+    let extra = n_samples % n_clients;
+    let mut out = Vec::with_capacity(n_clients);
+    let mut pos = 0;
+    for c in 0..n_clients {
+        let take = base + usize::from(c < extra);
+        out.push(idx[pos..pos + take].to_vec());
+        pos += take;
+    }
+    out
+}
+
+/// Non-IID-n: client `i` draws from classes
+/// `{(i·step + j) mod n_classes : j < classes_per_client}` with a
+/// stride chosen so class usage is balanced, then each class's sample
+/// pool is sliced evenly among the clients that use it.
+///
+/// Follows the shard construction of McMahan'17 (sort by label, deal
+/// shards) generalized to n classes per client.
+pub fn noniid_partition(
+    labels: &[u8],
+    n_clients: usize,
+    classes_per_client: usize,
+    rng: &mut Rng,
+) -> Vec<Vec<usize>> {
+    let n_classes = (*labels.iter().max().expect("empty labels") as usize) + 1;
+    assert!(
+        classes_per_client >= 1 && classes_per_client <= n_classes,
+        "classes_per_client {classes_per_client} outside [1, {n_classes}]"
+    );
+    // pool per class, shuffled
+    let mut pools: Vec<Vec<usize>> = vec![Vec::new(); n_classes];
+    for (i, &l) in labels.iter().enumerate() {
+        pools[l as usize].push(i);
+    }
+    for p in pools.iter_mut() {
+        rng.shuffle(p);
+    }
+
+    // class assignment: client i gets classes (i + j·offset) rotating
+    // through the class ring so every class is used by the same number
+    // of clients (when n_clients·cpc % n_classes == 0, exactly).
+    let mut users_per_class = vec![0usize; n_classes];
+    let mut assignment: Vec<Vec<usize>> = Vec::with_capacity(n_clients);
+    for i in 0..n_clients {
+        let mut classes = Vec::with_capacity(classes_per_client);
+        let start = (i * classes_per_client) % n_classes;
+        for j in 0..classes_per_client {
+            let c = (start + j) % n_classes;
+            classes.push(c);
+            users_per_class[c] += 1;
+        }
+        assignment.push(classes);
+    }
+
+    // slice each class pool among its users
+    let mut cursor = vec![0usize; n_classes];
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); n_clients];
+    for (i, classes) in assignment.iter().enumerate() {
+        for &c in classes {
+            let share = pools[c].len() / users_per_class[c].max(1);
+            let start = cursor[c];
+            let end = (start + share).min(pools[c].len());
+            out[i].extend_from_slice(&pools[c][start..end]);
+            cursor[c] = end;
+        }
+    }
+    // distribute leftovers (rounding) to keep every sample owned
+    for c in 0..n_classes {
+        let mut i = 0usize;
+        while cursor[c] < pools[c].len() {
+            // give to clients that use class c, round-robin
+            if assignment[i % n_clients].contains(&c) {
+                out[i % n_clients].push(pools[c][cursor[c]]);
+                cursor[c] += 1;
+            }
+            i += 1;
+            if i > n_clients * (pools[c].len() + 1) {
+                break; // no user of this class (can't happen with ring)
+            }
+        }
+    }
+    out
+}
+
+/// Count distinct label classes per client (diagnostics / tests).
+pub fn classes_held(partition: &[Vec<usize>], labels: &[u8]) -> Vec<usize> {
+    partition
+        .iter()
+        .map(|idxs| {
+            let mut seen = [false; 256];
+            let mut count = 0;
+            for &i in idxs {
+                let l = labels[i] as usize;
+                if !seen[l] {
+                    seen[l] = true;
+                    count += 1;
+                }
+            }
+            count
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn balanced_labels(n: usize) -> Vec<u8> {
+        (0..n).map(|i| (i % 10) as u8).collect()
+    }
+
+    #[test]
+    fn iid_covers_all_samples_once() {
+        let mut rng = Rng::new(1);
+        let parts = iid_partition(1003, 10, &mut rng);
+        assert_eq!(parts.len(), 10);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..1003).collect::<Vec<_>>());
+        // sizes balanced within 1
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn noniid_n_classes_exact() {
+        let labels = balanced_labels(10_000);
+        let mut rng = Rng::new(2);
+        for n in [1usize, 2, 4, 6, 8] {
+            let parts = noniid_partition(&labels, 100, n, &mut rng);
+            let held = classes_held(&parts, &labels);
+            assert!(
+                held.iter().all(|&h| h == n),
+                "Non-IID-{n}: classes held {held:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn noniid_covers_all_samples_once() {
+        let labels = balanced_labels(10_000);
+        let mut rng = Rng::new(3);
+        let parts = noniid_partition(&labels, 100, 4, &mut rng);
+        let mut all: Vec<usize> = parts.concat();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 10_000, "samples lost or duplicated");
+    }
+
+    #[test]
+    fn noniid_sizes_roughly_balanced() {
+        let labels = balanced_labels(10_000);
+        let mut rng = Rng::new(4);
+        let parts = noniid_partition(&labels, 100, 4, &mut rng);
+        let sizes: Vec<usize> = parts.iter().map(|p| p.len()).collect();
+        let min = *sizes.iter().min().unwrap();
+        let max = *sizes.iter().max().unwrap();
+        assert!(max - min <= 20, "sizes {min}..{max}");
+    }
+
+    #[test]
+    fn noniid_full_classes_is_iid_like() {
+        let labels = balanced_labels(1000);
+        let mut rng = Rng::new(5);
+        let parts = noniid_partition(&labels, 10, 10, &mut rng);
+        let held = classes_held(&parts, &labels);
+        assert!(held.iter().all(|&h| h == 10));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let labels = balanced_labels(1000);
+        let a = noniid_partition(&labels, 10, 4, &mut Rng::new(7));
+        let b = noniid_partition(&labels, 10, 4, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside")]
+    fn rejects_zero_classes() {
+        noniid_partition(&balanced_labels(100), 10, 0, &mut Rng::new(8));
+    }
+}

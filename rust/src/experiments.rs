@@ -1,0 +1,113 @@
+//! Shared experiment-harness helpers used by the `examples/` drivers
+//! that regenerate the paper's tables and figures (DESIGN.md
+//! per-experiment index E1-E8).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::config::{Partition, RunConfig};
+use crate::coordinator::{Algorithm, Trainer};
+use crate::metrics::recorder::RunSummary;
+
+/// Scale of an experiment run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// CI-sized: small synthetic corpus, few clients, short runs —
+    /// minutes on a laptop; shapes (who wins) hold, constants shift.
+    Quick,
+    /// Paper-sized: 100 clients, full synthetic splits, long runs.
+    Full,
+}
+
+impl Scale {
+    pub fn from_args() -> Self {
+        if std::env::args().any(|a| a == "--quick") {
+            Scale::Quick
+        } else {
+            Scale::Full
+        }
+    }
+}
+
+/// Base experiment config at a given scale (paper §5 setting at Full).
+pub fn base_config(model: &str, scale: Scale) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.model = model.to_string();
+    cfg.dataset = if model.starts_with("cifar") { "cifar10" } else { "mnist" }.into();
+    cfg.data_dir = Some(PathBuf::from("data"));
+    match scale {
+        Scale::Quick => {
+            cfg.clients = 20;
+            cfg.clients_per_round = 5;
+            cfg.local_iters = 3;
+            cfg.train_samples = Some(4_000);
+            cfg.eval_samples = 1_000;
+            cfg.rounds = 40;
+            cfg.eval_every = 2;
+        }
+        Scale::Full => {
+            cfg.clients = 100;
+            cfg.clients_per_round = 10;
+            cfg.local_iters = 5;
+            cfg.eval_samples = 2_500;
+            cfg.rounds = 150; // synthetic corpus converges by ~100
+            cfg.eval_every = 5;
+        }
+    }
+    cfg
+}
+
+/// Run one labeled configuration, appending its trace to `csv`.
+/// Returns the run summary.
+pub fn run_labeled(cfg: RunConfig, label: &str, csv: &Path) -> Result<RunSummary> {
+    println!("── {label} ({} rounds) ──", cfg.rounds);
+    cfg.validate().map_err(anyhow::Error::msg)?;
+    let mut trainer = Trainer::new(cfg)?;
+    trainer.recorder.label = label.to_string();
+    let t0 = std::time::Instant::now();
+    for round in 0..trainer.cfg.rounds {
+        let out = trainer.run_round(round)?;
+        if let Some((_, acc)) = out.eval {
+            println!(
+                "  round {:>4}: loss {:.4} acc {:.4}",
+                round, out.mean_train_loss, acc
+            );
+        }
+    }
+    trainer.recorder.append_csv(csv)?;
+    let s = trainer.recorder.summary();
+    println!(
+        "  → final acc {:.4}, upload {:.2} MB, {:.1}s wall\n",
+        s.final_accuracy,
+        s.total_up_bytes as f64 / 1e6,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(s)
+}
+
+/// The paper's algorithm contenders for Fig. 3 at a given α.
+pub fn fig3_contenders(alpha: f64) -> Vec<(String, Algorithm)> {
+    use crate::sparse::thgs::ThgsConfig;
+    vec![
+        ("fedavg".into(), Algorithm::FedAvg),
+        ("spark".into(), Algorithm::FlatSparse { s: 0.1 }),
+        (
+            format!("layerspares-a{alpha}"),
+            Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha, s_min: 0.01 }),
+        ),
+    ]
+}
+
+/// Partition setting helper.
+pub fn with_partition(mut cfg: RunConfig, p: Partition) -> RunConfig {
+    cfg.partition = p;
+    cfg
+}
+
+/// Results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}

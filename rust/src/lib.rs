@@ -1,0 +1,47 @@
+//! # fedsparse
+//!
+//! Reproduction of *"Efficient and Secure Federated Learning for
+//! Financial Applications"* (cs.LG 2023) as a three-layer
+//! rust + JAX + Pallas system (AOT via PJRT).
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the federated
+//! round loop, the paper's two contributions — time-varying
+//! hierarchical gradient sparsification ([`sparse::thgs`], Alg. 1) and
+//! mask-sparsified secure aggregation ([`secagg`], Alg. 2) — plus every
+//! substrate they need (datasets, partitioning, DH/PRG crypto, sparse
+//! codecs, comm-cost accounting, a PJRT runtime for the AOT-compiled
+//! JAX/Pallas compute graphs, metrics, config and CLI).
+//!
+//! Python never runs on the round path: `make artifacts` lowers the
+//! L2/L1 graphs to `artifacts/*.hlo.txt` once, and [`runtime`] loads
+//! them through the PJRT C API.
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use fedsparse::config::RunConfig;
+//! use fedsparse::coordinator::Trainer;
+//!
+//! let mut cfg = RunConfig::default();
+//! cfg.model = "mnist_mlp".into();
+//! cfg.rounds = 20;
+//! let mut trainer = Trainer::new(cfg).unwrap();
+//! let summary = trainer.run().unwrap();
+//! println!("final acc {:.3}", summary.final_accuracy);
+//! ```
+
+pub mod attack;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod secagg;
+pub mod sparse;
+pub mod util;
+
+pub use config::RunConfig;
+pub use coordinator::Trainer;

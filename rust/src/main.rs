@@ -1,0 +1,277 @@
+//! `fedsparse` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   train    run a federated training job (the paper's §5 loop)
+//!   info     print manifest / model zoo information
+//!   secdemo  one secure-aggregation round with case census (§4)
+//!
+//! Examples:
+//!   fedsparse train --model mnist_mlp --alg thgs:0.1,0.8,0.01 \
+//!       --partition noniid-4 --rounds 200 --out results/run.csv
+//!   fedsparse train --alg fedavg --secure --rounds 50
+//!   fedsparse info
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fedsparse::config::{Partition, RunConfig};
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::models::manifest::Manifest;
+use fedsparse::util::cli::{usage, ArgSpec, Args, CliError};
+use fedsparse::util::timer::{fmt_bytes, Stopwatch};
+
+const TRAIN_SPEC: &[ArgSpec] = &[
+    ArgSpec::opt("model", "m", "mnist_mlp", "model from the zoo (see `fedsparse info`)"),
+    ArgSpec::opt("dataset", "d", "", "mnist|fmnist|cifar10 (default: inferred from model)"),
+    ArgSpec::opt("alg", "a", "thgs", "fedavg | fedprox[:mu] | flat[:s] | stc[:s] | thgs[:s0,alpha,s_min]"),
+    ArgSpec::opt("partition", "p", "iid", "iid | noniid-N"),
+    ArgSpec::opt("rounds", "r", "100", "federated rounds"),
+    ArgSpec::opt("clients", "", "100", "total clients"),
+    ArgSpec::opt("per-round", "k", "10", "clients selected per round"),
+    ArgSpec::opt("local-iters", "e", "5", "local SGD iterations per round"),
+    ArgSpec::opt("lr", "", "0.1", "local learning rate"),
+    ArgSpec::opt("eval-every", "", "5", "evaluate every N rounds"),
+    ArgSpec::opt("eval-samples", "", "2500", "test samples per evaluation"),
+    ArgSpec::opt("train-samples", "", "0", "cap synthetic train split (0 = full size)"),
+    ArgSpec::opt("seed", "", "42", "run seed"),
+    ArgSpec::opt("mask-ratio", "", "1.0", "secure mode: Eq.4 mask keep-ratio k"),
+    ArgSpec::opt("rate-alpha", "", "0.8", "Eq.2 attenuation factor (with --dynamic-rate)"),
+    ArgSpec::opt("rate-min", "", "0.01", "Eq.2 rate floor"),
+    ArgSpec::opt("quant-bits", "", "0", "QSGD stochastic quantization bits (0 = off)"),
+    ArgSpec::opt("momentum", "", "0.0", "DGC momentum correction coefficient"),
+    ArgSpec::opt("warmup", "", "0", "DGC warm-up rounds (sparsity relaxed dense→target)"),
+    ArgSpec::opt("workers", "w", "4", "PJRT executor threads"),
+    ArgSpec::opt("artifacts", "", "artifacts", "AOT artifacts directory"),
+    ArgSpec::opt("data-dir", "", "data", "real-dataset directory (falls back to synthetic)"),
+    ArgSpec::opt("out", "o", "", "CSV output path (append mode)"),
+    ArgSpec::flag("secure", "s", "mask-sparsified secure aggregation (§3.2)"),
+    ArgSpec::flag("dynamic-rate", "", "Eq.2 loss-driven sparsity rate"),
+    ArgSpec::flag("quiet", "q", "suppress per-round lines"),
+];
+
+fn main() -> ExitCode {
+    let mut argv = std::env::args().skip(1);
+    let sub = argv.next().unwrap_or_else(|| "help".to_string());
+    let result = match sub.as_str() {
+        "train" => cmd_train(argv),
+        "info" => cmd_info(argv),
+        "secdemo" => cmd_secdemo(argv),
+        "help" | "--help" | "-h" => {
+            eprintln!("fedsparse — efficient and secure federated learning\n");
+            eprintln!("subcommands: train | info | secdemo\n");
+            eprintln!("{}", usage("fedsparse train", TRAIN_SPEC));
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?} (try `fedsparse help`)");
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            if !matches!(e.downcast_ref::<CliError>(), Some(CliError::Help)) {
+                eprintln!("error: {e:#}");
+                return ExitCode::FAILURE;
+            }
+            ExitCode::SUCCESS
+        }
+    }
+}
+
+fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
+    let mut cfg = RunConfig::default();
+    cfg.model = args.get("model").unwrap_or("mnist_mlp").to_string();
+    let ds = args.get("dataset").unwrap_or("");
+    cfg.dataset = if ds.is_empty() {
+        if cfg.model.starts_with("cifar") {
+            "cifar10".into()
+        } else if cfg.model.starts_with("fmnist") {
+            "fmnist".into()
+        } else {
+            "mnist".into()
+        }
+    } else {
+        ds.to_string()
+    };
+    cfg.algorithm = Algorithm::parse(args.get("alg").unwrap_or("thgs"))
+        .ok_or_else(|| anyhow::anyhow!("bad --alg (see --help)"))?;
+    cfg.partition = Partition::parse(args.get("partition").unwrap_or("iid"))
+        .ok_or_else(|| anyhow::anyhow!("bad --partition (iid | noniid-N)"))?;
+    cfg.rounds = args.get_parsed("rounds")?;
+    cfg.clients = args.get_parsed("clients")?;
+    cfg.clients_per_round = args.get_parsed("per-round")?;
+    cfg.local_iters = args.get_parsed("local-iters")?;
+    cfg.lr = args.get_parsed("lr")?;
+    cfg.eval_every = args.get_parsed("eval-every")?;
+    cfg.eval_samples = args.get_parsed("eval-samples")?;
+    let ts: usize = args.get_parsed("train-samples")?;
+    cfg.train_samples = (ts > 0).then_some(ts);
+    cfg.seed = args.get_parsed("seed")?;
+    cfg.mask_ratio_k = args.get_parsed("mask-ratio")?;
+    cfg.rate_alpha = args.get_parsed("rate-alpha")?;
+    cfg.rate_min = args.get_parsed("rate-min")?;
+    cfg.exec_workers = args.get_parsed("workers")?;
+    cfg.client_workers = cfg.exec_workers;
+    cfg.artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    cfg.data_dir = Some(PathBuf::from(args.get("data-dir").unwrap_or("data")));
+    cfg.secure = args.get_flag("secure");
+    cfg.dynamic_rate = args.get_flag("dynamic-rate");
+    let qb: u8 = args.get_parsed("quant-bits")?;
+    cfg.quant_bits = (qb > 0).then_some(qb);
+    cfg.momentum = args.get_parsed("momentum")?;
+    cfg.warmup_rounds = args.get_parsed("warmup")?;
+    Ok(cfg)
+}
+
+fn cmd_train(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
+    let args = Args::parse_spec("fedsparse train", TRAIN_SPEC, argv)?;
+    let cfg = build_config(&args)?;
+    let quiet = args.get_flag("quiet");
+    let out = args.get("out").unwrap_or("").to_string();
+
+    println!(
+        "fedsparse train: {} on {} | {} | {} clients ({}/round, E={}) | {} rounds{}",
+        cfg.model,
+        cfg.dataset,
+        cfg.algorithm.label(),
+        cfg.clients,
+        cfg.clients_per_round,
+        cfg.local_iters,
+        cfg.rounds,
+        if cfg.secure { " | SECURE" } else { "" },
+    );
+    let sw = Stopwatch::start();
+    let mut trainer = Trainer::new(cfg)?;
+    println!(
+        "model: {} params | data: {}{}",
+        trainer.model_params(),
+        trainer.cfg.dataset,
+        if trainer_is_synth(&trainer) { " (synthetic)" } else { " (real)" },
+    );
+
+    for round in 0..trainer.cfg.rounds {
+        let out = trainer.run_round(round)?;
+        if !quiet {
+            match out.eval {
+                Some((el, ea)) => println!(
+                    "round {:>4}  loss {:.4}  eval_loss {:.4}  acc {:.4}  up {}",
+                    round,
+                    out.mean_train_loss,
+                    el,
+                    ea,
+                    fmt_bytes(trainer.ledger.rounds.last().unwrap().up_paper),
+                ),
+                None => println!(
+                    "round {:>4}  loss {:.4}  nnz/client ~{}",
+                    round,
+                    out.mean_train_loss,
+                    out.nnz.iter().sum::<usize>() / out.nnz.len().max(1),
+                ),
+            }
+        }
+    }
+
+    let summary = trainer.recorder.summary();
+    println!(
+        "\ndone in {:.1}s: final acc {:.4} (best {:.4}) | upload {} (paper model) / {} (wire)",
+        sw.elapsed_secs(),
+        summary.final_accuracy,
+        summary.best_accuracy,
+        fmt_bytes(summary.total_up_bytes),
+        fmt_bytes(summary.total_wire_bytes),
+    );
+    if !out.is_empty() {
+        let path = PathBuf::from(out);
+        trainer.recorder.append_csv(&path)?;
+        println!("rows appended to {}", path.display());
+    }
+    Ok(())
+}
+
+fn trainer_is_synth(t: &Trainer) -> bool {
+    t.cfg.train_samples.is_some() || !t.cfg.data_dir.as_deref().map(|d| d.exists()).unwrap_or(false)
+}
+
+fn cmd_info(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
+    const SPEC: &[ArgSpec] = &[ArgSpec::opt("artifacts", "", "artifacts", "artifacts dir")];
+    let args = Args::parse_spec("fedsparse info", SPEC, argv)?;
+    let dir = PathBuf::from(args.get("artifacts").unwrap());
+    let m = Manifest::load(&dir)?;
+    println!("artifacts: {} | train batch {} | eval batch {}", dir.display(), m.train_batch, m.eval_batch);
+    println!("\n{:<14} {:>12} {:>8}  artifacts", "model", "params", "layers");
+    for model in &m.models {
+        println!(
+            "{:<14} {:>12} {:>8}  {} / {}",
+            model.name,
+            model.param_count,
+            model.layers.len(),
+            model.grad_artifact,
+            model.eval_artifact
+        );
+    }
+    println!("\nkernels: sparsify {:?} | masked_agg {:?} | block {}",
+        m.sparsify_kernels.iter().map(|(n, _)| *n).collect::<Vec<_>>(),
+        m.masked_agg_kernels.iter().map(|(n, _)| *n).collect::<Vec<_>>(),
+        m.kernel_block);
+    Ok(())
+}
+
+fn cmd_secdemo(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
+    const SPEC: &[ArgSpec] = &[
+        ArgSpec::opt("participants", "x", "4", "number of participants"),
+        ArgSpec::opt("size", "n", "10000", "update vector length"),
+        ArgSpec::opt("grad-rate", "", "0.01", "gradient top-k rate"),
+        ArgSpec::opt("mask-ratio", "k", "1.0", "Eq.4 mask keep-ratio k"),
+    ];
+    let args = Args::parse_spec("fedsparse secdemo", SPEC, argv)?;
+    let x: usize = args.get_parsed("participants")?;
+    let n: usize = args.get_parsed("size")?;
+    let rate: f64 = args.get_parsed("grad-rate")?;
+    let k: f64 = args.get_parsed("mask-ratio")?;
+
+    use fedsparse::secagg::protocol::{full_setup, SecAggConfig};
+    use fedsparse::sparse::topk::threshold_for_topk_abs;
+    use fedsparse::util::rng::Rng;
+
+    let cfg = SecAggConfig { mask_ratio_k: k, share_keys: false, ..Default::default() };
+    let (clients, server) = full_setup(x as u32, 7, &cfg);
+    let mut rng = Rng::new(1);
+    let mut payloads = Vec::new();
+    let mut expect = vec![0f64; n];
+    println!("secure aggregation demo: {x} participants, n={n}, grad rate {rate}, mask k={k}\n");
+    for c in &clients {
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+        let kk = ((n as f64 * rate).ceil() as usize).max(1);
+        let d = threshold_for_topk_abs(&g, kk);
+        let keep: Vec<bool> = g.iter().map(|v| v.abs() > d).collect();
+        let upd = c.build_update(&g, &keep, 0, x);
+        let census = upd.census;
+        println!(
+            "client {}: sent {:>6} of {n} ({:.2}%) | case1 grad-only {} | case2 mask-only {} | case3 both {} | exposure {:.1}%",
+            c.id,
+            census.transmitted(),
+            100.0 * census.transmitted() as f64 / n as f64,
+            census.case1_grad_only,
+            census.case2_mask_only,
+            census.case3_both,
+            100.0 * census.exposure_rate(),
+        );
+        for j in 0..n {
+            expect[j] += (g[j] - upd.residual[j]) as f64;
+        }
+        payloads.push((c.id, upd.payload));
+    }
+    let agg = server.aggregate(n, 0, &payloads, &[], &Default::default());
+    let max_err = (0..n).map(|j| (agg[j] as f64 - expect[j]).abs()).fold(0.0, f64::max);
+    println!("\nserver aggregate: max |error| vs unmasked sum = {max_err:.2e} (masks cancelled)");
+    let dense = fedsparse::sparse::codec::dense_cost_bytes(n) * x as u64;
+    let sparse: u64 = payloads.iter().map(|(_, p)| p.paper_cost_bytes()).sum();
+    println!(
+        "upload: dense {} vs masked-sparse {} → {:.1}% of dense",
+        fmt_bytes(dense),
+        fmt_bytes(sparse),
+        100.0 * sparse as f64 / dense as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,5 @@
+//! Run metrics: per-round records, CSV/JSON emission, run summaries.
+
+pub mod recorder;
+
+pub use recorder::{Recorder, RoundRecord, RunSummary};

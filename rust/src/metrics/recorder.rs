@@ -1,0 +1,227 @@
+//! Per-round metric recording + CSV/JSON writers for the experiment
+//! harnesses (figures are regenerated from these files; see
+//! DESIGN.md per-experiment index).
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::{arr, num, obj, s, Value};
+
+/// One row of a training-run trace.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    pub round: u64,
+    pub train_loss: f64,
+    pub eval_loss: f64,
+    pub eval_accuracy: f64,
+    /// Paper-model upload bytes this round (summed over clients).
+    pub up_bytes: u64,
+    /// Actual wire bytes this round.
+    pub wire_bytes: u64,
+    /// Simulated round wall-clock (network model), seconds.
+    pub sim_time_s: f64,
+    /// Mean sparsity rate actually used by clients this round.
+    pub mean_rate: f64,
+}
+
+/// End-of-run summary.
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub rounds: u64,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub total_up_bytes: u64,
+    pub total_wire_bytes: u64,
+    pub total_sim_time_s: f64,
+}
+
+/// Collects rows for one run and serializes them.
+#[derive(Debug, Default)]
+pub struct Recorder {
+    pub label: String,
+    pub rows: Vec<RoundRecord>,
+}
+
+impl Recorder {
+    pub fn new(label: &str) -> Self {
+        Self { label: label.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: RoundRecord) {
+        self.rows.push(row);
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        let finite_acc: Vec<f64> = self
+            .rows
+            .iter()
+            .map(|r| r.eval_accuracy)
+            .filter(|a| a.is_finite())
+            .collect();
+        RunSummary {
+            rounds: self.rows.len() as u64,
+            final_accuracy: finite_acc.last().copied().unwrap_or(f64::NAN),
+            best_accuracy: finite_acc.iter().copied().fold(f64::NAN, f64::max),
+            total_up_bytes: self.rows.iter().map(|r| r.up_bytes).sum(),
+            total_wire_bytes: self.rows.iter().map(|r| r.wire_bytes).sum(),
+            total_sim_time_s: self.rows.iter().map(|r| r.sim_time_s).sum(),
+        }
+    }
+
+    /// CSV with a header; figures are plotted straight from this.
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        writeln!(
+            f,
+            "label,round,train_loss,eval_loss,eval_accuracy,up_bytes,wire_bytes,sim_time_s,mean_rate"
+        )?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6}",
+                self.label,
+                r.round,
+                r.train_loss,
+                r.eval_loss,
+                r.eval_accuracy,
+                r.up_bytes,
+                r.wire_bytes,
+                r.sim_time_s,
+                r.mean_rate
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Append rows to an existing CSV (multi-series figures).
+    pub fn append_csv(&self, path: &Path) -> std::io::Result<()> {
+        let exists = path.exists();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        if !exists {
+            writeln!(
+                f,
+                "label,round,train_loss,eval_loss,eval_accuracy,up_bytes,wire_bytes,sim_time_s,mean_rate"
+            )?;
+        }
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6}",
+                self.label,
+                r.round,
+                r.train_loss,
+                r.eval_loss,
+                r.eval_accuracy,
+                r.up_bytes,
+                r.wire_bytes,
+                r.sim_time_s,
+                r.mean_rate
+            )?;
+        }
+        Ok(())
+    }
+
+    /// JSON dump (summary + rows).
+    pub fn to_json(&self) -> Value {
+        let summary = self.summary();
+        obj(vec![
+            ("label", s(&self.label)),
+            (
+                "summary",
+                obj(vec![
+                    ("rounds", num(summary.rounds as f64)),
+                    ("final_accuracy", num(summary.final_accuracy)),
+                    ("best_accuracy", num(summary.best_accuracy)),
+                    ("total_up_bytes", num(summary.total_up_bytes as f64)),
+                    ("total_wire_bytes", num(summary.total_wire_bytes as f64)),
+                    ("total_sim_time_s", num(summary.total_sim_time_s)),
+                ]),
+            ),
+            (
+                "rows",
+                arr(self
+                    .rows
+                    .iter()
+                    .map(|r| {
+                        obj(vec![
+                            ("round", num(r.round as f64)),
+                            ("train_loss", num(r.train_loss)),
+                            ("eval_loss", num(r.eval_loss)),
+                            ("eval_accuracy", num(r.eval_accuracy)),
+                            ("up_bytes", num(r.up_bytes as f64)),
+                            ("wire_bytes", num(r.wire_bytes as f64)),
+                            ("sim_time_s", num(r.sim_time_s)),
+                            ("mean_rate", num(r.mean_rate)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(round: u64, acc: f64) -> RoundRecord {
+        RoundRecord {
+            round,
+            train_loss: 1.0 / (round + 1) as f64,
+            eval_loss: 1.1,
+            eval_accuracy: acc,
+            up_bytes: 100,
+            wire_bytes: 80,
+            sim_time_s: 0.5,
+            mean_rate: 0.01,
+        }
+    }
+
+    #[test]
+    fn summary_aggregates() {
+        let mut r = Recorder::new("test");
+        r.push(row(0, 0.5));
+        r.push(row(1, f64::NAN));
+        r.push(row(2, 0.8));
+        let s = r.summary();
+        assert_eq!(s.rounds, 3);
+        assert_eq!(s.final_accuracy, 0.8);
+        assert_eq!(s.best_accuracy, 0.8);
+        assert_eq!(s.total_up_bytes, 300);
+        assert!((s.total_sim_time_s - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join(format!("fedsparse-metrics-{}", std::process::id()));
+        let path = dir.join("run.csv");
+        let _ = std::fs::remove_file(&path);
+        let mut r = Recorder::new("a");
+        r.push(row(0, 0.5));
+        r.write_csv(&path).unwrap();
+        let mut r2 = Recorder::new("b");
+        r2.push(row(1, 0.6));
+        r2.append_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3); // header + 2 rows
+        assert!(lines[0].starts_with("label,round"));
+        assert!(lines[1].starts_with("a,0,"));
+        assert!(lines[2].starts_with("b,1,"));
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let mut r = Recorder::new("j");
+        r.push(row(0, 0.9));
+        let v = crate::util::json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(v.path(&["summary", "rounds"]).unwrap().as_usize(), Some(1));
+        assert_eq!(v.get("label").unwrap().as_str(), Some("j"));
+    }
+}

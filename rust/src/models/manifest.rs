@@ -1,0 +1,349 @@
+//! Parse `artifacts/manifest.json` (written by `python -m compile.aot`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::{self, Value};
+
+#[derive(Debug, thiserror::Error)]
+pub enum ManifestError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("json: {0}")]
+    Json(#[from] json::ParseError),
+    #[error("manifest schema: {0}")]
+    Schema(String),
+}
+
+/// Parameter initialization spec.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum InitKind {
+    Normal { std: f32 },
+    Zeros,
+    Ones,
+}
+
+/// One parameter tensor.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: InitKind,
+    /// Network-layer index (THGS grouping).
+    pub layer: usize,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// THGS layer group: indices into the params list.
+#[derive(Clone, Debug)]
+pub struct LayerGroup {
+    pub name: String,
+    pub params: Vec<usize>,
+}
+
+/// One model's metadata.
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub input: Vec<usize>,
+    pub classes: usize,
+    pub params: Vec<ParamSpec>,
+    pub layers: Vec<LayerGroup>,
+    pub param_count: usize,
+    pub grad_artifact: String,
+    pub eval_artifact: String,
+}
+
+impl ModelMeta {
+    /// Flat-vector spans `(start, len)` per THGS layer group, in the
+    /// concatenation order of `params`.
+    pub fn layer_spans(&self) -> Vec<(usize, usize)> {
+        // offsets of each param in the flat concat
+        let mut offsets = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for p in &self.params {
+            offsets.push(off);
+            off += p.numel();
+        }
+        self.layers
+            .iter()
+            .map(|g| {
+                let start = offsets[g.params[0]];
+                let len: usize = g.params.iter().map(|&i| self.params[i].numel()).sum();
+                // groups are contiguous in manifest order
+                debug_assert!(g
+                    .params
+                    .windows(2)
+                    .all(|w| w[1] == w[0] + 1), "non-contiguous layer group");
+                (start, len)
+            })
+            .collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub models: Vec<ModelMeta>,
+    /// (size → artifact) for the standalone pallas kernels.
+    pub sparsify_kernels: Vec<(usize, String)>,
+    pub masked_agg_kernels: Vec<(usize, String)>,
+    pub kernel_block: usize,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self, ManifestError> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn model(&self, name: &str) -> Option<&ModelMeta> {
+        self.models.iter().find(|m| m.name == name)
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+
+    fn parse(dir: &Path, text: &str) -> Result<Self, ManifestError> {
+        let v = json::parse(text)?;
+        let err = |m: &str| ManifestError::Schema(m.to_string());
+
+        let train_batch = v
+            .get("train_batch")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| err("train_batch"))?;
+        let eval_batch = v
+            .get("eval_batch")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| err("eval_batch"))?;
+
+        let mut models = Vec::new();
+        let model_map = v
+            .get("models")
+            .and_then(Value::as_object)
+            .ok_or_else(|| err("models"))?;
+        for (name, mv) in model_map {
+            let params = mv
+                .get("params")
+                .and_then(Value::as_array)
+                .ok_or_else(|| err("params"))?
+                .iter()
+                .map(|p| parse_param(p))
+                .collect::<Result<Vec<_>, _>>()?;
+            let layers = mv
+                .get("layers")
+                .and_then(Value::as_array)
+                .ok_or_else(|| err("layers"))?
+                .iter()
+                .map(|l| {
+                    Ok(LayerGroup {
+                        name: l
+                            .get("name")
+                            .and_then(Value::as_str)
+                            .ok_or_else(|| err("layer name"))?
+                            .to_string(),
+                        params: l
+                            .get("params")
+                            .and_then(Value::as_array)
+                            .ok_or_else(|| err("layer params"))?
+                            .iter()
+                            .map(|x| x.as_usize().ok_or_else(|| err("layer param idx")))
+                            .collect::<Result<Vec<_>, _>>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>, ManifestError>>()?;
+            models.push(ModelMeta {
+                name: name.clone(),
+                input: mv
+                    .get("input")
+                    .and_then(Value::as_array)
+                    .ok_or_else(|| err("input"))?
+                    .iter()
+                    .filter_map(Value::as_usize)
+                    .collect(),
+                classes: mv
+                    .get("classes")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| err("classes"))?,
+                params,
+                layers,
+                param_count: mv
+                    .get("param_count")
+                    .and_then(Value::as_usize)
+                    .ok_or_else(|| err("param_count"))?,
+                grad_artifact: mv
+                    .get("grad")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| err("grad"))?
+                    .to_string(),
+                eval_artifact: mv
+                    .get("eval")
+                    .and_then(Value::as_str)
+                    .ok_or_else(|| err("eval"))?
+                    .to_string(),
+            });
+        }
+        models.sort_by(|a, b| a.name.cmp(&b.name));
+
+        let kernels = v.get("kernels").ok_or_else(|| err("kernels"))?;
+        let parse_kmap = |key: &str| -> Result<Vec<(usize, String)>, ManifestError> {
+            let mut out: Vec<(usize, String)> = kernels
+                .get(key)
+                .and_then(Value::as_object)
+                .ok_or_else(|| err(key))?
+                .iter()
+                .map(|(k, f)| {
+                    Ok((
+                        k.parse::<usize>().map_err(|_| err("kernel size"))?,
+                        f.as_str().ok_or_else(|| err("kernel file"))?.to_string(),
+                    ))
+                })
+                .collect::<Result<Vec<_>, ManifestError>>()?;
+            out.sort_by_key(|(n, _)| *n);
+            Ok(out)
+        };
+
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            train_batch,
+            eval_batch,
+            models,
+            sparsify_kernels: parse_kmap("sparsify")?,
+            masked_agg_kernels: parse_kmap("masked_agg")?,
+            kernel_block: kernels
+                .get("block")
+                .and_then(Value::as_usize)
+                .ok_or_else(|| err("kernel block"))?,
+        })
+    }
+}
+
+fn parse_param(p: &Value) -> Result<ParamSpec, ManifestError> {
+    let err = |m: &str| ManifestError::Schema(m.to_string());
+    let init_obj = p.get("init").ok_or_else(|| err("init"))?;
+    let kind = init_obj
+        .get("kind")
+        .and_then(Value::as_str)
+        .ok_or_else(|| err("init kind"))?;
+    let init = match kind {
+        "normal" => InitKind::Normal {
+            std: init_obj
+                .get("std")
+                .and_then(Value::as_f64)
+                .ok_or_else(|| err("init std"))? as f32,
+        },
+        "zeros" => InitKind::Zeros,
+        "ones" => InitKind::Ones,
+        other => return Err(err(&format!("unknown init kind {other}"))),
+    };
+    Ok(ParamSpec {
+        name: p
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| err("param name"))?
+            .to_string(),
+        shape: p
+            .get("shape")
+            .and_then(Value::as_array)
+            .ok_or_else(|| err("param shape"))?
+            .iter()
+            .filter_map(Value::as_usize)
+            .collect(),
+        init,
+        layer: p.get("layer").and_then(Value::as_usize).ok_or_else(|| err("param layer"))?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "train_batch": 50, "eval_batch": 250,
+      "models": {
+        "mnist_mlp": {
+          "input": [28, 28, 1], "classes": 10,
+          "params": [
+            {"name": "layer0/w", "shape": [784, 200],
+             "init": {"kind": "normal", "std": 0.0505}, "layer": 0},
+            {"name": "layer0/b", "shape": [200],
+             "init": {"kind": "zeros", "std": 0.0}, "layer": 0},
+            {"name": "layer1/w", "shape": [200, 10],
+             "init": {"kind": "normal", "std": 0.0707}, "layer": 1},
+            {"name": "layer1/b", "shape": [10],
+             "init": {"kind": "zeros", "std": 0.0}, "layer": 1}
+          ],
+          "layers": [
+            {"name": "layer0", "params": [0, 1]},
+            {"name": "layer1", "params": [2, 3]}
+          ],
+          "param_count": 159010,
+          "grad": "mnist_mlp_grad.hlo.txt",
+          "eval": "mnist_mlp_eval.hlo.txt"
+        }
+      },
+      "kernels": {
+        "sparsify": {"1024": "sparsify_1024.hlo.txt"},
+        "masked_agg": {"1024": "masked_agg_1024.hlo.txt"},
+        "block": 1024
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        assert_eq!(m.train_batch, 50);
+        let model = m.model("mnist_mlp").unwrap();
+        assert_eq!(model.param_count, 159_010);
+        assert_eq!(model.total_params(), 159_010);
+        assert_eq!(model.params.len(), 4);
+        assert_eq!(model.params[0].numel(), 156_800);
+        assert!(matches!(model.params[0].init, InitKind::Normal { .. }));
+        assert_eq!(m.sparsify_kernels, vec![(1024, "sparsify_1024.hlo.txt".to_string())]);
+        assert_eq!(m.kernel_block, 1024);
+    }
+
+    #[test]
+    fn layer_spans_contiguous() {
+        let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
+        let spans = m.model("mnist_mlp").unwrap().layer_spans();
+        assert_eq!(spans, vec![(0, 157_000), (157_000, 2_010)]);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(Path::new("/"), "{}").is_err());
+        assert!(Manifest::parse(Path::new("/"), "not json").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // integration-ish: parse the actual exported manifest when built
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.train_batch > 0);
+            for model in &m.models {
+                assert_eq!(model.total_params(), model.param_count, "{}", model.name);
+                let spans = model.layer_spans();
+                assert_eq!(
+                    spans.iter().map(|(_, l)| l).sum::<usize>(),
+                    model.param_count
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! Model manifest + parameter management.
+//!
+//! The python AOT exporter writes `artifacts/manifest.json` describing
+//! every model's parameter tensors, layer grouping (THGS), init spec
+//! and artifact filenames. [`manifest`] parses it; [`params`] owns the
+//! flat parameter vector and its per-tensor/per-layer views.
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::{InitKind, LayerGroup, Manifest, ModelMeta, ParamSpec};
+pub use params::ParamVector;

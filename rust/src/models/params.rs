@@ -1,0 +1,196 @@
+//! Flat parameter vector with per-tensor views + SGD/FedProx updates.
+//!
+//! The rust side owns model state as ONE contiguous `Vec<f32>` in
+//! manifest order — sparsification, masking, codecs and aggregation all
+//! operate on this flat layout; the runtime slices it into per-tensor
+//! literals when invoking the PJRT executables.
+
+use crate::util::rng::Rng;
+
+use super::manifest::{InitKind, ModelMeta};
+
+/// Flat model parameters + the tensor boundary table.
+#[derive(Clone, Debug)]
+pub struct ParamVector {
+    pub data: Vec<f32>,
+    /// (offset, numel) per tensor, manifest order.
+    pub tensors: Vec<(usize, usize)>,
+}
+
+impl ParamVector {
+    /// Initialize per the manifest init specs, seeded (same seed ⇒ same
+    /// global model for every run — the experiment reproducibility
+    /// anchor).
+    pub fn init(meta: &ModelMeta, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0x9a9a_0001);
+        let total = meta.total_params();
+        let mut data = Vec::with_capacity(total);
+        let mut tensors = Vec::with_capacity(meta.params.len());
+        for p in &meta.params {
+            let off = data.len();
+            match p.init {
+                InitKind::Normal { std } => {
+                    data.extend((0..p.numel()).map(|_| rng.normal_f32(std)));
+                }
+                InitKind::Zeros => data.extend(std::iter::repeat(0f32).take(p.numel())),
+                InitKind::Ones => data.extend(std::iter::repeat(1f32).take(p.numel())),
+            }
+            tensors.push((off, p.numel()));
+        }
+        Self { data, tensors }
+    }
+
+    pub fn zeros_like(&self) -> Vec<f32> {
+        vec![0f32; self.data.len()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Slice of tensor `i`.
+    pub fn tensor(&self, i: usize) -> &[f32] {
+        let (off, len) = self.tensors[i];
+        &self.data[off..off + len]
+    }
+
+    /// SGD step: `w ← w − lr·g` over the flat layout.
+    pub fn sgd_step(&mut self, grads: &[f32], lr: f32) {
+        assert_eq!(grads.len(), self.data.len(), "grad size mismatch");
+        for (w, g) in self.data.iter_mut().zip(grads) {
+            *w -= lr * g;
+        }
+    }
+
+    /// FedProx gradient correction: `g ← g + μ(w − w_global)` (Li et
+    /// al. 2020's proximal term, additive in the gradient).
+    pub fn add_prox_term(&self, grads: &mut [f32], global: &ParamVector, mu: f32) {
+        assert_eq!(grads.len(), self.data.len(), "grad size mismatch");
+        assert_eq!(global.len(), self.data.len(), "global size mismatch");
+        for i in 0..grads.len() {
+            grads[i] += mu * (self.data[i] - global.data[i]);
+        }
+    }
+
+    /// `self − other` (the round update Δw a client uploads).
+    pub fn delta_from(&self, other: &ParamVector) -> Vec<f32> {
+        assert_eq!(self.len(), other.len(), "size mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect()
+    }
+
+    /// Apply an aggregated update: `w ← w + scale·u`.
+    pub fn apply_update(&mut self, update: &[f32], scale: f32) {
+        assert_eq!(update.len(), self.data.len(), "update size mismatch");
+        for (w, u) in self.data.iter_mut().zip(update) {
+            *w += scale * u;
+        }
+    }
+
+    pub fn l2_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::{LayerGroup, ParamSpec};
+
+    fn meta() -> ModelMeta {
+        ModelMeta {
+            name: "toy".into(),
+            input: vec![4],
+            classes: 2,
+            params: vec![
+                ParamSpec {
+                    name: "w".into(),
+                    shape: vec![4, 3],
+                    init: InitKind::Normal { std: 0.5 },
+                    layer: 0,
+                },
+                ParamSpec {
+                    name: "b".into(),
+                    shape: vec![3],
+                    init: InitKind::Zeros,
+                    layer: 0,
+                },
+                ParamSpec {
+                    name: "g".into(),
+                    shape: vec![3],
+                    init: InitKind::Ones,
+                    layer: 1,
+                },
+            ],
+            layers: vec![
+                LayerGroup { name: "l0".into(), params: vec![0, 1] },
+                LayerGroup { name: "l1".into(), params: vec![2] },
+            ],
+            param_count: 18,
+            grad_artifact: String::new(),
+            eval_artifact: String::new(),
+        }
+    }
+
+    #[test]
+    fn init_respects_kinds_and_layout() {
+        let pv = ParamVector::init(&meta(), 1);
+        assert_eq!(pv.len(), 18);
+        assert_eq!(pv.tensors, vec![(0, 12), (12, 3), (15, 3)]);
+        assert!(pv.tensor(0).iter().any(|&x| x != 0.0));
+        assert!(pv.tensor(1).iter().all(|&x| x == 0.0));
+        assert!(pv.tensor(2).iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn init_deterministic_per_seed() {
+        let a = ParamVector::init(&meta(), 7);
+        let b = ParamVector::init(&meta(), 7);
+        let c = ParamVector::init(&meta(), 8);
+        assert_eq!(a.data, b.data);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn sgd_and_delta_roundtrip() {
+        let global = ParamVector::init(&meta(), 2);
+        let mut local = global.clone();
+        let grads = vec![0.1f32; 18];
+        local.sgd_step(&grads, 0.5);
+        let delta = local.delta_from(&global);
+        assert!(delta.iter().all(|&d| (d + 0.05).abs() < 1e-6));
+        // applying the delta back to global reproduces local
+        let mut restored = global.clone();
+        restored.apply_update(&delta, 1.0);
+        for (a, b) in restored.data.iter().zip(&local.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn prox_term_pulls_toward_global() {
+        let global = ParamVector::init(&meta(), 3);
+        let mut local = global.clone();
+        local.data[0] += 1.0; // drift
+        let mut grads = vec![0f32; 18];
+        local.add_prox_term(&mut grads, &global, 0.1);
+        assert!((grads[0] - 0.1).abs() < 1e-6);
+        assert!(grads[1..].iter().all(|&g| g.abs() < 1e-9));
+    }
+
+    #[test]
+    fn l2_norm_sane() {
+        let mut pv = ParamVector::init(&meta(), 4);
+        pv.data.iter_mut().for_each(|x| *x = 0.0);
+        pv.data[0] = 3.0;
+        pv.data[1] = 4.0;
+        assert!((pv.l2_norm() - 5.0).abs() < 1e-9);
+    }
+}

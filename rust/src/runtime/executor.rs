@@ -1,0 +1,348 @@
+//! Executor pool: N dedicated threads, each with its own PJRT CPU
+//! client and a lazily-compiled executable cache keyed by artifact
+//! file. Jobs are message-passed; results come back on a per-job
+//! channel. This is the only module that touches the `xla` crate.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A host-side tensor crossing the runtime boundary.
+#[derive(Clone, Debug)]
+pub enum Tensor {
+    F32 { shape: Vec<i64>, data: Vec<f32> },
+    I32 { shape: Vec<i64>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<i64>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(
+            shape.iter().product::<i64>() as usize,
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<i64>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(
+            shape.iter().product::<i64>() as usize,
+            data.len(),
+            "shape/data mismatch"
+        );
+        Tensor::I32 { shape, data }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> Result<f32> {
+        let d = self.as_f32()?;
+        if d.len() != 1 {
+            return Err(anyhow!("expected scalar, got {} elements", d.len()));
+        }
+        Ok(d[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        // single-copy path: bytes straight into a shaped literal
+        // (vec1().reshape() would copy twice; §Perf L3 iteration 1)
+        match self {
+            Tensor::F32 { shape, data } => {
+                let dims: Vec<usize> = shape.iter().map(|&d| d as usize).collect();
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    &dims,
+                    bytes,
+                )?)
+            }
+            Tensor::I32 { shape, data } => {
+                let dims: Vec<usize> = shape.iter().map(|&d| d as usize).collect();
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+                };
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    &dims,
+                    bytes,
+                )?)
+            }
+        }
+    }
+}
+
+struct Job {
+    artifact: PathBuf,
+    inputs: Vec<Tensor>,
+    reply: mpsc::Sender<Result<Vec<Tensor>>>,
+}
+
+/// Pool of executor threads.
+pub struct ExecutorPool {
+    tx: mpsc::Sender<Job>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+/// Cloneable, `Send` handle for submitting jobs from worker threads
+/// (`mpsc::Sender` is `Send + Clone` but not `Sync`, so each thread
+/// carries its own clone).
+#[derive(Clone)]
+pub struct ExecutorHandle {
+    tx: mpsc::Sender<Job>,
+}
+
+impl ExecutorHandle {
+    /// Execute `artifact` with `inputs`, blocking until done.
+    pub fn run(&self, artifact: PathBuf, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job { artifact, inputs, reply })
+            .map_err(|_| anyhow!("executor pool shut down"))?;
+        rx.recv().map_err(|_| anyhow!("executor worker died"))?
+    }
+
+    /// Fire a job and return the reply channel.
+    pub fn run_async(
+        &self,
+        artifact: PathBuf,
+        inputs: Vec<Tensor>,
+    ) -> Result<mpsc::Receiver<Result<Vec<Tensor>>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job { artifact, inputs, reply })
+            .map_err(|_| anyhow!("executor pool shut down"))?;
+        Ok(rx)
+    }
+}
+
+impl ExecutorPool {
+    /// Spawn `n` executor threads (each creates its own PJRT client on
+    /// first use; creation errors surface per job).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let shared = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("fedsparse-exec-{i}"))
+                    .spawn(move || worker_loop(rx))
+                    .expect("spawn executor")
+            })
+            .collect();
+        Self { tx, workers }
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// A cloneable submission handle (for cross-thread use).
+    pub fn handle(&self) -> ExecutorHandle {
+        ExecutorHandle { tx: self.tx.clone() }
+    }
+
+    /// Execute `artifact` with `inputs`, blocking until done.
+    pub fn run(&self, artifact: PathBuf, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job { artifact, inputs, reply })
+            .map_err(|_| anyhow!("executor pool shut down"))?;
+        rx.recv().map_err(|_| anyhow!("executor worker died"))?
+    }
+
+    /// Fire a job and return the reply channel (overlap client work).
+    pub fn run_async(
+        &self,
+        artifact: PathBuf,
+        inputs: Vec<Tensor>,
+    ) -> Result<mpsc::Receiver<Result<Vec<Tensor>>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Job { artifact, inputs, reply })
+            .map_err(|_| anyhow!("executor pool shut down"))?;
+        Ok(rx)
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        // closing the channel ends the workers
+        let (dead_tx, _) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, dead_tx));
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<mpsc::Receiver<Job>>>) {
+    // per-thread PJRT state (xla types are not Send)
+    let mut client: Option<xla::PjRtClient> = None;
+    let mut cache: HashMap<PathBuf, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    loop {
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // pool dropped
+        };
+        let result = execute_job(&mut client, &mut cache, &job);
+        let _ = job.reply.send(result);
+    }
+}
+
+fn execute_job(
+    client: &mut Option<xla::PjRtClient>,
+    cache: &mut HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+    job: &Job,
+) -> Result<Vec<Tensor>> {
+    if client.is_none() {
+        *client = Some(xla::PjRtClient::cpu().context("create PJRT CPU client")?);
+    }
+    let c = client.as_ref().unwrap();
+
+    if !cache.contains_key(&job.artifact) {
+        let path = job
+            .artifact
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = c.compile(&comp).with_context(|| format!("compile {path}"))?;
+        cache.insert(job.artifact.clone(), exe);
+    }
+    let exe = cache.get(&job.artifact).unwrap();
+
+    let literals: Vec<xla::Literal> = job
+        .inputs
+        .iter()
+        .map(|t| t.to_literal())
+        .collect::<Result<_>>()?;
+    let result = exe.execute::<xla::Literal>(&literals)?;
+    let out = result[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True → always a tuple
+    let elems = out.to_tuple()?;
+    elems
+        .into_iter()
+        .map(|lit| {
+            let shape = lit.array_shape()?;
+            let dims: Vec<i64> = shape.dims().to_vec();
+            match shape.ty() {
+                xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+                xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+                other => Err(anyhow!("unsupported output element type {other:?}")),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// These tests need the AOT artifacts; they no-op when absent so
+    /// `cargo test` stays green pre-`make artifacts` (integration tests
+    /// cover the full path).
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn sparsify_artifact_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = ExecutorPool::new(1);
+        let n = 1024;
+        let g: Vec<f32> = (0..n).map(|i| (i as f32 / n as f32) - 0.5).collect();
+        let out = pool
+            .run(
+                dir.join("sparsify_1024.hlo.txt"),
+                vec![
+                    Tensor::f32(vec![n as i64], g.clone()),
+                    Tensor::f32(vec![1], vec![0.25]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let sparse = out[0].as_f32().unwrap();
+        let residual = out[1].as_f32().unwrap();
+        for i in 0..n {
+            assert_eq!(sparse[i] + residual[i], g[i]);
+            if g[i].abs() > 0.25 {
+                assert_eq!(sparse[i], g[i]);
+            } else {
+                assert_eq!(sparse[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn masked_agg_artifact_roundtrip() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = ExecutorPool::new(1);
+        let n = 1024usize;
+        let acc = vec![1.0f32; n];
+        let contrib = vec![2.0f32; n];
+        let mask: Vec<f32> = (0..n).map(|i| (i % 2) as f32).collect();
+        let out = pool
+            .run(
+                dir.join("masked_agg_1024.hlo.txt"),
+                vec![
+                    Tensor::f32(vec![n as i64], acc),
+                    Tensor::f32(vec![n as i64], contrib),
+                    Tensor::f32(vec![n as i64], mask),
+                ],
+            )
+            .unwrap();
+        let res = out[0].as_f32().unwrap();
+        for i in 0..n {
+            assert_eq!(res[i], 1.0 + 2.0 * (i % 2) as f32);
+        }
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let pool = ExecutorPool::new(1);
+        let err = pool
+            .run(PathBuf::from("/nonexistent/foo.hlo.txt"), vec![])
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("foo.hlo.txt"));
+    }
+
+    #[test]
+    fn pool_parallel_jobs() {
+        let Some(dir) = artifacts_dir() else { return };
+        let pool = Arc::new(ExecutorPool::new(2));
+        let mut rxs = Vec::new();
+        for _ in 0..8 {
+            let g = vec![0.5f32; 1024];
+            let rx = pool
+                .run_async(
+                    dir.join("sparsify_1024.hlo.txt"),
+                    vec![
+                        Tensor::f32(vec![1024], g),
+                        Tensor::f32(vec![1], vec![1.0]),
+                    ],
+                )
+                .unwrap();
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert!(out[0].as_f32().unwrap().iter().all(|&v| v == 0.0));
+        }
+    }
+}

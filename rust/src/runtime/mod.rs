@@ -1,0 +1,20 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! exported once by `python -m compile.aot`) and executes them from the
+//! rust round loop. Python never runs here.
+//!
+//! * [`executor`] — a pool of dedicated executor threads, each owning
+//!   its own `PjRtClient` (the xla crate's client is `Rc`-based and not
+//!   `Send`, so compute jobs are message-passed to the owning thread)
+//! * [`runner`] — typed wrappers: `ModelRunner::{grad, eval}` pack the
+//!   flat [`crate::models::ParamVector`] + batch into PJRT literals and
+//!   parse the tuple outputs back
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO *text* →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.
+
+pub mod executor;
+pub mod runner;
+
+pub use executor::{ExecutorHandle, ExecutorPool, Tensor};
+pub use runner::{KernelRunner, ModelRunner};

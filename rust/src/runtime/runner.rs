@@ -1,0 +1,190 @@
+//! Typed model/kernel execution on top of the executor pool.
+//!
+//! `ModelRunner` knows a model's manifest entry: it slices the flat
+//! [`ParamVector`] into per-tensor literals, appends the batch, runs
+//! the grad/eval artifact, and re-flattens the outputs.
+
+use std::path::PathBuf;
+use anyhow::{anyhow, Result};
+
+use crate::models::manifest::{Manifest, ModelMeta};
+use crate::models::params::ParamVector;
+
+use super::executor::{ExecutorHandle, ExecutorPool, Tensor};
+
+/// Grad/eval execution for one model.
+#[derive(Clone)]
+pub struct ModelRunner {
+    pool: ExecutorHandle,
+    pub meta: ModelMeta,
+    grad_path: PathBuf,
+    eval_path: PathBuf,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl ModelRunner {
+    pub fn new(pool: &ExecutorPool, manifest: &Manifest, model: &str) -> Result<Self> {
+        let meta = manifest
+            .model(model)
+            .ok_or_else(|| anyhow!("model {model} not in manifest"))?
+            .clone();
+        Ok(Self {
+            grad_path: manifest.artifact_path(&meta.grad_artifact),
+            eval_path: manifest.artifact_path(&meta.eval_artifact),
+            train_batch: manifest.train_batch,
+            eval_batch: manifest.eval_batch,
+            pool: pool.handle(),
+            meta,
+        })
+    }
+
+    fn pack_params(&self, params: &ParamVector) -> Vec<Tensor> {
+        self.meta
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| {
+                let shape: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                Tensor::f32(shape, params.tensor(i).to_vec())
+            })
+            .collect()
+    }
+
+    fn input_shape(&self, batch: usize) -> Vec<i64> {
+        std::iter::once(batch as i64)
+            .chain(self.meta.input.iter().map(|&d| d as i64))
+            .collect()
+    }
+
+    /// One grad step: returns `(loss, flat_grads)`.
+    /// `x` is NHWC flattened (len = batch · prod(input)), `y` labels.
+    pub fn grad(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let b = self.train_batch;
+        if y.len() != b {
+            return Err(anyhow!("grad: expected batch {b}, got {}", y.len()));
+        }
+        let mut inputs = self.pack_params(params);
+        inputs.push(Tensor::f32(self.input_shape(b), x.to_vec()));
+        inputs.push(Tensor::i32(vec![b as i64], y.to_vec()));
+        let out = self.pool.run(self.grad_path.clone(), inputs)?;
+        if out.len() != 1 + self.meta.params.len() {
+            return Err(anyhow!(
+                "grad: expected {} outputs, got {}",
+                1 + self.meta.params.len(),
+                out.len()
+            ));
+        }
+        let loss = out[0].scalar_f32()?;
+        let mut grads = Vec::with_capacity(self.meta.total_params());
+        for t in &out[1..] {
+            grads.extend_from_slice(t.as_f32()?);
+        }
+        Ok((loss, grads))
+    }
+
+    /// Eval one shard: returns `(loss_sum, correct_count)`.
+    pub fn eval_shard(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let b = self.eval_batch;
+        if y.len() != b {
+            return Err(anyhow!("eval: expected batch {b}, got {}", y.len()));
+        }
+        let mut inputs = self.pack_params(params);
+        inputs.push(Tensor::f32(self.input_shape(b), x.to_vec()));
+        inputs.push(Tensor::i32(vec![b as i64], y.to_vec()));
+        let out = self.pool.run(self.eval_path.clone(), inputs)?;
+        Ok((out[0].scalar_f32()?, out[1].scalar_f32()?))
+    }
+
+    /// Evaluate over a whole dataset subset (loops eval-batch shards,
+    /// truncating the tail so every shard is full). Returns
+    /// `(mean_loss, accuracy)`.
+    pub fn evaluate(
+        &self,
+        params: &ParamVector,
+        data: &crate::data::Dataset,
+        max_samples: usize,
+    ) -> Result<(f64, f64)> {
+        let b = self.eval_batch;
+        let n = data.len().min(max_samples) / b * b;
+        if n == 0 {
+            return Err(anyhow!("eval set smaller than one shard ({b})"));
+        }
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for shard in 0..(n / b) {
+            let idx: Vec<usize> = (shard * b..(shard + 1) * b).collect();
+            let (x, y) = data.batch(&idx);
+            let (l, c) = self.eval_shard(params, &x, &y)?;
+            loss_sum += l as f64;
+            correct += c as f64;
+        }
+        Ok((loss_sum / n as f64, correct / n as f64))
+    }
+}
+
+/// Standalone pallas-kernel execution (parity tests + the optional
+/// kernel-offload path).
+#[derive(Clone)]
+pub struct KernelRunner {
+    pool: ExecutorHandle,
+    sparsify: Vec<(usize, PathBuf)>,
+    masked_agg: Vec<(usize, PathBuf)>,
+}
+
+impl KernelRunner {
+    pub fn new(pool: &ExecutorPool, manifest: &Manifest) -> Self {
+        Self {
+            sparsify: manifest
+                .sparsify_kernels
+                .iter()
+                .map(|(n, f)| (*n, manifest.artifact_path(f)))
+                .collect(),
+            masked_agg: manifest
+                .masked_agg_kernels
+                .iter()
+                .map(|(n, f)| (*n, manifest.artifact_path(f)))
+                .collect(),
+            pool: pool.handle(),
+        }
+    }
+
+    pub fn sparsify_sizes(&self) -> Vec<usize> {
+        self.sparsify.iter().map(|(n, _)| *n).collect()
+    }
+
+    /// Run the pallas sparsify kernel of exactly size `n`.
+    pub fn sparsify(&self, g: &[f32], thr: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+        let (_, path) = self
+            .sparsify
+            .iter()
+            .find(|(n, _)| *n == g.len())
+            .ok_or_else(|| anyhow!("no sparsify kernel for n={}", g.len()))?;
+        let out = self.pool.run(
+            path.clone(),
+            vec![
+                Tensor::f32(vec![g.len() as i64], g.to_vec()),
+                Tensor::f32(vec![1], vec![thr]),
+            ],
+        )?;
+        Ok((out[0].as_f32()?.to_vec(), out[1].as_f32()?.to_vec()))
+    }
+
+    /// Run the pallas masked-agg kernel of exactly size `n`.
+    pub fn masked_agg(&self, acc: &[f32], contrib: &[f32], mask: &[f32]) -> Result<Vec<f32>> {
+        let (_, path) = self
+            .masked_agg
+            .iter()
+            .find(|(n, _)| *n == acc.len())
+            .ok_or_else(|| anyhow!("no masked_agg kernel for n={}", acc.len()))?;
+        let out = self.pool.run(
+            path.clone(),
+            vec![
+                Tensor::f32(vec![acc.len() as i64], acc.to_vec()),
+                Tensor::f32(vec![contrib.len() as i64], contrib.to_vec()),
+                Tensor::f32(vec![mask.len() as i64], mask.to_vec()),
+            ],
+        )?;
+        Ok(out[0].as_f32()?.to_vec())
+    }
+}

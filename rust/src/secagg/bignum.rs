@@ -1,0 +1,354 @@
+//! Big unsigned integers for Diffie-Hellman — schoolbook limbs with
+//! modular exponentiation. Sized for 1536/2048-bit MODP groups; built
+//! in-repo because the offline vendor set has no bignum crate
+//! (DESIGN.md S8).
+//!
+//! Not constant-time. That is acceptable here: the DH exchange runs
+//! between *simulated* federated clients inside one process; the
+//! security analysis the paper makes (§4) is about what the
+//! *aggregation server* learns from masked updates, not about
+//! side-channels on the key exchange.
+
+use std::cmp::Ordering;
+
+/// Arbitrary-precision unsigned integer, little-endian u64 limbs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BigUint {
+    /// Little-endian limbs; no trailing zero limbs (canonical form).
+    limbs: Vec<u64>,
+}
+
+impl BigUint {
+    pub fn zero() -> Self {
+        Self { limbs: vec![] }
+    }
+
+    pub fn one() -> Self {
+        Self { limbs: vec![1] }
+    }
+
+    pub fn from_u64(v: u64) -> Self {
+        if v == 0 {
+            Self::zero()
+        } else {
+            Self { limbs: vec![v] }
+        }
+    }
+
+    /// Parse big-endian hex (whitespace tolerated — RFC constants).
+    pub fn from_hex(s: &str) -> Result<Self, String> {
+        let clean: String = s.chars().filter(|c| !c.is_whitespace()).collect();
+        if clean.is_empty() {
+            return Err("empty hex".into());
+        }
+        let mut limbs = Vec::new();
+        let bytes = clean.as_bytes();
+        let mut pos = bytes.len();
+        while pos > 0 {
+            let start = pos.saturating_sub(16);
+            let chunk = std::str::from_utf8(&bytes[start..pos]).unwrap();
+            let limb = u64::from_str_radix(chunk, 16).map_err(|e| e.to_string())?;
+            limbs.push(limb);
+            pos = start;
+        }
+        let mut out = Self { limbs };
+        out.normalize();
+        Ok(out)
+    }
+
+    /// Big-endian bytes (no leading zeros, empty for zero).
+    pub fn to_bytes_be(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.limbs.len() * 8);
+        for limb in self.limbs.iter().rev() {
+            out.extend_from_slice(&limb.to_be_bytes());
+        }
+        while out.first() == Some(&0) {
+            out.remove(0);
+        }
+        out
+    }
+
+    /// Interpret big-endian bytes.
+    pub fn from_bytes_be(bytes: &[u8]) -> Self {
+        let mut limbs = Vec::new();
+        let mut pos = bytes.len();
+        while pos > 0 {
+            let start = pos.saturating_sub(8);
+            let mut limb = 0u64;
+            for &b in &bytes[start..pos] {
+                limb = (limb << 8) | b as u64;
+            }
+            limbs.push(limb);
+            pos = start;
+        }
+        let mut out = Self { limbs };
+        out.normalize();
+        out
+    }
+
+    fn normalize(&mut self) {
+        while self.limbs.last() == Some(&0) {
+            self.limbs.pop();
+        }
+    }
+
+    pub fn is_zero(&self) -> bool {
+        self.limbs.is_empty()
+    }
+
+    pub fn bit_len(&self) -> usize {
+        match self.limbs.last() {
+            None => 0,
+            Some(&top) => (self.limbs.len() - 1) * 64 + (64 - top.leading_zeros() as usize),
+        }
+    }
+
+    pub fn bit(&self, i: usize) -> bool {
+        let (limb, off) = (i / 64, i % 64);
+        self.limbs.get(limb).map_or(false, |&l| (l >> off) & 1 == 1)
+    }
+
+    pub fn cmp_big(&self, other: &Self) -> Ordering {
+        if self.limbs.len() != other.limbs.len() {
+            return self.limbs.len().cmp(&other.limbs.len());
+        }
+        for (a, b) in self.limbs.iter().rev().zip(other.limbs.iter().rev()) {
+            match a.cmp(b) {
+                Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        Ordering::Equal
+    }
+
+    pub fn add(&self, other: &Self) -> Self {
+        let n = self.limbs.len().max(other.limbs.len());
+        let mut out = Vec::with_capacity(n + 1);
+        let mut carry = 0u64;
+        for i in 0..n {
+            let a = self.limbs.get(i).copied().unwrap_or(0);
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let (s1, c1) = a.overflowing_add(b);
+            let (s2, c2) = s1.overflowing_add(carry);
+            out.push(s2);
+            carry = (c1 as u64) + (c2 as u64);
+        }
+        out.push(carry);
+        let mut r = Self { limbs: out };
+        r.normalize();
+        r
+    }
+
+    /// `self - other`; panics if other > self.
+    pub fn sub(&self, other: &Self) -> Self {
+        assert!(self.cmp_big(other) != Ordering::Less, "bignum underflow");
+        let mut out = Vec::with_capacity(self.limbs.len());
+        let mut borrow = 0u64;
+        for i in 0..self.limbs.len() {
+            let a = self.limbs[i];
+            let b = other.limbs.get(i).copied().unwrap_or(0);
+            let (d1, b1) = a.overflowing_sub(b);
+            let (d2, b2) = d1.overflowing_sub(borrow);
+            out.push(d2);
+            borrow = (b1 as u64) + (b2 as u64);
+        }
+        let mut r = Self { limbs: out };
+        r.normalize();
+        r
+    }
+
+    /// Schoolbook multiply.
+    pub fn mul(&self, other: &Self) -> Self {
+        if self.is_zero() || other.is_zero() {
+            return Self::zero();
+        }
+        let mut out = vec![0u64; self.limbs.len() + other.limbs.len()];
+        for (i, &a) in self.limbs.iter().enumerate() {
+            let mut carry = 0u128;
+            for (j, &b) in other.limbs.iter().enumerate() {
+                let cur = out[i + j] as u128 + (a as u128) * (b as u128) + carry;
+                out[i + j] = cur as u64;
+                carry = cur >> 64;
+            }
+            let mut k = i + other.limbs.len();
+            while carry > 0 {
+                let cur = out[k] as u128 + carry;
+                out[k] = cur as u64;
+                carry = cur >> 64;
+                k += 1;
+            }
+        }
+        let mut r = Self { limbs: out };
+        r.normalize();
+        r
+    }
+
+    fn shl_bits(&self, bits: usize) -> Self {
+        if self.is_zero() {
+            return Self::zero();
+        }
+        let (limb_shift, bit_shift) = (bits / 64, bits % 64);
+        let mut out = vec![0u64; self.limbs.len() + limb_shift + 1];
+        for (i, &l) in self.limbs.iter().enumerate() {
+            out[i + limb_shift] |= if bit_shift == 0 { l } else { l << bit_shift };
+            if bit_shift > 0 {
+                out[i + limb_shift + 1] |= l >> (64 - bit_shift);
+            }
+        }
+        let mut r = Self { limbs: out };
+        r.normalize();
+        r
+    }
+
+    /// `self mod m` by binary long division (shift-subtract).
+    pub fn rem(&self, m: &Self) -> Self {
+        assert!(!m.is_zero(), "mod by zero");
+        if self.cmp_big(m) == Ordering::Less {
+            return self.clone();
+        }
+        let mut r = Self::zero();
+        for i in (0..self.bit_len()).rev() {
+            r = r.shl_bits(1);
+            if self.bit(i) {
+                r = r.add(&Self::one());
+            }
+            if r.cmp_big(m) != Ordering::Less {
+                r = r.sub(m);
+            }
+        }
+        r
+    }
+
+    /// `self * other mod m`.
+    pub fn mulmod(&self, other: &Self, m: &Self) -> Self {
+        self.mul(other).rem(m)
+    }
+
+    /// `self ^ exp mod m` — left-to-right square-and-multiply.
+    pub fn modpow(&self, exp: &Self, m: &Self) -> Self {
+        assert!(!m.is_zero(), "mod by zero");
+        if m == &Self::one() {
+            return Self::zero();
+        }
+        let base = self.rem(m);
+        let mut acc = Self::one();
+        for i in (0..exp.bit_len()).rev() {
+            acc = acc.mulmod(&acc, m);
+            if exp.bit(i) {
+                acc = acc.mulmod(&base, m);
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn n(v: u64) -> BigUint {
+        BigUint::from_u64(v)
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let x = BigUint::from_hex("FFFFFFFFFFFFFFFFC90FDAA22168C234").unwrap();
+        assert_eq!(x.bit_len(), 128);
+        let bytes = x.to_bytes_be();
+        assert_eq!(BigUint::from_bytes_be(&bytes), x);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let a = BigUint::from_hex("123456789ABCDEF0123456789ABCDEF0").unwrap();
+        let b = BigUint::from_hex("FEDCBA9876543210").unwrap();
+        assert_eq!(a.add(&b).sub(&b), a);
+    }
+
+    #[test]
+    fn add_carries_across_limbs() {
+        let a = BigUint::from_hex("FFFFFFFFFFFFFFFF").unwrap();
+        let s = a.add(&BigUint::one());
+        assert_eq!(s, BigUint::from_hex("10000000000000000").unwrap());
+    }
+
+    #[test]
+    fn mul_small_matches_u128() {
+        for (a, b) in [(3u64, 5u64), (u64::MAX, 2), (12345, 67890), (u64::MAX, u64::MAX)] {
+            let big = n(a).mul(&n(b));
+            let expect = (a as u128) * (b as u128);
+            let lo = expect as u64;
+            let hi = (expect >> 64) as u64;
+            let want = if hi == 0 {
+                n(lo)
+            } else {
+                BigUint { limbs: vec![lo, hi] }
+            };
+            assert_eq!(big, want, "{a} * {b}");
+        }
+    }
+
+    #[test]
+    fn rem_matches_u128() {
+        let a = BigUint::from_hex("123456789ABCDEF0FEDCBA9876543210").unwrap();
+        let m = n(1_000_000_007);
+        let got = a.rem(&m);
+        let a128 = 0x1234_5678_9ABC_DEF0_FEDC_BA98_7654_3210u128;
+        assert_eq!(got, n((a128 % 1_000_000_007u128) as u64));
+    }
+
+    #[test]
+    fn modpow_small_cases() {
+        // 3^10 mod 1000 = 59049 mod 1000 = 49
+        assert_eq!(n(3).modpow(&n(10), &n(1000)), n(49));
+        // Fermat: 2^(p-1) mod p = 1 for prime p
+        let p = n(1_000_000_007);
+        assert_eq!(n(2).modpow(&n(1_000_000_006), &p), BigUint::one());
+        // x^0 = 1
+        assert_eq!(n(42).modpow(&BigUint::zero(), &p), BigUint::one());
+        // mod 1 → 0
+        assert_eq!(n(42).modpow(&n(3), &BigUint::one()), BigUint::zero());
+    }
+
+    #[test]
+    fn modpow_matches_naive_on_random() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(8);
+        let m = n(0xFFFF_FFFB); // prime 2^32-5
+        for _ in 0..20 {
+            let base = n(rng.next_u64() % 0xFFFF_FFFB);
+            let e = rng.next_u64() % 1000;
+            let mut want = 1u128;
+            for _ in 0..e {
+                want = want * (base.limbs.first().copied().unwrap_or(0) as u128) % 0xFFFF_FFFBu128;
+            }
+            assert_eq!(base.modpow(&n(e), &m), n(want as u64));
+        }
+    }
+
+    #[test]
+    fn dh_commutativity_toy_group() {
+        // g^a^b == g^b^a mod p for toy p
+        let p = n(0xFFFF_FFFB);
+        let g = n(5);
+        let a = n(123_456_789);
+        let b = n(987_654_321);
+        let ga = g.modpow(&a, &p);
+        let gb = g.modpow(&b, &p);
+        assert_eq!(ga.modpow(&b, &p), gb.modpow(&a, &p));
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn sub_underflow_panics() {
+        n(1).sub(&n(2));
+    }
+
+    #[test]
+    fn zero_canonical() {
+        let z = n(5).sub(&n(5));
+        assert!(z.is_zero());
+        assert_eq!(z.bit_len(), 0);
+        assert_eq!(z.to_bytes_be(), Vec::<u8>::new());
+    }
+}

@@ -1,0 +1,102 @@
+//! HKDF-SHA256 (RFC 5869) — derives per-pair, per-round mask seeds from
+//! a Diffie-Hellman shared secret.
+//!
+//! Seed layout: `HKDF(secret, salt="fedsparse-secagg", info=pair||round)`
+//! so one DH exchange (run once per job, §3.2) yields an independent
+//! ChaCha20 key for every round without re-keying.
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// RFC 5869 extract step.
+pub fn hkdf_extract(salt: &[u8], ikm: &[u8]) -> [u8; 32] {
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(salt).expect("hmac key");
+    mac.update(ikm);
+    mac.finalize().into_bytes().into()
+}
+
+/// RFC 5869 expand step (okm up to 255*32 bytes; we only need 32).
+pub fn hkdf_expand(prk: &[u8; 32], info: &[u8], okm: &mut [u8]) {
+    assert!(okm.len() <= 255 * 32, "hkdf expand too long");
+    let mut t: Vec<u8> = Vec::new();
+    let mut done = 0usize;
+    let mut counter = 1u8;
+    while done < okm.len() {
+        let mut mac = <HmacSha256 as Mac>::new_from_slice(prk).expect("hmac key");
+        mac.update(&t);
+        mac.update(info);
+        mac.update(&[counter]);
+        t = mac.finalize().into_bytes().to_vec();
+        let take = (okm.len() - done).min(32);
+        okm[done..done + take].copy_from_slice(&t[..take]);
+        done += take;
+        counter += 1;
+    }
+}
+
+/// Full HKDF: 32-byte output key.
+pub fn hkdf32(salt: &[u8], ikm: &[u8], info: &[u8]) -> [u8; 32] {
+    let prk = hkdf_extract(salt, ikm);
+    let mut okm = [0u8; 32];
+    hkdf_expand(&prk, info, &mut okm);
+    okm
+}
+
+const SALT: &[u8] = b"fedsparse-secagg";
+
+/// ChaCha20 key for the (u,v) pair at `round`. Pair order is
+/// normalized so both sides derive the same key.
+pub fn mask_seed(shared_secret: &[u8], u: u32, v: u32, round: u64) -> [u8; 32] {
+    let (lo, hi) = if u <= v { (u, v) } else { (v, u) };
+    let mut info = Vec::with_capacity(20);
+    info.extend_from_slice(b"mask");
+    info.extend_from_slice(&lo.to_le_bytes());
+    info.extend_from_slice(&hi.to_le_bytes());
+    info.extend_from_slice(&round.to_le_bytes());
+    hkdf32(SALT, shared_secret, &info)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// RFC 5869 Test Case 1 (A.1).
+    #[test]
+    fn rfc5869_case1() {
+        let ikm = [0x0b; 22];
+        let salt: Vec<u8> = (0x00..=0x0c).collect();
+        let info: Vec<u8> = (0xf0..=0xf9).collect();
+        let prk = hkdf_extract(&salt, &ikm);
+        let expected_prk = [
+            0x07, 0x77, 0x09, 0x36, 0x2c, 0x2e, 0x32, 0xdf, 0x0d, 0xdc, 0x3f, 0x0d, 0xc4, 0x7b,
+            0xba, 0x63, 0x90, 0xb6, 0xc7, 0x3b, 0xb5, 0x0f, 0x9c, 0x31, 0x22, 0xec, 0x84, 0x4a,
+            0xd7, 0xc2, 0xb3, 0xe5,
+        ];
+        assert_eq!(prk, expected_prk);
+        let mut okm = [0u8; 42];
+        hkdf_expand(&prk, &info, &mut okm);
+        let expected_okm = [
+            0x3c, 0xb2, 0x5f, 0x25, 0xfa, 0xac, 0xd5, 0x7a, 0x90, 0x43, 0x4f, 0x64, 0xd0, 0x36,
+            0x2f, 0x2a, 0x2d, 0x2d, 0x0a, 0x90, 0xcf, 0x1a, 0x5a, 0x4c, 0x5d, 0xb0, 0x2d, 0x56,
+            0xec, 0xc4, 0xc5, 0xbf, 0x34, 0x00, 0x72, 0x08, 0xd5, 0xb8, 0x87, 0x18, 0x58, 0x65,
+        ];
+        assert_eq!(okm, expected_okm);
+    }
+
+    #[test]
+    fn mask_seed_symmetric_in_pair() {
+        let secret = b"shared";
+        assert_eq!(mask_seed(secret, 3, 7, 5), mask_seed(secret, 7, 3, 5));
+    }
+
+    #[test]
+    fn mask_seed_varies_with_round_and_pair() {
+        let secret = b"shared";
+        let s1 = mask_seed(secret, 1, 2, 0);
+        assert_ne!(s1, mask_seed(secret, 1, 2, 1));
+        assert_ne!(s1, mask_seed(secret, 1, 3, 0));
+        assert_ne!(s1, mask_seed(b"other", 1, 2, 0));
+    }
+}

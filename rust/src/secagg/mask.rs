@@ -1,0 +1,320 @@
+//! Pairwise additive masks (Bonawitz et al. 2017 construction, §2.2).
+//!
+//! For every client pair (u, v) with DH shared secret `s_uv`, both
+//! sides expand the same uniform stream `mask_r ∈ [p, p+q)` (paper
+//! §3.2) via ChaCha20 keyed by `HKDF(s_uv, pair, round)`. The lower-id
+//! client *adds* the mask, the higher-id client *subtracts* it, so the
+//! server-side sum over all participants cancels exactly.
+//!
+//! The DH exchange itself runs once per job; per-round keys come from
+//! the KDF (see [`crate::secagg::kdf::mask_seed`]), reproducing the
+//! paper's "DH only executed once" setting without mask reuse.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::chacha::ChaCha20;
+
+use super::kdf::mask_seed;
+
+/// A σ-filtered pair stream: only the kept (mask_r < σ) entries.
+#[derive(Debug)]
+pub struct FilteredStream {
+    pub sigma: f32,
+    pub n: usize,
+    /// (position, value) of kept entries, ascending positions.
+    pub entries: Vec<(u32, f32)>,
+}
+
+/// Shared per-round cache of σ-filtered pair streams. In the
+/// in-process simulation each pair's stream is needed by BOTH
+/// endpoints within a round; caching halves ChaCha work AND shrinks
+/// the accumulate sweep to the kept entries only (§Perf L3
+/// iterations 4-5). Key: (lo-id, hi-id, round).
+pub type MaskCache = Arc<Mutex<HashMap<(u32, u32, u64), Arc<FilteredStream>>>>;
+
+/// Mask distribution bounds: `mask_r ∈ [p, p+q)` (§3.2).
+#[derive(Clone, Copy, Debug)]
+pub struct MaskRange {
+    pub p: f32,
+    pub q: f32,
+}
+
+impl Default for MaskRange {
+    fn default() -> Self {
+        // symmetric around zero, wide enough to drown typical gradient
+        // magnitudes (|g| ~ 1e-2 after local training)
+        Self { p: -10.0, q: 20.0 }
+    }
+}
+
+impl MaskRange {
+    pub fn lo(&self) -> f32 {
+        self.p
+    }
+
+    pub fn hi(&self) -> f32 {
+        self.p + self.q
+    }
+
+    /// The paper's Eq. 4 filter threshold `σ = p + (k/x)·q`, where `k`
+    /// is the mask keep-ratio and `x` the number of participants.
+    pub fn sigma(&self, k: f64, x: usize) -> f32 {
+        assert!(x > 0, "sigma with zero participants");
+        self.p + ((k / x as f64) as f32) * self.q
+    }
+}
+
+/// One client's view of the pairwise masking state.
+#[derive(Clone)]
+pub struct PairwiseMasker {
+    pub id: u32,
+    /// (peer id, DH shared secret bytes) for every *other* participant.
+    peers: Vec<(u32, Vec<u8>)>,
+    pub range: MaskRange,
+    /// Optional shared stream cache (simulation-only optimization; the
+    /// per-client communication/computation model is unchanged).
+    cache: Option<MaskCache>,
+}
+
+impl std::fmt::Debug for PairwiseMasker {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PairwiseMasker")
+            .field("id", &self.id)
+            .field("n_peers", &self.peers.len())
+            .field("range", &self.range)
+            .finish()
+    }
+}
+
+impl PairwiseMasker {
+    pub fn new(id: u32, peers: Vec<(u32, Vec<u8>)>, range: MaskRange) -> Self {
+        assert!(
+            peers.iter().all(|(pid, _)| *pid != id),
+            "peer list contains self"
+        );
+        Self { id, peers, range, cache: None }
+    }
+
+    /// Attach a shared per-round stream cache.
+    pub fn set_cache(&mut self, cache: MaskCache) {
+        self.cache = Some(cache);
+    }
+
+    pub fn n_peers(&self) -> usize {
+        self.peers.len()
+    }
+
+    /// Restrict to a subset of peers — the per-round participant set
+    /// (masks only form among the round's selected clients; the DH
+    /// pair keys are reused, matching §3.2's one-time key exchange).
+    pub fn restrict(&self, keep: &[u32]) -> PairwiseMasker {
+        PairwiseMasker {
+            id: self.id,
+            peers: self
+                .peers
+                .iter()
+                .filter(|(pid, _)| keep.contains(pid))
+                .cloned()
+                .collect(),
+            range: self.range,
+            cache: self.cache.clone(),
+        }
+    }
+
+    /// The raw uniform stream for one pair at one round: identical on
+    /// both sides of the pair (keyed by normalized pair + round).
+    pub fn raw_pair_mask(&self, peer: u32, round: u64, n: usize) -> Vec<f32> {
+        let (_, secret) = self
+            .peers
+            .iter()
+            .find(|(pid, _)| *pid == peer)
+            .expect("unknown peer");
+        let key = mask_seed(secret, self.id, peer, round);
+        let mut prg = ChaCha20::from_seed(&key, round);
+        let mut out = vec![0f32; n];
+        prg.fill_uniform_f32(&mut out, self.range.lo(), self.range.hi());
+        out
+    }
+
+    /// σ-filtered pair stream, cache-aware: generate the raw stream
+    /// once per (pair, round) and keep only the entries below σ.
+    fn filtered_pair_mask(&self, peer: u32, round: u64, n: usize, sigma: f32) -> Arc<FilteredStream> {
+        let cache_key = {
+            let (lo, hi) = if self.id < peer { (self.id, peer) } else { (peer, self.id) };
+            (lo, hi, round)
+        };
+        if let Some(cache) = &self.cache {
+            if let Some(hit) = cache.lock().unwrap().get(&cache_key) {
+                if hit.n == n && hit.sigma == sigma {
+                    return Arc::clone(hit);
+                }
+            }
+        }
+        let raw = self.raw_pair_mask(peer, round, n);
+        let entries: Vec<(u32, f32)> = raw
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v < sigma)
+            .map(|(i, &v)| (i as u32, v))
+            .collect();
+        let out = Arc::new(FilteredStream { sigma, n, entries });
+        if let Some(cache) = &self.cache {
+            cache.lock().unwrap().insert(cache_key, Arc::clone(&out));
+        }
+        out
+    }
+
+    /// Sign convention: +1 if this client has the smaller id of the
+    /// pair (it adds), −1 otherwise (it subtracts).
+    pub fn sign_for(&self, peer: u32) -> f32 {
+        if self.id < peer {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    /// Dense combined mask `Σ_pairs sign · mask_r` (original secure
+    /// aggregation, no sparsification).
+    pub fn combined_mask(&self, round: u64, n: usize) -> Vec<f32> {
+        let mut acc = vec![0f32; n];
+        for (peer, _) in self.peers.clone() {
+            let raw = self.raw_pair_mask(peer, round, n);
+            let sign = self.sign_for(peer);
+            for i in 0..n {
+                acc[i] += sign * raw[i];
+            }
+        }
+        acc
+    }
+
+    /// Sparse combined mask: the paper's zero-local-value rule
+    /// (Alg. 2 line 14): keep `mask_r[j]` only when `mask_r[j] < σ`.
+    /// Both sides of a pair keep the same positions (same stream), so
+    /// cancellation is preserved. Returns the signed combined sparse
+    /// mask; `nonzero[j]` is true where ANY pair kept a mask value
+    /// (needed for the transmission mask `mask_t`).
+    ///
+    /// The accumulate sweep only touches the σ-kept entries of each
+    /// pair stream (~k/x of n), via the shared [`FilteredStream`]
+    /// cache when attached (§Perf L3 iteration 5).
+    pub fn sparse_combined_mask(&self, round: u64, n: usize, sigma: f32) -> (Vec<f32>, Vec<bool>) {
+        let mut acc = vec![0f32; n];
+        let mut nonzero = vec![false; n];
+        for (peer, _) in self.peers.clone() {
+            let filtered = self.filtered_pair_mask(peer, round, n, sigma);
+            let sign = self.sign_for(peer);
+            for &(i, v) in &filtered.entries {
+                acc[i as usize] += sign * v;
+                nonzero[i as usize] = true;
+            }
+        }
+        (acc, nonzero)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fleet(n: u32) -> Vec<PairwiseMasker> {
+        // all-pairs shared secrets derived deterministically for tests
+        let secret = |a: u32, b: u32| -> Vec<u8> {
+            let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+            format!("secret-{lo}-{hi}").into_bytes()
+        };
+        (0..n)
+            .map(|id| {
+                let peers = (0..n)
+                    .filter(|&p| p != id)
+                    .map(|p| (p, secret(id, p)))
+                    .collect();
+                PairwiseMasker::new(id, peers, MaskRange::default())
+            })
+            .collect()
+    }
+
+    #[test]
+    fn pair_streams_symmetric() {
+        let f = fleet(3);
+        let m01 = f[0].raw_pair_mask(1, 7, 100);
+        let m10 = f[1].raw_pair_mask(0, 7, 100);
+        assert_eq!(m01, m10);
+    }
+
+    #[test]
+    fn dense_masks_cancel_over_fleet() {
+        let f = fleet(5);
+        let n = 1000;
+        let mut sum = vec![0f32; n];
+        for c in &f {
+            let m = c.combined_mask(3, n);
+            for i in 0..n {
+                sum[i] += m[i];
+            }
+        }
+        for (i, &s) in sum.iter().enumerate() {
+            assert!(s.abs() < 1e-3, "position {i} residue {s}");
+        }
+    }
+
+    #[test]
+    fn sparse_masks_cancel_over_fleet() {
+        let f = fleet(4);
+        let n = 2000;
+        let sigma = f[0].range.sigma(1.0, 4); // keep 25% of mask entries
+        let mut sum = vec![0f32; n];
+        let mut any_nonzero = 0usize;
+        for c in &f {
+            let (m, nz) = c.sparse_combined_mask(9, n, sigma);
+            any_nonzero += nz.iter().filter(|&&b| b).count();
+            for i in 0..n {
+                sum[i] += m[i];
+            }
+        }
+        assert!(any_nonzero > 0, "sigma filtered everything");
+        for (i, &s) in sum.iter().enumerate() {
+            assert!(s.abs() < 1e-3, "position {i} residue {s}");
+        }
+    }
+
+    #[test]
+    fn sigma_controls_keep_fraction() {
+        let f = fleet(2);
+        let n = 50_000;
+        let x = 10;
+        for k in [0.5f64, 1.0, 3.0] {
+            let sigma = f[0].range.sigma(k, x);
+            let (_, nz) = f[0].sparse_combined_mask(1, n, sigma);
+            let frac = nz.iter().filter(|&&b| b).count() as f64 / n as f64;
+            let expect = k / x as f64;
+            assert!(
+                (frac - expect).abs() < 0.02,
+                "k={k}: frac={frac:.3} expect={expect:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn rounds_decorrelate_masks() {
+        let f = fleet(2);
+        let a = f[0].raw_pair_mask(1, 0, 64);
+        let b = f[0].raw_pair_mask(1, 1, 64);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn masks_within_declared_range() {
+        let f = fleet(2);
+        let m = f[0].raw_pair_mask(1, 2, 10_000);
+        let r = f[0].range;
+        assert!(m.iter().all(|&x| x >= r.lo() && x < r.hi()));
+    }
+
+    #[test]
+    #[should_panic(expected = "peer list contains self")]
+    fn self_peer_rejected() {
+        PairwiseMasker::new(1, vec![(1, vec![0])], MaskRange::default());
+    }
+}

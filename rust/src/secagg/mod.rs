@@ -1,0 +1,25 @@
+//! Secure aggregation with mask sparsification — the paper's second
+//! contribution (§3.2, Algorithm 2), plus every cryptographic substrate
+//! it needs, built in-repo:
+//!
+//! * [`bignum`] — fixed-limb big unsigned integers with modpow
+//! * [`dh`] — finite-field Diffie-Hellman (RFC 3526 MODP groups)
+//! * [`kdf`] — HKDF-SHA256 shared-secret → mask-seed derivation
+//! * [`mask`] — pairwise additive masks expanded by ChaCha20
+//! * [`sparse_mask`] — the zero-local-value mask matrix (Eq. 3-5)
+//! * [`shamir`] — Shamir secret sharing (Bonawitz-style dropout
+//!   recovery, the paper's SA baseline substrate)
+//! * [`protocol`] — client/server round protocol gluing it together
+
+pub mod bignum;
+pub mod dh;
+pub mod kdf;
+pub mod mask;
+pub mod protocol;
+pub mod shamir;
+pub mod sparse_mask;
+
+pub use dh::{DhKeyPair, DhParams};
+pub use mask::PairwiseMasker;
+pub use protocol::{SecAggClient, SecAggServer, SecAggConfig};
+pub use sparse_mask::{mask_sparsify, CaseCensus, MaskSparsifyConfig, MaskedUpdate};

@@ -1,0 +1,397 @@
+//! The secure-aggregation round protocol: DH setup → pairwise masks →
+//! mask-sparsified updates → server aggregation, with Shamir-based
+//! dropout recovery (Bonawitz'17 path) as the documented extension.
+//!
+//! All participants live in one process (the paper simulates too), but
+//! the information flow is strictly message-shaped: clients only ever
+//! hand the server *payloads* ([`crate::sparse::codec::SparseVec`]) and
+//! *shares*; the server never touches a client's raw update or masker.
+
+use std::collections::HashMap;
+
+use crate::sparse::codec::SparseVec;
+use crate::util::rng::Rng;
+
+use super::dh::{DhKeyPair, DhParams};
+use super::mask::{MaskRange, PairwiseMasker};
+use super::shamir::{self, Share};
+use super::sparse_mask::{mask_sparsify, MaskSparsifyConfig, MaskedUpdate};
+
+/// Protocol configuration.
+#[derive(Clone, Debug)]
+pub struct SecAggConfig {
+    /// Use the RFC 3526 1536-bit group (false → toy group for tests).
+    pub full_dh: bool,
+    pub range: MaskRange,
+    /// Eq. 4 mask keep-ratio numerator `k`.
+    pub mask_ratio_k: f64,
+    /// Shamir reconstruction threshold for dropout recovery.
+    pub share_threshold: usize,
+    /// Distribute Shamir shares of every pair key at setup. O(n³)
+    /// share material — fine for protocol tests (n ≤ 10), turned off
+    /// for 100-client training runs where the paper assumes no dropout.
+    pub share_keys: bool,
+}
+
+impl Default for SecAggConfig {
+    fn default() -> Self {
+        Self {
+            full_dh: false,
+            range: MaskRange::default(),
+            mask_ratio_k: 1.0,
+            share_threshold: 2,
+            share_keys: true,
+        }
+    }
+}
+
+/// Pair key = 32-byte symmetric seed both ends derive from the DH
+/// shared secret; what gets Shamir-shared for dropout recovery.
+fn pair_key(shared_secret: &[u8]) -> [u8; 32] {
+    super::kdf::hkdf32(b"fedsparse-pairkey", shared_secret, b"")
+}
+
+/// One federated participant's secagg state.
+pub struct SecAggClient {
+    pub id: u32,
+    masker: PairwiseMasker,
+    /// Shares this client holds of (owner, peer) pair keys.
+    held_shares: HashMap<(u32, u32), Vec<Share>>,
+    /// Eq. 4 mask keep-ratio numerator `k` (from [`SecAggConfig`]).
+    mask_ratio_k: f64,
+}
+
+impl SecAggClient {
+    /// Build this round's masked sparse update.
+    pub fn build_update(
+        &self,
+        g: &[f32],
+        grad_keep: &[bool],
+        round: u64,
+        participants: usize,
+    ) -> MaskedUpdate {
+        let cfg = MaskSparsifyConfig {
+            range: self.masker.range,
+            mask_ratio_k: self.mask_ratio_for(participants),
+            participants,
+        };
+        mask_sparsify(g, grad_keep, &self.masker, round, &cfg)
+    }
+
+    fn mask_ratio_for(&self, _participants: usize) -> f64 {
+        self.mask_ratio_k
+    }
+
+    pub fn n_peers(&self) -> usize {
+        self.masker.n_peers()
+    }
+
+    /// Masker restricted to the round's selected participant set
+    /// (exclusive of self). Needed because masks only cancel among the
+    /// clients that actually contribute this round.
+    pub fn masker_for(&self, selected: &[u32]) -> PairwiseMasker {
+        self.masker.restrict(selected)
+    }
+
+    /// Build an update against an explicit participant subset.
+    pub fn build_update_among(
+        &self,
+        g: &[f32],
+        grad_keep: &[bool],
+        round: u64,
+        selected: &[u32],
+    ) -> MaskedUpdate {
+        let masker = self.masker_for(selected);
+        let cfg = MaskSparsifyConfig {
+            range: masker.range,
+            mask_ratio_k: self.mask_ratio_k,
+            participants: masker.n_peers() + 1,
+        };
+        mask_sparsify(g, grad_keep, &masker, round, &cfg)
+    }
+
+    /// Surrender held shares for a dropped client (server request).
+    pub fn shares_for(&self, owner: u32, peer: u32) -> Option<&Vec<Share>> {
+        self.held_shares.get(&(owner, peer))
+    }
+
+    /// Attach a shared per-round mask-stream cache (simulation-only
+    /// speedup; see [`crate::secagg::mask::MaskCache`]).
+    pub fn attach_cache(&mut self, cache: crate::secagg::mask::MaskCache) {
+        self.masker.set_cache(cache);
+    }
+}
+
+/// Server-side aggregation state.
+pub struct SecAggServer {
+    pub n_clients: u32,
+    pub range: MaskRange,
+    pub mask_ratio_k: f64,
+    pub share_threshold: usize,
+}
+
+impl SecAggServer {
+    /// Sum the received payloads. `survivors` are the clients whose
+    /// payloads arrived; `dropped` are selected clients that vanished
+    /// AFTER the others built their masks (their pair masks now sit
+    /// uncancelled in the sum). `recovered_keys` maps each
+    /// (survivor, dropped) pair to its reconstructed pair key.
+    pub fn aggregate(
+        &self,
+        n: usize,
+        round: u64,
+        payloads: &[(u32, SparseVec)],
+        dropped: &[u32],
+        recovered_keys: &HashMap<(u32, u32), [u8; 32]>,
+    ) -> Vec<f32> {
+        let mut acc = vec![0f32; n];
+        for (_, p) in payloads {
+            p.add_into(&mut acc);
+        }
+        if dropped.is_empty() {
+            return acc;
+        }
+        // Remove the uncancelled halves: for each survivor v and
+        // dropped u, regenerate the (v,u) sparse mask and subtract v's
+        // signed contribution.
+        let participants = payloads.len() + dropped.len();
+        let sigma = self.range.sigma(self.mask_ratio_k, participants);
+        for &(v, ref _payload) in payloads {
+            for &u in dropped {
+                let key = recovered_keys
+                    .get(&(v, u))
+                    .or_else(|| recovered_keys.get(&(u, v)))
+                    .expect("missing recovered pair key");
+                let masker = PairwiseMasker::new(v, vec![(u, key.to_vec())], self.range);
+                let (mask, _) = masker.sparse_combined_mask(round, n, sigma);
+                for i in 0..n {
+                    acc[i] -= mask[i];
+                }
+            }
+        }
+        acc
+    }
+
+    /// Reconstruct the (owner, peer) pair key from survivors' shares.
+    pub fn reconstruct_pair_key(
+        &self,
+        share_sets: &[Vec<Share>], // one Vec<Share> (16 limbs) per contributing client
+    ) -> [u8; 32] {
+        assert!(
+            share_sets.len() >= self.share_threshold,
+            "not enough shares: {} < {}",
+            share_sets.len(),
+            self.share_threshold
+        );
+        // transpose: limb i gets one Share from each contributor
+        let limbs: Vec<Vec<Share>> = (0..16)
+            .map(|i| share_sets.iter().map(|s| s[i]).collect())
+            .collect();
+        shamir::reconstruct_seed(&limbs)
+    }
+}
+
+/// Run the full setup phase: DH key generation + all-pairs agreement +
+/// Shamir sharing of pair keys. Returns the client fleet and server.
+pub fn full_setup(n: u32, seed: u64, cfg: &SecAggConfig) -> (Vec<SecAggClient>, SecAggServer) {
+    assert!(n >= 2, "secagg needs ≥2 participants");
+    let params = if cfg.full_dh {
+        DhParams::rfc3526_1536()
+    } else {
+        DhParams::toy()
+    };
+    let mut rng = Rng::new(seed);
+    let keypairs: Vec<DhKeyPair> = (0..n).map(|_| DhKeyPair::generate(&params, &mut rng)).collect();
+
+    // all-pairs shared secrets → pair keys (both sides derive the same)
+    let mut keys: HashMap<(u32, u32), [u8; 32]> = HashMap::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let secret = keypairs[u as usize].shared_secret(&params, &keypairs[v as usize].public);
+            keys.insert((u, v), pair_key(&secret));
+        }
+    }
+    let key_of = |a: u32, b: u32| -> [u8; 32] {
+        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+        keys[&(lo, hi)]
+    };
+
+    // Shamir-share every pair key among all OTHER clients: share j of
+    // pair (u,v) goes to client j (j ≠ u, j ≠ v gets a share too —
+    // Bonawitz shares to everyone; reconstruction needs `threshold`).
+    let t = cfg.share_threshold;
+    let mut held: Vec<HashMap<(u32, u32), Vec<Share>>> = (0..n).map(|_| HashMap::new()).collect();
+    if cfg.share_keys {
+        for u in 0..n {
+            for v in (u + 1)..n {
+                let k = key_of(u, v);
+                let limb_shares = shamir::split_seed(&k, n as usize, t, &mut rng);
+                // client j's share vector = j-th share of each limb
+                for j in 0..n as usize {
+                    let mine: Vec<Share> = limb_shares.iter().map(|l| l[j]).collect();
+                    held[j].insert((u, v), mine);
+                }
+            }
+        }
+    }
+
+    let clients = (0..n)
+        .map(|id| {
+            let peers: Vec<(u32, Vec<u8>)> = (0..n)
+                .filter(|&p| p != id)
+                .map(|p| (p, key_of(id, p).to_vec()))
+                .collect();
+            SecAggClient {
+                id,
+                masker: PairwiseMasker::new(id, peers, cfg.range),
+                held_shares: std::mem::take(&mut held[id as usize]),
+                mask_ratio_k: cfg.mask_ratio_k,
+            }
+        })
+        .collect();
+
+    let server = SecAggServer {
+        n_clients: n,
+        range: cfg.range,
+        mask_ratio_k: cfg.mask_ratio_k,
+        share_threshold: t,
+    };
+    (clients, server)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::topk::threshold_for_topk_abs;
+
+    fn keep_top(g: &[f32], frac: f64) -> Vec<bool> {
+        let k = ((g.len() as f64 * frac).ceil() as usize).max(1);
+        let d = threshold_for_topk_abs(g, k);
+        g.iter().map(|v| v.abs() > d).collect()
+    }
+
+    #[test]
+    fn full_round_no_dropout() {
+        let cfg = SecAggConfig::default();
+        let (clients, server) = full_setup(4, 7, &cfg);
+        let n = 3000;
+        let mut rng = Rng::new(8);
+        let mut expect = vec![0f64; n];
+        let mut payloads = Vec::new();
+        for c in &clients {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+            let keep = keep_top(&g, 0.02);
+            let out = c.build_update(&g, &keep, 1, clients.len());
+            for j in 0..n {
+                expect[j] += (g[j] - out.residual[j]) as f64;
+            }
+            payloads.push((c.id, out.payload));
+        }
+        let agg = server.aggregate(n, 1, &payloads, &[], &HashMap::new());
+        for j in 0..n {
+            assert!((agg[j] as f64 - expect[j]).abs() < 2e-3, "at {j}");
+        }
+    }
+
+    #[test]
+    fn dropout_recovery_cancels_orphan_masks() {
+        let cfg = SecAggConfig { share_threshold: 2, ..Default::default() };
+        let (clients, server) = full_setup(4, 9, &cfg);
+        let n = 2000;
+        let mut rng = Rng::new(10);
+
+        // all four build updates (so masks reference all pairs)...
+        let mut updates = Vec::new();
+        for c in &clients {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+            let keep = keep_top(&g, 0.02);
+            let upd = c.build_update(&g, &keep, 2, clients.len());
+            updates.push((c.id, g, upd));
+        }
+        // ...but client 3 drops before sending
+        let dropped = 3u32;
+        let mut payloads = Vec::new();
+        let mut expect = vec![0f64; n];
+        for (id, g, out) in &updates {
+            if *id == dropped {
+                continue;
+            }
+            for j in 0..n {
+                expect[j] += (g[j] - out.residual[j]) as f64;
+            }
+            payloads.push((*id, out.payload.clone()));
+        }
+
+        // server reconstructs pair keys (survivor, dropped) from the
+        // survivors' held shares
+        let mut recovered = HashMap::new();
+        for (v, _, _) in updates.iter().filter(|(id, _, _)| *id != dropped) {
+            let pair = if *v < dropped { (*v, dropped) } else { (dropped, *v) };
+            let share_sets: Vec<Vec<Share>> = clients
+                .iter()
+                .filter(|c| c.id != dropped)
+                .filter_map(|c| c.shares_for(pair.0, pair.1).cloned())
+                .take(cfg.share_threshold)
+                .collect();
+            recovered.insert((*v, dropped), server.reconstruct_pair_key(&share_sets));
+        }
+
+        let agg = server.aggregate(n, 2, &payloads, &[dropped], &recovered);
+        for j in 0..n {
+            assert!(
+                (agg[j] as f64 - expect[j]).abs() < 2e-3,
+                "orphan mask at {j}: {} vs {}",
+                agg[j],
+                expect[j]
+            );
+        }
+    }
+
+    #[test]
+    fn without_recovery_orphan_masks_corrupt_sum() {
+        // negative control: dropping a client WITHOUT recovery leaves
+        // large mask residues (this is why recovery exists)
+        let cfg = SecAggConfig::default();
+        let (clients, server) = full_setup(3, 11, &cfg);
+        let n = 1000;
+        let mut rng = Rng::new(12);
+        let mut payloads = Vec::new();
+        let mut expect = vec![0f64; n];
+        for c in &clients {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+            let keep = keep_top(&g, 0.02);
+            let out = c.build_update(&g, &keep, 3, clients.len());
+            if c.id == 2 {
+                continue; // drop, no recovery
+            }
+            for j in 0..n {
+                expect[j] += (g[j] - out.residual[j]) as f64;
+            }
+            payloads.push((c.id, out.payload));
+        }
+        let agg = server.aggregate(n, 3, &payloads, &[], &HashMap::new());
+        let max_err = (0..n)
+            .map(|j| (agg[j] as f64 - expect[j]).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err > 0.5, "expected visible mask residue, got {max_err}");
+    }
+
+    #[test]
+    fn setup_is_deterministic_per_seed() {
+        let cfg = SecAggConfig::default();
+        let (c1, _) = full_setup(3, 42, &cfg);
+        let (c2, _) = full_setup(3, 42, &cfg);
+        let m1 = c1[0].masker.raw_pair_mask(1, 0, 16);
+        let m2 = c2[0].masker.raw_pair_mask(1, 0, 16);
+        assert_eq!(m1, m2);
+    }
+
+    #[test]
+    #[should_panic(expected = "not enough shares")]
+    fn reconstruction_requires_threshold() {
+        let cfg = SecAggConfig { share_threshold: 3, ..Default::default() };
+        let (clients, server) = full_setup(4, 13, &cfg);
+        let shares = vec![clients[0].shares_for(1, 2).unwrap().clone()];
+        server.reconstruct_pair_key(&shares);
+    }
+}

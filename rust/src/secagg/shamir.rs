@@ -1,0 +1,200 @@
+//! Shamir secret sharing over GF(p), p = 2^61 − 1 (Mersenne prime).
+//!
+//! Substrate for the Bonawitz'17 dropout-recovery path (DESIGN.md S11):
+//! each client secret-shares its per-pair seed material so the server
+//! can reconstruct the masks of clients that drop mid-round from any
+//! `threshold` surviving shares. The paper's protocol assumes no
+//! dropout; we implement the recovery path as the documented extension
+//! and exercise it in `rust/tests/secagg_e2e.rs`.
+
+/// Field modulus 2^61 − 1 (prime).
+pub const P: u64 = (1u64 << 61) - 1;
+
+#[inline]
+fn add(a: u64, b: u64) -> u64 {
+    let s = a + b; // < 2^62, no overflow
+    if s >= P {
+        s - P
+    } else {
+        s
+    }
+}
+
+#[inline]
+fn sub(a: u64, b: u64) -> u64 {
+    if a >= b {
+        a - b
+    } else {
+        a + P - b
+    }
+}
+
+#[inline]
+fn mul(a: u64, b: u64) -> u64 {
+    ((a as u128 * b as u128) % P as u128) as u64
+}
+
+/// Modular inverse via Fermat (p prime).
+fn inv(a: u64) -> u64 {
+    assert!(a % P != 0, "inverse of zero");
+    pow(a, P - 2)
+}
+
+fn pow(mut base: u64, mut e: u64) -> u64 {
+    base %= P;
+    let mut acc = 1u64;
+    while e > 0 {
+        if e & 1 == 1 {
+            acc = mul(acc, base);
+        }
+        base = mul(base, base);
+        e >>= 1;
+    }
+    acc
+}
+
+/// One share: the polynomial evaluated at x (x ≠ 0).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Share {
+    pub x: u64,
+    pub y: u64,
+}
+
+/// Split `secret` (< P) into `n` shares with reconstruction
+/// threshold `t` (any t shares suffice; t−1 reveal nothing).
+pub fn split(secret: u64, n: usize, t: usize, rng: &mut crate::util::rng::Rng) -> Vec<Share> {
+    assert!(secret < P, "secret out of field");
+    assert!(t >= 1 && t <= n, "bad threshold t={t} n={n}");
+    // random polynomial of degree t-1 with a_0 = secret
+    let coeffs: Vec<u64> = std::iter::once(secret)
+        .chain((1..t).map(|_| rng.below(P)))
+        .collect();
+    (1..=n as u64)
+        .map(|x| {
+            // Horner evaluation
+            let mut y = 0u64;
+            for &c in coeffs.iter().rev() {
+                y = add(mul(y, x), c);
+            }
+            Share { x, y }
+        })
+        .collect()
+}
+
+/// Reconstruct the secret from ≥ t shares (Lagrange at x=0).
+/// Shares must have distinct x; extra shares beyond t are fine.
+pub fn reconstruct(shares: &[Share]) -> u64 {
+    assert!(!shares.is_empty(), "no shares");
+    let mut secret = 0u64;
+    for (i, si) in shares.iter().enumerate() {
+        // L_i(0) = Π_{j≠i} x_j / (x_j − x_i)
+        let mut num = 1u64;
+        let mut den = 1u64;
+        for (j, sj) in shares.iter().enumerate() {
+            if i == j {
+                continue;
+            }
+            assert_ne!(si.x, sj.x, "duplicate share x");
+            num = mul(num, sj.x % P);
+            den = mul(den, sub(sj.x % P, si.x % P));
+        }
+        secret = add(secret, mul(si.y, mul(num, inv(den))));
+    }
+    secret
+}
+
+/// Split a 32-byte seed into shares (chunked into 4 field elements of
+/// ≤61 bits each plus remainder handling via 16-bit limbs for
+/// simplicity: 16 × 16-bit limbs, each shared independently).
+pub fn split_seed(seed: &[u8; 32], n: usize, t: usize, rng: &mut crate::util::rng::Rng) -> Vec<Vec<Share>> {
+    // 16-bit limbs guarantee < P trivially
+    (0..16)
+        .map(|i| {
+            let limb = u16::from_le_bytes([seed[2 * i], seed[2 * i + 1]]) as u64;
+            split(limb, n, t, rng)
+        })
+        .collect()
+}
+
+/// Reconstruct a 32-byte seed from per-limb share sets.
+pub fn reconstruct_seed(limbs: &[Vec<Share>]) -> [u8; 32] {
+    assert_eq!(limbs.len(), 16, "expect 16 limbs");
+    let mut out = [0u8; 32];
+    for (i, shares) in limbs.iter().enumerate() {
+        let v = reconstruct(shares) as u16;
+        out[2 * i..2 * i + 2].copy_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_exact_threshold() {
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let secret = rng.below(P);
+            let shares = split(secret, 5, 3, &mut rng);
+            assert_eq!(reconstruct(&shares[..3]), secret);
+            assert_eq!(reconstruct(&shares[1..4]), secret);
+            assert_eq!(reconstruct(&shares), secret); // extras fine
+        }
+    }
+
+    #[test]
+    fn below_threshold_is_not_secret() {
+        // t-1 shares interpolate to a (almost surely) different value
+        let mut rng = Rng::new(2);
+        let secret = 123_456_789u64;
+        let shares = split(secret, 5, 3, &mut rng);
+        let wrong = reconstruct(&shares[..2]);
+        assert_ne!(wrong, secret);
+    }
+
+    #[test]
+    fn single_share_threshold_one() {
+        let mut rng = Rng::new(3);
+        let shares = split(42, 4, 1, &mut rng);
+        // t=1: constant polynomial; every share IS the secret
+        for s in &shares {
+            assert_eq!(reconstruct(&[*s]), 42);
+        }
+    }
+
+    #[test]
+    fn seed_roundtrip() {
+        let mut rng = Rng::new(4);
+        let mut seed = [0u8; 32];
+        for (i, b) in seed.iter_mut().enumerate() {
+            *b = (i * 7 + 3) as u8;
+        }
+        let shares = split_seed(&seed, 6, 4, &mut rng);
+        let subset: Vec<Vec<Share>> = shares.iter().map(|l| l[1..5].to_vec()).collect();
+        assert_eq!(reconstruct_seed(&subset), seed);
+    }
+
+    #[test]
+    fn field_ops_sane() {
+        assert_eq!(add(P - 1, 2), 1);
+        assert_eq!(sub(1, 2), P - 1);
+        assert_eq!(mul(P - 1, P - 1), 1); // (-1)^2
+        assert_eq!(mul(inv(7), 7), 1);
+        assert_eq!(pow(2, 61), 1); // 2^61 ≡ 1 (mod 2^61 − 1)
+    }
+
+    #[test]
+    #[should_panic(expected = "bad threshold")]
+    fn threshold_above_n_rejected() {
+        split(1, 3, 4, &mut Rng::new(5));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate share x")]
+    fn duplicate_shares_rejected() {
+        let s = Share { x: 1, y: 2 };
+        reconstruct(&[s, s]);
+    }
+}

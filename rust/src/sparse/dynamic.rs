@@ -1,0 +1,130 @@
+//! Dynamic sparsity-rate controller — the paper's Eq. 2:
+//!
+//! ```text
+//! R ← (α + β − t/T) · R,   clipped to [R_min, 1]
+//! ```
+//!
+//! where `β = (loss_prev − loss_now) / loss_now` is the client's loss
+//! change rate (Alg. 2 line 8), `t` the round index and `T` the round
+//! budget. Early in training (big loss swings, small t/T) the rate
+//! stays high; as training settles the rate decays toward `R_min`.
+//!
+//! §4 also leans on this: each client's rate differs (loss-driven), so
+//! the aggregator cannot infer the Top-k cardinality of any client.
+
+/// Eq. 2 controller state for one client.
+#[derive(Clone, Debug)]
+pub struct DynamicRate {
+    /// Constant attenuation factor α.
+    pub alpha: f64,
+    /// Round budget T.
+    pub total_rounds: u64,
+    /// Rate floor R_min.
+    pub r_min: f64,
+    /// Current rate R.
+    rate: f64,
+    /// Previous round's loss (None before the first observation).
+    loss_prev: Option<f64>,
+}
+
+impl DynamicRate {
+    pub fn new(r0: f64, alpha: f64, total_rounds: u64, r_min: f64) -> Self {
+        assert!(r0 > 0.0 && r0 <= 1.0, "r0={r0} outside (0,1]");
+        assert!(r_min > 0.0 && r_min <= r0, "r_min={r_min} outside (0,r0]");
+        assert!(total_rounds > 0, "total_rounds=0");
+        Self { alpha, total_rounds, r_min, rate: r0, loss_prev: None }
+    }
+
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// β for a loss transition (Alg. 2 line 8). Positive when the loss
+    /// dropped. Guards against division by ~0.
+    pub fn beta(loss_prev: f64, loss_now: f64) -> f64 {
+        if loss_now.abs() < 1e-12 {
+            return 0.0;
+        }
+        (loss_prev - loss_now) / loss_now
+    }
+
+    /// Observe this round's loss and update R per Eq. 2.
+    /// Returns the new rate.
+    pub fn observe(&mut self, t: u64, loss_now: f64) -> f64 {
+        let beta = match self.loss_prev {
+            Some(prev) => Self::beta(prev, loss_now),
+            None => 0.0, // first observation: no change signal yet
+        };
+        self.loss_prev = Some(loss_now);
+        let frac = t as f64 / self.total_rounds as f64;
+        let factor = self.alpha + beta - frac;
+        self.rate = (self.rate * factor).clamp(self.r_min, 1.0);
+        self.rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_sign_matches_loss_direction() {
+        assert!(DynamicRate::beta(2.0, 1.0) > 0.0); // improving → positive
+        assert!(DynamicRate::beta(1.0, 2.0) < 0.0); // worsening → negative
+        assert_eq!(DynamicRate::beta(1.0, 0.0), 0.0); // guard
+    }
+
+    #[test]
+    fn decays_to_floor_when_stalled() {
+        // constant loss → β=0; with α<1, R decays each round to R_min
+        let mut c = DynamicRate::new(0.5, 0.8, 100, 0.01);
+        for t in 0..100 {
+            c.observe(t, 1.0);
+        }
+        assert!((c.rate() - 0.01).abs() < 1e-9, "rate={}", c.rate());
+    }
+
+    #[test]
+    fn big_loss_drop_raises_rate() {
+        let mut c = DynamicRate::new(0.1, 0.8, 1000, 0.01);
+        c.observe(0, 10.0);
+        // loss halves → β = (10-5)/5 = 1.0 → factor ≈ 1.8 → rate grows
+        let r = c.observe(1, 5.0);
+        assert!(r > 0.1, "rate={r}");
+        assert!(r <= 1.0);
+    }
+
+    #[test]
+    fn clipped_to_unit_interval() {
+        let mut c = DynamicRate::new(0.9, 1.5, 10, 0.01);
+        c.observe(0, 4.0);
+        let r = c.observe(1, 1.0); // β=3, factor huge
+        assert_eq!(r, 1.0);
+    }
+
+    #[test]
+    fn late_rounds_push_down() {
+        // identical loss trajectory, later t → smaller factor
+        let mut early = DynamicRate::new(0.5, 1.0, 100, 0.01);
+        early.observe(0, 2.0);
+        let r_early = early.observe(1, 1.9);
+
+        let mut late = DynamicRate::new(0.5, 1.0, 100, 0.01);
+        late.observe(90, 2.0);
+        let r_late = late.observe(95, 1.9);
+        assert!(r_late < r_early, "late {r_late} !< early {r_early}");
+    }
+
+    #[test]
+    fn first_observation_uses_zero_beta() {
+        let mut c = DynamicRate::new(0.5, 1.0, 10, 0.01);
+        // t=0 → factor = α − 0 = 1.0 → unchanged
+        assert!((c.observe(0, 123.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside (0,1]")]
+    fn rejects_bad_r0() {
+        DynamicRate::new(0.0, 0.8, 10, 0.01);
+    }
+}

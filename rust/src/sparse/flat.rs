@@ -1,0 +1,115 @@
+//! Conventional flat Top-k sparsification (Dryden et al. 2016) — the
+//! baseline the paper's §5.1 calls "- spark": the whole update vector
+//! is flattened and a single global Top-k is applied.
+//!
+//! This is exactly the failure mode §1 motivates THGS with: layers
+//! whose parameters are orders of magnitude smaller are starved by a
+//! global threshold.
+
+use super::topk::threshold_for_topk_abs;
+
+/// Result of a sparsification pass.
+#[derive(Clone, Debug, Default)]
+pub struct SparsifyOut {
+    /// Dense vector with unkept entries zeroed (`g̃ ⊙ g` of Alg. 1).
+    pub sparse: Vec<f32>,
+    /// The complement, accumulated locally (`w_residual`).
+    pub residual: Vec<f32>,
+    /// Number of kept (non-zero) entries.
+    pub nnz: usize,
+    /// The threshold(s) used — one per layer group (flat = 1 entry).
+    pub thresholds: Vec<f32>,
+}
+
+/// Flat Top-k: keep the `⌈s·n⌉` largest-magnitude entries of the whole
+/// vector (strictly greater than the k-th magnitude; ties dropped to
+/// the residual, matching Alg. 1's `torch.where(|g| > δ)` semantics).
+pub fn flat_topk_sparsify(g: &[f32], s: f64) -> SparsifyOut {
+    let n = g.len();
+    assert!(n > 0, "flat_topk_sparsify on empty update");
+    assert!((0.0..=1.0).contains(&s), "sparsity rate {s} outside [0,1]");
+    let k = ((n as f64 * s).ceil() as usize).clamp(1, n);
+    let delta = threshold_for_topk_abs(g, k);
+    apply_threshold(g, delta)
+}
+
+/// Threshold application sweep (the rust twin of the pallas
+/// `sparsify` kernel; parity is asserted in `rust/tests/pallas_parity.rs`).
+pub fn apply_threshold(g: &[f32], delta: f32) -> SparsifyOut {
+    let mut sparse = vec![0f32; g.len()];
+    let mut residual = vec![0f32; g.len()];
+    let mut nnz = 0usize;
+    for i in 0..g.len() {
+        let x = g[i];
+        if x.abs() > delta {
+            sparse[i] = x;
+            nnz += 1;
+        } else {
+            residual[i] = x;
+        }
+    }
+    SparsifyOut { sparse, residual, nnz, thresholds: vec![delta] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_vec(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32(1.0)).collect()
+    }
+
+    #[test]
+    fn split_reconstructs_exactly() {
+        let g = rand_vec(1, 5000);
+        let out = flat_topk_sparsify(&g, 0.01);
+        for i in 0..g.len() {
+            assert_eq!(out.sparse[i] + out.residual[i], g[i]);
+            assert!(out.sparse[i] == 0.0 || out.residual[i] == 0.0);
+        }
+    }
+
+    #[test]
+    fn nnz_close_to_k() {
+        let g = rand_vec(2, 10_000);
+        let out = flat_topk_sparsify(&g, 0.01);
+        // strict-> ties dropped, so nnz ≤ k; with continuous data nnz == k-ish
+        assert!(out.nnz <= 100);
+        assert!(out.nnz >= 95, "nnz={}", out.nnz);
+    }
+
+    #[test]
+    fn keeps_largest_magnitudes() {
+        let g = vec![0.1f32, -3.0, 0.2, 2.0, -0.05, 1.0];
+        // k=3 → δ = 1.0; strict > keeps the two entries above it
+        let out = flat_topk_sparsify(&g, 0.5);
+        assert_eq!(out.nnz, 2);
+        assert_eq!(out.sparse[1], -3.0);
+        assert_eq!(out.sparse[3], 2.0);
+    }
+
+    #[test]
+    fn s_one_keeps_everything_nonzero_magnitude() {
+        let g = vec![1.0f32, -2.0, 3.0];
+        let out = flat_topk_sparsify(&g, 1.0);
+        // delta = min |g| = 1.0; strict > drops the minimum into residual
+        assert_eq!(out.nnz, 2);
+        assert_eq!(out.residual[0], 1.0);
+    }
+
+    #[test]
+    fn tiny_s_keeps_at_least_one() {
+        let g = rand_vec(3, 1000);
+        let out = flat_topk_sparsify(&g, 1e-9);
+        assert!(out.nnz <= 1);
+        assert_eq!(out.thresholds.len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0,1]")]
+    fn rejects_bad_rate() {
+        flat_topk_sparsify(&[1.0], 1.5);
+    }
+}

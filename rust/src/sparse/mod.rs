@@ -1,0 +1,31 @@
+//! Gradient sparsification — the paper's first contribution (§3.1).
+//!
+//! * [`topk`] — O(N) quickselect threshold for Top-k selection
+//! * [`flat`] — conventional whole-vector Top-k (Dryden'16 baseline)
+//! * [`thgs`] — Time-varying Hierarchical Gradient Sparsification
+//!   (Algorithm 1): per-layer Top-k with layer-decaying sparsity rate
+//! * [`residual`] — local accumulation of unsent gradient mass
+//! * [`codec`] — sparse index/value encoding + the paper's Eq. 6
+//!   96-bit communication cost model
+//! * [`dynamic`] — the Eq. 2 loss-driven dynamic sparsity-rate
+//!   controller used by the secure path
+
+pub mod codec;
+pub mod dynamic;
+pub mod flat;
+pub mod momentum;
+pub mod quant;
+pub mod residual;
+pub mod stc;
+pub mod thgs;
+pub mod topk;
+
+pub use codec::SparseVec;
+pub use momentum::{warmup_rate, MomentumCorrector};
+pub use quant::{dequantize, quantize, QuantConfig};
+pub use stc::stc_sparsify;
+pub use dynamic::DynamicRate;
+pub use flat::flat_topk_sparsify;
+pub use residual::ResidualStore;
+pub use thgs::{layer_rates, thgs_sparsify, ThgsConfig};
+pub use topk::{threshold_for_topk, threshold_for_topk_abs};

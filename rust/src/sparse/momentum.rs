@@ -1,0 +1,122 @@
+//! DGC-style momentum correction + warm-up (Lin et al. 2018, §2.1;
+//! also the paper's §6 future work: "adding gradient correction … to
+//! the sparse gradient update process").
+//!
+//! Plain residual accumulation delays *velocity*, not just gradients;
+//! DGC fixes this by accumulating momentum-corrected updates:
+//!
+//! ```text
+//! u_t = m · u_{t-1} + g_t          (velocity)
+//! v_t = v_{t-1} + u_t              (accumulated correction)
+//! sparsify(v_t); v keeps the unsent mass
+//! ```
+//!
+//! Warm-up: during the first `warmup_rounds` the sparsity rate is
+//! relaxed exponentially from dense toward the target, which DGC found
+//! necessary for aggressive (≤0.1%) rates.
+
+/// Momentum-correction state for one client.
+#[derive(Clone, Debug)]
+pub struct MomentumCorrector {
+    /// Momentum coefficient m.
+    pub momentum: f32,
+    velocity: Vec<f32>,
+}
+
+impl MomentumCorrector {
+    pub fn new(n: usize, momentum: f32) -> Self {
+        assert!((0.0..1.0).contains(&momentum), "momentum {momentum} outside [0,1)");
+        Self { momentum, velocity: vec![0.0; n] }
+    }
+
+    /// Fold this round's raw update `g` through the velocity and
+    /// return the corrected update to be accumulated + sparsified.
+    pub fn correct(&mut self, g: &[f32]) -> Vec<f32> {
+        assert_eq!(g.len(), self.velocity.len(), "velocity size mismatch");
+        for (u, &x) in self.velocity.iter_mut().zip(g) {
+            *u = self.momentum * *u + x;
+        }
+        self.velocity.clone()
+    }
+
+    /// DGC "momentum factor masking": zero the velocity at positions
+    /// that shipped this round (they start fresh).
+    pub fn mask_sent(&mut self, sparse: &[f32]) {
+        assert_eq!(sparse.len(), self.velocity.len(), "mask size mismatch");
+        for (u, &s) in self.velocity.iter_mut().zip(sparse) {
+            if s != 0.0 {
+                *u = 0.0;
+            }
+        }
+    }
+
+    pub fn velocity_norm(&self) -> f64 {
+        self.velocity.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
+    }
+}
+
+/// Warm-up schedule: exponentially tighten the sparsity rate from 1.0
+/// (dense) to `target` over `warmup_rounds` (DGC used 4 epochs:
+/// 25% → 6.25% → 1.5625% → 0.4% → target).
+pub fn warmup_rate(target: f64, warmup_rounds: u64, round: u64) -> f64 {
+    if warmup_rounds == 0 || round >= warmup_rounds {
+        return target;
+    }
+    // geometric interpolation 1.0 → target
+    let frac = (round + 1) as f64 / (warmup_rounds + 1) as f64;
+    target.powf(frac)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn velocity_accumulates_geometrically() {
+        let mut mc = MomentumCorrector::new(1, 0.5);
+        let c1 = mc.correct(&[1.0]);
+        let c2 = mc.correct(&[1.0]);
+        let c3 = mc.correct(&[1.0]);
+        assert_eq!(c1[0], 1.0);
+        assert_eq!(c2[0], 1.5);
+        assert_eq!(c3[0], 1.75);
+    }
+
+    #[test]
+    fn zero_momentum_is_identity() {
+        let mut mc = MomentumCorrector::new(3, 0.0);
+        let g = vec![0.1f32, -0.5, 2.0];
+        assert_eq!(mc.correct(&g), g);
+        assert_eq!(mc.correct(&g), g);
+    }
+
+    #[test]
+    fn mask_sent_resets_velocity() {
+        let mut mc = MomentumCorrector::new(2, 0.9);
+        mc.correct(&[1.0, 1.0]);
+        mc.mask_sent(&[1.0, 0.0]); // position 0 shipped
+        let c = mc.correct(&[0.0, 0.0]);
+        assert_eq!(c[0], 0.0);
+        assert!(c[1] > 0.0);
+    }
+
+    #[test]
+    fn warmup_monotone_to_target() {
+        let target = 0.001;
+        let mut prev = 1.0;
+        for r in 0..10 {
+            let rate = warmup_rate(target, 8, r);
+            assert!(rate <= prev + 1e-12, "round {r}: {rate} > {prev}");
+            assert!(rate >= target - 1e-12);
+            prev = rate;
+        }
+        assert_eq!(warmup_rate(target, 8, 8), target);
+        assert_eq!(warmup_rate(target, 0, 0), target);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0,1)")]
+    fn bad_momentum_rejected() {
+        MomentumCorrector::new(1, 1.0);
+    }
+}

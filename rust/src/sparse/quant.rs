@@ -1,0 +1,159 @@
+//! QSGD-style stochastic quantization of sparse values (Alistarh et
+//! al. 2016, cited in §2.1: "quantify the sparse gradient on the basis
+//! of gradient sparsification … to further reduce the transmission
+//! volume").
+//!
+//! Values are mapped to `b`-bit levels of a per-update absmax scale
+//! with *stochastic rounding*, which keeps the quantizer unbiased
+//! (E[Q(x)] = x) — the property QSGD's convergence proof needs.
+
+use crate::sparse::codec::SparseVec;
+use crate::util::rng::Rng;
+
+/// Quantization config: bits per value (2..=8 supported).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QuantConfig {
+    pub bits: u8,
+}
+
+impl QuantConfig {
+    pub fn levels(&self) -> u32 {
+        assert!((2..=8).contains(&self.bits), "bits {} outside 2..=8", self.bits);
+        (1u32 << (self.bits - 1)) - 1 // signed levels per side
+    }
+}
+
+/// A quantized sparse update: indices + signed level codes + scale.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedSparse {
+    pub n: u32,
+    pub indices: Vec<u32>,
+    /// Signed level in `[-levels, levels]`, i8 storage.
+    pub codes: Vec<i8>,
+    pub scale: f32,
+    pub bits: u8,
+}
+
+/// Stochastically quantize a sparse vector's values.
+pub fn quantize(sv: &SparseVec, cfg: QuantConfig, rng: &mut Rng) -> QuantizedSparse {
+    let levels = cfg.levels() as f32;
+    let scale = sv
+        .values
+        .iter()
+        .fold(0f32, |m, &v| m.max(v.abs()));
+    let codes = sv
+        .values
+        .iter()
+        .map(|&v| {
+            if scale == 0.0 {
+                return 0i8;
+            }
+            let x = v / scale * levels; // in [-levels, levels]
+            let lo = x.floor();
+            let frac = x - lo;
+            // stochastic rounding: up with prob = frac → unbiased
+            let q = lo + if (rng.next_f64() as f32) < frac { 1.0 } else { 0.0 };
+            q.clamp(-levels, levels) as i8
+        })
+        .collect();
+    QuantizedSparse { n: sv.n, indices: sv.indices.clone(), codes, scale, bits: cfg.bits }
+}
+
+/// Reconstruct the (lossy) sparse vector.
+pub fn dequantize(q: &QuantizedSparse) -> SparseVec {
+    let levels = QuantConfig { bits: q.bits }.levels() as f32;
+    SparseVec {
+        n: q.n,
+        indices: q.indices.clone(),
+        values: q
+            .codes
+            .iter()
+            .map(|&c| c as f32 / levels * q.scale)
+            .collect(),
+    }
+}
+
+/// Paper-model wire cost: 32-bit index + `bits` per value + scale.
+pub fn quant_cost_bytes(nnz: usize, bits: u8) -> u64 {
+    (nnz as u64 * (32 + bits as u64)).div_ceil(8) + 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(values: Vec<f32>) -> SparseVec {
+        SparseVec {
+            n: values.len() as u32,
+            indices: (0..values.len() as u32).collect(),
+            values,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_support_and_scale() {
+        let mut rng = Rng::new(1);
+        let v = sv(vec![0.5, -1.0, 0.25, 0.75]);
+        let q = quantize(&v, QuantConfig { bits: 8 }, &mut rng);
+        let d = dequantize(&q);
+        assert_eq!(d.indices, v.indices);
+        // absmax element is exactly representable
+        assert!((d.values[1] + 1.0).abs() < 1e-6);
+        // others within one level
+        let lsb = 1.0 / QuantConfig { bits: 8 }.levels() as f32;
+        for (a, b) in d.values.iter().zip(&v.values) {
+            assert!((a - b).abs() <= lsb + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn unbiased_in_expectation() {
+        let mut rng = Rng::new(2);
+        let v = sv(vec![0.333, -0.777, 1.0]);
+        let cfg = QuantConfig { bits: 4 };
+        let trials = 5000;
+        let mut sums = vec![0f64; 3];
+        for _ in 0..trials {
+            let d = dequantize(&quantize(&v, cfg, &mut rng));
+            for (s, &x) in sums.iter_mut().zip(&d.values) {
+                *s += x as f64;
+            }
+        }
+        for (mean, &truth) in sums.iter().map(|s| s / trials as f64).zip(&v.values) {
+            assert!(
+                (mean - truth as f64).abs() < 0.02,
+                "biased: {mean} vs {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_vector_safe() {
+        let mut rng = Rng::new(3);
+        let v = sv(vec![0.0, 0.0]);
+        let q = quantize(&v, QuantConfig { bits: 4 }, &mut rng);
+        assert_eq!(q.scale, 0.0);
+        assert!(dequantize(&q).values.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn codes_within_bit_budget() {
+        let mut rng = Rng::new(4);
+        let vals: Vec<f32> = (0..1000).map(|i| ((i as f32) / 500.0) - 1.0).collect();
+        let cfg = QuantConfig { bits: 3 };
+        let q = quantize(&sv(vals), cfg, &mut rng);
+        let lim = cfg.levels() as i8;
+        assert!(q.codes.iter().all(|&c| (-lim..=lim).contains(&c)));
+    }
+
+    #[test]
+    fn cost_below_plain_sparse() {
+        assert!(quant_cost_bytes(1000, 4) < crate::sparse::codec::sparse_cost_bytes(1000) / 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 2..=8")]
+    fn bad_bits_rejected() {
+        QuantConfig { bits: 1 }.levels();
+    }
+}

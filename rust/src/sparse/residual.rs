@@ -1,0 +1,168 @@
+//! Local residual accumulation (Alg. 1 line 12, Strom'15 style).
+//!
+//! Each client keeps the unsent gradient mass and folds it into the
+//! next round's update *before* sparsification, so small-but-steady
+//! directions eventually cross the threshold instead of being lost.
+
+/// Per-client residual buffer for one model.
+#[derive(Clone, Debug)]
+pub struct ResidualStore {
+    buf: Vec<f32>,
+    /// Rounds since each element last shipped (staleness diagnostics,
+    /// §1's "too many cumulative rounds" concern).
+    age: Vec<u32>,
+}
+
+impl ResidualStore {
+    pub fn new(n: usize) -> Self {
+        Self { buf: vec![0.0; n], age: vec![0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// `update + residual` → the vector that gets sparsified this round.
+    pub fn fold_into(&self, update: &mut [f32]) {
+        assert_eq!(update.len(), self.buf.len(), "residual size mismatch");
+        for (u, r) in update.iter_mut().zip(&self.buf) {
+            *u += *r;
+        }
+    }
+
+    /// Replace the residual with this round's unsent mass and advance
+    /// staleness counters (sent positions reset to age 0).
+    pub fn store(&mut self, residual: &[f32]) {
+        assert_eq!(residual.len(), self.buf.len(), "residual size mismatch");
+        for i in 0..residual.len() {
+            self.buf[i] = residual[i];
+            if residual[i] == 0.0 {
+                self.age[i] = 0;
+            } else {
+                self.age[i] = self.age[i].saturating_add(1);
+            }
+        }
+    }
+
+    /// L2 norm of the held-back mass (convergence diagnostics).
+    pub fn norm(&self) -> f64 {
+        self.buf.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max rounds any position has gone unsent.
+    pub fn max_age(&self) -> u32 {
+        self.age.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Mean age over currently-nonzero residual positions.
+    pub fn mean_age_nonzero(&self) -> f64 {
+        let mut sum = 0u64;
+        let mut n = 0u64;
+        for i in 0..self.buf.len() {
+            if self.buf[i] != 0.0 {
+                sum += self.age[i] as u64;
+                n += 1;
+            }
+        }
+        if n == 0 {
+            0.0
+        } else {
+            sum as f64 / n as f64
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.buf.iter_mut().for_each(|x| *x = 0.0);
+        self.age.iter_mut().for_each(|x| *x = 0);
+    }
+
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::flat::flat_topk_sparsify;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fold_and_store_roundtrip() {
+        let mut store = ResidualStore::new(4);
+        store.store(&[0.0, 0.5, 0.0, -0.25]);
+        let mut update = vec![1.0f32, 1.0, 1.0, 1.0];
+        store.fold_into(&mut update);
+        assert_eq!(update, vec![1.0, 1.5, 1.0, 0.75]);
+    }
+
+    #[test]
+    fn no_mass_lost_over_rounds() {
+        // Invariant: sum of everything ever shipped + current residual
+        // == sum of all raw updates (exact split + exact fold).
+        let mut rng = Rng::new(7);
+        let n = 1000;
+        let mut store = ResidualStore::new(n);
+        let mut shipped_total = vec![0f64; n];
+        let mut raw_total = vec![0f64; n];
+        for _ in 0..20 {
+            let mut update: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+            for i in 0..n {
+                raw_total[i] += update[i] as f64;
+            }
+            store.fold_into(&mut update);
+            let out = flat_topk_sparsify(&update, 0.05);
+            for i in 0..n {
+                shipped_total[i] += out.sparse[i] as f64;
+            }
+            store.store(&out.residual);
+        }
+        for i in 0..n {
+            let residual = store.as_slice()[i] as f64;
+            // f32 round-off accumulates over 20 rounds; tolerance loose
+            assert!(
+                (shipped_total[i] + residual - raw_total[i]).abs() < 1e-3,
+                "mass leak at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn age_tracks_staleness() {
+        let mut store = ResidualStore::new(3);
+        store.store(&[1.0, 0.0, 2.0]);
+        store.store(&[1.0, 0.0, 0.0]);
+        assert_eq!(store.max_age(), 2);
+        assert!(store.mean_age_nonzero() >= 1.9);
+        store.store(&[0.0, 0.0, 0.0]);
+        assert_eq!(store.max_age(), 0);
+    }
+
+    #[test]
+    fn norm_is_l2() {
+        let mut store = ResidualStore::new(2);
+        store.store(&[3.0, 4.0]);
+        assert!((store.norm() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut store = ResidualStore::new(2);
+        store.store(&[1.0, 2.0]);
+        store.reset();
+        assert_eq!(store.norm(), 0.0);
+        assert_eq!(store.max_age(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "size mismatch")]
+    fn size_mismatch_panics() {
+        let store = ResidualStore::new(3);
+        let mut update = vec![0f32; 4];
+        store.fold_into(&mut update);
+    }
+}

@@ -1,0 +1,208 @@
+//! Time-varying Hierarchical Gradient Sparsification — Algorithm 1.
+//!
+//! The paper's first contribution: instead of one global Top-k over the
+//! flattened update (which lets large-magnitude layers starve small
+//! ones, §1), each network layer gets its own Top-k with a sparsity
+//! rate that decays **geometrically with layer depth**:
+//!
+//! ```text
+//! s_1 = s_0
+//! s_i = max(s_{i-1} · α, s_min)        (Eq. 1)
+//! ```
+//!
+//! and, per §3.1's "time-varying" part, the *starting* rate decays with
+//! the round index (handled by [`crate::sparse::dynamic::DynamicRate`]
+//! which implements the paper's Eq. 2 controller; `thgs_sparsify` takes
+//! the already-resolved `s_0` for the round).
+//!
+//! The layer boundaries come from the model manifest (one group per
+//! dense/conv layer, matching the paper's "each layer of a deep neural
+//! network has its own characteristics").
+
+use super::flat::SparsifyOut;
+use super::topk::threshold_for_topk_abs;
+
+/// THGS hyper-parameters (paper Eq. 1 symbols).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ThgsConfig {
+    /// Initial (layer-1) sparsity rate `s_0`.
+    pub s0: f64,
+    /// Constant attenuation factor `α` applied per layer.
+    pub alpha: f64,
+    /// Lower bound `s_min`.
+    pub s_min: f64,
+}
+
+impl Default for ThgsConfig {
+    fn default() -> Self {
+        // §5.1 experiments: s_min = 0.01, α sweeps {0.2, 0.5, 0.8}.
+        Self { s0: 0.1, alpha: 0.8, s_min: 0.01 }
+    }
+}
+
+impl ThgsConfig {
+    pub fn validate(&self) -> Result<(), String> {
+        if !(0.0 < self.s0 && self.s0 <= 1.0) {
+            return Err(format!("s0={} outside (0,1]", self.s0));
+        }
+        if !(0.0 < self.alpha && self.alpha <= 1.0) {
+            return Err(format!("alpha={} outside (0,1]", self.alpha));
+        }
+        if !(0.0 < self.s_min && self.s_min <= self.s0) {
+            return Err(format!("s_min={} outside (0, s0]", self.s_min));
+        }
+        Ok(())
+    }
+}
+
+/// Per-layer sparsity rates `s_i` (Eq. 1) for `n_layers` layers.
+pub fn layer_rates(cfg: &ThgsConfig, n_layers: usize) -> Vec<f64> {
+    let mut rates = Vec::with_capacity(n_layers);
+    let mut s = cfg.s0;
+    for i in 0..n_layers {
+        if i > 0 {
+            let next = s * cfg.alpha;
+            s = if next > cfg.s_min { next } else { cfg.s_min };
+        }
+        rates.push(s);
+    }
+    rates
+}
+
+/// Apply Algorithm 1 over a flat update vector `g` whose layer layout
+/// is `layer_spans` (byte-offset-free: `(start, len)` in elements,
+/// non-overlapping, covering `g`).
+///
+/// Returns the sparse/residual split (exact: `sparse + residual == g`)
+/// plus the per-layer thresholds δ_i actually used.
+pub fn thgs_sparsify(g: &[f32], layer_spans: &[(usize, usize)], cfg: &ThgsConfig) -> SparsifyOut {
+    cfg.validate().expect("invalid ThgsConfig");
+    debug_assert_eq!(
+        layer_spans.iter().map(|(_, l)| l).sum::<usize>(),
+        g.len(),
+        "layer spans must cover the update vector"
+    );
+    let rates = layer_rates(cfg, layer_spans.len());
+    let mut sparse = vec![0f32; g.len()];
+    let mut residual = vec![0f32; g.len()];
+    let mut nnz = 0usize;
+    let mut thresholds = Vec::with_capacity(layer_spans.len());
+
+    for (li, &(start, len)) in layer_spans.iter().enumerate() {
+        let layer = &g[start..start + len];
+        let k = ((len as f64 * rates[li]).ceil() as usize).clamp(1, len);
+        let delta = threshold_for_topk_abs(layer, k);
+        thresholds.push(delta);
+        for (off, &x) in layer.iter().enumerate() {
+            let i = start + off;
+            if x.abs() > delta {
+                sparse[i] = x;
+                nnz += 1;
+            } else {
+                residual[i] = x;
+            }
+        }
+    }
+    SparsifyOut { sparse, residual, nnz, thresholds }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spans_of(lens: &[usize]) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        for &l in lens {
+            out.push((start, l));
+            start += l;
+        }
+        out
+    }
+
+    #[test]
+    fn eq1_rates_decay_to_floor() {
+        let cfg = ThgsConfig { s0: 0.1, alpha: 0.5, s_min: 0.02 };
+        let r = layer_rates(&cfg, 5);
+        assert_eq!(r.len(), 5);
+        assert!((r[0] - 0.1).abs() < 1e-12);
+        assert!((r[1] - 0.05).abs() < 1e-12);
+        assert!((r[2] - 0.025).abs() < 1e-12);
+        assert!((r[3] - 0.02).abs() < 1e-12); // 0.0125 < s_min → clamp
+        assert!((r[4] - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn alpha_one_keeps_rate_constant() {
+        let cfg = ThgsConfig { s0: 0.05, alpha: 1.0, s_min: 0.01 };
+        let r = layer_rates(&cfg, 4);
+        assert!(r.iter().all(|&x| (x - 0.05).abs() < 1e-12));
+    }
+
+    #[test]
+    fn split_is_exact_per_layer() {
+        let mut rng = Rng::new(3);
+        let lens = [1000usize, 400, 2000, 50];
+        let g: Vec<f32> = (0..lens.iter().sum::<usize>())
+            .map(|_| rng.normal_f32(1.0))
+            .collect();
+        let out = thgs_sparsify(&g, &spans_of(&lens), &ThgsConfig::default());
+        for i in 0..g.len() {
+            assert_eq!(out.sparse[i] + out.residual[i], g[i]);
+        }
+        assert_eq!(out.thresholds.len(), 4);
+    }
+
+    #[test]
+    fn each_layer_gets_representation() {
+        // the THGS motivation: a layer with tiny magnitudes must still
+        // send its top entries. Build layer A with huge values and
+        // layer B with tiny ones; flat top-k would starve B.
+        let mut g = vec![0f32; 2000];
+        let mut rng = Rng::new(4);
+        for v in g[..1000].iter_mut() {
+            *v = rng.normal_f32(100.0);
+        }
+        for v in g[1000..].iter_mut() {
+            *v = rng.normal_f32(0.001);
+        }
+        let cfg = ThgsConfig { s0: 0.01, alpha: 1.0, s_min: 0.01 };
+        let out = thgs_sparsify(&g, &spans_of(&[1000, 1000]), &cfg);
+        let nnz_b = out.sparse[1000..].iter().filter(|&&x| x != 0.0).count();
+        assert!(nnz_b >= 9, "layer B starved: nnz_b={nnz_b}");
+
+        // contrast: flat top-k at the same overall rate starves B
+        let flat = crate::sparse::flat::flat_topk_sparsify(&g, 0.01);
+        let flat_b = flat.sparse[1000..].iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(flat_b, 0, "flat top-k unexpectedly kept layer-B entries");
+    }
+
+    #[test]
+    fn nnz_tracks_per_layer_rates() {
+        let mut rng = Rng::new(5);
+        let lens = [10_000usize, 10_000];
+        let g: Vec<f32> = (0..20_000).map(|_| rng.normal_f32(1.0)).collect();
+        let cfg = ThgsConfig { s0: 0.1, alpha: 0.5, s_min: 0.01 };
+        let out = thgs_sparsify(&g, &spans_of(&lens), &cfg);
+        // expected ~ 1000 + 500
+        assert!(out.nnz > 1400 && out.nnz <= 1500, "nnz={}", out.nnz);
+    }
+
+    #[test]
+    fn single_layer_equals_flat() {
+        let mut rng = Rng::new(6);
+        let g: Vec<f32> = (0..5000).map(|_| rng.normal_f32(1.0)).collect();
+        let cfg = ThgsConfig { s0: 0.02, alpha: 0.9, s_min: 0.01 };
+        let ours = thgs_sparsify(&g, &spans_of(&[5000]), &cfg);
+        let flat = crate::sparse::flat::flat_topk_sparsify(&g, 0.02);
+        assert_eq!(ours.sparse, flat.sparse);
+        assert_eq!(ours.nnz, flat.nnz);
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid ThgsConfig")]
+    fn invalid_config_rejected() {
+        thgs_sparsify(&[1.0], &[(0, 1)], &ThgsConfig { s0: 0.0, alpha: 0.5, s_min: 0.01 });
+    }
+}

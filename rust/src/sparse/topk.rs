@@ -1,0 +1,140 @@
+//! Top-k threshold selection — the L3 half of sparsification.
+//!
+//! The paper's Alg. 1 uses `TopK(|g|, k)` to obtain the threshold δ,
+//! then keeps entries with `|g| > δ`. We implement the selection with
+//! `select_nth_unstable` (introselect, O(N) expected) over the
+//! magnitudes; the *application* half lives in the pallas kernel /
+//! [`crate::sparse::flat`] sweep.
+//!
+//! Tie semantics match the paper's `torch.where(g̃ > δ)`: strictly
+//! greater than the k-th magnitude, so with ties fewer than k entries
+//! may be kept — never more. (`keep_exact_k` resolves ties by index
+//! order when an exact count is required, e.g. for the comm-cost
+//! accounting benches.)
+
+/// The k-th largest value of `vals` (1-based k), i.e. the threshold δ
+/// such that exactly k entries are ≥ δ (modulo ties).
+/// `k` is clamped to `[1, vals.len()]`. Panics on empty input.
+pub fn threshold_for_topk(vals: &[f32], k: usize) -> f32 {
+    assert!(!vals.is_empty(), "threshold_for_topk on empty slice");
+    let k = k.clamp(1, vals.len());
+    let mut buf = vals.to_vec();
+    // k-th largest = (len-k)-th smallest (0-based)
+    let idx = buf.len() - k;
+    let (_, kth, _) = buf.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
+    *kth
+}
+
+/// Threshold over magnitudes: k-th largest `|g|` (Alg. 1 line 6).
+pub fn threshold_for_topk_abs(g: &[f32], k: usize) -> f32 {
+    assert!(!g.is_empty(), "threshold_for_topk_abs on empty slice");
+    let k = k.clamp(1, g.len());
+    let mut buf: Vec<f32> = g.iter().map(|x| x.abs()).collect();
+    let idx = buf.len() - k;
+    let (_, kth, _) = buf.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
+    *kth
+}
+
+/// Indices of exactly `min(k, n)` kept entries: all with `|g| > δ`,
+/// plus enough `|g| == δ` ties (in ascending index order) to reach k.
+pub fn keep_exact_k(g: &[f32], k: usize) -> Vec<u32> {
+    let k = k.clamp(1, g.len());
+    let delta = threshold_for_topk_abs(g, k);
+    let mut keep: Vec<u32> = Vec::with_capacity(k);
+    let mut ties: Vec<u32> = Vec::new();
+    for (i, &x) in g.iter().enumerate() {
+        let a = x.abs();
+        if a > delta {
+            keep.push(i as u32);
+        } else if a == delta {
+            ties.push(i as u32);
+        }
+    }
+    for t in ties {
+        if keep.len() >= k {
+            break;
+        }
+        keep.push(t);
+    }
+    keep.sort_unstable();
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kth_largest_simple() {
+        let v = [1.0, 5.0, 3.0, 2.0, 4.0];
+        assert_eq!(threshold_for_topk(&v, 1), 5.0);
+        assert_eq!(threshold_for_topk(&v, 3), 3.0);
+        assert_eq!(threshold_for_topk(&v, 5), 1.0);
+    }
+
+    #[test]
+    fn abs_variant_uses_magnitude() {
+        let v = [0.1, -5.0, 2.0, -0.3, 4.0, 1.0, -2.5, 0.0];
+        assert_eq!(threshold_for_topk_abs(&v, 1), 5.0);
+        assert_eq!(threshold_for_topk_abs(&v, 3), 2.5);
+        assert_eq!(threshold_for_topk_abs(&v, 8), 0.0);
+    }
+
+    #[test]
+    fn k_clamped() {
+        let v = [3.0, 1.0];
+        assert_eq!(threshold_for_topk(&v, 0), 3.0); // clamped to 1
+        assert_eq!(threshold_for_topk(&v, 99), 1.0); // clamped to len
+    }
+
+    #[test]
+    fn strict_gt_keeps_at_most_k() {
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let n = 1 + rng.below(2000) as usize;
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            let delta = threshold_for_topk_abs(&g, k);
+            let kept = g.iter().filter(|x| x.abs() > delta).count();
+            assert!(kept <= k, "kept {kept} > k {k}");
+            let kept_ge = g.iter().filter(|x| x.abs() >= delta).count();
+            assert!(kept_ge >= k, "kept_ge {kept_ge} < k {k}");
+        }
+    }
+
+    #[test]
+    fn exact_k_with_ties() {
+        let g = [1.0f32, -1.0, 1.0, 1.0, 0.5];
+        let keep = keep_exact_k(&g, 2);
+        assert_eq!(keep.len(), 2);
+        assert!(keep.iter().all(|&i| g[i as usize].abs() == 1.0));
+    }
+
+    #[test]
+    fn exact_k_count_holds_on_random() {
+        let mut rng = Rng::new(2);
+        for _ in 0..30 {
+            let n = 10 + rng.below(500) as usize;
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(2.0)).collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            assert_eq!(keep_exact_k(&g, k).len(), k);
+        }
+    }
+
+    #[test]
+    fn handles_all_equal_values() {
+        let g = [2.0f32; 100];
+        let delta = threshold_for_topk_abs(&g, 10);
+        assert_eq!(delta, 2.0);
+        assert_eq!(g.iter().filter(|x| x.abs() > delta).count(), 0);
+        assert_eq!(keep_exact_k(&g, 10).len(), 10);
+    }
+
+    #[test]
+    fn handles_negatives_and_zeros() {
+        let g = [0.0f32, -0.0, 0.0, -1.0];
+        assert_eq!(threshold_for_topk_abs(&g, 1), 1.0);
+        assert_eq!(threshold_for_topk_abs(&g, 2), 0.0);
+    }
+}

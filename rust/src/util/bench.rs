@@ -1,0 +1,182 @@
+//! Criterion-style micro-benchmark harness (DESIGN.md S22).
+//!
+//! The offline vendor set carries no criterion, so `cargo bench` runs
+//! `harness = false` targets built on this module. It reproduces the
+//! parts the experiment suite needs: warm-up, automatic iteration
+//! scaling to a target measurement time, and mean/σ/p50/p95 reporting.
+//!
+//! ```no_run
+//! use fedsparse::util::bench::Bench;
+//! let mut b = Bench::new("sparsify");
+//! let data = vec![0.5f32; 1 << 20];
+//! b.bench("topk/1M", || {
+//!     // measured body
+//!     std::hint::black_box(&data);
+//! });
+//! b.finish();
+//! ```
+
+use std::time::{Duration, Instant};
+
+use super::timer::fmt_duration;
+
+/// Result statistics for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std_dev: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Stats {
+    /// Throughput helper: elements/second given per-iter element count.
+    pub fn throughput(&self, elems_per_iter: u64) -> f64 {
+        elems_per_iter as f64 / self.mean.as_secs_f64()
+    }
+}
+
+/// A named group of benchmark cases.
+pub struct Bench {
+    group: String,
+    /// Target cumulative measurement time per case.
+    pub measure_time: Duration,
+    /// Warm-up time per case.
+    pub warmup_time: Duration,
+    /// Number of sample batches.
+    pub samples: usize,
+    results: Vec<Stats>,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // honor a quick mode for CI: FEDSPARSE_BENCH_QUICK=1
+        let quick = std::env::var("FEDSPARSE_BENCH_QUICK").is_ok();
+        Self {
+            group: group.to_string(),
+            measure_time: if quick { Duration::from_millis(200) } else { Duration::from_secs(2) },
+            warmup_time: if quick { Duration::from_millis(50) } else { Duration::from_millis(500) },
+            samples: if quick { 10 } else { 30 },
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, auto-scaling iterations per sample batch.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+        // warm-up + per-iteration estimate
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || warm_iters < 3 {
+            f();
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+
+        // choose iters per sample so that samples fill measure_time
+        let total_iters = (self.measure_time.as_secs_f64() / per_iter.max(1e-9)) as u64;
+        let iters_per_sample = (total_iters / self.samples as u64).max(1);
+
+        let mut sample_means: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            sample_means.push(t0.elapsed().as_secs_f64() / iters_per_sample as f64);
+        }
+        sample_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+        let n = sample_means.len();
+        let mean = sample_means.iter().sum::<f64>() / n as f64;
+        let var = sample_means.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let stats = Stats {
+            name: format!("{}/{}", self.group, name),
+            iters: iters_per_sample * n as u64,
+            mean: Duration::from_secs_f64(mean),
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+            p50: Duration::from_secs_f64(sample_means[n / 2]),
+            p95: Duration::from_secs_f64(sample_means[(n * 95 / 100).min(n - 1)]),
+            min: Duration::from_secs_f64(sample_means[0]),
+        };
+        println!(
+            "{:<44} time: [{}  ±{}]  p50 {}  p95 {}  ({} iters)",
+            stats.name,
+            fmt_duration(stats.mean),
+            fmt_duration(stats.std_dev),
+            fmt_duration(stats.p50),
+            fmt_duration(stats.p95),
+            stats.iters,
+        );
+        self.results.push(stats.clone());
+        stats
+    }
+
+    /// Like [`bench`](Self::bench) but also prints element throughput.
+    pub fn bench_throughput<F: FnMut()>(&mut self, name: &str, elems: u64, f: F) -> Stats {
+        let stats = self.bench(name, f);
+        let tput = stats.throughput(elems);
+        println!(
+            "{:<44} thrpt: {:.2} Melem/s",
+            format!("{}/{}", self.group, name),
+            tput / 1e6
+        );
+        stats
+    }
+
+    /// Print the summary table; call once at the end of the bench bin.
+    pub fn finish(self) -> Vec<Stats> {
+        println!("\n== {} summary ==", self.group);
+        for s in &self.results {
+            println!("{:<44} {}", s.name, fmt_duration(s.mean));
+        }
+        self.results
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box
+/// passthrough, kept here so bench bins only import this module).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        std::env::set_var("FEDSPARSE_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        b.measure_time = Duration::from_millis(30);
+        b.warmup_time = Duration::from_millis(5);
+        b.samples = 5;
+        let mut acc = 0u64;
+        let s = b.bench("noop-ish", || {
+            acc = acc.wrapping_add(black_box(1));
+        });
+        assert!(s.iters > 0);
+        assert!(s.mean.as_nanos() > 0);
+        assert!(s.p95 >= s.p50 || s.std_dev.as_nanos() == 0);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        std::env::set_var("FEDSPARSE_BENCH_QUICK", "1");
+        let mut b = Bench::new("test");
+        b.measure_time = Duration::from_millis(20);
+        b.warmup_time = Duration::from_millis(5);
+        b.samples = 4;
+        let v = vec![1f32; 1024];
+        let s = b.bench_throughput("sum", 1024, || {
+            black_box(v.iter().sum::<f32>());
+        });
+        assert!(s.throughput(1024) > 0.0);
+    }
+}

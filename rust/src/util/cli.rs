@@ -1,0 +1,248 @@
+//! Declarative command-line argument parser (clap substitute, DESIGN.md S18).
+//!
+//! ```no_run
+//! use fedsparse::util::cli::{ArgSpec, Args};
+//! let spec = &[
+//!     ArgSpec::opt("model", "m", "mnist_mlp", "model name from the zoo"),
+//!     ArgSpec::opt("rounds", "r", "100", "number of federated rounds"),
+//!     ArgSpec::flag("secure", "", "enable secure aggregation"),
+//! ];
+//! let args = Args::parse_spec("fedsparse train", spec,
+//!                             std::env::args().skip(2)).unwrap();
+//! let rounds: usize = args.get_parsed("rounds").unwrap();
+//! ```
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown argument '{0}' (try --help)")]
+    Unknown(String),
+    #[error("missing value for --{0}")]
+    MissingValue(String),
+    #[error("missing required argument --{0}")]
+    MissingRequired(String),
+    #[error("invalid value '{value}' for --{name}: {msg}")]
+    Invalid { name: String, value: String, msg: String },
+    #[error("help requested")]
+    Help,
+}
+
+/// Specification of one argument.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub short: &'static str,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+impl ArgSpec {
+    /// Optional `--name value` with a default.
+    pub const fn opt(
+        name: &'static str,
+        short: &'static str,
+        default: &'static str,
+        help: &'static str,
+    ) -> Self {
+        Self { name, short, default: Some(default), help, is_flag: false, required: false }
+    }
+
+    /// Required `--name value`.
+    pub const fn req(name: &'static str, short: &'static str, help: &'static str) -> Self {
+        Self { name, short, default: None, help, is_flag: false, required: true }
+    }
+
+    /// Boolean `--name` flag (default false).
+    pub const fn flag(name: &'static str, short: &'static str, help: &'static str) -> Self {
+        Self { name, short, default: None, help, is_flag: true, required: false }
+    }
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+}
+
+impl Args {
+    /// Parse `argv` (not including the program/subcommand tokens)
+    /// against `spec`. `--help`/`-h` prints usage and returns
+    /// [`CliError::Help`].
+    pub fn parse_spec<I: Iterator<Item = String>>(
+        prog: &str,
+        spec: &[ArgSpec],
+        argv: I,
+    ) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for s in spec {
+            if s.is_flag {
+                args.flags.insert(s.name.to_string(), false);
+            } else if let Some(d) = s.default {
+                args.values.insert(s.name.to_string(), d.to_string());
+            }
+        }
+
+        let find = |token: &str| -> Option<&ArgSpec> {
+            spec.iter().find(|s| {
+                token == format!("--{}", s.name) || (!s.short.is_empty() && token == format!("-{}", s.short))
+            })
+        };
+
+        let mut it = argv.peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                eprintln!("{}", usage(prog, spec));
+                return Err(CliError::Help);
+            }
+            // --name=value form
+            if let Some((head, val)) = tok.split_once('=') {
+                if let Some(s) = find(head) {
+                    if s.is_flag {
+                        args.flags.insert(
+                            s.name.to_string(),
+                            matches!(val, "true" | "1" | "yes"),
+                        );
+                    } else {
+                        args.values.insert(s.name.to_string(), val.to_string());
+                    }
+                    continue;
+                }
+                return Err(CliError::Unknown(tok));
+            }
+            match find(&tok) {
+                Some(s) if s.is_flag => {
+                    args.flags.insert(s.name.to_string(), true);
+                }
+                Some(s) => {
+                    let val = it.next().ok_or_else(|| CliError::MissingValue(s.name.into()))?;
+                    args.values.insert(s.name.to_string(), val);
+                }
+                None => return Err(CliError::Unknown(tok)),
+            }
+        }
+
+        for s in spec {
+            if s.required && !args.values.contains_key(s.name) {
+                return Err(CliError::MissingRequired(s.name.into()));
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Parse a value with FromStr, with a useful error.
+    pub fn get_parsed<T: std::str::FromStr>(&self, name: &str) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get(name).ok_or_else(|| CliError::MissingRequired(name.into()))?;
+        raw.parse().map_err(|e: T::Err| CliError::Invalid {
+            name: name.into(),
+            value: raw.into(),
+            msg: e.to_string(),
+        })
+    }
+}
+
+/// Render the usage/help text.
+pub fn usage(prog: &str, spec: &[ArgSpec]) -> String {
+    let mut out = format!("usage: {prog} [options]\n\noptions:\n");
+    for s in spec {
+        let short = if s.short.is_empty() {
+            "    ".to_string()
+        } else {
+            format!("-{}, ", s.short)
+        };
+        let head = if s.is_flag {
+            format!("  {short}--{}", s.name)
+        } else {
+            format!("  {short}--{} <v>", s.name)
+        };
+        let default = match (s.is_flag, s.default) {
+            (true, _) => String::new(),
+            (false, Some(d)) => format!(" [default: {d}]"),
+            (false, None) => " (required)".to_string(),
+        };
+        out.push_str(&format!("{head:<28} {}{default}\n", s.help));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: &[ArgSpec] = &[
+        ArgSpec::opt("model", "m", "mnist_mlp", "model"),
+        ArgSpec::opt("rounds", "r", "100", "rounds"),
+        ArgSpec::flag("secure", "s", "secure agg"),
+        ArgSpec::req("out", "", "output path"),
+    ];
+
+    fn parse(argv: &[&str]) -> Result<Args, CliError> {
+        Args::parse_spec("test", SPEC, argv.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&["--rounds", "5", "--out", "x.csv"]).unwrap();
+        assert_eq!(a.get("model"), Some("mnist_mlp"));
+        assert_eq!(a.get_parsed::<usize>("rounds").unwrap(), 5);
+        assert!(!a.get_flag("secure"));
+    }
+
+    #[test]
+    fn short_and_equals_forms() {
+        let a = parse(&["-m", "cifar_cnn", "--rounds=7", "-s", "--out=o"]).unwrap();
+        assert_eq!(a.get("model"), Some("cifar_cnn"));
+        assert_eq!(a.get_parsed::<usize>("rounds").unwrap(), 7);
+        assert!(a.get_flag("secure"));
+    }
+
+    #[test]
+    fn missing_required_rejected() {
+        assert!(matches!(parse(&[]), Err(CliError::MissingRequired(_))));
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(matches!(
+            parse(&["--nope", "1", "--out", "o"]),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            parse(&["--out"]),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_parse_has_context() {
+        let a = parse(&["--rounds", "abc", "--out", "o"]).unwrap();
+        let e = a.get_parsed::<usize>("rounds").unwrap_err();
+        assert!(matches!(e, CliError::Invalid { .. }));
+    }
+
+    #[test]
+    fn usage_mentions_all() {
+        let u = usage("test", SPEC);
+        for s in SPEC {
+            assert!(u.contains(s.name));
+        }
+    }
+}

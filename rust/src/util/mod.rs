@@ -1,0 +1,20 @@
+//! Infrastructure substrates built in-repo (the offline vendor set only
+//! carries the `xla` crate's closure — see DESIGN.md §Substitutions).
+//!
+//! * [`rng`] — splitmix64 / xoshiro256** PRNGs + normal sampling
+//! * [`chacha`] — ChaCha20 stream cipher used as the secagg mask PRG
+//! * [`json`] — minimal JSON parser/serializer (manifest, metrics)
+//! * [`cli`] — declarative command-line argument parser
+//! * [`pool`] — fixed thread pool + `parallel_map`
+//! * [`bench`] — criterion-style micro-benchmark harness
+//! * [`prop`] — seeded property-testing helper with shrinking
+//! * [`timer`] — stopwatch / duration formatting
+
+pub mod bench;
+pub mod chacha;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod timer;

@@ -1,0 +1,164 @@
+//! Fixed-size thread pool (tokio substitute for this workload —
+//! DESIGN.md S19). The FL round loop fans client-local work out to the
+//! pool and joins at the round barrier, which is exactly a scoped
+//! parallel map; no async runtime needed.
+//!
+//! PJRT executors are **not** `Send`, so compute jobs do not run here —
+//! they run on the dedicated executor threads owned by
+//! [`crate::runtime::ExecutorPool`]. This pool handles the pure-rust
+//! work: sparsification, masking, encoding, data synthesis.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// A fixed pool of worker threads.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    rx_shared: Arc<Mutex<mpsc::Receiver<Msg>>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (clamped to ≥1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx_shared = Arc::new(Mutex::new(rx));
+        let workers = (0..n)
+            .map(|i| {
+                let rx = Arc::clone(&rx_shared);
+                thread::Builder::new()
+                    .name(format!("fedsparse-pool-{i}"))
+                    .spawn(move || loop {
+                        let msg = { rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(Msg::Run(job)) => job(),
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    })
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { tx, rx_shared, workers }
+    }
+
+    /// Default-sized pool: available parallelism − 1, min 1.
+    pub fn with_default_size() -> Self {
+        let n = thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        Self::new(n.saturating_sub(1).max(1))
+    }
+
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool closed");
+    }
+
+    /// Apply `f` to every item, in parallel, preserving order.
+    ///
+    /// `f` is cloned per item on the caller's thread (so `F` needs
+    /// `Clone + Send` but not `Sync` — closures may capture e.g.
+    /// channel senders); items and results cross threads.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Clone + 'static,
+    {
+        let n = items.len();
+        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = f.clone();
+            let rtx = rtx.clone();
+            self.submit(move || {
+                let r = f(item);
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("pool worker died");
+            slots[i] = Some(r);
+        }
+        slots.into_iter().map(|s| s.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        // Drain handles; a worker that already exited returns Err which
+        // we ignore — shutdown is best-effort.
+        let _ = &self.rx_shared;
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map((0..100).collect(), |x: usize| x * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_runs_jobs() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let (tx, rx) = mpsc::channel();
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            let tx = tx.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let _ = tx.send(());
+            });
+        }
+        for _ in 0..50 {
+            rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn map_on_single_worker() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map(vec![3, 1, 2], |x: i32| x + 10);
+        assert_eq!(out, vec![13, 11, 12]);
+    }
+
+    #[test]
+    fn drop_joins_cleanly() {
+        let pool = ThreadPool::new(3);
+        let _ = pool.map((0..10).collect(), |x: usize| x);
+        drop(pool); // must not hang
+    }
+
+    #[test]
+    fn empty_map() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.map(Vec::<usize>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+}

@@ -1,0 +1,215 @@
+//! Seeded property-testing helper (proptest substitute, DESIGN.md S23).
+//!
+//! A property runs over `cases` generated inputs; on failure the input
+//! is shrunk (for the built-in generators) and the failing seed is
+//! reported so the case can be replayed deterministically:
+//!
+//! ```no_run
+//! use fedsparse::util::prop::{forall, vec_f32};
+//! forall("sparse+residual==g", 200, vec_f32(1..=4096, 10.0), |g| {
+//!     // property body returning bool
+//!     !g.is_empty() || g.is_empty()
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// A generator produces a value from an RNG.
+pub trait Gen {
+    type Value: std::fmt::Debug + Clone;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate smaller inputs (for shrinking); default: none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `prop` over `cases` generated inputs. Panics (with seed and
+/// shrunk input) on the first failure — mirroring proptest's behavior
+/// so `cargo test` reports it.
+pub fn forall<G: Gen>(name: &str, cases: u64, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    // Base seed is fixed for reproducibility; override with env var.
+    let base = std::env::var("FEDSPARSE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xfed5_9a12_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Rng::new(seed);
+        let input = gen.generate(&mut rng);
+        if prop(&input) {
+            continue;
+        }
+        // shrink
+        let mut failing = input;
+        'outer: loop {
+            for cand in gen.shrink(&failing) {
+                if !prop(&cand) {
+                    failing = cand;
+                    continue 'outer;
+                }
+            }
+            break;
+        }
+        panic!(
+            "property '{name}' failed (case {case}, seed {seed}).\n  shrunk input: {failing:?}"
+        );
+    }
+}
+
+// --------------------------------------------------------- generators
+
+/// Uniform f32 vectors with length in `range`, values in ±`scale`.
+pub struct VecF32 {
+    pub min_len: usize,
+    pub max_len: usize,
+    pub scale: f32,
+}
+
+pub fn vec_f32(range: std::ops::RangeInclusive<usize>, scale: f32) -> VecF32 {
+    VecF32 { min_len: *range.start(), max_len: *range.end(), scale }
+}
+
+impl Gen for VecF32 {
+    type Value = Vec<f32>;
+
+    fn generate(&self, rng: &mut Rng) -> Vec<f32> {
+        let len = self.min_len + rng.below((self.max_len - self.min_len + 1) as u64) as usize;
+        (0..len)
+            .map(|_| (rng.next_f32() * 2.0 - 1.0) * self.scale)
+            .collect()
+    }
+
+    fn shrink(&self, v: &Vec<f32>) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if v.len() > self.min_len {
+            // halve the tail
+            let keep = (v.len() / 2).max(self.min_len);
+            out.push(v[..keep].to_vec());
+            // drop the head half
+            if v.len() - keep >= self.min_len {
+                out.push(v[keep..].to_vec());
+            }
+        }
+        // zero out values (simpler values often still fail)
+        if v.iter().any(|&x| x != 0.0) {
+            out.push(v.iter().map(|&x| if x.abs() > 1.0 { x.signum() } else { 0.0 }).collect());
+        }
+        out
+    }
+}
+
+/// Pairs of independent generators.
+pub struct Pair<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for Pair<A, B> {
+    type Value = (A::Value, B::Value);
+
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Uniform usize in an inclusive range.
+pub struct USize {
+    pub min: usize,
+    pub max: usize,
+}
+
+pub fn usize_in(range: std::ops::RangeInclusive<usize>) -> USize {
+    USize { min: *range.start(), max: *range.end() }
+}
+
+impl Gen for USize {
+    type Value = usize;
+
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.min + rng.below((self.max - self.min + 1) as u64) as usize
+    }
+
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.min {
+            out.push(self.min);
+            out.push(self.min + (v - self.min) / 2);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Uniform f32 in a range.
+pub struct F32In {
+    pub min: f32,
+    pub max: f32,
+}
+
+pub fn f32_in(min: f32, max: f32) -> F32In {
+    F32In { min, max }
+}
+
+impl Gen for F32In {
+    type Value = f32;
+
+    fn generate(&self, rng: &mut Rng) -> f32 {
+        self.min + rng.next_f32() * (self.max - self.min)
+    }
+
+    fn shrink(&self, v: &f32) -> Vec<f32> {
+        if *v != self.min {
+            vec![self.min, self.min + (v - self.min) / 2.0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        forall("len in range", 100, vec_f32(1..=64, 1.0), |v| {
+            (1..=64).contains(&v.len())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_panics_with_name() {
+        forall("always false", 5, usize_in(0..=10), |_| false);
+    }
+
+    #[test]
+    fn shrinking_reaches_small_input() {
+        // capture the panic message and check the shrunk witness is minimal
+        let result = std::panic::catch_unwind(|| {
+            forall("len<=8", 50, vec_f32(1..=256, 1.0), |v| v.len() <= 8);
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // the shrunk witness should be 9..=16 long (halving stops there)
+        assert!(msg.contains("shrunk input"), "{msg}");
+    }
+
+    #[test]
+    fn pair_generates_both() {
+        forall(
+            "pair",
+            50,
+            Pair(usize_in(1..=4), f32_in(0.0, 1.0)),
+            |(n, x)| *n >= 1 && *n <= 4 && (0.0..=1.0).contains(x),
+        );
+    }
+}

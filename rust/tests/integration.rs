@@ -1,0 +1,244 @@
+//! End-to-end integration: AOT artifacts → PJRT runtime → federated
+//! rounds. Requires `make artifacts` (skips gracefully when absent so
+//! unit runs stay green, but CI always builds artifacts first).
+
+use std::path::PathBuf;
+
+use fedsparse::config::{Partition, RunConfig};
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::models::manifest::Manifest;
+use fedsparse::models::params::ParamVector;
+use fedsparse::runtime::{ExecutorPool, ModelRunner};
+use fedsparse::sparse::thgs::ThgsConfig;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn smoke_cfg(model: &str) -> RunConfig {
+    let mut cfg = RunConfig::smoke(model);
+    cfg.artifacts_dir = artifacts_dir().unwrap();
+    cfg.data_dir = None;
+    cfg
+}
+
+#[test]
+fn manifest_param_counts_match_table1() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    // paper Table 1 parity (see DESIGN.md model zoo)
+    assert_eq!(m.model("mnist_mlp").unwrap().param_count, 159_010);
+    if let Some(cnn) = m.model("mnist_cnn") {
+        assert_eq!(cnn.param_count, 582_026);
+    }
+    if let Some(vgg) = m.model("cifar_vgg16") {
+        assert_eq!(vgg.param_count, 14_728_266);
+    }
+}
+
+#[test]
+fn grad_artifact_descends_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let pool = ExecutorPool::new(1);
+    let runner = ModelRunner::new(&pool, &manifest, "mnist_mlp").unwrap();
+    let mut params = ParamVector::init(&runner.meta, 7);
+
+    // fixed synthetic batch
+    use fedsparse::data::{Dataset, DatasetKind, Split};
+    let data = Dataset::synthetic_small(DatasetKind::Mnist, Split::Train, 200, 3);
+    let idx: Vec<usize> = (0..manifest.train_batch).collect();
+    let (x, y) = data.batch(&idx);
+
+    let (loss0, grads) = runner.grad(&params, &x, &y).unwrap();
+    assert!(loss0.is_finite() && loss0 > 0.0);
+    assert_eq!(grads.len(), params.len());
+    // loss at init should be ~ln(10) for 10 classes
+    assert!((1.0..4.0).contains(&loss0), "init loss {loss0}");
+
+    for _ in 0..5 {
+        let (_, g) = runner.grad(&params, &x, &y).unwrap();
+        params.sgd_step(&g, 0.1);
+    }
+    let (loss1, _) = runner.grad(&params, &x, &y).unwrap();
+    assert!(loss1 < loss0, "no descent: {loss0} → {loss1}");
+}
+
+#[test]
+fn eval_artifact_counts_correct() {
+    let Some(dir) = artifacts_dir() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let pool = ExecutorPool::new(1);
+    let runner = ModelRunner::new(&pool, &manifest, "mnist_mlp").unwrap();
+    let params = ParamVector::init(&runner.meta, 11);
+
+    use fedsparse::data::{Dataset, DatasetKind, Split};
+    let data = Dataset::synthetic_small(DatasetKind::Mnist, Split::Test, 500, 5);
+    let (loss, acc) = runner.evaluate(&params, &data, 500).unwrap();
+    assert!(loss > 0.0);
+    // untrained model ≈ chance
+    assert!((0.0..=0.35).contains(&acc), "untrained acc {acc}");
+}
+
+#[test]
+fn federated_training_learns_thgs() {
+    let Some(_) = artifacts_dir() else { return };
+    let mut cfg = smoke_cfg("mnist_mlp");
+    cfg.rounds = 20;
+    cfg.eval_every = 20;
+    cfg.algorithm = Algorithm::Thgs(ThgsConfig { s0: 0.2, alpha: 0.8, s_min: 0.05 });
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let (_, acc0) = trainer.evaluate().unwrap();
+    let summary = trainer.run().unwrap();
+    assert!(
+        summary.final_accuracy > acc0 + 0.15,
+        "no learning: {acc0} → {}",
+        summary.final_accuracy
+    );
+    // sparse upload must be far below dense
+    let m = trainer.model_params() as u64;
+    let dense_total = summary.rounds * 4 * m * 8; // 4 clients/round × 64bit
+    assert!(summary.total_up_bytes < dense_total / 2);
+}
+
+#[test]
+fn federated_training_learns_secure() {
+    let Some(_) = artifacts_dir() else { return };
+    let mut cfg = smoke_cfg("mnist_mlp");
+    cfg.rounds = 12;
+    cfg.eval_every = 12;
+    cfg.secure = true;
+    cfg.mask_ratio_k = 0.5;
+    cfg.algorithm = Algorithm::Thgs(ThgsConfig { s0: 0.2, alpha: 0.8, s_min: 0.05 });
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let (_, acc0) = trainer.evaluate().unwrap();
+    let summary = trainer.run().unwrap();
+    assert!(
+        summary.final_accuracy > acc0 + 0.15,
+        "secure path broke learning: {acc0} → {}",
+        summary.final_accuracy
+    );
+}
+
+#[test]
+fn secure_equals_plain_aggregation_in_expectation() {
+    // One round, same seed: the secure aggregate must equal the plain
+    // sparse aggregate PLUS the mask-rider positions — so the global
+    // models stay close (not identical: mask-only positions ship their
+    // gradient component too, which plain sparsification residualizes).
+    let Some(_) = artifacts_dir() else { return };
+    let mk = |secure: bool| {
+        let mut cfg = smoke_cfg("mnist_mlp");
+        cfg.rounds = 1;
+        cfg.eval_every = 1;
+        cfg.secure = secure;
+        cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run_round(0).unwrap();
+        t.global.data.clone()
+    };
+    let plain = mk(false);
+    let secure = mk(true);
+    let dot: f64 = plain.iter().zip(&secure).map(|(&a, &b)| a as f64 * b as f64).sum();
+    let na: f64 = plain.iter().map(|&a| (a as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = secure.iter().map(|&b| (b as f64).powi(2)).sum::<f64>().sqrt();
+    let cos = dot / (na * nb);
+    assert!(cos > 0.99, "secure/plain cosine {cos}");
+}
+
+#[test]
+fn fedavg_baseline_runs_dense() {
+    let Some(_) = artifacts_dir() else { return };
+    let mut cfg = smoke_cfg("mnist_mlp");
+    cfg.rounds = 2;
+    cfg.eval_every = 2;
+    cfg.algorithm = Algorithm::FedAvg;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let out = trainer.run_round(0).unwrap();
+    let m = trainer.model_params();
+    // dense: every entry ships
+    assert!(out.nnz.iter().all(|&n| n == m), "{:?}", out.nnz);
+}
+
+#[test]
+fn fedprox_differs_from_fedavg() {
+    let Some(_) = artifacts_dir() else { return };
+    let run = |alg: Algorithm| {
+        let mut cfg = smoke_cfg("mnist_mlp");
+        cfg.rounds = 3;
+        cfg.eval_every = 3;
+        cfg.algorithm = alg;
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run().unwrap();
+        t.global.data
+    };
+    let a = run(Algorithm::FedAvg);
+    let b = run(Algorithm::FedProx { mu: 0.5 });
+    let diff: f64 = a.iter().zip(&b).map(|(&x, &y)| ((x - y) as f64).abs()).sum();
+    assert!(diff > 1e-3, "prox term had no effect");
+}
+
+#[test]
+fn noniid_partition_trains() {
+    let Some(_) = artifacts_dir() else { return };
+    let mut cfg = smoke_cfg("mnist_mlp");
+    cfg.partition = Partition::NonIid(4);
+    cfg.rounds = 15;
+    cfg.eval_every = 15;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let summary = trainer.run().unwrap();
+    // non-IID converges slower; just require clearly above chance
+    assert!(summary.final_accuracy > 0.15, "noniid acc {}", summary.final_accuracy);
+}
+
+#[test]
+fn cifar_cnn_one_round() {
+    let Some(_) = artifacts_dir() else { return };
+    let mut cfg = smoke_cfg("cifar_cnn");
+    cfg.rounds = 1;
+    cfg.eval_every = 1;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let out = trainer.run_round(0).unwrap();
+    assert!(out.mean_train_loss.is_finite());
+    assert!(out.eval.unwrap().1 >= 0.0);
+}
+
+#[test]
+fn run_is_deterministic_per_seed() {
+    let Some(_) = artifacts_dir() else { return };
+    let run = || {
+        let mut cfg = smoke_cfg("mnist_mlp");
+        cfg.rounds = 3;
+        cfg.eval_every = 3;
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run().unwrap();
+        t.global.data
+    };
+    let a = run();
+    let b = run();
+    // thread scheduling does not affect results: aggregation is
+    // order-independent up to f32 rounding of the per-client sum, and
+    // client results are collected in selection order.
+    assert_eq!(a, b);
+}
+
+#[test]
+fn residuals_accumulate_across_rounds() {
+    let Some(_) = artifacts_dir() else { return };
+    let mut cfg = smoke_cfg("mnist_mlp");
+    cfg.rounds = 4;
+    cfg.eval_every = 99;
+    cfg.clients = 4;
+    cfg.clients_per_round = 4; // everyone participates → residuals live
+    cfg.algorithm = Algorithm::FlatSparse { s: 0.01 };
+    let mut trainer = Trainer::new(cfg).unwrap();
+    trainer.run().unwrap();
+    let with_residual = trainer
+        .clients
+        .iter()
+        .filter(|c| c.residual.norm() > 0.0)
+        .count();
+    assert!(with_residual >= 3, "only {with_residual} clients hold residual");
+    assert!(trainer.clients.iter().all(|c| c.participation == 4));
+}

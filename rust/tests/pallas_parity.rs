@@ -1,0 +1,97 @@
+//! Rust-hot-path ↔ Pallas-kernel parity.
+//!
+//! The round loop uses the rust implementations of the sparsify and
+//! masked-aggregate sweeps for speed; the Pallas kernels (AOT-exported
+//! standalone) define the reference semantics and are the TPU
+//! deployment path. These tests prove the two produce **bitwise
+//! identical** results, so the choice is purely an execution-placement
+//! decision (DESIGN.md §Artifact set).
+
+use std::path::PathBuf;
+
+use fedsparse::models::manifest::Manifest;
+use fedsparse::runtime::{ExecutorPool, KernelRunner};
+use fedsparse::sparse::flat::apply_threshold;
+use fedsparse::util::rng::Rng;
+
+fn kernel_runner() -> Option<(KernelRunner, Vec<usize>)> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let pool = ExecutorPool::new(2);
+    let runner = KernelRunner::new(&pool, &manifest);
+    let sizes = runner.sparsify_sizes();
+    // pool must outlive the runner's handle uses — leak it for the test
+    std::mem::forget(pool);
+    Some((runner, sizes))
+}
+
+#[test]
+fn sparsify_bitwise_parity_all_sizes() {
+    let Some((runner, sizes)) = kernel_runner() else { return };
+    for &n in &sizes {
+        let mut rng = Rng::new(n as u64);
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+        for thr in [0.0f32, 0.5, 1.5, 100.0] {
+            let (pallas_s, pallas_r) = runner.sparsify(&g, thr).unwrap();
+            let rust = apply_threshold(&g, thr);
+            assert_eq!(pallas_s, rust.sparse, "sparse mismatch n={n} thr={thr}");
+            assert_eq!(pallas_r, rust.residual, "residual mismatch n={n} thr={thr}");
+        }
+    }
+}
+
+#[test]
+fn sparsify_parity_on_adversarial_values() {
+    let Some((runner, sizes)) = kernel_runner() else { return };
+    let n = sizes[0];
+    // denormals, exact-threshold ties, infinities-free extremes
+    let mut g = vec![0f32; n];
+    g[0] = 1.0;
+    g[1] = -1.0;
+    g[2] = 1.0 + f32::EPSILON;
+    g[3] = f32::MIN_POSITIVE;
+    g[4] = -f32::MIN_POSITIVE;
+    g[5] = 3.4e38;
+    g[6] = -3.4e38;
+    let (pallas_s, pallas_r) = runner.sparsify(&g, 1.0).unwrap();
+    let rust = apply_threshold(&g, 1.0);
+    assert_eq!(pallas_s, rust.sparse);
+    assert_eq!(pallas_r, rust.residual);
+    // ties (|g| == thr) go to the residual on BOTH paths
+    assert_eq!(pallas_s[0], 0.0);
+    assert_eq!(pallas_r[0], 1.0);
+}
+
+#[test]
+fn masked_agg_bitwise_parity() {
+    let Some((runner, _)) = kernel_runner() else { return };
+    let n = 16_384;
+    let mut rng = Rng::new(99);
+    let acc: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+    let contrib: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+    let mask: Vec<f32> = (0..n).map(|_| (rng.next_u64() % 2) as f32).collect();
+
+    let pallas = runner.masked_agg(&acc, &contrib, &mask).unwrap();
+    let rust: Vec<f32> = (0..n).map(|i| acc[i] + contrib[i] * mask[i]).collect();
+    assert_eq!(pallas, rust);
+}
+
+#[test]
+fn topk_threshold_then_pallas_apply_equals_flat_sparsify() {
+    // the full Alg.1 pipeline split across layers: rust top-k selection
+    // feeding the pallas application must equal the rust flat sparsifier
+    let Some((runner, sizes)) = kernel_runner() else { return };
+    let n = sizes[0];
+    let mut rng = Rng::new(123);
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(2.0)).collect();
+    let s = 0.03;
+    let k = ((n as f64 * s).ceil() as usize).max(1);
+    let thr = fedsparse::sparse::topk::threshold_for_topk_abs(&g, k);
+
+    let (pallas_s, _) = runner.sparsify(&g, thr).unwrap();
+    let flat = fedsparse::sparse::flat::flat_topk_sparsify(&g, s);
+    assert_eq!(pallas_s, flat.sparse);
+}

@@ -1,0 +1,233 @@
+//! Property-based invariants over the coordinator's pure substrates
+//! (DESIGN.md deliverable (c): proptest-style coverage of routing,
+//! batching and state invariants via the in-repo prop framework).
+
+use fedsparse::secagg::mask::{MaskRange, PairwiseMasker};
+use fedsparse::sparse::codec::SparseVec;
+use fedsparse::sparse::dynamic::DynamicRate;
+use fedsparse::sparse::flat::flat_topk_sparsify;
+use fedsparse::sparse::thgs::{thgs_sparsify, ThgsConfig};
+use fedsparse::sparse::topk::threshold_for_topk_abs;
+use fedsparse::util::prop::{f32_in, forall, usize_in, vec_f32, Pair};
+use fedsparse::util::rng::Rng;
+
+#[test]
+fn prop_sparse_plus_residual_reconstructs() {
+    forall(
+        "sparse+residual == g (flat)",
+        300,
+        Pair(vec_f32(1..=4096, 5.0), f32_in(0.001, 1.0)),
+        |(g, s)| {
+            let out = flat_topk_sparsify(g, *s as f64);
+            g.iter()
+                .enumerate()
+                .all(|(i, &x)| out.sparse[i] + out.residual[i] == x
+                    && (out.sparse[i] == 0.0 || out.residual[i] == 0.0))
+        },
+    );
+}
+
+#[test]
+fn prop_flat_nnz_at_most_k() {
+    forall(
+        "flat nnz ≤ ⌈s·n⌉",
+        300,
+        Pair(vec_f32(1..=2048, 3.0), f32_in(0.001, 1.0)),
+        |(g, s)| {
+            let out = flat_topk_sparsify(g, *s as f64);
+            out.nnz <= ((g.len() as f64 * *s as f64).ceil() as usize).max(1)
+        },
+    );
+}
+
+#[test]
+fn prop_topk_threshold_partitions() {
+    forall(
+        "∣{|g| > δ}∣ ≤ k ≤ ∣{|g| ≥ δ}∣",
+        300,
+        Pair(vec_f32(1..=1024, 2.0), usize_in(1..=1024)),
+        |(g, k)| {
+            let k = (*k).min(g.len()).max(1);
+            let d = threshold_for_topk_abs(g, k);
+            let gt = g.iter().filter(|x| x.abs() > d).count();
+            let ge = g.iter().filter(|x| x.abs() >= d).count();
+            gt <= k && k <= ge
+        },
+    );
+}
+
+#[test]
+fn prop_thgs_respects_span_boundaries() {
+    forall(
+        "thgs residual split per layer",
+        150,
+        Pair(vec_f32(64..=2048, 2.0), usize_in(1..=6)),
+        |(g, n_layers)| {
+            // build spans: n_layers ~equal chunks
+            let n = g.len();
+            let nl = (*n_layers).min(n);
+            let base = n / nl;
+            let mut spans = Vec::new();
+            let mut start = 0;
+            for i in 0..nl {
+                let len = if i == nl - 1 { n - start } else { base };
+                spans.push((start, len));
+                start += len;
+            }
+            let cfg = ThgsConfig { s0: 0.1, alpha: 0.7, s_min: 0.02 };
+            let out = thgs_sparsify(g, &spans, &cfg);
+            // exact split + every span sends ≥1 entry when it has a
+            // strict-max element (ties may drop all; allow ≥0 but check
+            // totals)
+            g.iter()
+                .enumerate()
+                .all(|(i, &x)| out.sparse[i] + out.residual[i] == x)
+                && out.thresholds.len() == nl
+        },
+    );
+}
+
+#[test]
+fn prop_codec_roundtrip() {
+    forall(
+        "SparseVec encode/decode identity",
+        200,
+        Pair(vec_f32(1..=4096, 1.0), f32_in(0.0, 0.9)),
+        |(dense, zero_frac)| {
+            // zero out a fraction to get realistic sparsity
+            let mut v = dense.clone();
+            let cut = (v.len() as f32 * zero_frac) as usize;
+            for x in v.iter_mut().take(cut) {
+                *x = 0.0;
+            }
+            let sv = SparseVec::from_dense(&v);
+            let plain = SparseVec::decode(&sv.encode()) == Ok(sv.clone());
+            let compressed = SparseVec::decode_compressed(&sv.encode_compressed()) == Ok(sv.clone());
+            let dense_rt = sv.to_dense() == v;
+            plain && compressed && dense_rt
+        },
+    );
+}
+
+#[test]
+fn prop_codec_wire_cheaper_than_paper_model() {
+    forall(
+        "wire bytes < paper 96-bit model (nnz > 8)",
+        100,
+        vec_f32(64..=8192, 1.0),
+        |dense| {
+            let sv = SparseVec::from_dense(dense);
+            sv.nnz() <= 8 || (sv.encode().len() as u64) <= sv.paper_cost_bytes()
+        },
+    );
+}
+
+#[test]
+fn prop_dynamic_rate_always_clamped() {
+    forall(
+        "Eq.2 rate ∈ [R_min, 1]",
+        200,
+        Pair(vec_f32(2..=40, 3.0), f32_in(0.05, 1.5)),
+        |(losses, alpha)| {
+            let mut c = DynamicRate::new(0.5, *alpha as f64, 100, 0.01);
+            losses.iter().enumerate().all(|(t, &l)| {
+                let r = c.observe(t as u64, (l.abs() + 0.01) as f64);
+                (0.01..=1.0).contains(&r)
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_pairwise_masks_cancel() {
+    forall(
+        "Σ signed pair masks == 0",
+        40,
+        Pair(usize_in(2..=6), usize_in(64..=1024)),
+        |(fleet_size, n)| {
+            let secret = |a: u32, b: u32| {
+                let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+                format!("p{lo}:{hi}").into_bytes()
+            };
+            let fleet: Vec<PairwiseMasker> = (0..*fleet_size as u32)
+                .map(|id| {
+                    let peers = (0..*fleet_size as u32)
+                        .filter(|&p| p != id)
+                        .map(|p| (p, secret(id, p)))
+                        .collect();
+                    PairwiseMasker::new(id, peers, MaskRange::default())
+                })
+                .collect();
+            let mut sum = vec![0f64; *n];
+            for c in &fleet {
+                for (i, v) in c.combined_mask(3, *n).iter().enumerate() {
+                    sum[i] += *v as f64;
+                }
+            }
+            sum.iter().all(|s| s.abs() < 1e-3)
+        },
+    );
+}
+
+#[test]
+fn prop_residual_mass_conservation() {
+    // multi-round residual accumulation never loses update mass
+    forall(
+        "Σ shipped + residual == Σ raw",
+        30,
+        Pair(usize_in(16..=512), usize_in(2..=10)),
+        |(n, rounds)| {
+            let mut rng = Rng::new((*n * 31 + *rounds) as u64);
+            let mut store = fedsparse::sparse::residual::ResidualStore::new(*n);
+            let mut shipped = vec![0f64; *n];
+            let mut raw = vec![0f64; *n];
+            for _ in 0..*rounds {
+                let mut u: Vec<f32> = (0..*n).map(|_| rng.normal_f32(1.0)).collect();
+                for i in 0..*n {
+                    raw[i] += u[i] as f64;
+                }
+                store.fold_into(&mut u);
+                let out = flat_topk_sparsify(&u, 0.1);
+                for i in 0..*n {
+                    shipped[i] += out.sparse[i] as f64;
+                }
+                store.store(&out.residual);
+            }
+            (0..*n).all(|i| {
+                (shipped[i] + store.as_slice()[i] as f64 - raw[i]).abs() < 1e-3
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_selection_valid() {
+    forall(
+        "selection distinct, sorted, in range",
+        200,
+        Pair(usize_in(2..=200), usize_in(0..=10_000)),
+        |(n, round)| {
+            let k = (*n / 2).max(1);
+            let sel = fedsparse::coordinator::selection::select_clients(*n, k, 7, *round as u64);
+            sel.len() == k
+                && sel.windows(2).all(|w| w[0] < w[1])
+                && sel.iter().all(|&c| (c as usize) < *n)
+        },
+    );
+}
+
+#[test]
+fn prop_shamir_roundtrip() {
+    forall(
+        "shamir reconstruct == secret",
+        100,
+        Pair(usize_in(1..=6), usize_in(0..=1_000_000)),
+        |(t, secret)| {
+            let n = t + 2;
+            let mut rng = Rng::new((*secret + 7) as u64);
+            let shares =
+                fedsparse::secagg::shamir::split(*secret as u64, n, *t, &mut rng);
+            fedsparse::secagg::shamir::reconstruct(&shares[..*t]) == *secret as u64
+        },
+    );
+}

@@ -1,0 +1,203 @@
+//! Secure-aggregation protocol end-to-end tests, including the §4
+//! safety-analysis case census, the dropout-recovery extension and a
+//! full-size (RFC 3526) DH exchange.
+
+use std::collections::HashMap;
+
+use fedsparse::secagg::mask::MaskRange;
+use fedsparse::secagg::protocol::{full_setup, SecAggConfig};
+use fedsparse::secagg::shamir::Share;
+use fedsparse::sparse::topk::threshold_for_topk_abs;
+use fedsparse::util::rng::Rng;
+
+fn keep_top(g: &[f32], frac: f64) -> Vec<bool> {
+    let k = ((g.len() as f64 * frac).ceil() as usize).max(1);
+    let d = threshold_for_topk_abs(g, k);
+    g.iter().map(|v| v.abs() > d).collect()
+}
+
+/// Multi-round secure training traffic: masks must cancel every round
+/// and the per-round mask streams must differ (no mask reuse).
+#[test]
+fn masks_cancel_across_rounds_without_reuse() {
+    let cfg = SecAggConfig { share_keys: false, ..Default::default() };
+    let (clients, server) = full_setup(5, 3, &cfg);
+    let n = 5000;
+    let mut rng = Rng::new(4);
+    let mut prev_payload: Option<Vec<f32>> = None;
+
+    for round in 0..4u64 {
+        let mut payloads = Vec::new();
+        let mut expect = vec![0f64; n];
+        for c in &clients {
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.05)).collect();
+            let keep = keep_top(&g, 0.02);
+            let u = c.build_update(&g, &keep, round, clients.len());
+            for j in 0..n {
+                expect[j] += (g[j] - u.residual[j]) as f64;
+            }
+            payloads.push((c.id, u.payload));
+        }
+        let agg = server.aggregate(n, round, &payloads, &[], &HashMap::new());
+        for j in 0..n {
+            assert!((agg[j] as f64 - expect[j]).abs() < 3e-3, "round {round} pos {j}");
+        }
+        // same client's masked payload must change across rounds
+        let dense0 = payloads[0].1.to_dense();
+        if let Some(prev) = prev_payload.replace(dense0.clone()) {
+            assert_ne!(prev, dense0, "mask stream reused across rounds");
+        }
+    }
+}
+
+/// §4 case census: with mask ratio k, the expected fraction of pure
+/// mask positions matches Eq. 4, and exposure (case 1) shrinks as the
+/// mask ratio grows.
+#[test]
+fn case_census_matches_eq4() {
+    let n = 60_000;
+    let x = 4usize;
+    for k in [0.4f64, 1.0, 2.0] {
+        let cfg = SecAggConfig { mask_ratio_k: k, share_keys: false, ..Default::default() };
+        let (clients, _) = full_setup(x as u32, 5, &cfg);
+        let g: Vec<f32> = {
+            let mut rng = Rng::new(6);
+            (0..n).map(|_| rng.normal_f32(1.0)).collect()
+        };
+        let keep = vec![false; n]; // isolate the mask channel
+        let u = clients[0].build_update(&g, &keep, 1, x);
+        // P(any of 3 pair masks nonzero) = 1 − (1 − k/x)^3
+        let p = 1.0 - (1.0 - k / x as f64).powi(3);
+        let got = u.census.case2_mask_only as f64 / n as f64;
+        assert!(
+            (got - p).abs() < 0.02,
+            "k={k}: mask fraction {got:.3} vs expected {p:.3}"
+        );
+    }
+}
+
+#[test]
+fn exposure_shrinks_with_mask_ratio() {
+    let n = 40_000;
+    let g: Vec<f32> = {
+        let mut rng = Rng::new(7);
+        (0..n).map(|_| rng.normal_f32(1.0)).collect()
+    };
+    let keep = keep_top(&g, 0.01);
+    let mut exposures = Vec::new();
+    for k in [0.25f64, 1.0, 3.0] {
+        let cfg = SecAggConfig { mask_ratio_k: k, share_keys: false, ..Default::default() };
+        let (clients, _) = full_setup(4, 8, &cfg);
+        let u = clients[0].build_update(&g, &keep, 0, 4);
+        exposures.push(u.census.exposure_rate());
+    }
+    assert!(exposures[0] > exposures[1] && exposures[1] > exposures[2], "{exposures:?}");
+}
+
+/// Dropout mid-round: Shamir recovery de-orphans the masks.
+#[test]
+fn dropout_recovery_full_protocol() {
+    let cfg = SecAggConfig { share_threshold: 3, ..Default::default() };
+    let (clients, server) = full_setup(5, 9, &cfg);
+    let n = 3000;
+    let mut rng = Rng::new(10);
+
+    let mut updates = Vec::new();
+    for c in &clients {
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.05)).collect();
+        let keep = keep_top(&g, 0.02);
+        let u = c.build_update(&g, &keep, 1, clients.len());
+        updates.push((c.id, g, u));
+    }
+    let dropped = 4u32;
+    let mut payloads = Vec::new();
+    let mut expect = vec![0f64; n];
+    for (id, g, u) in &updates {
+        if *id == dropped {
+            continue;
+        }
+        for j in 0..n {
+            expect[j] += (g[j] - u.residual[j]) as f64;
+        }
+        payloads.push((*id, u.payload.clone()));
+    }
+
+    let mut recovered = HashMap::new();
+    for (v, _, _) in updates.iter().filter(|(id, _, _)| *id != dropped) {
+        let pair = if *v < dropped { (*v, dropped) } else { (dropped, *v) };
+        let share_sets: Vec<Vec<Share>> = clients
+            .iter()
+            .filter(|c| c.id != dropped)
+            .filter_map(|c| c.shares_for(pair.0, pair.1).cloned())
+            .take(cfg.share_threshold)
+            .collect();
+        assert!(share_sets.len() >= cfg.share_threshold);
+        recovered.insert((*v, dropped), server.reconstruct_pair_key(&share_sets));
+    }
+    let agg = server.aggregate(n, 1, &payloads, &[dropped], &recovered);
+    for j in 0..n {
+        assert!((agg[j] as f64 - expect[j]).abs() < 3e-3, "pos {j}");
+    }
+}
+
+/// The real 1536-bit MODP group works end-to-end (slower; small fleet).
+#[test]
+fn full_dh_group_small_fleet() {
+    let cfg = SecAggConfig { full_dh: true, share_keys: false, ..Default::default() };
+    let (clients, server) = full_setup(3, 11, &cfg);
+    let n = 1000;
+    let mut rng = Rng::new(12);
+    let mut payloads = Vec::new();
+    let mut expect = vec![0f64; n];
+    for c in &clients {
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.05)).collect();
+        let keep = keep_top(&g, 0.05);
+        let u = c.build_update(&g, &keep, 0, 3);
+        for j in 0..n {
+            expect[j] += (g[j] - u.residual[j]) as f64;
+        }
+        payloads.push((c.id, u.payload));
+    }
+    let agg = server.aggregate(n, 0, &payloads, &[], &HashMap::new());
+    for j in 0..n {
+        assert!((agg[j] as f64 - expect[j]).abs() < 2e-3);
+    }
+}
+
+/// Paper §3.2 condition 2: masked-sparse upload is far below the dense
+/// secure-aggregation baseline.
+#[test]
+fn masked_sparse_beats_dense_secagg_cost() {
+    let cfg = SecAggConfig { mask_ratio_k: 1.0, share_keys: false, ..Default::default() };
+    let (clients, _) = full_setup(10, 13, &cfg);
+    let n = 159_010; // mnist_mlp size
+    let mut rng = Rng::new(14);
+    let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.02)).collect();
+    let keep = keep_top(&g, 0.01);
+    let u = clients[0].build_update(&g, &keep, 0, 10);
+    let sparse_cost = u.payload.paper_cost_bytes();
+    let dense_cost = fedsparse::sparse::codec::dense_cost_bytes(n);
+    let ratio = sparse_cost as f64 / dense_cost as f64;
+    // grad 1% + mask ~1/10 per pair over 9 pairs ≈ up to ~60% worst
+    // case; with k=1, x=10 → pair keep 0.1, union over 9 pairs ≈ 0.61.
+    // The paper's regime uses smaller k/x; just assert strictly below dense.
+    assert!(ratio < 1.0, "ratio {ratio}");
+
+    // and with the paper-ish k=0.2 the ratio drops well below
+    let cfg2 = SecAggConfig { mask_ratio_k: 0.2, share_keys: false, ..Default::default() };
+    let (clients2, _) = full_setup(10, 15, &cfg2);
+    let u2 = clients2[0].build_update(&g, &keep, 0, 10);
+    let ratio2 = u2.payload.paper_cost_bytes() as f64 / dense_cost as f64;
+    assert!(ratio2 < 0.4, "ratio2 {ratio2}");
+    assert!(ratio2 < ratio);
+}
+
+/// Mask range sigma arithmetic (Eq. 4) at protocol level.
+#[test]
+fn sigma_boundaries() {
+    let r = MaskRange { p: -10.0, q: 20.0 };
+    assert_eq!(r.sigma(0.0, 10), -10.0); // keep nothing
+    assert_eq!(r.sigma(10.0, 10), 10.0); // keep everything
+    let mid = r.sigma(5.0, 10.0 as usize);
+    assert!((mid - 0.0).abs() < 1e-6);
+}
