@@ -1,7 +1,19 @@
 //! Quickstart: train a small federated MNIST-MLP job with THGS
-//! sparsification through the public API, in under a minute.
+//! sparsification through the public API, in under a minute — from a
+//! clean checkout, with no Python step.
 //!
 //!     cargo run --release --example quickstart
+//!
+//! Backend selection (`cfg.backend`, default `Auto`):
+//!
+//! * `BackendKind::Native` — the pure-Rust compute path. Always
+//!   available: when `artifacts/manifest.json` is absent the trainer
+//!   uses the built-in `mnist_mlp` manifest (159,010 params), so this
+//!   example needs nothing beyond `cargo run`.
+//! * `BackendKind::Pjrt` — the AOT-artifact path (build with
+//!   `--features pjrt` after `make artifacts`); required for the conv
+//!   models.
+//! * `BackendKind::Auto` — PJRT when available, native otherwise.
 
 use fedsparse::config::RunConfig;
 use fedsparse::coordinator::{Algorithm, Trainer};
@@ -20,9 +32,14 @@ fn main() -> anyhow::Result<()> {
     cfg.rounds = 30;
     cfg.eval_every = 5;
     cfg.algorithm = Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 });
+    // cfg.backend = fedsparse::BackendKind::Native; // force pure-Rust
 
     let mut trainer = Trainer::new(cfg)?;
-    println!("training mnist_mlp ({} params) with THGS…", trainer.model_params());
+    println!(
+        "training mnist_mlp ({} params) with THGS on the {} backend…",
+        trainer.model_params(),
+        trainer.backend_name()
+    );
     for round in 0..trainer.cfg.rounds {
         let out = trainer.run_round(round)?;
         if let Some((eval_loss, acc)) = out.eval {

@@ -16,7 +16,8 @@ fn human(b: u64) -> String {
 }
 
 fn main() -> anyhow::Result<()> {
-    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    // falls back to the builtin manifest (mnist_mlp only) pre-export
+    let manifest = Manifest::load_or_builtin(std::path::Path::new("artifacts"))?;
     // (model, paper's reported parameter size; None = not reported)
     let paper: &[(&str, Option<u64>)] = &[
         ("mnist_mlp", Some(159_010)),

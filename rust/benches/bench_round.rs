@@ -1,7 +1,8 @@
 //! End-to-end round latency per algorithm (paper Table 2's time
 //! dimension): one full federated round — local training through the
-//! PJRT grad artifact, sparsify, (secure) encode, aggregate — for each
-//! contender. Needs `make artifacts`.
+//! resolved backend (native by default; PJRT grad artifacts when built
+//! with `--features pjrt` after `make artifacts`), sparsify, (secure)
+//! encode, aggregate — for each contender.
 
 use std::path::PathBuf;
 
@@ -10,14 +11,10 @@ use fedsparse::coordinator::{Algorithm, Trainer};
 use fedsparse::sparse::thgs::ThgsConfig;
 use fedsparse::util::bench::{black_box, Bench};
 
-fn artifacts() -> Option<PathBuf> {
-    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    dir.join("manifest.json").exists().then_some(dir)
-}
-
-fn cfg_for(alg: Algorithm, secure: bool, dir: &PathBuf) -> RunConfig {
+fn cfg_for(alg: Algorithm, secure: bool) -> RunConfig {
     let mut cfg = RunConfig::smoke("mnist_mlp");
-    cfg.artifacts_dir = dir.clone();
+    // resolves to pjrt when built+exported, native otherwise
+    cfg.artifacts_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     cfg.data_dir = None;
     cfg.rounds = 1_000_000; // bench drives rounds manually
     cfg.eval_every = u64::MAX; // no eval inside the measured round
@@ -33,11 +30,11 @@ fn cfg_for(alg: Algorithm, secure: bool, dir: &PathBuf) -> RunConfig {
 }
 
 fn main() {
-    let Some(dir) = artifacts() else {
-        eprintln!("bench_round: artifacts missing — run `make artifacts` first");
-        return;
-    };
     let mut b = Bench::new("round");
+    {
+        let probe = Trainer::new(cfg_for(Algorithm::FedAvg, false)).unwrap();
+        eprintln!("bench_round: backend = {}", probe.backend_name());
+    }
 
     let contenders: Vec<(&str, Algorithm, bool)> = vec![
         ("fedavg", Algorithm::FedAvg, false),
@@ -56,7 +53,7 @@ fn main() {
     ];
 
     for (label, alg, secure) in contenders {
-        let mut trainer = Trainer::new(cfg_for(alg, secure, &dir)).unwrap();
+        let mut trainer = Trainer::new(cfg_for(alg, secure)).unwrap();
         let mut round = 0u64;
         // warm the executable cache before measuring
         trainer.run_round(round).unwrap();

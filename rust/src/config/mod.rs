@@ -6,6 +6,7 @@ pub mod file;
 use std::path::PathBuf;
 
 use crate::coordinator::algorithms::Algorithm;
+use crate::runtime::BackendKind;
 use crate::sparse::thgs::ThgsConfig;
 
 /// How training data is split across clients (§5's allocation matrix).
@@ -40,6 +41,9 @@ impl Partition {
 pub struct RunConfig {
     pub model: String,
     pub dataset: String,
+    /// Compute backend: `Auto` picks PJRT when built with the `pjrt`
+    /// feature and the AOT artifacts exist, native otherwise.
+    pub backend: BackendKind,
     /// Directory probed for real datasets (falls back to synthetic).
     pub data_dir: Option<PathBuf>,
     pub artifacts_dir: PathBuf,
@@ -60,6 +64,11 @@ pub struct RunConfig {
     pub algorithm: Algorithm,
     /// Wrap updates in mask-sparsified secure aggregation (§3.2).
     pub secure: bool,
+    /// Test/verification aid: in secure mode, also accumulate each
+    /// client's *unmasked* contribution server-side so tests can
+    /// assert the masks cancel. Never enable outside a harness — it
+    /// reveals exactly what the protocol exists to hide.
+    pub audit_secure_sum: bool,
     /// Eq. 4 mask keep-ratio numerator k (secure mode).
     pub mask_ratio_k: f64,
     /// Eq. 2 dynamic sparsity-rate controller (secure / THGS modes).
@@ -86,6 +95,7 @@ impl Default for RunConfig {
         Self {
             model: "mnist_mlp".into(),
             dataset: "mnist".into(),
+            backend: BackendKind::Auto,
             data_dir: Some(PathBuf::from("data")),
             artifacts_dir: PathBuf::from("artifacts"),
             train_samples: None,
@@ -100,6 +110,7 @@ impl Default for RunConfig {
             seed: 42,
             algorithm: Algorithm::Thgs(ThgsConfig::default()),
             secure: false,
+            audit_secure_sum: false,
             mask_ratio_k: 1.0,
             dynamic_rate: false,
             rate_alpha: 0.8,
@@ -145,6 +156,12 @@ impl RunConfig {
         }
         if self.rounds == 0 {
             return Err("rounds must be ≥ 1".into());
+        }
+        if self.backend == BackendKind::Pjrt && !cfg!(feature = "pjrt") {
+            return Err("backend pjrt requires building with `--features pjrt`".into());
+        }
+        if self.audit_secure_sum && !self.secure {
+            return Err("audit_secure_sum only makes sense with secure aggregation on".into());
         }
         if let Algorithm::Thgs(t) = &self.algorithm {
             t.validate()?;
@@ -207,6 +224,22 @@ mod tests {
         c.secure = true;
         c.clients_per_round = 1;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn pjrt_backend_needs_feature() {
+        let mut c = RunConfig::default();
+        c.backend = BackendKind::Pjrt;
+        assert_eq!(c.validate().is_ok(), cfg!(feature = "pjrt"));
+    }
+
+    #[test]
+    fn audit_requires_secure() {
+        let mut c = RunConfig::default();
+        c.audit_secure_sum = true;
+        assert!(c.validate().is_err());
+        c.secure = true;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

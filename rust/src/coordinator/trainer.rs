@@ -1,12 +1,13 @@
 //! The federated training orchestrator.
 //!
-//! One [`Trainer`] owns the global model, the client fleet, the PJRT
-//! runtime and (optionally) the secure-aggregation state, and drives
-//! the §5 round loop:
+//! One [`Trainer`] owns the global model, the client fleet, the
+//! compute backend (native or PJRT, see [`crate::runtime`]) and
+//! (optionally) the secure-aggregation state, and drives the §5 round
+//! loop:
 //!
 //! ```text
 //! select C·K clients
-//!   → parallel local SGD (E iterations, batch B) via PJRT grad artifacts
+//!   → parallel local SGD (E iterations, batch B) via the backend's grad
 //!   → residual fold-in + sparsify (FedAvg/FedProx/flat/THGS)
 //!   → [secure] pairwise mask-sparsified encoding (Alg. 2)
 //!   → server sum → global ← global + Σ/k
@@ -24,7 +25,7 @@ use crate::data::{iid_partition, noniid_partition, Dataset, DatasetKind, Split};
 use crate::metrics::recorder::{Recorder, RoundRecord, RunSummary};
 use crate::models::manifest::Manifest;
 use crate::models::params::ParamVector;
-use crate::runtime::{ExecutorPool, ModelRunner};
+use crate::runtime::ModelRunner;
 use crate::secagg::protocol::{full_setup, SecAggClient, SecAggConfig, SecAggServer};
 use crate::sparse::codec::SparseVec;
 use crate::sparse::residual::ResidualStore;
@@ -46,6 +47,13 @@ pub struct RoundOutcome {
     /// Per-client actual wire bytes.
     pub wire_bytes: Vec<usize>,
     pub eval: Option<(f64, f64)>, // (loss, accuracy)
+    /// The server-side aggregate (the summed payloads) before the
+    /// `1/k` FedAvg scaling — what tests assert on.
+    pub aggregate: Vec<f32>,
+    /// [`RunConfig::audit_secure_sum`] only: the f64 sum of the
+    /// clients' *unmasked* contributions, in the same client order as
+    /// `aggregate` (so tests can assert the pair masks cancelled).
+    pub plain_sum: Option<Vec<f64>>,
 }
 
 /// Per-client state moved into the parallel round pipeline.
@@ -61,6 +69,8 @@ struct ClientJob {
 struct ClientResult {
     cid: u32,
     payload: SparseVec,
+    /// Unmasked contribution (secure mode + audit only).
+    plain: Option<Vec<f32>>,
     residual: ResidualStore,
     rate: Option<crate::sparse::dynamic::DynamicRate>,
     momentum: Option<crate::sparse::momentum::MomentumCorrector>,
@@ -75,8 +85,6 @@ pub struct Trainer {
     pub cfg: RunConfig,
     pub manifest: Manifest,
     runner: ModelRunner,
-    // keep the pool alive (runner holds only a handle)
-    _pool: ExecutorPool,
     train_data: Arc<Dataset>,
     test_data: Dataset,
     pub global: ParamVector,
@@ -94,18 +102,12 @@ pub struct Trainer {
 impl Trainer {
     pub fn new(cfg: RunConfig) -> Result<Self> {
         cfg.validate().map_err(|e| anyhow!("config: {e}"))?;
-        let manifest = Manifest::load(&cfg.artifacts_dir)
-            .with_context(|| format!("load manifest from {:?} (run `make artifacts`)", cfg.artifacts_dir))?;
-        let meta = manifest
-            .model(&cfg.model)
-            .ok_or_else(|| {
-                anyhow!(
-                    "model {:?} not exported (have: {})",
-                    cfg.model,
-                    manifest.models.iter().map(|m| m.name.as_str()).collect::<Vec<_>>().join(", ")
-                )
-            })?
-            .clone();
+        // a missing manifest.json is not an error: the builtin
+        // manifest + native backend cover the no-Python default path
+        let manifest = Manifest::load_or_builtin(&cfg.artifacts_dir)
+            .with_context(|| format!("load manifest from {:?}", cfg.artifacts_dir))?;
+        let runner = ModelRunner::for_config(&manifest, &cfg)?;
+        let meta = runner.meta.clone();
 
         let kind = DatasetKind::from_name(&cfg.dataset)
             .ok_or_else(|| anyhow!("unknown dataset {:?}", cfg.dataset))?;
@@ -166,8 +168,6 @@ impl Trainer {
             None
         };
 
-        let pool = ExecutorPool::new(cfg.exec_workers);
-        let runner = ModelRunner::new(&pool, &manifest, &cfg.model)?;
         let layer_spans = meta.layer_spans();
         let label = cfg.run_label();
         let base_rate = base_rate_of(&cfg.algorithm);
@@ -184,7 +184,6 @@ impl Trainer {
             secagg,
             layer_spans,
             runner,
-            _pool: pool,
             manifest,
             cfg,
             base_rate,
@@ -242,6 +241,7 @@ impl Trainer {
         let secagg = self.secagg.clone();
         let selected_arc = Arc::new(selected.clone());
         let secure = cfg.secure;
+        let audit = cfg.audit_secure_sum;
         let m = self.global.len();
 
         let results: Vec<Result<ClientResult>> = self.client_pool.map(
@@ -296,11 +296,19 @@ impl Trainer {
                     mc.mask_sent(&out.sparse); // DGC momentum factor masking
                 }
                 let nnz_rate = out.nnz as f64 / m as f64;
+                let mut plain: Option<Vec<f32>> = None;
                 let payload: SparseVec = if let Some(sec) = &secagg {
                     let keep: Vec<bool> = out.sparse.iter().map(|&v| v != 0.0).collect();
                     let peers: Vec<u32> =
                         selected_arc.iter().copied().filter(|&p| p != cid).collect();
                     let mu = sec.0[cid as usize].build_update_among(&update, &keep, round, &peers);
+                    if audit {
+                        // what ships minus the masks: exact in f32,
+                        // since the residual is g or 0 positionwise
+                        plain = Some(
+                            update.iter().zip(&mu.residual).map(|(u, r)| u - r).collect(),
+                        );
+                    }
                     residual.store(&mu.residual);
                     mu.payload
                 } else {
@@ -327,6 +335,7 @@ impl Trainer {
                 Ok(ClientResult {
                     cid,
                     payload,
+                    plain,
                     residual,
                     rate,
                     momentum,
@@ -340,6 +349,8 @@ impl Trainer {
 
         // ---- hand state back + aggregate ---------------------------
         let mut agg = vec![0f32; m];
+        let mut plain_sum =
+            (self.cfg.secure && self.cfg.audit_secure_sum).then(|| vec![0f64; m]);
         let mut nnz_list = Vec::with_capacity(selected.len());
         let mut wire_list = Vec::with_capacity(selected.len());
         let mut loss_sum = 0f64;
@@ -357,6 +368,11 @@ impl Trainer {
             rate_sum += r.nnz_rate;
             nnz_list.push(r.nnz);
             wire_list.push(r.wire);
+            if let (Some(ps), Some(p)) = (plain_sum.as_mut(), r.plain.as_ref()) {
+                for (acc, &v) in ps.iter_mut().zip(p) {
+                    *acc += v as f64;
+                }
+            }
             r.payload.add_into(&mut agg);
         }
 
@@ -401,6 +417,8 @@ impl Trainer {
             nnz: nnz_list,
             wire_bytes: wire_list,
             eval,
+            aggregate: agg,
+            plain_sum,
         })
     }
 
@@ -412,6 +430,11 @@ impl Trainer {
 
     pub fn model_params(&self) -> usize {
         self.global.len()
+    }
+
+    /// Which compute backend the run resolved to (`"native"`/`"pjrt"`).
+    pub fn backend_name(&self) -> &'static str {
+        self.runner.backend_name()
     }
 }
 

@@ -1,22 +1,38 @@
 //! # fedsparse
 //!
 //! Reproduction of *"Efficient and Secure Federated Learning for
-//! Financial Applications"* (cs.LG 2023) as a three-layer
-//! rust + JAX + Pallas system (AOT via PJRT).
+//! Financial Applications"* (cs.LG 2023).
 //!
 //! The crate is the **Layer-3 coordinator**: it owns the federated
 //! round loop, the paper's two contributions — time-varying
 //! hierarchical gradient sparsification ([`sparse::thgs`], Alg. 1) and
 //! mask-sparsified secure aggregation ([`secagg`], Alg. 2) — plus every
 //! substrate they need (datasets, partitioning, DH/PRG crypto, sparse
-//! codecs, comm-cost accounting, a PJRT runtime for the AOT-compiled
-//! JAX/Pallas compute graphs, metrics, config and CLI).
+//! codecs, comm-cost accounting, model compute backends, metrics,
+//! config and CLI).
 //!
-//! Python never runs on the round path: `make artifacts` lowers the
-//! L2/L1 graphs to `artifacts/*.hlo.txt` once, and [`runtime`] loads
-//! them through the PJRT C API.
+//! ## Compute backends
 //!
-//! Quickstart (see `examples/quickstart.rs`):
+//! Model compute (forward/grad/eval) goes through the
+//! [`runtime::Backend`] trait; [`config::RunConfig::backend`] selects
+//! the implementation:
+//!
+//! * **native** (default, always available) — pure-Rust MLP compute on
+//!   flat parameter vectors. No Python, JAX, or artifacts required: a
+//!   built-in manifest describes `mnist_mlp` (159,010 params), so a
+//!   clean checkout trains end-to-end, deterministically, with
+//!   `cargo test` / `cargo run` alone.
+//! * **pjrt** (cargo feature `pjrt`) — the AOT path: `make artifacts`
+//!   lowers the JAX/Pallas graphs to `artifacts/*.hlo.txt` once, and
+//!   the runtime executes them through the PJRT C API. Required for
+//!   the conv models (`mnist_cnn`, `cifar_*`).
+//! * **auto** (the default [`runtime::BackendKind`]) — pjrt when the
+//!   feature is on and the model's artifacts exist, native otherwise.
+//!
+//! Python never runs on the round path in either mode.
+//!
+//! Quickstart — no artifacts, no Python, just cargo (see
+//! `examples/quickstart.rs`):
 //!
 //! ```no_run
 //! use fedsparse::config::RunConfig;
@@ -26,6 +42,7 @@
 //! cfg.model = "mnist_mlp".into();
 //! cfg.rounds = 20;
 //! let mut trainer = Trainer::new(cfg).unwrap();
+//! println!("backend: {}", trainer.backend_name());
 //! let summary = trainer.run().unwrap();
 //! println!("final acc {:.3}", summary.final_accuracy);
 //! ```
@@ -45,3 +62,4 @@ pub mod util;
 
 pub use config::RunConfig;
 pub use coordinator::Trainer;
+pub use runtime::BackendKind;

@@ -17,6 +17,7 @@ use std::process::ExitCode;
 use fedsparse::config::{Partition, RunConfig};
 use fedsparse::coordinator::{Algorithm, Trainer};
 use fedsparse::models::manifest::Manifest;
+use fedsparse::runtime::BackendKind;
 use fedsparse::util::cli::{usage, ArgSpec, Args, CliError};
 use fedsparse::util::timer::{fmt_bytes, Stopwatch};
 
@@ -40,6 +41,7 @@ const TRAIN_SPEC: &[ArgSpec] = &[
     ArgSpec::opt("quant-bits", "", "0", "QSGD stochastic quantization bits (0 = off)"),
     ArgSpec::opt("momentum", "", "0.0", "DGC momentum correction coefficient"),
     ArgSpec::opt("warmup", "", "0", "DGC warm-up rounds (sparsity relaxed dense→target)"),
+    ArgSpec::opt("backend", "b", "auto", "auto | native | pjrt (AOT artifacts)"),
     ArgSpec::opt("workers", "w", "4", "PJRT executor threads"),
     ArgSpec::opt("artifacts", "", "artifacts", "AOT artifacts directory"),
     ArgSpec::opt("data-dir", "", "data", "real-dataset directory (falls back to synthetic)"),
@@ -111,6 +113,8 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     cfg.mask_ratio_k = args.get_parsed("mask-ratio")?;
     cfg.rate_alpha = args.get_parsed("rate-alpha")?;
     cfg.rate_min = args.get_parsed("rate-min")?;
+    cfg.backend = BackendKind::parse(args.get("backend").unwrap_or("auto"))
+        .ok_or_else(|| anyhow::anyhow!("bad --backend (auto | native | pjrt)"))?;
     cfg.exec_workers = args.get_parsed("workers")?;
     cfg.client_workers = cfg.exec_workers;
     cfg.artifacts_dir = PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
@@ -144,8 +148,9 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
     let sw = Stopwatch::start();
     let mut trainer = Trainer::new(cfg)?;
     println!(
-        "model: {} params | data: {}{}",
+        "model: {} params | backend: {} | data: {}{}",
         trainer.model_params(),
+        trainer.backend_name(),
         trainer.cfg.dataset,
         if trainer_is_synth(&trainer) { " (synthetic)" } else { " (real)" },
     );
@@ -197,8 +202,14 @@ fn cmd_info(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
     const SPEC: &[ArgSpec] = &[ArgSpec::opt("artifacts", "", "artifacts", "artifacts dir")];
     let args = Args::parse_spec("fedsparse info", SPEC, argv)?;
     let dir = PathBuf::from(args.get("artifacts").unwrap());
-    let m = Manifest::load(&dir)?;
-    println!("artifacts: {} | train batch {} | eval batch {}", dir.display(), m.train_batch, m.eval_batch);
+    let exported = dir.join("manifest.json").exists();
+    let m = Manifest::load_or_builtin(&dir)?;
+    println!(
+        "artifacts: {} | train batch {} | eval batch {}",
+        if exported { format!("{}", dir.display()) } else { "(builtin manifest — no export yet)".into() },
+        m.train_batch,
+        m.eval_batch
+    );
     println!("\n{:<14} {:>12} {:>8}  artifacts", "model", "params", "layers");
     for model in &m.models {
         println!(

@@ -102,11 +102,69 @@ pub struct Manifest {
     pub kernel_block: usize,
 }
 
+/// The compiled-in default manifest: the `mnist_mlp` layout exactly as
+/// `python -m compile.aot` exports it (784→200→10, 159,010 params).
+/// Lets the native backend run the full round loop from a clean
+/// checkout with no Python step; the artifact file names are kept so a
+/// later `make artifacts` slots in without a schema change.
+const BUILTIN_MANIFEST: &str = r#"{
+  "version": 1, "train_batch": 50, "eval_batch": 250,
+  "models": {
+    "mnist_mlp": {
+      "input": [28, 28, 1], "classes": 10,
+      "params": [
+        {"name": "layer0/w", "shape": [784, 200],
+         "init": {"kind": "normal", "std": 0.0505}, "layer": 0},
+        {"name": "layer0/b", "shape": [200],
+         "init": {"kind": "zeros", "std": 0.0}, "layer": 0},
+        {"name": "layer1/w", "shape": [200, 10],
+         "init": {"kind": "normal", "std": 0.0707}, "layer": 1},
+        {"name": "layer1/b", "shape": [10],
+         "init": {"kind": "zeros", "std": 0.0}, "layer": 1}
+      ],
+      "layers": [
+        {"name": "layer0", "params": [0, 1]},
+        {"name": "layer1", "params": [2, 3]}
+      ],
+      "param_count": 159010,
+      "grad": "mnist_mlp_grad.hlo.txt",
+      "eval": "mnist_mlp_eval.hlo.txt"
+    }
+  },
+  "kernels": {
+    "sparsify": {},
+    "masked_agg": {},
+    "block": 1024
+  }
+}"#;
+
 impl Manifest {
     /// Load `dir/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self, ManifestError> {
         let text = std::fs::read_to_string(dir.join("manifest.json"))?;
         Self::parse(dir, &text)
+    }
+
+    /// The compiled-in default manifest (`mnist_mlp` only). Its
+    /// artifact paths still resolve under `dir` = `artifacts`, but the
+    /// native backend never reads them.
+    pub fn builtin() -> Self {
+        Self::parse(Path::new("artifacts"), BUILTIN_MANIFEST).expect("builtin manifest parses")
+    }
+
+    /// Load `dir/manifest.json` when it exists; fall back to the
+    /// builtin manifest when the file is absent (no Python/JAX export
+    /// has run). A *present but malformed* manifest still errors —
+    /// that is corruption, not a missing optional step. The fallback
+    /// keeps `dir` as its artifact root (not the builtin default), so
+    /// backend auto-detection never probes a directory the caller
+    /// didn't ask for.
+    pub fn load_or_builtin(dir: &Path) -> Result<Self, ManifestError> {
+        if dir.join("manifest.json").exists() {
+            Self::load(dir)
+        } else {
+            Ok(Self::parse(dir, BUILTIN_MANIFEST).expect("builtin manifest parses"))
+        }
     }
 
     pub fn model(&self, name: &str) -> Option<&ModelMeta> {
@@ -321,6 +379,24 @@ mod tests {
         let m = Manifest::parse(Path::new("/tmp/x"), SAMPLE).unwrap();
         let spans = m.model("mnist_mlp").unwrap().layer_spans();
         assert_eq!(spans, vec![(0, 157_000), (157_000, 2_010)]);
+    }
+
+    #[test]
+    fn builtin_matches_paper_layout() {
+        let m = Manifest::builtin();
+        assert_eq!(m.train_batch, 50);
+        assert_eq!(m.eval_batch, 250);
+        let model = m.model("mnist_mlp").unwrap();
+        assert_eq!(model.total_params(), 159_010);
+        assert_eq!(model.total_params(), model.param_count);
+        assert_eq!(model.layer_spans(), vec![(0, 157_000), (157_000, 2_010)]);
+        assert!(m.sparsify_kernels.is_empty());
+    }
+
+    #[test]
+    fn load_or_builtin_falls_back() {
+        let m = Manifest::load_or_builtin(Path::new("/definitely/not/a/dir")).unwrap();
+        assert!(m.model("mnist_mlp").is_some());
     }
 
     #[test]

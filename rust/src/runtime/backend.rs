@@ -1,0 +1,278 @@
+//! The compute-backend abstraction.
+//!
+//! A [`Backend`] evaluates one model's forward/grad/eval graphs on
+//! flat [`ParamVector`] slices. Two implementations exist:
+//!
+//! * [`crate::runtime::native::NativeBackend`] — pure Rust, always
+//!   available, deterministic, no artifacts required (MLP models)
+//! * `PjrtBackend` (feature `pjrt`) — executes the AOT-exported HLO
+//!   artifacts through the PJRT C API (any exported model)
+//!
+//! [`ModelRunner`] is the coordinator-facing façade: it owns the
+//! backend, enforces the manifest batch sizes and provides the
+//! full-dataset evaluation loop. [`BackendKind`] is the user-facing
+//! selector ([`crate::config::RunConfig::backend`]).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::RunConfig;
+use crate::models::manifest::{Manifest, ModelMeta};
+use crate::models::params::ParamVector;
+
+use super::native::NativeBackend;
+
+/// One model's compute implementation. Implementations must be usable
+/// concurrently from the client worker pool (`Send + Sync`).
+pub trait Backend: Send + Sync {
+    /// Short stable identifier (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// One grad step on a batch: returns `(mean_loss, flat_grads)`.
+    /// `x` is NHWC flattened (len = batch · prod(input)), `y` labels.
+    fn grad(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)>;
+
+    /// Evaluate one shard: returns `(loss_sum, correct_count)`.
+    fn eval_shard(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+}
+
+/// User-facing backend selection.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BackendKind {
+    /// PJRT when the build has the `pjrt` feature AND the model's
+    /// artifacts exist on disk; the native backend otherwise.
+    #[default]
+    Auto,
+    /// Pure-Rust compute; no artifacts needed (MLP models only).
+    Native,
+    /// AOT artifacts through PJRT; errors when unavailable.
+    Pjrt,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "auto" => Some(Self::Auto),
+            "native" => Some(Self::Native),
+            "pjrt" => Some(Self::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Auto => "auto",
+            Self::Native => "native",
+            Self::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Do the model's AOT artifacts exist under the manifest directory?
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+fn artifacts_present(manifest: &Manifest, meta: &ModelMeta) -> bool {
+    manifest.artifact_path(&meta.grad_artifact).exists()
+        && manifest.artifact_path(&meta.eval_artifact).exists()
+}
+
+/// Resolve `cfg.backend` against what this build and machine offer.
+fn resolve_backend(
+    manifest: &Manifest,
+    meta: &ModelMeta,
+    cfg: &RunConfig,
+) -> Result<Arc<dyn Backend>> {
+    // silence unused warnings in the no-pjrt build
+    let _ = (manifest, cfg.exec_workers);
+    match cfg.backend {
+        BackendKind::Native => Ok(Arc::new(NativeBackend::new(meta)?) as Arc<dyn Backend>),
+        BackendKind::Pjrt => {
+            #[cfg(feature = "pjrt")]
+            {
+                if !artifacts_present(manifest, meta) {
+                    return Err(anyhow!(
+                        "backend pjrt: artifacts for {:?} not found under {:?} (run `make artifacts`)",
+                        meta.name,
+                        manifest.dir
+                    ));
+                }
+                Ok(Arc::new(super::runner::PjrtBackend::new(
+                    manifest,
+                    meta,
+                    cfg.exec_workers,
+                )) as Arc<dyn Backend>)
+            }
+            #[cfg(not(feature = "pjrt"))]
+            {
+                Err(anyhow!(
+                    "backend pjrt requested but this build has no `pjrt` feature \
+                     (rebuild with `--features pjrt`, or use the native backend)"
+                ))
+            }
+        }
+        BackendKind::Auto => {
+            #[cfg(feature = "pjrt")]
+            {
+                if artifacts_present(manifest, meta) {
+                    return Ok(Arc::new(super::runner::PjrtBackend::new(
+                        manifest,
+                        meta,
+                        cfg.exec_workers,
+                    )) as Arc<dyn Backend>);
+                }
+            }
+            NativeBackend::new(meta)
+                .map(|b| Arc::new(b) as Arc<dyn Backend>)
+                .map_err(|e| {
+                    anyhow!(
+                        "no usable backend for model {:?}: {e:#} \
+                         (non-MLP models need the `pjrt` feature + `make artifacts`)",
+                        meta.name
+                    )
+                })
+        }
+    }
+}
+
+/// Grad/eval execution for one model, behind whichever [`Backend`] the
+/// run selected. Cheap to clone (the backend is shared).
+#[derive(Clone)]
+pub struct ModelRunner {
+    backend: Arc<dyn Backend>,
+    pub meta: ModelMeta,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+}
+
+impl ModelRunner {
+    /// Wrap an explicit backend (tests / custom embeddings).
+    pub fn with_backend(
+        backend: Arc<dyn Backend>,
+        meta: ModelMeta,
+        train_batch: usize,
+        eval_batch: usize,
+    ) -> Self {
+        Self { backend, meta, train_batch, eval_batch }
+    }
+
+    /// Build the runner a [`RunConfig`] asks for: look the model up in
+    /// the manifest and resolve the backend selection.
+    pub fn for_config(manifest: &Manifest, cfg: &RunConfig) -> Result<Self> {
+        let meta = manifest
+            .model(&cfg.model)
+            .ok_or_else(|| {
+                anyhow!(
+                    "model {:?} not in manifest (have: {})",
+                    cfg.model,
+                    manifest
+                        .models
+                        .iter()
+                        .map(|m| m.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?
+            .clone();
+        let backend = resolve_backend(manifest, &meta, cfg)?;
+        Ok(Self::with_backend(backend, meta, manifest.train_batch, manifest.eval_batch))
+    }
+
+    /// Which backend ended up selected.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// One grad step: returns `(loss, flat_grads)`.
+    /// `x` is NHWC flattened (len = batch · prod(input)), `y` labels.
+    pub fn grad(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let b = self.train_batch;
+        if y.len() != b {
+            return Err(anyhow!("grad: expected batch {b}, got {}", y.len()));
+        }
+        self.backend.grad(params, x, y)
+    }
+
+    /// Eval one shard: returns `(loss_sum, correct_count)`.
+    pub fn eval_shard(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let b = self.eval_batch;
+        if y.len() != b {
+            return Err(anyhow!("eval: expected batch {b}, got {}", y.len()));
+        }
+        self.backend.eval_shard(params, x, y)
+    }
+
+    /// Evaluate over a whole dataset subset (loops eval-batch shards,
+    /// truncating the tail so every shard is full). Returns
+    /// `(mean_loss, accuracy)`.
+    pub fn evaluate(
+        &self,
+        params: &ParamVector,
+        data: &crate::data::Dataset,
+        max_samples: usize,
+    ) -> Result<(f64, f64)> {
+        let b = self.eval_batch;
+        let n = data.len().min(max_samples) / b * b;
+        if n == 0 {
+            return Err(anyhow!("eval set smaller than one shard ({b})"));
+        }
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        for shard in 0..(n / b) {
+            let idx: Vec<usize> = (shard * b..(shard + 1) * b).collect();
+            let (x, y) = data.batch(&idx);
+            let (l, c) = self.eval_shard(params, &x, &y)?;
+            loss_sum += l as f64;
+            correct += c as f64;
+        }
+        Ok((loss_sum / n as f64, correct / n as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::Manifest;
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!(BackendKind::parse("auto"), Some(BackendKind::Auto));
+        assert_eq!(BackendKind::parse("native"), Some(BackendKind::Native));
+        assert_eq!(BackendKind::parse("pjrt"), Some(BackendKind::Pjrt));
+        assert_eq!(BackendKind::parse("tpu"), None);
+        assert_eq!(BackendKind::default(), BackendKind::Auto);
+    }
+
+    /// Builtin manifest whose artifact paths point nowhere, so the
+    /// tests behave identically whether or not `make artifacts` ran.
+    fn artifactless_manifest() -> Manifest {
+        let mut m = Manifest::builtin();
+        m.dir = "/definitely/no/artifacts/here".into();
+        m
+    }
+
+    #[test]
+    fn for_config_falls_back_to_native() {
+        let manifest = artifactless_manifest();
+        let cfg = RunConfig::default();
+        let runner = ModelRunner::for_config(&manifest, &cfg).unwrap();
+        assert_eq!(runner.backend_name(), "native");
+        assert_eq!(runner.meta.name, "mnist_mlp");
+    }
+
+    #[test]
+    fn pjrt_without_feature_or_artifacts_errors() {
+        let manifest = artifactless_manifest();
+        let mut cfg = RunConfig::default();
+        cfg.backend = BackendKind::Pjrt;
+        assert!(ModelRunner::for_config(&manifest, &cfg).is_err());
+    }
+
+    #[test]
+    fn unknown_model_reports_zoo() {
+        let manifest = Manifest::builtin();
+        let mut cfg = RunConfig::default();
+        cfg.model = "alexnet".into();
+        let err = ModelRunner::for_config(&manifest, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("mnist_mlp"));
+    }
+}

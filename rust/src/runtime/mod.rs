@@ -1,20 +1,35 @@
-//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`,
-//! exported once by `python -m compile.aot`) and executes them from the
-//! rust round loop. Python never runs here.
+//! Model compute runtime — the [`Backend`] abstraction plus its two
+//! implementations.
 //!
-//! * [`executor`] — a pool of dedicated executor threads, each owning
-//!   its own `PjRtClient` (the xla crate's client is `Rc`-based and not
-//!   `Send`, so compute jobs are message-passed to the owning thread)
-//! * [`runner`] — typed wrappers: `ModelRunner::{grad, eval}` pack the
-//!   flat [`crate::models::ParamVector`] + batch into PJRT literals and
-//!   parse the tuple outputs back
+//! * [`backend`] — the [`Backend`] trait, the [`BackendKind`]
+//!   selector, and [`ModelRunner`], the coordinator-facing façade
+//! * [`native`] — the default pure-Rust backend: MLP forward/grad/eval
+//!   directly on flat [`crate::models::ParamVector`] slices; no
+//!   Python, JAX, or PJRT artifacts required, fully deterministic
+//! * [`executor`] / [`runner`] (feature `pjrt`) — the AOT-artifact
+//!   path: `artifacts/*.hlo.txt` (exported once by
+//!   `python -m compile.aot`) compiled and executed through the PJRT
+//!   C API on a pool of dedicated executor threads (the xla crate's
+//!   client is `Rc`-based and not `Send`, so compute jobs are
+//!   message-passed to the owning thread)
 //!
-//! Pattern follows /opt/xla-example/load_hlo: HLO *text* →
-//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
-//! `client.compile` → `execute`.
+//! Backend selection (see [`BackendKind`]): `Auto` prefers PJRT when
+//! the build has the feature and the artifacts exist, and falls back
+//! to the native backend otherwise, so a clean checkout trains with
+//! zero setup.
 
+pub mod backend;
+pub mod native;
+
+#[cfg(feature = "pjrt")]
 pub mod executor;
+#[cfg(feature = "pjrt")]
 pub mod runner;
 
+pub use backend::{Backend, BackendKind, ModelRunner};
+pub use native::NativeBackend;
+
+#[cfg(feature = "pjrt")]
 pub use executor::{ExecutorHandle, ExecutorPool, Tensor};
-pub use runner::{KernelRunner, ModelRunner};
+#[cfg(feature = "pjrt")]
+pub use runner::{KernelRunner, PjrtBackend};

@@ -1,42 +1,56 @@
-//! Typed model/kernel execution on top of the executor pool.
+//! PJRT-backed execution (feature `pjrt`): typed model/kernel wrappers
+//! on top of the executor pool.
 //!
-//! `ModelRunner` knows a model's manifest entry: it slices the flat
-//! [`ParamVector`] into per-tensor literals, appends the batch, runs
-//! the grad/eval artifact, and re-flattens the outputs.
+//! [`PjrtBackend`] implements [`Backend`] by slicing the flat
+//! [`ParamVector`] into per-tensor literals, appending the batch,
+//! running the AOT grad/eval artifact, and re-flattening the outputs.
+//! [`KernelRunner`] drives the standalone pallas kernels (parity tests
+//! + the optional kernel-offload path).
 
 use std::path::PathBuf;
+use std::sync::Mutex;
+
 use anyhow::{anyhow, Result};
 
 use crate::models::manifest::{Manifest, ModelMeta};
 use crate::models::params::ParamVector;
 
+use super::backend::Backend;
 use super::executor::{ExecutorHandle, ExecutorPool, Tensor};
 
-/// Grad/eval execution for one model.
-#[derive(Clone)]
-pub struct ModelRunner {
-    pool: ExecutorHandle,
-    pub meta: ModelMeta,
+/// Grad/eval execution for one model through the PJRT artifacts.
+///
+/// Owns its executor pool; the submission handle sits behind a mutex
+/// because `mpsc::Sender` is not `Sync` (the lock covers only the
+/// enqueue, not the compute).
+pub struct PjrtBackend {
+    /// MUST be declared (and therefore dropped) before `_pool`: the
+    /// pool's Drop joins its workers, which only exit once every
+    /// `Sender` clone — including this handle's — is gone.
+    handle: Mutex<ExecutorHandle>,
+    _pool: Mutex<ExecutorPool>,
+    meta: ModelMeta,
     grad_path: PathBuf,
     eval_path: PathBuf,
-    pub train_batch: usize,
-    pub eval_batch: usize,
 }
 
-impl ModelRunner {
-    pub fn new(pool: &ExecutorPool, manifest: &Manifest, model: &str) -> Result<Self> {
-        let meta = manifest
-            .model(model)
-            .ok_or_else(|| anyhow!("model {model} not in manifest"))?
-            .clone();
-        Ok(Self {
+impl PjrtBackend {
+    /// Spawn `workers` executor threads for this model's artifacts.
+    /// (PJRT client creation is lazy; its errors surface per job.)
+    pub fn new(manifest: &Manifest, meta: &ModelMeta, workers: usize) -> Self {
+        let pool = ExecutorPool::new(workers);
+        Self {
+            handle: Mutex::new(pool.handle()),
             grad_path: manifest.artifact_path(&meta.grad_artifact),
             eval_path: manifest.artifact_path(&meta.eval_artifact),
-            train_batch: manifest.train_batch,
-            eval_batch: manifest.eval_batch,
-            pool: pool.handle(),
-            meta,
-        })
+            meta: meta.clone(),
+            _pool: Mutex::new(pool),
+        }
+    }
+
+    fn submit(&self, artifact: PathBuf, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let rx = self.handle.lock().unwrap().run_async(artifact, inputs)?;
+        rx.recv().map_err(|_| anyhow!("executor worker died"))?
     }
 
     fn pack_params(&self, params: &ParamVector) -> Vec<Tensor> {
@@ -56,18 +70,19 @@ impl ModelRunner {
             .chain(self.meta.input.iter().map(|&d| d as i64))
             .collect()
     }
+}
 
-    /// One grad step: returns `(loss, flat_grads)`.
-    /// `x` is NHWC flattened (len = batch · prod(input)), `y` labels.
-    pub fn grad(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
-        let b = self.train_batch;
-        if y.len() != b {
-            return Err(anyhow!("grad: expected batch {b}, got {}", y.len()));
-        }
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn grad(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let b = y.len();
         let mut inputs = self.pack_params(params);
         inputs.push(Tensor::f32(self.input_shape(b), x.to_vec()));
         inputs.push(Tensor::i32(vec![b as i64], y.to_vec()));
-        let out = self.pool.run(self.grad_path.clone(), inputs)?;
+        let out = self.submit(self.grad_path.clone(), inputs)?;
         if out.len() != 1 + self.meta.params.len() {
             return Err(anyhow!(
                 "grad: expected {} outputs, got {}",
@@ -83,43 +98,13 @@ impl ModelRunner {
         Ok((loss, grads))
     }
 
-    /// Eval one shard: returns `(loss_sum, correct_count)`.
-    pub fn eval_shard(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
-        let b = self.eval_batch;
-        if y.len() != b {
-            return Err(anyhow!("eval: expected batch {b}, got {}", y.len()));
-        }
+    fn eval_shard(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        let b = y.len();
         let mut inputs = self.pack_params(params);
         inputs.push(Tensor::f32(self.input_shape(b), x.to_vec()));
         inputs.push(Tensor::i32(vec![b as i64], y.to_vec()));
-        let out = self.pool.run(self.eval_path.clone(), inputs)?;
+        let out = self.submit(self.eval_path.clone(), inputs)?;
         Ok((out[0].scalar_f32()?, out[1].scalar_f32()?))
-    }
-
-    /// Evaluate over a whole dataset subset (loops eval-batch shards,
-    /// truncating the tail so every shard is full). Returns
-    /// `(mean_loss, accuracy)`.
-    pub fn evaluate(
-        &self,
-        params: &ParamVector,
-        data: &crate::data::Dataset,
-        max_samples: usize,
-    ) -> Result<(f64, f64)> {
-        let b = self.eval_batch;
-        let n = data.len().min(max_samples) / b * b;
-        if n == 0 {
-            return Err(anyhow!("eval set smaller than one shard ({b})"));
-        }
-        let mut loss_sum = 0f64;
-        let mut correct = 0f64;
-        for shard in 0..(n / b) {
-            let idx: Vec<usize> = (shard * b..(shard + 1) * b).collect();
-            let (x, y) = data.batch(&idx);
-            let (l, c) = self.eval_shard(params, &x, &y)?;
-            loss_sum += l as f64;
-            correct += c as f64;
-        }
-        Ok((loss_sum / n as f64, correct / n as f64))
     }
 }
 

@@ -3,10 +3,11 @@
 //! pool and joins at the round barrier, which is exactly a scoped
 //! parallel map; no async runtime needed.
 //!
-//! PJRT executors are **not** `Send`, so compute jobs do not run here —
-//! they run on the dedicated executor threads owned by
-//! [`crate::runtime::ExecutorPool`]. This pool handles the pure-rust
-//! work: sparsification, masking, encoding, data synthesis.
+//! PJRT executors are **not** `Send`, so under the `pjrt` feature
+//! compute jobs do not run here — they run on the dedicated executor
+//! threads owned by `crate::runtime::ExecutorPool`. This pool handles
+//! the pure-rust work: native-backend local training, sparsification,
+//! masking, encoding, data synthesis.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};

@@ -1,0 +1,208 @@
+//! Native-backend correctness: finite-difference gradient checks
+//! against the analytic backward pass, plus a fixed-seed golden run of
+//! the full `mnist_mlp` round loop asserting the paper's headline
+//! claims (train loss decreases; THGS upload lands inside the
+//! 2.9%–18.9% band of the abstract, i.e. under 20% of dense FedAvg).
+
+use fedsparse::config::RunConfig;
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::models::manifest::{InitKind, LayerGroup, ModelMeta, ParamSpec};
+use fedsparse::models::params::ParamVector;
+use fedsparse::runtime::{Backend, BackendKind, NativeBackend};
+use fedsparse::sparse::thgs::ThgsConfig;
+use fedsparse::util::rng::Rng;
+
+/// A small 8→10→4 MLP whose full parameter vector is cheap to
+/// finite-difference.
+fn small_meta() -> ModelMeta {
+    let w = |name: &str, shape: Vec<usize>, layer: usize| ParamSpec {
+        name: name.into(),
+        shape,
+        init: InitKind::Normal { std: 0.35 },
+        layer,
+    };
+    let b = |name: &str, d: usize, layer: usize| ParamSpec {
+        name: name.into(),
+        shape: vec![d],
+        init: InitKind::Zeros,
+        layer,
+    };
+    ModelMeta {
+        name: "small_mlp".into(),
+        input: vec![8],
+        classes: 4,
+        params: vec![
+            w("l0/w", vec![8, 10], 0),
+            b("l0/b", 10, 0),
+            w("l1/w", vec![10, 4], 1),
+            b("l1/b", 4, 1),
+        ],
+        layers: vec![
+            LayerGroup { name: "l0".into(), params: vec![0, 1] },
+            LayerGroup { name: "l1".into(), params: vec![2, 3] },
+        ],
+        param_count: 8 * 10 + 10 + 10 * 4 + 4,
+        grad_artifact: String::new(),
+        eval_artifact: String::new(),
+    }
+}
+
+fn random_batch(d: usize, classes: usize, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(1.0)).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.below(classes as u64) as i32).collect();
+    (x, y)
+}
+
+#[test]
+fn analytic_gradient_matches_finite_difference() {
+    let meta = small_meta();
+    let be = NativeBackend::new(&meta).unwrap();
+    let mut params = ParamVector::init(&meta, 17);
+    let (x, y) = random_batch(8, 4, 16, 23);
+
+    let (_, analytic) = be.grad(&params, &x, &y).unwrap();
+    assert_eq!(analytic.len(), meta.total_params());
+
+    // central differences over EVERY parameter; loss is O(1) and f32,
+    // so eps must stay well above the f32 noise floor. Individual
+    // coordinates can wobble when a ReLU pre-activation straddles the
+    // kink inside ±eps, so the per-coordinate bound is loose and the
+    // sharp assertion is the global relative error (which any
+    // systematic backward-pass bug — transposition, sign, off-by-one
+    // layer — blows up by orders of magnitude).
+    let eps = 5e-3f32;
+    let mut err2 = 0f64;
+    let mut norm2 = 0f64;
+    for i in 0..params.len() {
+        let orig = params.data[i];
+        params.data[i] = orig + eps;
+        let (lp, _) = be.grad(&params, &x, &y).unwrap();
+        params.data[i] = orig - eps;
+        let (lm, _) = be.grad(&params, &x, &y).unwrap();
+        params.data[i] = orig;
+        let fd = (lp - lm) / (2.0 * eps);
+        let an = analytic[i];
+        err2 += ((fd - an) as f64).powi(2);
+        norm2 += (an as f64).powi(2);
+        assert!(
+            (fd - an).abs() < 1e-2 + 0.1 * an.abs(),
+            "param {i}: finite-diff {fd} vs analytic {an}"
+        );
+    }
+    let rel = (err2 / norm2.max(1e-30)).sqrt();
+    assert!(rel < 0.05, "global finite-diff relative error {rel}");
+}
+
+#[test]
+fn gradient_check_holds_after_training() {
+    // re-check at a non-random point: gradcheck at init can pass by
+    // luck when everything is near-symmetric
+    let meta = small_meta();
+    let be = NativeBackend::new(&meta).unwrap();
+    let mut params = ParamVector::init(&meta, 29);
+    let (x, y) = random_batch(8, 4, 16, 31);
+    for _ in 0..25 {
+        let (_, g) = be.grad(&params, &x, &y).unwrap();
+        params.sgd_step(&g, 0.3);
+    }
+    let (_, analytic) = be.grad(&params, &x, &y).unwrap();
+    let eps = 5e-3f32;
+    let mut rng = Rng::new(7);
+    for _ in 0..40 {
+        let i = rng.below(params.len() as u64) as usize;
+        let orig = params.data[i];
+        params.data[i] = orig + eps;
+        let (lp, _) = be.grad(&params, &x, &y).unwrap();
+        params.data[i] = orig - eps;
+        let (lm, _) = be.grad(&params, &x, &y).unwrap();
+        params.data[i] = orig;
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (fd - analytic[i]).abs() < 1e-2 + 0.1 * analytic[i].abs(),
+            "param {i}: finite-diff {fd} vs analytic {}",
+            analytic[i]
+        );
+    }
+}
+
+#[test]
+fn mnist_mlp_untrained_accuracy_is_chance() {
+    let cfg = {
+        let mut c = RunConfig::smoke("mnist_mlp");
+        c.backend = BackendKind::Native;
+        c.data_dir = None;
+        c
+    };
+    let trainer = Trainer::new(cfg).unwrap();
+    let (loss, acc) = trainer.evaluate().unwrap();
+    assert!(loss > 0.0);
+    // 10 classes, random init ⇒ ≈ 10% ± noise
+    assert!((0.0..=0.35).contains(&acc), "untrained acc {acc}");
+}
+
+/// The golden e2e test: fixed seed, 3 THGS rounds on `mnist_mlp`
+/// (159,010 params from the builtin manifest), native backend only.
+#[test]
+fn golden_three_rounds_thgs_loss_and_upload() {
+    let mut cfg = RunConfig::smoke("mnist_mlp");
+    cfg.backend = BackendKind::Native;
+    cfg.data_dir = None;
+    cfg.seed = 42;
+    cfg.rounds = 3;
+    cfg.eval_every = 3;
+    cfg.local_iters = 3;
+    cfg.algorithm = Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 });
+    let mut trainer = Trainer::new(cfg).unwrap();
+    assert_eq!(trainer.backend_name(), "native");
+    assert_eq!(trainer.model_params(), 159_010);
+
+    let mut losses = Vec::new();
+    for round in 0..3 {
+        let out = trainer.run_round(round).unwrap();
+        assert!(out.mean_train_loss.is_finite());
+        losses.push(out.mean_train_loss);
+    }
+    // train loss strictly decreases over the first rounds
+    assert!(
+        losses[1] < losses[0] && losses[2] < losses[1],
+        "loss not strictly decreasing: {losses:?}"
+    );
+
+    // THGS upload (paper Eq. 6 cost model) under 20% of the dense
+    // FedAvg baseline — the band the abstract claims (2.9%–18.9%)
+    let summary = trainer.recorder.summary();
+    let m = trainer.model_params();
+    let dense_baseline: u64 = summary.rounds
+        * trainer.cfg.clients_per_round as u64
+        * fedsparse::sparse::codec::dense_cost_bytes(m);
+    let ratio = summary.total_up_bytes as f64 / dense_baseline as f64;
+    assert!(
+        ratio < 0.20,
+        "THGS upload {} of dense {} = {ratio:.3}, outside the paper band",
+        summary.total_up_bytes,
+        dense_baseline
+    );
+    assert!(ratio > 0.0, "no upload recorded");
+}
+
+#[test]
+fn golden_run_reproduces_bitwise_per_seed() {
+    let run = || {
+        let mut cfg = RunConfig::smoke("mnist_mlp");
+        cfg.backend = BackendKind::Native;
+        cfg.data_dir = None;
+        cfg.seed = 1234;
+        cfg.rounds = 2;
+        cfg.eval_every = 99;
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run().unwrap();
+        t.global.data
+    };
+    let a = run();
+    let b = run();
+    assert!(
+        a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+        "native runs diverged for the same seed"
+    );
+}

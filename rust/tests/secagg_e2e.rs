@@ -1,9 +1,13 @@
 //! Secure-aggregation protocol end-to-end tests, including the §4
-//! safety-analysis case census, the dropout-recovery extension and a
-//! full-size (RFC 3526) DH exchange.
+//! safety-analysis case census, the dropout-recovery extension, a
+//! full-size (RFC 3526) DH exchange, and full `Trainer` runs over the
+//! native backend with mask-sparsified secure aggregation enabled.
 
 use std::collections::HashMap;
 
+use fedsparse::config::RunConfig;
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::runtime::BackendKind;
 use fedsparse::secagg::mask::MaskRange;
 use fedsparse::secagg::protocol::{full_setup, SecAggConfig};
 use fedsparse::secagg::shamir::Share;
@@ -190,6 +194,93 @@ fn masked_sparse_beats_dense_secagg_cost() {
     let ratio2 = u2.payload.paper_cost_bytes() as f64 / dense_cost as f64;
     assert!(ratio2 < 0.4, "ratio2 {ratio2}");
     assert!(ratio2 < ratio);
+}
+
+fn secure_trainer_cfg() -> RunConfig {
+    let mut cfg = RunConfig::smoke("mnist_mlp");
+    cfg.backend = BackendKind::Native;
+    cfg.data_dir = None;
+    cfg.secure = true;
+    cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+    cfg
+}
+
+/// Full `Trainer` run, secure aggregation on, native backend:
+/// with `mask_ratio_k = 0` the σ filter keeps no mask positions
+/// (Eq. 4: σ = p), so every transmitted value is the plaintext sparse
+/// gradient — and the secure aggregate must equal the plaintext
+/// aggregate of an identical non-secure run **bit for bit** (same
+/// payload values, same summation order). This is the exact-equality
+/// anchor; active masks can only cancel to f32 rounding (next test),
+/// since `(g₁+m) + (g₂−m)` rounds at each f32 add.
+#[test]
+fn secure_trainer_aggregate_equals_plaintext_bitwise() {
+    let run = |secure: bool| {
+        let mut cfg = secure_trainer_cfg();
+        cfg.secure = secure;
+        cfg.mask_ratio_k = 0.0;
+        cfg.rounds = 2;
+        cfg.eval_every = 99;
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut aggs = Vec::new();
+        for r in 0..2 {
+            aggs.push(t.run_round(r).unwrap().aggregate);
+        }
+        (aggs, t.global.data.clone())
+    };
+    let (agg_plain, global_plain) = run(false);
+    let (agg_sec, global_sec) = run(true);
+    for (round, (a, b)) in agg_plain.iter().zip(&agg_sec).enumerate() {
+        assert_eq!(a.len(), b.len());
+        let diff = a
+            .iter()
+            .zip(b)
+            .filter(|(x, y)| x.to_bits() != y.to_bits())
+            .count();
+        assert_eq!(diff, 0, "round {round}: {diff} positions differ bitwise");
+    }
+    assert!(
+        global_plain
+            .iter()
+            .zip(&global_sec)
+            .all(|(x, y)| x.to_bits() == y.to_bits()),
+        "global models diverged"
+    );
+}
+
+/// Full multi-round `Trainer` run with ACTIVE pair masks (k = 0.5):
+/// the audited plaintext sum and the masked aggregate must agree to
+/// f32 mask-cancellation rounding at every position, every round —
+/// i.e. the server learns the sum and nothing else survives.
+#[test]
+fn secure_trainer_masks_cancel_every_round() {
+    let mut cfg = secure_trainer_cfg();
+    cfg.mask_ratio_k = 0.5;
+    cfg.audit_secure_sum = true;
+    cfg.rounds = 3;
+    cfg.eval_every = 99;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let mut losses = Vec::new();
+    for round in 0..3 {
+        let out = trainer.run_round(round).unwrap();
+        let plain = out.plain_sum.as_ref().expect("audit enabled");
+        let max_err = out
+            .aggregate
+            .iter()
+            .zip(plain)
+            .map(|(&a, &p)| (a as f64 - p).abs())
+            .fold(0.0f64, f64::max);
+        assert!(max_err < 5e-3, "round {round}: mask residue {max_err}");
+        // the masks are not degenerate: some mask-only positions ship
+        let m = trainer.model_params();
+        assert!(out.nnz.iter().all(|&n| n > 0 && n < m), "nnz {:?}", out.nnz);
+        losses.push(out.mean_train_loss);
+    }
+    // and the secure path still trains
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "secure training made no progress: {losses:?}"
+    );
 }
 
 /// Mask range sigma arithmetic (Eq. 4) at protocol level.
