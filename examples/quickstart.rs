@@ -14,6 +14,21 @@
 //!   `--features pjrt` after `make artifacts`); required for the conv
 //!   models.
 //! * `BackendKind::Auto` — PJRT when available, native otherwise.
+//!
+//! Failure injection (off by default): real federations lose clients
+//! mid-round, and the round engine simulates that deterministically.
+//! Three `RunConfig` knobs control it:
+//!
+//! * `dropout_prob` — per-round probability each selected client
+//!   crashes before its upload arrives. In secure mode this also turns
+//!   on Shamir key-sharing at setup so the server can recover and
+//!   cancel dead clients' masks.
+//! * `straggler_timeout_s` — collect deadline in *simulated* seconds;
+//!   uploads that land later are excluded from the round
+//!   (`f64::INFINITY` = no deadline).
+//! * `min_survivors` — below this many delivered uploads the round
+//!   aborts: the global model and every client roll back, residuals
+//!   carry forward to the clients' next participating round.
 
 use fedsparse::config::RunConfig;
 use fedsparse::coordinator::{Algorithm, Trainer};
@@ -33,6 +48,12 @@ fn main() -> anyhow::Result<()> {
     cfg.eval_every = 5;
     cfg.algorithm = Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 });
     // cfg.backend = fedsparse::BackendKind::Native; // force pure-Rust
+
+    // Failure injection (see the module docs above). Uncomment to watch
+    // the engine drop clients and keep training on the survivors:
+    // cfg.dropout_prob = 0.1;          // 10% of selected clients crash per round
+    // cfg.straggler_timeout_s = 2.0;   // uploads later than 2 simulated seconds miss
+    // cfg.min_survivors = 2;           // abort (and roll back) below 2 uploads
 
     let mut trainer = Trainer::new(cfg)?;
     println!(

@@ -2,14 +2,21 @@
 //! dimension): one full federated round — local training through the
 //! resolved backend (native by default; PJRT grad artifacts when built
 //! with `--features pjrt` after `make artifacts`), sparsify, (secure)
-//! encode, aggregate — for each contender.
+//! encode, transport collect, aggregate — for each contender.
+//!
+//! Besides the human-readable summary, this bench writes
+//! `BENCH_round.json` (cwd): per-contender latency stats plus the
+//! round engine's mean per-phase timings, so the perf trajectory of
+//! every phase is machine-trackable across PRs.
 
 use std::path::PathBuf;
 
 use fedsparse::config::RunConfig;
 use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::metrics::PhaseTimings;
 use fedsparse::sparse::thgs::ThgsConfig;
 use fedsparse::util::bench::{black_box, Bench};
+use fedsparse::util::json::{arr, num, obj, s, Value};
 
 fn cfg_for(alg: Algorithm, secure: bool) -> RunConfig {
     let mut cfg = RunConfig::smoke("mnist_mlp");
@@ -52,17 +59,39 @@ fn main() {
         ),
     ];
 
+    let mut cases: Vec<Value> = Vec::new();
     for (label, alg, secure) in contenders {
         let mut trainer = Trainer::new(cfg_for(alg, secure)).unwrap();
         let mut round = 0u64;
         // warm the executable cache before measuring
         trainer.run_round(round).unwrap();
         round += 1;
-        b.bench(&format!("mnist_mlp/{label}"), || {
-            black_box(trainer.run_round(round).unwrap());
+        let mut phase_sum = PhaseTimings::default();
+        let mut phase_n = 0u64;
+        let stats = b.bench(&format!("mnist_mlp/{label}"), || {
+            let out = trainer.run_round(round).unwrap();
+            phase_sum.accumulate(&out.timings);
+            phase_n += 1;
             round += 1;
+            black_box(out);
         });
+        let phases = phase_sum.scaled(1.0 / phase_n.max(1) as f64);
+        cases.push(obj(vec![
+            ("name", s(&stats.name)),
+            ("iters", num(stats.iters as f64)),
+            ("mean_s", num(stats.mean.as_secs_f64())),
+            ("std_dev_s", num(stats.std_dev.as_secs_f64())),
+            ("p50_s", num(stats.p50.as_secs_f64())),
+            ("p95_s", num(stats.p95.as_secs_f64())),
+            ("min_s", num(stats.min.as_secs_f64())),
+            ("phases", phases.to_json()),
+        ]));
     }
 
     b.finish();
+
+    let report = obj(vec![("bench", s("round")), ("cases", arr(cases))]);
+    let path = PathBuf::from("BENCH_round.json");
+    std::fs::write(&path, report.to_string()).expect("write BENCH_round.json");
+    println!("\nmachine-readable report: {}", path.display());
 }

@@ -5,9 +5,14 @@
 //! * [`channel`] — bandwidth/latency model turning bytes into simulated
 //!   wall-clock round time (the §5.1 "from the perspective of time"
 //!   argument)
+//! * [`transport`] — the in-process uplink actually carrying encoded
+//!   payloads, with seeded dropout/straggler failure injection (the
+//!   round engine's Collect phase)
 
 pub mod channel;
 pub mod cost;
+pub mod transport;
 
 pub use channel::NetworkModel;
 pub use cost::{CostLedger, RoundCost};
+pub use transport::{CollectResult, Delivery, FailurePlan, Fate, Transport, UplinkFrame};

@@ -1,0 +1,299 @@
+//! In-process uplink transport with failure injection — the Collect
+//! phase's substrate.
+//!
+//! [`crate::comm::channel::NetworkModel`] prices a byte; this module
+//! actually *carries* the bytes: each selected client hands the
+//! transport its encoded payload ([`UplinkFrame`]), and the transport
+//! decides — deterministically, from a seeded [`FailurePlan`] — whether
+//! that upload arrives, arrives late (straggler past the collect
+//! deadline), or never arrives at all (client crashed mid-round). The
+//! server side of the round only ever sees [`CollectResult::delivered`];
+//! everything downstream (aggregation, secure-mask recovery, metrics)
+//! operates on survivors.
+//!
+//! Fidelity notes:
+//! * Delivery *time* uses the paper's §5.2 cost model bytes (so the
+//!   simulated round time stays comparable to §5.1's argument), while
+//!   the *metered* bytes handed to the [`crate::comm::cost::CostLedger`]
+//!   are the actual wire bytes delivered.
+//! * Failure draws are a pure function of `(plan seed, round, client)`,
+//!   so any run — including which clients die where — replays exactly.
+
+use crate::comm::channel::NetworkModel;
+use crate::util::rng::Rng;
+
+/// What the transport decided about one client's upload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Fate {
+    /// Arrived before the deadline, at simulated time `at_s`.
+    Deliver { at_s: f64 },
+    /// Client crashed before its upload left (never delivers).
+    Drop,
+    /// Upload exists but lands after the collect deadline; the server
+    /// has already closed the round.
+    Timeout { at_s: f64 },
+}
+
+/// Mean of the exponential straggler delay factor applied when a
+/// finite collect deadline is configured (delivery time is scaled by
+/// `1 + Exp(scale)` — heavy-tailed, like real mobile uplinks).
+pub const DEFAULT_STRAGGLER_SCALE: f64 = 0.5;
+
+/// Seeded per-round failure injection: which selected clients crash,
+/// which straggle past the deadline.
+#[derive(Clone, Copy, Debug)]
+pub struct FailurePlan {
+    /// Per-round probability a selected client crashes before its
+    /// upload arrives (0.0 = off).
+    pub dropout_prob: f64,
+    /// Server-side collect deadline in simulated seconds;
+    /// `f64::INFINITY` disables the deadline.
+    pub straggler_timeout_s: f64,
+    /// Mean of the exponential delay factor (0.0 = deliveries take
+    /// exactly their modeled time).
+    pub straggler_scale: f64,
+    /// Plan seed (mixed with round and client id per draw).
+    pub seed: u64,
+}
+
+impl FailurePlan {
+    /// No failure injection: every upload arrives on time. The round
+    /// engine takes a zero-overhead path (no state snapshots) when the
+    /// plan is disabled.
+    pub fn none() -> Self {
+        Self {
+            dropout_prob: 0.0,
+            straggler_timeout_s: f64::INFINITY,
+            straggler_scale: 0.0,
+            seed: 0,
+        }
+    }
+
+    /// Is any failure mode live?
+    pub fn enabled(&self) -> bool {
+        self.dropout_prob > 0.0 || self.straggler_timeout_s.is_finite()
+    }
+
+    /// Decide one client's fate this round. `base_time_s` is the
+    /// failure-free delivery time (download + upload under the network
+    /// model). Pure in `(seed, round, cid)` — replayable.
+    pub fn fate(&self, round: u64, cid: u32, base_time_s: f64) -> Fate {
+        if !self.enabled() {
+            return Fate::Deliver { at_s: base_time_s };
+        }
+        let mut rng = Rng::new(
+            self.seed ^ ((cid as u64) << 32) ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        if rng.next_f64() < self.dropout_prob {
+            return Fate::Drop;
+        }
+        let jitter = if self.straggler_scale > 0.0 {
+            -(1.0 - rng.next_f64()).ln() * self.straggler_scale
+        } else {
+            0.0
+        };
+        let at_s = base_time_s * (1.0 + jitter);
+        if at_s > self.straggler_timeout_s {
+            Fate::Timeout { at_s }
+        } else {
+            Fate::Deliver { at_s }
+        }
+    }
+}
+
+/// One client's upload as handed to the transport.
+#[derive(Clone, Debug)]
+pub struct UplinkFrame {
+    pub cid: u32,
+    /// Encoded payload ([`crate::sparse::codec::SparseVec::encode`]).
+    pub bytes: Vec<u8>,
+    /// Paper-model (§5.2) upload size, used for the simulated delivery
+    /// time so round timing stays comparable to Eq. 7/8.
+    pub paper_bytes: u64,
+}
+
+/// A frame that made it to the server before the deadline.
+#[derive(Clone, Debug)]
+pub struct Delivery {
+    pub cid: u32,
+    pub bytes: Vec<u8>,
+    /// Simulated arrival time, seconds from round start.
+    pub at_s: f64,
+}
+
+/// What one Collect phase yielded.
+#[derive(Clone, Debug, Default)]
+pub struct CollectResult {
+    /// Frames that arrived in time, in send (selection) order. The
+    /// caller meters these bytes into the cost ledger (failed uploads
+    /// never reached the server, so they are not metered).
+    pub delivered: Vec<Delivery>,
+    /// Clients that crashed (no upload ever existed server-side).
+    pub dropped: Vec<u32>,
+    /// Clients whose upload landed after the deadline (excluded).
+    pub timed_out: Vec<u32>,
+    /// Simulated wall-clock of the round's communication barrier: the
+    /// slowest accepted delivery — or the deadline itself when any
+    /// upload was still missing at close (the server cannot know a
+    /// crashed client will never send, so it waits the deadline out).
+    pub round_time_s: f64,
+}
+
+/// The in-process uplink: prices deliveries with the [`NetworkModel`]
+/// and filters them through the [`FailurePlan`].
+#[derive(Clone, Copy, Debug)]
+pub struct Transport {
+    pub network: NetworkModel,
+    pub plan: FailurePlan,
+}
+
+impl Transport {
+    pub fn new(network: NetworkModel, plan: FailurePlan) -> Self {
+        Self { network, plan }
+    }
+
+    /// Run one Collect barrier: every client first downloads the dense
+    /// model (`down_bytes`), then uploads its frame; the plan decides
+    /// who survives. Frames keep their submission order.
+    pub fn collect(&self, round: u64, down_bytes: u64, frames: Vec<UplinkFrame>) -> CollectResult {
+        let mut out = CollectResult::default();
+        let down_s = self.network.download_time(down_bytes);
+        for frame in frames {
+            let base = down_s + self.network.upload_time(frame.paper_bytes);
+            match self.plan.fate(round, frame.cid, base) {
+                Fate::Deliver { at_s } => {
+                    out.round_time_s = out.round_time_s.max(at_s);
+                    out.delivered.push(Delivery { cid: frame.cid, bytes: frame.bytes, at_s });
+                }
+                Fate::Drop => out.dropped.push(frame.cid),
+                Fate::Timeout { .. } => out.timed_out.push(frame.cid),
+            }
+        }
+        // the server holds the barrier open until the deadline when any
+        // upload — straggling or crashed — is still missing at close
+        // (it cannot distinguish the two until the deadline passes)
+        if (!out.timed_out.is_empty() || !out.dropped.is_empty())
+            && self.plan.straggler_timeout_s.is_finite()
+        {
+            out.round_time_s = out.round_time_s.max(self.plan.straggler_timeout_s);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frames(n: u32, bytes: usize) -> Vec<UplinkFrame> {
+        (0..n)
+            .map(|cid| UplinkFrame { cid, bytes: vec![0u8; bytes], paper_bytes: bytes as u64 })
+            .collect()
+    }
+
+    #[test]
+    fn disabled_plan_delivers_everything_at_model_time() {
+        let t = Transport::new(NetworkModel::default(), FailurePlan::none());
+        let out = t.collect(3, 1_000, frames(5, 2_000));
+        assert_eq!(out.delivered.len(), 5);
+        assert!(out.dropped.is_empty() && out.timed_out.is_empty());
+        // identical to the pre-transport NetworkModel barrier formula
+        let expect = NetworkModel::default().round_time(1_000, &[2_000; 5]);
+        assert!((out.round_time_s - expect).abs() < 1e-12);
+        let wire: usize = out.delivered.iter().map(|d| d.bytes.len()).sum();
+        assert_eq!(wire, 5 * 2_000);
+    }
+
+    #[test]
+    fn fate_is_deterministic_per_round_and_client() {
+        let plan = FailurePlan { dropout_prob: 0.5, seed: 7, ..FailurePlan::none() };
+        for round in 0..4 {
+            for cid in 0..8 {
+                assert_eq!(plan.fate(round, cid, 1.0), plan.fate(round, cid, 1.0));
+            }
+        }
+        // and the draws differ across rounds for at least one client
+        let fates: Vec<bool> =
+            (0..32).map(|r| matches!(plan.fate(r, 0, 1.0), Fate::Drop)).collect();
+        assert!(fates.iter().any(|&d| d) && fates.iter().any(|&d| !d), "{fates:?}");
+    }
+
+    #[test]
+    fn certain_dropout_kills_all_uplinks() {
+        let plan = FailurePlan { dropout_prob: 1.0, seed: 1, ..FailurePlan::none() };
+        let t = Transport::new(NetworkModel::default(), plan);
+        let out = t.collect(0, 100, frames(4, 100));
+        assert!(out.delivered.is_empty());
+        assert_eq!(out.dropped, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn crashed_client_holds_barrier_until_deadline() {
+        // a crashed client never sends; with a finite deadline the
+        // server still waits it out before closing the round
+        let plan = FailurePlan {
+            dropout_prob: 1.0,
+            straggler_timeout_s: 10.0,
+            seed: 2,
+            ..FailurePlan::none()
+        };
+        let t = Transport::new(NetworkModel::default(), plan);
+        let out = t.collect(0, 100, frames(2, 100));
+        assert_eq!(out.dropped.len(), 2);
+        assert!((out.round_time_s - 10.0).abs() < 1e-12, "{}", out.round_time_s);
+        // with no deadline the simulation closes on the last delivery
+        let t2 = Transport::new(
+            NetworkModel::default(),
+            FailurePlan { dropout_prob: 1.0, seed: 2, ..FailurePlan::none() },
+        );
+        assert_eq!(t2.collect(0, 100, frames(2, 100)).round_time_s, 0.0);
+    }
+
+    #[test]
+    fn impossible_deadline_strands_every_upload() {
+        // every delivery takes at least rtt/2 + download time, so a
+        // microsecond deadline times everyone out regardless of seed
+        let plan = FailurePlan {
+            straggler_timeout_s: 1e-6,
+            straggler_scale: DEFAULT_STRAGGLER_SCALE,
+            seed: 9,
+            ..FailurePlan::none()
+        };
+        let t = Transport::new(NetworkModel::default(), plan);
+        let out = t.collect(1, 1_000, frames(3, 1_000));
+        assert!(out.delivered.is_empty());
+        assert_eq!(out.timed_out.len(), 3);
+        // the server waited the deadline out
+        assert!((out.round_time_s - 1e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn generous_deadline_keeps_everyone() {
+        // jitter is bounded by -ln(2^-53)·scale ≈ 18.4·scale, so a huge
+        // deadline can never be crossed
+        let plan = FailurePlan {
+            straggler_timeout_s: 1e6,
+            straggler_scale: DEFAULT_STRAGGLER_SCALE,
+            seed: 11,
+            ..FailurePlan::none()
+        };
+        let t = Transport::new(NetworkModel::default(), plan);
+        let out = t.collect(2, 1_000, frames(6, 10_000));
+        assert_eq!(out.delivered.len(), 6);
+        // stragglers are slower than the failure-free barrier
+        let base = NetworkModel::default().round_time(1_000, &[10_000; 6]);
+        assert!(out.round_time_s >= base);
+    }
+
+    #[test]
+    fn delivery_order_is_submission_order() {
+        let plan = FailurePlan { dropout_prob: 0.4, seed: 3, ..FailurePlan::none() };
+        let t = Transport::new(NetworkModel::default(), plan);
+        let out = t.collect(5, 100, frames(10, 100));
+        let cids: Vec<u32> = out.delivered.iter().map(|d| d.cid).collect();
+        let mut sorted = cids.clone();
+        sorted.sort_unstable();
+        assert_eq!(cids, sorted, "survivor order must stay deterministic");
+        assert_eq!(out.delivered.len() + out.dropped.len(), 10);
+    }
+}

@@ -84,6 +84,21 @@ pub struct RunConfig {
     /// DGC warm-up rounds: sparsity relaxed dense→target (0 = off).
     pub warmup_rounds: u64,
 
+    /// Per-round probability a selected client crashes before its
+    /// upload arrives (transport failure injection; 0.0 = off). In
+    /// secure mode, enabling this switches setup to Shamir-share the
+    /// pair keys so the server can recover dropped clients' masks —
+    /// O(n³) share material, sized for per-round cohorts, not huge
+    /// fleets.
+    pub dropout_prob: f64,
+    /// Server-side collect deadline in *simulated* seconds: uploads
+    /// arriving later are excluded from the round (stragglers).
+    /// `f64::INFINITY` = no deadline.
+    pub straggler_timeout_s: f64,
+    /// Abort the round (no model update; clients roll back, residuals
+    /// carry forward) when fewer uploads than this arrive.
+    pub min_survivors: usize,
+
     /// PJRT executor threads.
     pub exec_workers: usize,
     /// Client-side worker threads (sparsify/mask/encode).
@@ -118,6 +133,9 @@ impl Default for RunConfig {
             quant_bits: None,
             momentum: 0.0,
             warmup_rounds: 0,
+            dropout_prob: 0.0,
+            straggler_timeout_s: f64::INFINITY,
+            min_survivors: 1,
             exec_workers: 4,
             client_workers: 4,
         }
@@ -177,7 +195,35 @@ impl RunConfig {
         if !(0.0..1.0).contains(&self.momentum) {
             return Err(format!("momentum {} outside [0,1)", self.momentum));
         }
+        if !(0.0..1.0).contains(&self.dropout_prob) {
+            return Err(format!("dropout_prob {} outside [0,1)", self.dropout_prob));
+        }
+        if self.straggler_timeout_s <= 0.0 || self.straggler_timeout_s.is_nan() {
+            return Err(format!(
+                "straggler_timeout_s {} must be positive (use infinity for none)",
+                self.straggler_timeout_s
+            ));
+        }
+        if self.min_survivors == 0 || self.min_survivors > self.clients_per_round {
+            return Err(format!(
+                "min_survivors {} outside [1, {}]",
+                self.min_survivors, self.clients_per_round
+            ));
+        }
+        if self.secure && self.failure_injection() && self.min_survivors < 2 {
+            return Err(
+                "secure mode with failure injection needs min_survivors ≥ 2 \
+                 (mask recovery requires a surviving pair)"
+                    .into(),
+            );
+        }
         Ok(())
+    }
+
+    /// Is transport failure injection (dropout and/or straggler
+    /// deadline) live for this run?
+    pub fn failure_injection(&self) -> bool {
+        self.dropout_prob > 0.0 || self.straggler_timeout_s.is_finite()
     }
 
     /// Short label for metric files: `thgs-s0.1-noniid-4` etc.
@@ -239,6 +285,39 @@ mod tests {
         c.audit_secure_sum = true;
         assert!(c.validate().is_err());
         c.secure = true;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn failure_injection_knobs_validate() {
+        let mut c = RunConfig::default();
+        assert!(!c.failure_injection());
+        c.dropout_prob = 0.2;
+        assert!(c.failure_injection());
+        assert!(c.validate().is_ok());
+        c.dropout_prob = 1.0;
+        assert!(c.validate().is_err(), "certain dropout rejected");
+        c.dropout_prob = 0.2;
+        c.min_survivors = 0;
+        assert!(c.validate().is_err());
+        c.min_survivors = c.clients_per_round + 1;
+        assert!(c.validate().is_err());
+        c.min_survivors = 1;
+        c.straggler_timeout_s = 0.0;
+        assert!(c.validate().is_err());
+        c.straggler_timeout_s = 2.5;
+        assert!(c.failure_injection());
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn secure_dropout_needs_surviving_pair() {
+        let mut c = RunConfig::default();
+        c.secure = true;
+        c.dropout_prob = 0.1;
+        c.min_survivors = 1;
+        assert!(c.validate().is_err());
+        c.min_survivors = 2;
         assert!(c.validate().is_ok());
     }
 

@@ -1,6 +1,14 @@
 //! Per-client persistent state across rounds.
+//!
+//! The round engine moves the mutable pieces (residual store, Eq. 2
+//! rate controller, DGC momentum) *into* the per-client pipeline job
+//! and commits them back on success — [`ClientState::take_round_state`]
+//! / [`ClientState::commit_round`]. When transport failure injection is
+//! on, a [`ClientSnapshot`] taken before dispatch lets a dropped or
+//! timed-out client roll back as if it had never been selected.
 
 use crate::sparse::dynamic::DynamicRate;
+use crate::sparse::momentum::MomentumCorrector;
 use crate::sparse::residual::ResidualStore;
 
 /// One simulated federated participant.
@@ -14,11 +22,23 @@ pub struct ClientState {
     /// Eq. 2 controller (None when static rates are used).
     pub rate: Option<DynamicRate>,
     /// DGC momentum corrector (None when momentum = 0).
-    pub momentum: Option<crate::sparse::momentum::MomentumCorrector>,
+    pub momentum: Option<MomentumCorrector>,
     /// Mean local training loss of the last participating round.
     pub last_loss: f64,
-    /// Rounds this client was selected (diagnostics).
+    /// Rounds this client was selected AND delivered (diagnostics).
     pub participation: u64,
+}
+
+/// Pre-round copy of the mutable client state. Restored when the
+/// transport reports the client failed mid-round: from the client's
+/// point of view the round never happened (its update was lost in
+/// flight, so neither the residual split nor the rate/momentum
+/// controllers may advance).
+#[derive(Clone, Debug)]
+pub struct ClientSnapshot {
+    residual: ResidualStore,
+    rate: Option<DynamicRate>,
+    momentum: Option<MomentumCorrector>,
 }
 
 impl ClientState {
@@ -40,16 +60,53 @@ impl ClientState {
         self
     }
 
-    /// The rate *scale* for this round: dynamic-rate output relative
-    /// to the base rate r0 (1.0 when the controller is off), after
-    /// observing this round's loss.
-    pub fn observe_loss(&mut self, round: u64, loss: f64, base_rate: f64) -> f64 {
-        self.last_loss = loss;
-        self.participation += 1;
-        match &mut self.rate {
-            Some(ctrl) => ctrl.observe(round, loss) / base_rate,
-            None => 1.0,
+    /// Copy the mutable round state (call *before*
+    /// [`Self::take_round_state`]; only needed under failure injection).
+    pub fn snapshot(&self) -> ClientSnapshot {
+        ClientSnapshot {
+            residual: self.residual.clone(),
+            rate: self.rate.clone(),
+            momentum: self.momentum.clone(),
         }
+    }
+
+    /// Roll back to a pre-round snapshot (failed delivery / aborted
+    /// round). Participation and loss history are untouched — they only
+    /// ever advance in [`Self::commit_round`].
+    pub fn restore(&mut self, snap: ClientSnapshot) {
+        self.residual = snap.residual;
+        self.rate = snap.rate;
+        self.momentum = snap.momentum;
+    }
+
+    /// Move the mutable state into a round job (cheap: leaves empties
+    /// behind; the state comes back via [`Self::commit_round`] or
+    /// [`Self::restore`]).
+    pub fn take_round_state(
+        &mut self,
+    ) -> (ResidualStore, Option<DynamicRate>, Option<MomentumCorrector>) {
+        (
+            std::mem::replace(&mut self.residual, ResidualStore::new(0)),
+            self.rate.take(),
+            self.momentum.take(),
+        )
+    }
+
+    /// Commit a delivered round: hand the evolved state back and do the
+    /// participation bookkeeping. This is the *single* owner of
+    /// participation/loss accounting — nothing else increments it.
+    pub fn commit_round(
+        &mut self,
+        residual: ResidualStore,
+        rate: Option<DynamicRate>,
+        momentum: Option<MomentumCorrector>,
+        mean_loss: f64,
+    ) {
+        self.residual = residual;
+        self.rate = rate;
+        self.momentum = momentum;
+        self.last_loss = mean_loss;
+        self.participation += 1;
     }
 }
 
@@ -58,26 +115,48 @@ mod tests {
     use super::*;
 
     #[test]
-    fn static_client_scale_is_one() {
+    fn commit_round_owns_participation() {
         let mut c = ClientState::new(0, vec![1, 2, 3], 10);
-        assert_eq!(c.observe_loss(0, 1.0, 0.1), 1.0);
+        let (residual, rate, momentum) = c.take_round_state();
+        assert_eq!(c.residual.len(), 0, "state moved out");
+        c.commit_round(residual, rate, momentum, 1.25);
         assert_eq!(c.participation, 1);
-        assert_eq!(c.last_loss, 1.0);
+        assert_eq!(c.last_loss, 1.25);
+        assert_eq!(c.residual.len(), 10, "state moved back");
     }
 
     #[test]
-    fn dynamic_client_scale_tracks_controller() {
-        let mut c = ClientState::new(1, vec![], 10).with_dynamic_rate(0.1, 0.8, 100, 0.01);
-        let s0 = c.observe_loss(0, 2.0, 0.1);
-        assert!(s0 > 0.0 && s0 <= 10.0);
-        // constant loss + α<1 → scale decays
-        let mut last = s0;
-        for t in 1..20 {
-            let s = c.observe_loss(t, 2.0, 0.1);
-            assert!(s <= last + 1e-12);
-            last = s;
+    fn restore_rolls_back_everything_but_history() {
+        let mut c = ClientState::new(1, vec![], 4).with_dynamic_rate(0.1, 0.8, 100, 0.01);
+        c.residual.store(&[1.0, 0.0, 2.0, 0.0]);
+        c.last_loss = 3.0;
+        c.participation = 5;
+        let snap = c.snapshot();
+
+        // a failed round: state moved out, evolved elsewhere, lost
+        let (mut residual, _, _) = c.take_round_state();
+        residual.store(&[0.0; 4]);
+        c.restore(snap);
+
+        assert_eq!(c.residual.as_slice().to_vec(), vec![1.0, 0.0, 2.0, 0.0]);
+        assert!(c.rate.is_some(), "controller restored");
+        // history only moves through commit_round
+        assert_eq!(c.participation, 5);
+        assert_eq!(c.last_loss, 3.0);
+    }
+
+    #[test]
+    fn dynamic_rate_controller_survives_commit_cycle() {
+        let mut c = ClientState::new(2, vec![], 8).with_dynamic_rate(0.1, 0.8, 100, 0.01);
+        for t in 0..3 {
+            let (residual, mut rate, momentum) = c.take_round_state();
+            if let Some(ctrl) = &mut rate {
+                ctrl.observe(t, 2.0);
+            }
+            c.commit_round(residual, rate, momentum, 2.0);
         }
-        assert!(last < s0);
+        assert_eq!(c.participation, 3);
+        assert!(c.rate.is_some());
     }
 
     #[test]

@@ -4,16 +4,22 @@
 //! * [`algorithms`] — FedAvg / FedProx baselines, conventional flat
 //!   Top-k, and the paper's THGS
 //! * [`client`] — per-client persistent state (residuals, Eq. 2 rate
-//!   controller, local loss history)
+//!   controller, loss history) with the take/commit/restore protocol
+//!   the round engine drives
 //! * [`selection`] — seeded per-round client sampling (C·K of N)
-//! * [`trainer`] — the orchestrator: local training via the PJRT
-//!   runtime, sparsification, (secure) aggregation, eval, metrics
+//! * [`round`] — the phased round engine: `Select → LocalTrain →
+//!   Sparsify/Encode → Collect → Unmask/Recover → Apply → Eval`, with
+//!   the per-client path owned by [`round::ClientPipeline`]
+//! * [`trainer`] — construction and run-level state: backend, data
+//!   partition, secure-aggregation setup, transport, metrics
 
 pub mod algorithms;
 pub mod client;
+pub mod round;
 pub mod selection;
 pub mod trainer;
 
 pub use algorithms::Algorithm;
-pub use client::ClientState;
-pub use trainer::{RoundOutcome, Trainer};
+pub use client::{ClientSnapshot, ClientState};
+pub use round::{ClientPipeline, Cohort, RoundOutcome};
+pub use trainer::Trainer;

@@ -1,0 +1,701 @@
+//! The phased federated round engine.
+//!
+//! One round is an explicit pipeline of typed phases — each phase takes
+//! the previous phase's output struct, so the data flow is inspectable
+//! and individual phases can later run async or sharded:
+//!
+//! ```text
+//! Select          C·K of N, seeded ([`super::selection`])        → Cohort
+//! LocalTrain      E local SGD iterations per client (backend)    ┐ ClientPipeline,
+//! Sparsify/Encode residual fold + Eq.2 rate + Top-k (+ masks)    ┘ parallel per client
+//!                 + wire codec                                   → Vec<ClientResult>
+//! Collect         in-process transport: dropout/straggler        → Collected
+//!                 injection, survivor filter, wire metering
+//! Unmask/Recover  [secure] Shamir-reconstruct dead clients'      → Aggregated
+//!                 pair keys, cancel orphaned masks
+//! Apply           commit survivor state, FedAvg mean over        → RoundScratch
+//!                 survivors — or abort below `min_survivors`
+//! Eval            test split + cost ledger + recorder            → RoundOutcome
+//! ```
+//!
+//! The per-client path (LocalTrain through Encode) is owned by
+//! [`ClientPipeline`]: an immutable, cheaply clonable context that each
+//! worker runs one [`ClientJob`] through. Client mutable state moves
+//! into the job and back out through [`super::client::ClientState`]'s
+//! take/commit/restore protocol, so the hot path stays lock-free.
+//!
+//! Failure semantics: a client the transport kills (crash or past-
+//! deadline straggler) rolls back to its pre-round snapshot — from its
+//! point of view the round never happened; the un-transmitted residual
+//! mass stays put and is folded into its next participating round.
+//! When too few uploads arrive (`min_survivors`, or fewer than the
+//! Shamir threshold while dead masks need recovery), the whole round
+//! aborts: the global model and every selected client roll back, and
+//! only the communication that actually happened is metered.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::comm::transport::{Delivery, UplinkFrame};
+use crate::data::Dataset;
+use crate::metrics::recorder::{PhaseTimings, RoundRecord};
+use crate::models::params::ParamVector;
+use crate::runtime::ModelRunner;
+use crate::secagg::protocol::{recover_pair_keys, SecAggClient, SecAggServer};
+use crate::sparse::codec::SparseVec;
+use crate::sparse::dynamic::DynamicRate;
+use crate::sparse::momentum::MomentumCorrector;
+use crate::sparse::residual::ResidualStore;
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+use super::algorithms::Algorithm;
+use super::client::ClientSnapshot;
+use super::selection::select_clients;
+use super::trainer::Trainer;
+
+/// What one round produced (returned for tests/harnesses).
+#[derive(Clone, Debug)]
+pub struct RoundOutcome {
+    pub round: u64,
+    pub selected: Vec<u32>,
+    /// Selected clients whose upload arrived in time (== `selected`
+    /// when failure injection is off).
+    pub survivors: Vec<u32>,
+    /// Selected clients that crashed mid-round (upload never sent).
+    pub dropped: Vec<u32>,
+    /// Selected clients whose upload landed after the collect deadline.
+    pub stragglers: Vec<u32>,
+    /// True when the round was discarded (fewer than `min_survivors`
+    /// uploads, or dead masks unrecoverable): the global model and all
+    /// client state rolled back; `aggregate` is empty and `eval` None.
+    pub aborted: bool,
+    /// (survivor, dead) pair masks the server Shamir-recovered and
+    /// cancelled this round (secure mode).
+    pub recovered_pairs: usize,
+    /// Mean local train loss over *survivors*.
+    pub mean_train_loss: f64,
+    /// Per-survivor transmitted non-zeros.
+    pub nnz: Vec<usize>,
+    /// Per-survivor actual wire bytes.
+    pub wire_bytes: Vec<usize>,
+    pub eval: Option<(f64, f64)>, // (loss, accuracy)
+    /// The server-side aggregate (the summed survivor payloads, masks
+    /// recovered) before the `1/k` FedAvg scaling — what tests assert
+    /// on. Empty when the round aborted.
+    pub aggregate: Vec<f32>,
+    /// [`crate::config::RunConfig::audit_secure_sum`] only: the f64 sum
+    /// of the *survivors'* unmasked contributions, in the same order as
+    /// `aggregate` (so tests can assert the pair masks cancelled).
+    pub plain_sum: Option<Vec<f64>>,
+    /// Real wall-clock spent per phase.
+    pub timings: PhaseTimings,
+}
+
+/// Per-client mutable state moved into the parallel round pipeline.
+pub struct ClientJob {
+    cid: u32,
+    indices: Vec<usize>,
+    residual: ResidualStore,
+    rate: Option<DynamicRate>,
+    momentum: Option<MomentumCorrector>,
+}
+
+/// What each client job hands back.
+pub struct ClientResult {
+    cid: u32,
+    /// Wire-encoded payload (moved into the transport at Collect).
+    encoded: Vec<u8>,
+    /// Encoded size in bytes (kept after `encoded` is shipped).
+    wire: usize,
+    /// Unmasked contribution (secure mode + audit only).
+    plain: Option<Vec<f32>>,
+    residual: ResidualStore,
+    rate: Option<DynamicRate>,
+    momentum: Option<MomentumCorrector>,
+    mean_loss: f64,
+    nnz: usize,
+    nnz_rate: f64,
+    /// CPU-seconds this client spent in local SGD.
+    train_s: f64,
+    /// CPU-seconds this client spent in sparsify+mask+encode.
+    encode_s: f64,
+}
+
+/// Phase 1 output: the round's selected participant set.
+pub struct Cohort {
+    pub round: u64,
+    pub selected: Vec<u32>,
+}
+
+/// Phase 4 output: what survived the transport.
+struct Collected {
+    /// Survivor results zipped with their server-side decoded payloads,
+    /// in selection order (deterministic f32 aggregation order).
+    survivors: Vec<(ClientResult, SparseVec)>,
+    /// dropped ∪ stragglers — every selected client whose masks are now
+    /// orphaned in secure mode.
+    dead: Vec<u32>,
+    dropped: Vec<u32>,
+    stragglers: Vec<u32>,
+    /// Failed clients' results (state discarded, snapshots restored).
+    rolled_back: Vec<ClientResult>,
+    /// Simulated communication wall-clock of the round barrier.
+    round_time_s: f64,
+}
+
+/// Phase 5 output: the unmasked server-side sum over survivors.
+struct Aggregated {
+    agg: Vec<f32>,
+    plain_sum: Option<Vec<f64>>,
+    recovered_pairs: usize,
+}
+
+/// Phase 6 output: the per-survivor rows later phases report on.
+#[derive(Default)]
+struct RoundScratch {
+    survivors: Vec<u32>,
+    nnz: Vec<usize>,
+    wire: Vec<usize>,
+    loss_sum: f64,
+    rate_sum: f64,
+}
+
+/// The per-client path (LocalTrain → Sparsify/Encode) as an immutable,
+/// cheaply clonable context: every worker clones the pipeline and runs
+/// one [`ClientJob`] through [`ClientPipeline::run`]. Owning this path
+/// in one place (instead of a captured closure) is what lets the
+/// engine's phases evolve independently.
+#[derive(Clone)]
+pub struct ClientPipeline {
+    runner: ModelRunner,
+    global: Arc<ParamVector>,
+    data: Arc<Dataset>,
+    layer_spans: Arc<Vec<(usize, usize)>>,
+    secagg: Option<Arc<(Vec<SecAggClient>, SecAggServer)>>,
+    selected: Arc<Vec<u32>>,
+    round: u64,
+    seed: u64,
+    iters: usize,
+    lr: f32,
+    batch: usize,
+    prox_mu: Option<f32>,
+    algorithm: Algorithm,
+    dynamic: bool,
+    base_rate: f64,
+    quant_bits: Option<u8>,
+    warmup_rounds: u64,
+    secure: bool,
+    audit: bool,
+    m: usize,
+}
+
+impl ClientPipeline {
+    /// Snapshot the trainer's round-invariant context for one round.
+    fn for_round(trainer: &Trainer, round: u64, selected: Arc<Vec<u32>>) -> Self {
+        let cfg = &trainer.cfg;
+        Self {
+            runner: trainer.runner.clone(),
+            global: Arc::new(trainer.global.clone()),
+            data: Arc::clone(&trainer.train_data),
+            layer_spans: Arc::new(trainer.layer_spans.clone()),
+            secagg: trainer.secagg.clone(),
+            selected,
+            round,
+            seed: cfg.seed,
+            iters: cfg.local_iters,
+            lr: cfg.lr,
+            batch: trainer.manifest.train_batch,
+            prox_mu: cfg.algorithm.is_fedprox(),
+            algorithm: cfg.algorithm,
+            dynamic: cfg.dynamic_rate,
+            base_rate: trainer.base_rate,
+            quant_bits: cfg.quant_bits,
+            warmup_rounds: cfg.warmup_rounds,
+            secure: cfg.secure,
+            audit: cfg.audit_secure_sum,
+            m: trainer.global.len(),
+        }
+    }
+
+    /// One client's full round path: local SGD (E iterations), DGC
+    /// momentum correction, residual fold-in, Eq. 2 rate, sparsify,
+    /// (secure) mask + encode. Pure in the job + context — no shared
+    /// mutable state, so jobs parallelize freely.
+    pub fn run(&self, job: ClientJob) -> Result<ClientResult> {
+        let ClientJob { cid, indices, mut residual, mut rate, mut momentum } = job;
+        let round = self.round;
+
+        // -- LocalTrain: E local SGD iterations --
+        let sw = Stopwatch::start();
+        let mut local = (*self.global).clone();
+        let mut rng = Rng::new(
+            self.seed ^ (cid as u64) << 32 ^ round.wrapping_mul(0x2545_F491_4F6C_DD1D),
+        );
+        let mut loss_sum = 0f64;
+        for _ in 0..self.iters {
+            let batch_idx: Vec<usize> = (0..self.batch)
+                .map(|_| indices[rng.below(indices.len() as u64) as usize])
+                .collect();
+            let (x, y) = self.data.batch(&batch_idx);
+            let (loss, mut grads) = self.runner.grad(&local, &x, &y)?;
+            if let Some(mu) = self.prox_mu {
+                local.add_prox_term(&mut grads, &self.global, mu);
+            }
+            local.sgd_step(&grads, self.lr);
+            loss_sum += loss as f64;
+        }
+        let mean_loss = loss_sum / self.iters as f64;
+        let mut update = local.delta_from(&self.global);
+        let train_s = sw.elapsed_secs();
+
+        // -- Sparsify/Encode --
+        let sw = Stopwatch::start();
+        // DGC momentum correction (before residual fold)
+        if let Some(mc) = &mut momentum {
+            update = mc.correct(&update);
+        }
+
+        // residual fold + Eq.2 rate + DGC warm-up
+        residual.fold_into(&mut update);
+        let mut scale = match (self.dynamic, &mut rate) {
+            (true, Some(ctrl)) => ctrl.observe(round, mean_loss) / self.base_rate,
+            _ => {
+                if let Some(ctrl) = &mut rate {
+                    ctrl.observe(round, mean_loss);
+                }
+                1.0
+            }
+        };
+        if self.warmup_rounds > 0 {
+            scale *= crate::sparse::momentum::warmup_rate(
+                self.base_rate,
+                self.warmup_rounds,
+                round,
+            ) / self.base_rate;
+        }
+
+        // sparsify + (secure) encode
+        let out = self.algorithm.sparsify(&update, &self.layer_spans, scale);
+        if let Some(mc) = &mut momentum {
+            mc.mask_sent(&out.sparse); // DGC momentum factor masking
+        }
+        let nnz_rate = out.nnz as f64 / self.m as f64;
+        let mut plain: Option<Vec<f32>> = None;
+        let payload: SparseVec = if let Some(sec) = &self.secagg {
+            let keep: Vec<bool> = out.sparse.iter().map(|&v| v != 0.0).collect();
+            let peers: Vec<u32> =
+                self.selected.iter().copied().filter(|&p| p != cid).collect();
+            let mu = sec.0[cid as usize].build_update_among(&update, &keep, round, &peers);
+            if self.audit {
+                // what ships minus the masks: exact in f32,
+                // since the residual is g or 0 positionwise
+                plain = Some(update.iter().zip(&mu.residual).map(|(u, r)| u - r).collect());
+            }
+            residual.store(&mu.residual);
+            mu.payload
+        } else {
+            residual.store(&out.residual);
+            let sv = SparseVec::from_dense(&out.sparse);
+            // QSGD-style stochastic quantization (lossy; the
+            // server receives the dequantized values)
+            if let Some(bits) = self.quant_bits {
+                let mut qrng = Rng::new(self.seed ^ 0x9a_17 ^ (cid as u64) << 16 ^ round);
+                let q = crate::sparse::quant::quantize(
+                    &sv,
+                    crate::sparse::quant::QuantConfig { bits },
+                    &mut qrng,
+                );
+                crate::sparse::quant::dequantize(&q)
+            } else {
+                sv
+            }
+        };
+        let counted_nnz =
+            if self.algorithm.is_sparse() || self.secure { payload.nnz() } else { self.m };
+        let encoded = payload.encode();
+        let encode_s = sw.elapsed_secs();
+        Ok(ClientResult {
+            cid,
+            wire: encoded.len(),
+            encoded,
+            plain,
+            residual,
+            rate,
+            momentum,
+            mean_loss,
+            nnz: counted_nnz,
+            nnz_rate,
+            train_s,
+            encode_s,
+        })
+    }
+}
+
+impl Trainer {
+    /// One federated round through the phased engine. Never fails on
+    /// injected client failures — those surface as `dropped` /
+    /// `stragglers` / `aborted` in the [`RoundOutcome`].
+    pub fn run_round(&mut self, round: u64) -> Result<RoundOutcome> {
+        let mut timings = PhaseTimings::default();
+
+        // ---- Select ------------------------------------------------
+        let sw = Stopwatch::start();
+        let cohort = self.phase_select(round);
+        // Failure rollback needs pre-round state; skip the copies
+        // entirely on the (default) failure-free path.
+        let snapshots: HashMap<u32, ClientSnapshot> = if self.transport.plan.enabled() {
+            cohort
+                .selected
+                .iter()
+                .map(|&cid| (cid, self.clients[cid as usize].snapshot()))
+                .collect()
+        } else {
+            HashMap::new()
+        };
+        timings.select_s = sw.elapsed_secs();
+
+        // ---- LocalTrain + Sparsify/Encode (parallel per client) ----
+        let sw = Stopwatch::start();
+        let results = match self.phase_local_train(&cohort) {
+            Ok(r) => r,
+            Err(e) => {
+                // the selected clients' state was moved into the jobs;
+                // restore what the snapshots preserved before bubbling
+                // the error (without failure injection there are no
+                // snapshots and the moved state is lost — the error is
+                // fatal to the run either way)
+                self.restore_snapshots(snapshots);
+                return Err(e);
+            }
+        };
+        timings.train_s = sw.elapsed_secs();
+        timings.client_train_cpu_s = results.iter().map(|r| r.train_s).sum();
+        timings.client_encode_cpu_s = results.iter().map(|r| r.encode_s).sum();
+
+        // ---- Collect (transport + survivor filter) -----------------
+        let sw = Stopwatch::start();
+        let collected = match self.phase_collect(&cohort, results) {
+            Ok(c) => c,
+            Err(e) => {
+                self.restore_snapshots(snapshots);
+                return Err(e);
+            }
+        };
+        timings.collect_s = sw.elapsed_secs();
+
+        // ---- min-survivors guard -----------------------------------
+        let mut required = self.cfg.min_survivors;
+        if !collected.dead.is_empty() {
+            if let Some(sec) = self.secagg.as_deref() {
+                // recovering dead masks needs a Shamir quorum
+                required = required.max(sec.1.share_threshold);
+            }
+        }
+        if collected.survivors.len() < required {
+            return Ok(self.abort_round(cohort, collected, snapshots, timings));
+        }
+
+        // ---- Unmask/Recover ----------------------------------------
+        let sw = Stopwatch::start();
+        let aggregated = match self.phase_unmask_recover(&cohort, &collected) {
+            Some(a) => a,
+            // no share material for the orphaned masks: the aggregate
+            // is unusable — discard the round rather than corrupt the
+            // model
+            None => {
+                timings.recover_s = sw.elapsed_secs();
+                return Ok(self.abort_round(cohort, collected, snapshots, timings));
+            }
+        };
+        timings.recover_s = sw.elapsed_secs();
+
+        // ---- Apply -------------------------------------------------
+        let sw = Stopwatch::start();
+        let (scratch, dropped, stragglers, round_time_s) =
+            self.phase_apply(collected, snapshots, &aggregated);
+        timings.apply_s = sw.elapsed_secs();
+
+        // ---- Eval + bookkeeping ------------------------------------
+        let sw = Stopwatch::start();
+        let cfg = &self.cfg;
+        let do_eval = round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds;
+        let eval = if do_eval {
+            Some(self.runner.evaluate(&self.global, &self.test_data, cfg.eval_samples)?)
+        } else {
+            None
+        };
+        timings.eval_s = sw.elapsed_secs();
+        let accuracy = eval.map(|(_, a)| a).unwrap_or(f64::NAN);
+
+        let m = self.global.len();
+        let ups: Vec<u64> = scratch
+            .nnz
+            .iter()
+            .map(|&n| self.cfg.algorithm.paper_cost_bytes(n, m, self.cfg.quant_bits))
+            .collect();
+        self.ledger.record_with_costs(round, &ups, &scratch.wire, accuracy);
+        let rc = self.ledger.rounds.last().unwrap();
+
+        let k = scratch.survivors.len();
+        let mean_train_loss = scratch.loss_sum / k as f64;
+        self.recorder.push(RoundRecord {
+            round,
+            train_loss: mean_train_loss,
+            eval_loss: eval.map(|(l, _)| l).unwrap_or(f64::NAN),
+            eval_accuracy: accuracy,
+            up_bytes: rc.up_paper,
+            wire_bytes: rc.up_wire,
+            sim_time_s: round_time_s,
+            mean_rate: scratch.rate_sum / k as f64,
+            survivors: k,
+            recovered: aggregated.recovered_pairs,
+            timings,
+        });
+
+        Ok(RoundOutcome {
+            round,
+            selected: cohort.selected,
+            survivors: scratch.survivors,
+            dropped,
+            stragglers,
+            aborted: false,
+            recovered_pairs: aggregated.recovered_pairs,
+            mean_train_loss,
+            nnz: scratch.nnz,
+            wire_bytes: scratch.wire,
+            eval,
+            aggregate: aggregated.agg,
+            plain_sum: aggregated.plain_sum,
+            timings,
+        })
+    }
+
+    /// Best-effort rollback after a mid-round error: restore whatever
+    /// snapshots exist so a caller that catches the error does not
+    /// continue with emptied client state. No-op when failure injection
+    /// is off (no snapshots are taken on that zero-overhead path).
+    fn restore_snapshots(&mut self, snapshots: HashMap<u32, ClientSnapshot>) {
+        for (cid, snap) in snapshots {
+            self.clients[cid as usize].restore(snap);
+        }
+    }
+
+    /// Phase 1 — seeded cohort selection + per-round cache hygiene.
+    fn phase_select(&mut self, round: u64) -> Cohort {
+        let selected =
+            select_clients(self.cfg.clients, self.cfg.clients_per_round, self.cfg.seed, round);
+        // previous round's pair streams are dead weight — drop them
+        self.mask_cache.lock().unwrap().clear();
+        Cohort { round, selected }
+    }
+
+    /// Phases 2+3 — fan the cohort out over the worker pool, one
+    /// [`ClientPipeline::run`] per client. Results come back in
+    /// selection order.
+    fn phase_local_train(&mut self, cohort: &Cohort) -> Result<Vec<ClientResult>> {
+        let jobs: Vec<ClientJob> = cohort
+            .selected
+            .iter()
+            .map(|&cid| {
+                let cs = &mut self.clients[cid as usize];
+                let (residual, rate, momentum) = cs.take_round_state();
+                ClientJob { cid, indices: cs.data.clone(), residual, rate, momentum }
+            })
+            .collect();
+        let pipeline =
+            ClientPipeline::for_round(self, cohort.round, Arc::new(cohort.selected.clone()));
+        let results: Vec<Result<ClientResult>> =
+            self.client_pool.map(jobs, move |job: ClientJob| pipeline.run(job));
+        results.into_iter().collect()
+    }
+
+    /// Phase 4 — move every encoded payload into the transport; the
+    /// seeded failure plan decides who survives. Delivered frames are
+    /// decoded server-side (the codec round-trips bit-exactly, so the
+    /// aggregate matches summing the in-memory payloads).
+    fn phase_collect(
+        &self,
+        cohort: &Cohort,
+        mut results: Vec<ClientResult>,
+    ) -> Result<Collected> {
+        let m = self.global.len();
+        let frames: Vec<UplinkFrame> = results
+            .iter_mut()
+            .map(|r| UplinkFrame {
+                cid: r.cid,
+                bytes: std::mem::take(&mut r.encoded),
+                paper_bytes: self.cfg.algorithm.paper_cost_bytes(r.nnz, m, self.cfg.quant_bits),
+            })
+            .collect();
+        let down_bytes = crate::sparse::codec::dense_cost_bytes(m);
+        let outcome = self.transport.collect(cohort.round, down_bytes, frames);
+
+        let mut delivered: HashMap<u32, Delivery> =
+            outcome.delivered.into_iter().map(|d| (d.cid, d)).collect();
+        let mut survivors = Vec::with_capacity(delivered.len());
+        let mut rolled_back = Vec::new();
+        for r in results {
+            match delivered.remove(&r.cid) {
+                Some(d) => {
+                    let payload = SparseVec::decode(&d.bytes)
+                        .map_err(|e| anyhow!("client {} payload: {e}", r.cid))?;
+                    survivors.push((r, payload));
+                }
+                None => rolled_back.push(r),
+            }
+        }
+        let mut dead = outcome.dropped.clone();
+        dead.extend_from_slice(&outcome.timed_out);
+        dead.sort_unstable();
+        Ok(Collected {
+            survivors,
+            dead,
+            dropped: outcome.dropped,
+            stragglers: outcome.timed_out,
+            rolled_back,
+            round_time_s: outcome.round_time_s,
+        })
+    }
+
+    /// Phase 5 — sum the survivors' payloads (selection order, so the
+    /// f32 accumulation is deterministic), then in secure mode cancel
+    /// the dead clients' orphaned pair masks using Shamir-recovered
+    /// keys. `None` = recovery impossible → the caller aborts.
+    fn phase_unmask_recover(&self, cohort: &Cohort, collected: &Collected) -> Option<Aggregated> {
+        let m = self.global.len();
+        let mut agg = vec![0f32; m];
+        let mut plain_sum =
+            (self.cfg.secure && self.cfg.audit_secure_sum).then(|| vec![0f64; m]);
+        for (r, payload) in &collected.survivors {
+            if let (Some(ps), Some(p)) = (plain_sum.as_mut(), r.plain.as_ref()) {
+                for (acc, &v) in ps.iter_mut().zip(p) {
+                    *acc += v as f64;
+                }
+            }
+            payload.add_into(&mut agg);
+        }
+
+        let mut recovered_pairs = 0usize;
+        if !collected.dead.is_empty() {
+            if let Some(sec) = self.secagg.as_deref() {
+                let survivor_ids: Vec<u32> =
+                    collected.survivors.iter().map(|(r, _)| r.cid).collect();
+                let recovered =
+                    recover_pair_keys(&sec.0, &sec.1, &survivor_ids, &collected.dead)?;
+                recovered_pairs = recovered.len();
+                sec.1.cancel_dead_masks(
+                    &mut agg,
+                    cohort.round,
+                    &survivor_ids,
+                    &collected.dead,
+                    &recovered,
+                    cohort.selected.len(),
+                );
+            }
+        }
+        Some(Aggregated { agg, plain_sum, recovered_pairs })
+    }
+
+    /// Phase 6 — commit the survivors' evolved state, roll failed
+    /// clients back to their snapshots, and take the FedAvg step over
+    /// the survivor mean. Returns the per-survivor reporting rows plus
+    /// the failure lists and barrier time moved out of `collected`.
+    fn phase_apply(
+        &mut self,
+        collected: Collected,
+        mut snapshots: HashMap<u32, ClientSnapshot>,
+        aggregated: &Aggregated,
+    ) -> (RoundScratch, Vec<u32>, Vec<u32>, f64) {
+        let mut scratch = RoundScratch::default();
+        for (r, _) in collected.survivors {
+            let cs = &mut self.clients[r.cid as usize];
+            cs.commit_round(r.residual, r.rate, r.momentum, r.mean_loss);
+            scratch.survivors.push(r.cid);
+            scratch.loss_sum += r.mean_loss;
+            scratch.rate_sum += r.nnz_rate;
+            scratch.nnz.push(r.nnz);
+            scratch.wire.push(r.wire);
+        }
+        for r in collected.rolled_back {
+            let snap = snapshots.remove(&r.cid).expect("failed client has a snapshot");
+            self.clients[r.cid as usize].restore(snap);
+        }
+        // FedAvg mean over the *surviving* cohort
+        self.global
+            .apply_update(&aggregated.agg, 1.0 / scratch.survivors.len() as f32);
+        (scratch, collected.dropped, collected.stragglers, collected.round_time_s)
+    }
+
+    /// Abort path: fewer than `min_survivors` uploads (or orphaned
+    /// masks without a Shamir quorum). Everything rolls back — global
+    /// untouched, every selected client restored — but the bytes that
+    /// did cross the wire are still metered, and the round is recorded
+    /// (eval/accuracy NaN) so traces keep one row per round.
+    fn abort_round(
+        &mut self,
+        cohort: Cohort,
+        collected: Collected,
+        mut snapshots: HashMap<u32, ClientSnapshot>,
+        timings: PhaseTimings,
+    ) -> RoundOutcome {
+        let m = self.global.len();
+        let mut survivors = Vec::new();
+        let mut nnz = Vec::new();
+        let mut wire = Vec::new();
+        let mut loss_sum = 0f64;
+        for (r, _) in &collected.survivors {
+            survivors.push(r.cid);
+            nnz.push(r.nnz);
+            wire.push(r.wire);
+            loss_sum += r.mean_loss;
+        }
+        // every selected client — delivered or not — rolls back (aborts
+        // only happen under failure injection, so snapshots exist)
+        for &cid in &cohort.selected {
+            let snap = snapshots.remove(&cid).expect("abort requires snapshots");
+            self.clients[cid as usize].restore(snap);
+        }
+        let mean_train_loss =
+            if survivors.is_empty() { f64::NAN } else { loss_sum / survivors.len() as f64 };
+
+        let ups: Vec<u64> = nnz
+            .iter()
+            .map(|&n| self.cfg.algorithm.paper_cost_bytes(n, m, self.cfg.quant_bits))
+            .collect();
+        self.ledger.record_with_costs(cohort.round, &ups, &wire, f64::NAN);
+        let rc = self.ledger.rounds.last().unwrap();
+        self.recorder.push(RoundRecord {
+            round: cohort.round,
+            train_loss: mean_train_loss,
+            eval_loss: f64::NAN,
+            eval_accuracy: f64::NAN,
+            up_bytes: rc.up_paper,
+            wire_bytes: rc.up_wire,
+            sim_time_s: collected.round_time_s,
+            mean_rate: f64::NAN,
+            survivors: survivors.len(),
+            recovered: 0,
+            timings,
+        });
+
+        RoundOutcome {
+            round: cohort.round,
+            selected: cohort.selected,
+            survivors,
+            dropped: collected.dropped,
+            stragglers: collected.stragglers,
+            aborted: true,
+            recovered_pairs: 0,
+            mean_train_loss,
+            nnz,
+            wire_bytes: wire,
+            eval: None,
+            aggregate: Vec::new(),
+            plain_sum: None,
+            timings,
+        }
+    }
+}

@@ -1,18 +1,33 @@
 //! The federated training orchestrator.
 //!
 //! One [`Trainer`] owns the global model, the client fleet, the
-//! compute backend (native or PJRT, see [`crate::runtime`]) and
-//! (optionally) the secure-aggregation state, and drives the §5 round
-//! loop:
+//! compute backend (native or PJRT, see [`crate::runtime`]), the
+//! in-process uplink transport and (optionally) the secure-aggregation
+//! state. Rounds run through the phased engine in
+//! [`super::round`]:
 //!
 //! ```text
-//! select C·K clients
-//!   → parallel local SGD (E iterations, batch B) via the backend's grad
-//!   → residual fold-in + sparsify (FedAvg/FedProx/flat/THGS)
-//!   → [secure] pairwise mask-sparsified encoding (Alg. 2)
-//!   → server sum → global ← global + Σ/k
-//!   → eval + ledger + metrics
+//! Select → LocalTrain → Sparsify/Encode → Collect → Unmask/Recover → Apply → Eval
 //! ```
+//!
+//! * **Select** — C·K clients, seeded ([`super::selection`])
+//! * **LocalTrain** — parallel local SGD (E iterations, batch B) via
+//!   the backend's grad
+//! * **Sparsify/Encode** — residual fold-in + Eq. 2 rate +
+//!   FedAvg/FedProx/flat/THGS sparsifier, then [secure] pairwise
+//!   mask-sparsified encoding (Alg. 2) + wire codec
+//! * **Collect** — the transport carries the encoded uplinks; a seeded
+//!   [`FailurePlan`](crate::comm::transport::FailurePlan) injects
+//!   client crashes (`dropout_prob`) and past-deadline stragglers
+//!   (`straggler_timeout_s`); survivors only from here on
+//! * **Unmask/Recover** — server sum over survivors; in secure mode,
+//!   Shamir-reconstruct dead clients' pair keys and cancel their
+//!   orphaned masks (aborting below `min_survivors` / quorum)
+//! * **Apply** — global ← global + Σ/|survivors|
+//! * **Eval** — test split + cost ledger + metrics
+//!
+//! This module owns construction and run-level state; the per-round
+//! data flow lives in [`super::round`].
 
 use std::sync::Arc;
 
@@ -20,83 +35,38 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::comm::channel::NetworkModel;
 use crate::comm::cost::CostLedger;
+use crate::comm::transport::{FailurePlan, Transport, DEFAULT_STRAGGLER_SCALE};
 use crate::config::{Partition, RunConfig};
 use crate::data::{iid_partition, noniid_partition, Dataset, DatasetKind, Split};
-use crate::metrics::recorder::{Recorder, RoundRecord, RunSummary};
+use crate::metrics::recorder::{Recorder, RunSummary};
 use crate::models::manifest::Manifest;
 use crate::models::params::ParamVector;
 use crate::runtime::ModelRunner;
 use crate::secagg::protocol::{full_setup, SecAggClient, SecAggConfig, SecAggServer};
-use crate::sparse::codec::SparseVec;
-use crate::sparse::residual::ResidualStore;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 
 use super::algorithms::Algorithm;
 use super::client::ClientState;
-use super::selection::select_clients;
-
-/// What one round produced (returned for tests/harnesses).
-#[derive(Clone, Debug)]
-pub struct RoundOutcome {
-    pub round: u64,
-    pub selected: Vec<u32>,
-    pub mean_train_loss: f64,
-    /// Per-client transmitted non-zeros.
-    pub nnz: Vec<usize>,
-    /// Per-client actual wire bytes.
-    pub wire_bytes: Vec<usize>,
-    pub eval: Option<(f64, f64)>, // (loss, accuracy)
-    /// The server-side aggregate (the summed payloads) before the
-    /// `1/k` FedAvg scaling — what tests assert on.
-    pub aggregate: Vec<f32>,
-    /// [`RunConfig::audit_secure_sum`] only: the f64 sum of the
-    /// clients' *unmasked* contributions, in the same client order as
-    /// `aggregate` (so tests can assert the pair masks cancelled).
-    pub plain_sum: Option<Vec<f64>>,
-}
-
-/// Per-client state moved into the parallel round pipeline.
-struct ClientJob {
-    cid: u32,
-    indices: Vec<usize>,
-    residual: ResidualStore,
-    rate: Option<crate::sparse::dynamic::DynamicRate>,
-    momentum: Option<crate::sparse::momentum::MomentumCorrector>,
-}
-
-/// What each client job hands back.
-struct ClientResult {
-    cid: u32,
-    payload: SparseVec,
-    /// Unmasked contribution (secure mode + audit only).
-    plain: Option<Vec<f32>>,
-    residual: ResidualStore,
-    rate: Option<crate::sparse::dynamic::DynamicRate>,
-    momentum: Option<crate::sparse::momentum::MomentumCorrector>,
-    mean_loss: f64,
-    nnz: usize,
-    wire: usize,
-    nnz_rate: f64,
-}
 
 /// The coordinator.
 pub struct Trainer {
     pub cfg: RunConfig,
     pub manifest: Manifest,
-    runner: ModelRunner,
-    train_data: Arc<Dataset>,
-    test_data: Dataset,
+    pub(crate) runner: ModelRunner,
+    pub(crate) train_data: Arc<Dataset>,
+    pub(crate) test_data: Dataset,
     pub global: ParamVector,
     pub clients: Vec<ClientState>,
-    secagg: Option<Arc<(Vec<SecAggClient>, SecAggServer)>>,
-    layer_spans: Vec<(usize, usize)>,
-    client_pool: ThreadPool,
+    pub(crate) secagg: Option<Arc<(Vec<SecAggClient>, SecAggServer)>>,
+    pub(crate) layer_spans: Vec<(usize, usize)>,
+    pub(crate) client_pool: ThreadPool,
     pub recorder: Recorder,
     pub ledger: CostLedger,
-    pub network: NetworkModel,
-    base_rate: f64,
-    mask_cache: crate::secagg::mask::MaskCache,
+    /// The in-process uplink (network model + failure plan).
+    pub transport: Transport,
+    pub(crate) base_rate: f64,
+    pub(crate) mask_cache: crate::secagg::mask::MaskCache,
 }
 
 impl Trainer {
@@ -154,7 +124,12 @@ impl Trainer {
             let sc = SecAggConfig {
                 full_dh: false,
                 mask_ratio_k: cfg.mask_ratio_k,
-                share_keys: false, // no dropout in the §5 experiments
+                // Shamir share material is only needed when clients can
+                // vanish mid-round (dropout/straggler injection) — the
+                // paper's §5 experiments assume full delivery, and the
+                // O(n³) share distribution is priced for per-round
+                // cohorts, not huge fleets.
+                share_keys: cfg.failure_injection(),
                 ..Default::default()
             };
             let (mut sec_clients, server) = full_setup(cfg.clients as u32, cfg.seed ^ 0x5eca, &sc);
@@ -168,6 +143,20 @@ impl Trainer {
             None
         };
 
+        let transport = Transport::new(
+            NetworkModel::default(),
+            FailurePlan {
+                dropout_prob: cfg.dropout_prob,
+                straggler_timeout_s: cfg.straggler_timeout_s,
+                straggler_scale: if cfg.straggler_timeout_s.is_finite() {
+                    DEFAULT_STRAGGLER_SCALE
+                } else {
+                    0.0
+                },
+                seed: cfg.seed ^ 0xfa11,
+            },
+        );
+
         let layer_spans = meta.layer_spans();
         let label = cfg.run_label();
         let base_rate = base_rate_of(&cfg.algorithm);
@@ -176,7 +165,7 @@ impl Trainer {
             client_pool: ThreadPool::new(cfg.client_workers),
             recorder: Recorder::new(&label),
             ledger: CostLedger::new(m),
-            network: NetworkModel::default(),
+            transport,
             global: ParamVector::init(&meta, cfg.seed),
             train_data: Arc::new(train_data),
             test_data,
@@ -191,235 +180,13 @@ impl Trainer {
         })
     }
 
-    /// Drive the full run; returns the summary.
+    /// Drive the full run; returns the summary. Aborted rounds (too
+    /// many failures) are recorded and skipped, not fatal.
     pub fn run(&mut self) -> Result<RunSummary> {
         for round in 0..self.cfg.rounds {
             self.run_round(round)?;
         }
         Ok(self.recorder.summary())
-    }
-
-    /// One federated round.
-    pub fn run_round(&mut self, round: u64) -> Result<RoundOutcome> {
-        let cfg = &self.cfg;
-        let selected = select_clients(cfg.clients, cfg.clients_per_round, cfg.seed, round);
-        // previous round's pair streams are dead weight — drop them
-        self.mask_cache.lock().unwrap().clear();
-
-        // ---- parallel per-client pipeline --------------------------
-        // Each selected client's full path — local SGD (PJRT grads),
-        // residual fold-in, Eq. 2 rate, sparsify, (secure) mask+encode
-        // — runs as one pool job. Per-client mutable state (residual
-        // store, rate controller) is moved in and handed back, so no
-        // locking on the hot path (§Perf L3 iteration 3).
-        let items: Vec<ClientJob> = selected
-            .iter()
-            .map(|&cid| {
-                let cs = &mut self.clients[cid as usize];
-                ClientJob {
-                    cid,
-                    indices: cs.data.clone(),
-                    residual: std::mem::replace(&mut cs.residual, ResidualStore::new(0)),
-                    rate: cs.rate.take(),
-                    momentum: cs.momentum.take(),
-                }
-            })
-            .collect();
-        let runner = self.runner.clone();
-        let global = Arc::new(self.global.clone());
-        let data = Arc::clone(&self.train_data);
-        let (seed, iters, lr, batch) =
-            (cfg.seed, cfg.local_iters, cfg.lr, self.manifest.train_batch);
-        let prox_mu = cfg.algorithm.is_fedprox();
-        let algorithm = cfg.algorithm;
-        let (dynamic, base_rate) = (cfg.dynamic_rate, self.base_rate);
-        let quant_bits = cfg.quant_bits;
-        let (momentum_coef, warmup_rounds, total_rounds) =
-            (cfg.momentum, cfg.warmup_rounds, cfg.rounds);
-        let _ = total_rounds;
-        let layer_spans = Arc::new(self.layer_spans.clone());
-        let secagg = self.secagg.clone();
-        let selected_arc = Arc::new(selected.clone());
-        let secure = cfg.secure;
-        let audit = cfg.audit_secure_sum;
-        let m = self.global.len();
-
-        let results: Vec<Result<ClientResult>> = self.client_pool.map(
-            items,
-            move |job: ClientJob| -> Result<ClientResult> {
-                let ClientJob { cid, indices, mut residual, mut rate, mut momentum } = job;
-                // -- local SGD --
-                let mut local = (*global).clone();
-                let mut rng =
-                    Rng::new(seed ^ (cid as u64) << 32 ^ round.wrapping_mul(0x2545_F491_4F6C_DD1D));
-                let mut loss_sum = 0f64;
-                for _ in 0..iters {
-                    let batch_idx: Vec<usize> = (0..batch)
-                        .map(|_| indices[rng.below(indices.len() as u64) as usize])
-                        .collect();
-                    let (x, y) = data.batch(&batch_idx);
-                    let (loss, mut grads) = runner.grad(&local, &x, &y)?;
-                    if let Some(mu) = prox_mu {
-                        local.add_prox_term(&mut grads, &global, mu);
-                    }
-                    local.sgd_step(&grads, lr);
-                    loss_sum += loss as f64;
-                }
-                let mean_loss = loss_sum / iters as f64;
-                let mut update = local.delta_from(&global);
-
-                // -- DGC momentum correction (before residual fold) --
-                if let Some(mc) = &mut momentum {
-                    update = mc.correct(&update);
-                }
-
-                // -- residual fold + Eq.2 rate + DGC warm-up --
-                residual.fold_into(&mut update);
-                let mut scale = match (dynamic, &mut rate) {
-                    (true, Some(ctrl)) => ctrl.observe(round, mean_loss) / base_rate,
-                    _ => {
-                        if let Some(ctrl) = &mut rate {
-                            ctrl.observe(round, mean_loss);
-                        }
-                        1.0
-                    }
-                };
-                if warmup_rounds > 0 {
-                    scale *= crate::sparse::momentum::warmup_rate(
-                        base_rate, warmup_rounds, round,
-                    ) / base_rate;
-                }
-
-                // -- sparsify + (secure) encode --
-                let out = algorithm.sparsify(&update, &layer_spans, scale);
-                if let Some(mc) = &mut momentum {
-                    mc.mask_sent(&out.sparse); // DGC momentum factor masking
-                }
-                let nnz_rate = out.nnz as f64 / m as f64;
-                let mut plain: Option<Vec<f32>> = None;
-                let payload: SparseVec = if let Some(sec) = &secagg {
-                    let keep: Vec<bool> = out.sparse.iter().map(|&v| v != 0.0).collect();
-                    let peers: Vec<u32> =
-                        selected_arc.iter().copied().filter(|&p| p != cid).collect();
-                    let mu = sec.0[cid as usize].build_update_among(&update, &keep, round, &peers);
-                    if audit {
-                        // what ships minus the masks: exact in f32,
-                        // since the residual is g or 0 positionwise
-                        plain = Some(
-                            update.iter().zip(&mu.residual).map(|(u, r)| u - r).collect(),
-                        );
-                    }
-                    residual.store(&mu.residual);
-                    mu.payload
-                } else {
-                    residual.store(&out.residual);
-                    let sv = SparseVec::from_dense(&out.sparse);
-                    // QSGD-style stochastic quantization (lossy; the
-                    // server receives the dequantized values)
-                    if let Some(bits) = quant_bits {
-                        let mut qrng = Rng::new(
-                            seed ^ 0x9a_17 ^ (cid as u64) << 16 ^ round,
-                        );
-                        let q = crate::sparse::quant::quantize(
-                            &sv,
-                            crate::sparse::quant::QuantConfig { bits },
-                            &mut qrng,
-                        );
-                        crate::sparse::quant::dequantize(&q)
-                    } else {
-                        sv
-                    }
-                };
-                let counted_nnz = if algorithm.is_sparse() || secure { payload.nnz() } else { m };
-                let wire = payload.encode().len();
-                Ok(ClientResult {
-                    cid,
-                    payload,
-                    plain,
-                    residual,
-                    rate,
-                    momentum,
-                    mean_loss,
-                    nnz: counted_nnz,
-                    wire,
-                    nnz_rate,
-                })
-            },
-        );
-
-        // ---- hand state back + aggregate ---------------------------
-        let mut agg = vec![0f32; m];
-        let mut plain_sum =
-            (self.cfg.secure && self.cfg.audit_secure_sum).then(|| vec![0f64; m]);
-        let mut nnz_list = Vec::with_capacity(selected.len());
-        let mut wire_list = Vec::with_capacity(selected.len());
-        let mut loss_sum = 0f64;
-        let mut rate_sum = 0f64;
-
-        for res in results {
-            let r = res?;
-            let cs = &mut self.clients[r.cid as usize];
-            cs.residual = r.residual;
-            cs.rate = r.rate;
-            cs.momentum = r.momentum;
-            cs.last_loss = r.mean_loss;
-            cs.participation += 1;
-            loss_sum += r.mean_loss;
-            rate_sum += r.nnz_rate;
-            nnz_list.push(r.nnz);
-            wire_list.push(r.wire);
-            if let (Some(ps), Some(p)) = (plain_sum.as_mut(), r.plain.as_ref()) {
-                for (acc, &v) in ps.iter_mut().zip(p) {
-                    *acc += v as f64;
-                }
-            }
-            r.payload.add_into(&mut agg);
-        }
-
-        // FedAvg mean over the selected cohort
-        self.global.apply_update(&agg, 1.0 / selected.len() as f32);
-
-        // ---- eval + bookkeeping ------------------------------------
-        let do_eval = round % cfg.eval_every == cfg.eval_every - 1 || round + 1 == cfg.rounds;
-        let eval = if do_eval {
-            Some(self.runner.evaluate(&self.global, &self.test_data, cfg.eval_samples)?)
-        } else {
-            None
-        };
-        let accuracy = eval.map(|(_, a)| a).unwrap_or(f64::NAN);
-
-        let ups: Vec<u64> = nnz_list
-            .iter()
-            .map(|&n| cfg.algorithm.paper_cost_bytes(n, m, cfg.quant_bits))
-            .collect();
-        self.ledger
-            .record_with_costs(round, &ups, &wire_list, accuracy);
-        let rc = self.ledger.rounds.last().unwrap();
-        let sim_time = self
-            .network
-            .round_time(crate::sparse::codec::dense_cost_bytes(m), &ups);
-
-        self.recorder.push(RoundRecord {
-            round,
-            train_loss: loss_sum / selected.len() as f64,
-            eval_loss: eval.map(|(l, _)| l).unwrap_or(f64::NAN),
-            eval_accuracy: accuracy,
-            up_bytes: rc.up_paper,
-            wire_bytes: rc.up_wire,
-            sim_time_s: sim_time,
-            mean_rate: rate_sum / selected.len() as f64,
-        });
-
-        Ok(RoundOutcome {
-            round,
-            selected,
-            mean_train_loss: loss_sum / nnz_list.len() as f64,
-            nnz: nnz_list,
-            wire_bytes: wire_list,
-            eval,
-            aggregate: agg,
-            plain_sum,
-        })
     }
 
     /// Evaluate the current global model on the test split.
@@ -439,7 +206,7 @@ impl Trainer {
 }
 
 /// The configured base sparsity rate (for Eq. 2 scaling).
-fn base_rate_of(alg: &Algorithm) -> f64 {
+pub(crate) fn base_rate_of(alg: &Algorithm) -> f64 {
     match alg {
         Algorithm::FedAvg | Algorithm::FedProx { .. } => 1.0,
         Algorithm::FlatSparse { s } => *s,

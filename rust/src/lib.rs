@@ -8,8 +8,30 @@
 //! hierarchical gradient sparsification ([`sparse::thgs`], Alg. 1) and
 //! mask-sparsified secure aggregation ([`secagg`], Alg. 2) — plus every
 //! substrate they need (datasets, partitioning, DH/PRG crypto, sparse
-//! codecs, comm-cost accounting, model compute backends, metrics,
-//! config and CLI).
+//! codecs, comm-cost accounting, transport, model compute backends,
+//! metrics, config and CLI).
+//!
+//! ## The round engine
+//!
+//! Every federated round runs through the phased engine in
+//! [`coordinator::round`]:
+//!
+//! ```text
+//! Select           C·K of N clients, seeded
+//! LocalTrain       parallel local SGD (E iterations) per client
+//! Sparsify/Encode  residual fold + Eq.2 rate + Top-k (+ pairwise masks) + codec
+//! Collect          in-process transport carries the uplinks; a seeded
+//!                  FailurePlan injects crashes (dropout_prob) and
+//!                  past-deadline stragglers (straggler_timeout_s)
+//! Unmask/Recover   [secure] Shamir-reconstruct dead clients' pair keys,
+//!                  cancel their orphaned masks (abort below min_survivors)
+//! Apply            global ← global + Σ/|survivors|
+//! Eval             test metrics + cost ledger + per-phase timings
+//! ```
+//!
+//! With failure injection off (the default) the engine is byte-for-byte
+//! the paper's §5 loop; with it on, the Bonawitz-style dropout recovery
+//! in [`secagg::protocol`] runs end-to-end.
 //!
 //! ## Compute backends
 //!

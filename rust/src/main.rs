@@ -9,6 +9,8 @@
 //!   fedsparse train --model mnist_mlp --alg thgs:0.1,0.8,0.01 \
 //!       --partition noniid-4 --rounds 200 --out results/run.csv
 //!   fedsparse train --alg fedavg --secure --rounds 50
+//!   fedsparse train --alg thgs --secure --dropout 0.1 --min-survivors 4 \
+//!       --straggler-timeout 2.0   # failure injection + Shamir recovery
 //!   fedsparse info
 
 use std::path::PathBuf;
@@ -41,6 +43,9 @@ const TRAIN_SPEC: &[ArgSpec] = &[
     ArgSpec::opt("quant-bits", "", "0", "QSGD stochastic quantization bits (0 = off)"),
     ArgSpec::opt("momentum", "", "0.0", "DGC momentum correction coefficient"),
     ArgSpec::opt("warmup", "", "0", "DGC warm-up rounds (sparsity relaxed dense→target)"),
+    ArgSpec::opt("dropout", "", "0.0", "per-round client crash probability (failure injection)"),
+    ArgSpec::opt("straggler-timeout", "", "0", "collect deadline in simulated seconds (0 = none)"),
+    ArgSpec::opt("min-survivors", "", "1", "abort the round below this many delivered uploads"),
     ArgSpec::opt("backend", "b", "auto", "auto | native | pjrt (AOT artifacts)"),
     ArgSpec::opt("workers", "w", "4", "PJRT executor threads"),
     ArgSpec::opt("artifacts", "", "artifacts", "AOT artifacts directory"),
@@ -125,6 +130,10 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     cfg.quant_bits = (qb > 0).then_some(qb);
     cfg.momentum = args.get_parsed("momentum")?;
     cfg.warmup_rounds = args.get_parsed("warmup")?;
+    cfg.dropout_prob = args.get_parsed("dropout")?;
+    let st: f64 = args.get_parsed("straggler-timeout")?;
+    cfg.straggler_timeout_s = if st > 0.0 { st } else { f64::INFINITY };
+    cfg.min_survivors = args.get_parsed("min-survivors")?;
     Ok(cfg)
 }
 
@@ -157,23 +166,44 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
 
     for round in 0..trainer.cfg.rounds {
         let out = trainer.run_round(round)?;
-        if !quiet {
-            match out.eval {
-                Some((el, ea)) => println!(
-                    "round {:>4}  loss {:.4}  eval_loss {:.4}  acc {:.4}  up {}",
-                    round,
-                    out.mean_train_loss,
-                    el,
-                    ea,
-                    fmt_bytes(trainer.ledger.rounds.last().unwrap().up_paper),
-                ),
-                None => println!(
-                    "round {:>4}  loss {:.4}  nnz/client ~{}",
-                    round,
-                    out.mean_train_loss,
-                    out.nnz.iter().sum::<usize>() / out.nnz.len().max(1),
-                ),
-            }
+        if quiet {
+            continue;
+        }
+        if out.aborted {
+            println!(
+                "round {:>4}  ABORTED: {} of {} uploads arrived (< {} required; {} crashed, {} straggled)",
+                round,
+                out.survivors.len(),
+                out.selected.len(),
+                trainer.cfg.min_survivors,
+                out.dropped.len(),
+                out.stragglers.len(),
+            );
+            continue;
+        }
+        let dead = out.dropped.len() + out.stragglers.len();
+        let failures = if dead > 0 {
+            format!("  [{} dead, {} masks recovered]", dead, out.recovered_pairs)
+        } else {
+            String::new()
+        };
+        match out.eval {
+            Some((el, ea)) => println!(
+                "round {:>4}  loss {:.4}  eval_loss {:.4}  acc {:.4}  up {}{}",
+                round,
+                out.mean_train_loss,
+                el,
+                ea,
+                fmt_bytes(trainer.ledger.rounds.last().unwrap().up_paper),
+                failures,
+            ),
+            None => println!(
+                "round {:>4}  loss {:.4}  nnz/client ~{}{}",
+                round,
+                out.mean_train_loss,
+                out.nnz.iter().sum::<usize>() / out.nnz.len().max(1),
+                failures,
+            ),
         }
     }
 

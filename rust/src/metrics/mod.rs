@@ -2,4 +2,4 @@
 
 pub mod recorder;
 
-pub use recorder::{Recorder, RoundRecord, RunSummary};
+pub use recorder::{PhaseTimings, Recorder, RoundRecord, RunSummary};

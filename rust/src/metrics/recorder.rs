@@ -7,8 +7,76 @@ use std::path::Path;
 
 use crate::util::json::{arr, num, obj, s, Value};
 
+/// Real wall-clock spent in each phase of one federated round (the
+/// round engine's `Select → LocalTrain/Encode → Collect →
+/// Unmask/Recover → Apply → Eval` decomposition). `train_s` is the
+/// wall-clock of the parallel client fan-out; `client_train_cpu_s` /
+/// `client_encode_cpu_s` are CPU-seconds *summed over clients* inside
+/// it (local SGD vs sparsify+mask+encode), so the fan-out's
+/// parallel efficiency is `(train_cpu + encode_cpu) / (workers ·
+/// train_s)`.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseTimings {
+    pub select_s: f64,
+    pub train_s: f64,
+    pub client_train_cpu_s: f64,
+    pub client_encode_cpu_s: f64,
+    pub collect_s: f64,
+    pub recover_s: f64,
+    pub apply_s: f64,
+    pub eval_s: f64,
+}
+
+impl PhaseTimings {
+    /// Total measured wall-clock of the round.
+    pub fn total_s(&self) -> f64 {
+        self.select_s + self.train_s + self.collect_s + self.recover_s + self.apply_s + self.eval_s
+    }
+
+    /// Element-wise accumulate (bench averaging).
+    pub fn accumulate(&mut self, o: &PhaseTimings) {
+        self.select_s += o.select_s;
+        self.train_s += o.train_s;
+        self.client_train_cpu_s += o.client_train_cpu_s;
+        self.client_encode_cpu_s += o.client_encode_cpu_s;
+        self.collect_s += o.collect_s;
+        self.recover_s += o.recover_s;
+        self.apply_s += o.apply_s;
+        self.eval_s += o.eval_s;
+    }
+
+    /// Element-wise scale (bench averaging: `sum.scaled(1.0 / n)`).
+    pub fn scaled(&self, k: f64) -> PhaseTimings {
+        PhaseTimings {
+            select_s: self.select_s * k,
+            train_s: self.train_s * k,
+            client_train_cpu_s: self.client_train_cpu_s * k,
+            client_encode_cpu_s: self.client_encode_cpu_s * k,
+            collect_s: self.collect_s * k,
+            recover_s: self.recover_s * k,
+            apply_s: self.apply_s * k,
+            eval_s: self.eval_s * k,
+        }
+    }
+
+    /// JSON object (machine-readable bench output).
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("select_s", num(self.select_s)),
+            ("train_s", num(self.train_s)),
+            ("client_train_cpu_s", num(self.client_train_cpu_s)),
+            ("client_encode_cpu_s", num(self.client_encode_cpu_s)),
+            ("collect_s", num(self.collect_s)),
+            ("recover_s", num(self.recover_s)),
+            ("apply_s", num(self.apply_s)),
+            ("eval_s", num(self.eval_s)),
+            ("total_s", num(self.total_s())),
+        ])
+    }
+}
+
 /// One row of a training-run trace.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct RoundRecord {
     pub round: u64,
     pub train_loss: f64,
@@ -22,6 +90,13 @@ pub struct RoundRecord {
     pub sim_time_s: f64,
     /// Mean sparsity rate actually used by clients this round.
     pub mean_rate: f64,
+    /// Selected clients whose upload arrived in time.
+    pub survivors: usize,
+    /// Shamir-recovered (survivor, dead) pair masks cancelled this
+    /// round (secure mode; 0 when every client delivered).
+    pub recovered: usize,
+    /// Real wall-clock per phase.
+    pub timings: PhaseTimings,
 }
 
 /// End-of-run summary.
@@ -68,61 +143,75 @@ impl Recorder {
         }
     }
 
+    /// CSV column header. New columns are appended at the end so
+    /// positional readers of the original eight stay valid.
+    const CSV_HEADER: &'static str = "label,round,train_loss,eval_loss,eval_accuracy,up_bytes,\
+                                      wire_bytes,sim_time_s,mean_rate,survivors,recovered,\
+                                      t_train_s,t_collect_s,t_recover_s,t_eval_s";
+
+    fn csv_row(&self, f: &mut dyn Write, r: &RoundRecord) -> std::io::Result<()> {
+        writeln!(
+            f,
+            "{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6},{},{},{:.6},{:.6},{:.6},{:.6}",
+            self.label,
+            r.round,
+            r.train_loss,
+            r.eval_loss,
+            r.eval_accuracy,
+            r.up_bytes,
+            r.wire_bytes,
+            r.sim_time_s,
+            r.mean_rate,
+            r.survivors,
+            r.recovered,
+            r.timings.train_s,
+            r.timings.collect_s,
+            r.timings.recover_s,
+            r.timings.eval_s,
+        )
+    }
+
     /// CSV with a header; figures are plotted straight from this.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::File::create(path)?;
-        writeln!(
-            f,
-            "label,round,train_loss,eval_loss,eval_accuracy,up_bytes,wire_bytes,sim_time_s,mean_rate"
-        )?;
+        writeln!(f, "{}", Self::CSV_HEADER)?;
         for r in &self.rows {
-            writeln!(
-                f,
-                "{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6}",
-                self.label,
-                r.round,
-                r.train_loss,
-                r.eval_loss,
-                r.eval_accuracy,
-                r.up_bytes,
-                r.wire_bytes,
-                r.sim_time_s,
-                r.mean_rate
-            )?;
+            self.csv_row(&mut f, r)?;
         }
         Ok(())
     }
 
-    /// Append rows to an existing CSV (multi-series figures).
+    /// Append rows to an existing CSV (multi-series figures). Refuses
+    /// to append to a file whose header does not match the current
+    /// schema (e.g. a trace written before a column was added) — mixed
+    /// row widths would silently misalign downstream readers.
     pub fn append_csv(&self, path: &Path) -> std::io::Result<()> {
         let exists = path.exists();
+        if exists {
+            let text = std::fs::read_to_string(path)?;
+            let header = text.lines().next().unwrap_or("");
+            if header != Self::CSV_HEADER {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!(
+                        "refusing to append to {path:?}: its header does not match the \
+                         current schema (was it written by an older version?)"
+                    ),
+                ));
+            }
+        }
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
         if !exists {
-            writeln!(
-                f,
-                "label,round,train_loss,eval_loss,eval_accuracy,up_bytes,wire_bytes,sim_time_s,mean_rate"
-            )?;
+            writeln!(f, "{}", Self::CSV_HEADER)?;
         }
         for r in &self.rows {
-            writeln!(
-                f,
-                "{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6}",
-                self.label,
-                r.round,
-                r.train_loss,
-                r.eval_loss,
-                r.eval_accuracy,
-                r.up_bytes,
-                r.wire_bytes,
-                r.sim_time_s,
-                r.mean_rate
-            )?;
+            self.csv_row(&mut f, r)?;
         }
         Ok(())
     }
@@ -158,6 +247,9 @@ impl Recorder {
                             ("wire_bytes", num(r.wire_bytes as f64)),
                             ("sim_time_s", num(r.sim_time_s)),
                             ("mean_rate", num(r.mean_rate)),
+                            ("survivors", num(r.survivors as f64)),
+                            ("recovered", num(r.recovered as f64)),
+                            ("timings", r.timings.to_json()),
                         ])
                     })
                     .collect()),
@@ -180,6 +272,9 @@ mod tests {
             wire_bytes: 80,
             sim_time_s: 0.5,
             mean_rate: 0.01,
+            survivors: 4,
+            recovered: 0,
+            timings: PhaseTimings::default(),
         }
     }
 
@@ -214,6 +309,44 @@ mod tests {
         assert!(lines[0].starts_with("label,round"));
         assert!(lines[1].starts_with("a,0,"));
         assert!(lines[2].starts_with("b,1,"));
+    }
+
+    #[test]
+    fn append_refuses_stale_schema() {
+        let dir = std::env::temp_dir().join(format!("fedsparse-metrics-old-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("old.csv");
+        // a trace written by a pre-survivors version of the schema
+        std::fs::write(&path, "label,round,train_loss\nx,0,1.0\n").unwrap();
+        let mut r = Recorder::new("new");
+        r.push(row(0, 0.5));
+        let err = r.append_csv(&path).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        // the stale file is left untouched
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+    }
+
+    #[test]
+    fn phase_timings_accumulate_and_scale() {
+        let mut sum = PhaseTimings::default();
+        let one = PhaseTimings {
+            select_s: 0.5,
+            train_s: 2.0,
+            client_train_cpu_s: 3.0,
+            client_encode_cpu_s: 1.0,
+            collect_s: 0.25,
+            recover_s: 0.125,
+            apply_s: 0.0625,
+            eval_s: 1.0,
+        };
+        sum.accumulate(&one);
+        sum.accumulate(&one);
+        let mean = sum.scaled(0.5);
+        assert_eq!(mean, one);
+        assert!((one.total_s() - (0.5 + 2.0 + 0.25 + 0.125 + 0.0625 + 1.0)).abs() < 1e-12);
+        // the CPU sums are inside train_s, not added to the total
+        assert!(one.total_s() < 8.0);
     }
 
     #[test]

@@ -21,5 +21,5 @@ pub mod sparse_mask;
 
 pub use dh::{DhKeyPair, DhParams};
 pub use mask::PairwiseMasker;
-pub use protocol::{SecAggClient, SecAggServer, SecAggConfig};
+pub use protocol::{recover_pair_keys, SecAggClient, SecAggConfig, SecAggServer};
 pub use sparse_mask::{mask_sparsify, CaseCensus, MaskSparsifyConfig, MaskedUpdate};

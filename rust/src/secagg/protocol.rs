@@ -148,16 +148,34 @@ impl SecAggServer {
         for (_, p) in payloads {
             p.add_into(&mut acc);
         }
-        if dropped.is_empty() {
-            return acc;
-        }
-        // Remove the uncancelled halves: for each survivor v and
-        // dropped u, regenerate the (v,u) sparse mask and subtract v's
-        // signed contribution.
+        let survivors: Vec<u32> = payloads.iter().map(|(v, _)| *v).collect();
         let participants = payloads.len() + dropped.len();
+        self.cancel_dead_masks(&mut acc, round, &survivors, dropped, recovered_keys, participants);
+        acc
+    }
+
+    /// Remove the uncancelled mask halves left by `dead` clients: for
+    /// each survivor v and dead u, regenerate the (v, u) sparse pair
+    /// mask from the reconstructed pair key and subtract v's signed
+    /// contribution from `acc`. `participants` is the full round cohort
+    /// size (survivors + dead) — the σ the clients used when masking
+    /// (Eq. 4), which must match or cancellation misses positions.
+    pub fn cancel_dead_masks(
+        &self,
+        acc: &mut [f32],
+        round: u64,
+        survivors: &[u32],
+        dead: &[u32],
+        recovered_keys: &HashMap<(u32, u32), [u8; 32]>,
+        participants: usize,
+    ) {
+        if dead.is_empty() {
+            return;
+        }
+        let n = acc.len();
         let sigma = self.range.sigma(self.mask_ratio_k, participants);
-        for &(v, ref _payload) in payloads {
-            for &u in dropped {
+        for &v in survivors {
+            for &u in dead {
                 let key = recovered_keys
                     .get(&(v, u))
                     .or_else(|| recovered_keys.get(&(u, v)))
@@ -169,7 +187,6 @@ impl SecAggServer {
                 }
             }
         }
-        acc
     }
 
     /// Reconstruct the (owner, peer) pair key from survivors' shares.
@@ -189,6 +206,39 @@ impl SecAggServer {
             .collect();
         shamir::reconstruct_seed(&limbs)
     }
+}
+
+/// Server-side dropout recovery (Bonawitz'17 unmasking round): gather
+/// ≥ `share_threshold` Shamir shares of every (survivor, dead) pair key
+/// from the *surviving* clients and reconstruct the keys the server
+/// needs to cancel the dead clients' orphaned masks.
+///
+/// Returns `None` when the survivors cannot muster the threshold for
+/// some pair (setup ran with `share_keys: false`, or too few clients
+/// remain) — the caller must abort the round rather than apply a
+/// mask-corrupted aggregate.
+pub fn recover_pair_keys(
+    clients: &[SecAggClient],
+    server: &SecAggServer,
+    survivors: &[u32],
+    dead: &[u32],
+) -> Option<HashMap<(u32, u32), [u8; 32]>> {
+    let mut recovered = HashMap::new();
+    for &u in dead {
+        for &v in survivors {
+            let pair = if v < u { (v, u) } else { (u, v) };
+            let share_sets: Vec<Vec<Share>> = survivors
+                .iter()
+                .filter_map(|&w| clients[w as usize].shares_for(pair.0, pair.1).cloned())
+                .take(server.share_threshold)
+                .collect();
+            if share_sets.len() < server.share_threshold {
+                return None;
+            }
+            recovered.insert((v, u), server.reconstruct_pair_key(&share_sets));
+        }
+    }
+    Some(recovered)
 }
 
 /// Run the full setup phase: DH key generation + all-pairs agreement +
@@ -345,6 +395,37 @@ mod tests {
                 expect[j]
             );
         }
+    }
+
+    #[test]
+    fn recover_pair_keys_matches_manual_reconstruction() {
+        let cfg = SecAggConfig { share_threshold: 2, ..Default::default() };
+        let (clients, server) = full_setup(5, 21, &cfg);
+        let survivors = [0u32, 1, 3];
+        let dead = [2u32, 4];
+        let rec = recover_pair_keys(&clients, &server, &survivors, &dead)
+            .expect("threshold met: 3 survivors hold shares");
+        // every (survivor, dead) pair recovered, and each key matches a
+        // by-hand reconstruction from the same share sets
+        assert_eq!(rec.len(), survivors.len() * dead.len());
+        for &u in &dead {
+            for &v in &survivors {
+                let pair = if v < u { (v, u) } else { (u, v) };
+                let share_sets: Vec<Vec<Share>> = survivors
+                    .iter()
+                    .filter_map(|&w| clients[w as usize].shares_for(pair.0, pair.1).cloned())
+                    .take(2)
+                    .collect();
+                assert_eq!(rec[&(v, u)], server.reconstruct_pair_key(&share_sets));
+            }
+        }
+    }
+
+    #[test]
+    fn recover_pair_keys_fails_without_share_material() {
+        let cfg = SecAggConfig { share_keys: false, ..Default::default() };
+        let (clients, server) = full_setup(4, 23, &cfg);
+        assert!(recover_pair_keys(&clients, &server, &[0, 1, 2], &[3]).is_none());
     }
 
     #[test]

@@ -176,6 +176,80 @@ fn residuals_accumulate_across_rounds() {
     assert!(trainer.clients.iter().all(|c| c.participation == 4));
 }
 
+#[test]
+fn dropout_aggregates_survivors_only() {
+    let mut cfg = native_cfg("mnist_mlp");
+    cfg.rounds = 3;
+    cfg.eval_every = 99;
+    cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+    cfg.dropout_prob = 0.3;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let mut saw_dropout = false;
+    let mut survivor_total = 0u64;
+    for round in 0..3 {
+        let out = trainer.run_round(round).unwrap();
+        assert!(!out.aborted, "round {round}: enough survivors for min_survivors=1");
+        assert_eq!(
+            out.survivors.len() + out.dropped.len() + out.stragglers.len(),
+            out.selected.len()
+        );
+        // per-survivor rows stay aligned
+        assert_eq!(out.nnz.len(), out.survivors.len());
+        assert_eq!(out.wire_bytes.len(), out.survivors.len());
+        assert!(out.mean_train_loss.is_finite());
+        assert!(out.timings.train_s > 0.0, "phase timings must be measured");
+        saw_dropout |= !out.dropped.is_empty();
+        survivor_total += out.survivors.len() as u64;
+    }
+    // seed 42 drops clients in rounds 0 and 2 (deterministic plan)
+    assert!(saw_dropout, "seeded failure plan must produce dropouts");
+    // participation counts only delivered rounds — single owner check
+    let participation: u64 = trainer.clients.iter().map(|c| c.participation).sum();
+    assert_eq!(participation, survivor_total);
+}
+
+#[test]
+fn impossible_deadline_strands_everyone_and_aborts() {
+    // every delivery needs at least rtt/2 + download time, so a
+    // microsecond deadline times out all uploads regardless of seed
+    let mut cfg = native_cfg("mnist_mlp");
+    cfg.rounds = 1;
+    cfg.eval_every = 99;
+    cfg.straggler_timeout_s = 1e-6;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let global_before = trainer.global.data.clone();
+    let out = trainer.run_round(0).unwrap();
+    assert!(out.aborted);
+    assert!(out.survivors.is_empty());
+    assert_eq!(out.stragglers.len(), out.selected.len());
+    assert!(out.dropped.is_empty());
+    assert_eq!(trainer.global.data, global_before);
+}
+
+#[test]
+fn generous_deadline_is_bitwise_identical_to_no_injection() {
+    // a finite-but-unreachable deadline turns the snapshot/rollback
+    // machinery on without ever killing a client: the trained model
+    // must be bit-for-bit the same as the failure-free path (the
+    // straggler jitter only shifts simulated time, never payloads)
+    let run = |timeout: f64| {
+        let mut cfg = native_cfg("mnist_mlp");
+        cfg.rounds = 2;
+        cfg.eval_every = 99;
+        cfg.straggler_timeout_s = timeout;
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run().unwrap();
+        (t.global.data.clone(), t.clients.iter().map(|c| c.participation).sum::<u64>())
+    };
+    let (plain, part_plain) = run(f64::INFINITY);
+    let (injected, part_injected) = run(1e6);
+    assert!(
+        plain.iter().zip(&injected).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "failure-injection plumbing must not perturb the failure-free path"
+    );
+    assert_eq!(part_plain, part_injected);
+}
+
 /// Artifact-dependent checks: only meaningful when the PJRT path is
 /// compiled in, and still skipped at runtime pre-`make artifacts`.
 #[cfg(feature = "pjrt")]

@@ -283,6 +283,108 @@ fn secure_trainer_masks_cancel_every_round() {
     );
 }
 
+/// Tentpole e2e: full secure `Trainer` run with transport failure
+/// injection. Every round of this seeded configuration loses 1–3 of
+/// the 6 selected clients mid-round (after they built their pair
+/// masks), so the engine's Unmask/Recover phase must Shamir-
+/// reconstruct the dead clients' pair keys and cancel their orphaned
+/// masks — and the recovered aggregate must still match the
+/// *survivors'* audited plaintext sum at every position.
+#[test]
+fn secure_trainer_recovers_dropped_clients() {
+    let mut cfg = secure_trainer_cfg();
+    cfg.clients = 8;
+    cfg.clients_per_round = 6;
+    cfg.mask_ratio_k = 0.5;
+    cfg.audit_secure_sum = true;
+    cfg.dropout_prob = 0.25;
+    cfg.min_survivors = 2;
+    cfg.rounds = 4;
+    cfg.eval_every = 99;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let mut saw_dropout = false;
+    let mut losses = Vec::new();
+    for round in 0..4 {
+        let out = trainer.run_round(round).unwrap();
+        assert!(!out.aborted, "round {round} aborted unexpectedly");
+        let dead = out.dropped.len() + out.stragglers.len();
+        assert_eq!(
+            out.survivors.len() + dead,
+            out.selected.len(),
+            "round {round}: selected set must partition into survivors + dead"
+        );
+        assert_eq!(out.nnz.len(), out.survivors.len());
+        if dead > 0 {
+            saw_dropout = true;
+            // one recovered pair key per (survivor, dead) pair
+            assert_eq!(out.recovered_pairs, dead * out.survivors.len(), "round {round}");
+        }
+        let plain = out.plain_sum.as_ref().expect("audit enabled");
+        let max_err = out
+            .aggregate
+            .iter()
+            .zip(plain)
+            .map(|(&a, &p)| (a as f64 - p).abs())
+            .fold(0.0f64, f64::max);
+        assert!(
+            max_err < 5e-3,
+            "round {round}: mask residue {max_err} with {dead} dead clients"
+        );
+        losses.push(out.mean_train_loss);
+    }
+    // this seed drops clients in every round (verified against the
+    // deterministic FailurePlan draws) — the assertion guards against
+    // silently testing the failure-free path
+    assert!(saw_dropout, "seed 42 must produce dropouts");
+    // and training still makes progress on the survivor cohorts
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "dropout-recovered training made no progress: {losses:?}"
+    );
+    // only delivered rounds count toward participation
+    let total_participation: u64 = trainer.clients.iter().map(|c| c.participation).sum();
+    let total_survivors: u64 = trainer.recorder.rows.iter().map(|r| r.survivors as u64).sum();
+    assert_eq!(total_participation, total_survivors);
+}
+
+/// Negative test: when dropout leaves fewer than `min_survivors`
+/// uploads, the round aborts cleanly — global model untouched, every
+/// client rolled back, no aggregate — instead of applying a
+/// mask-corrupted or under-represented update.
+#[test]
+fn round_aborts_below_min_survivors() {
+    let mut cfg = secure_trainer_cfg();
+    cfg.dropout_prob = 0.95; // this seed: all 4 selected clients crash
+    cfg.min_survivors = cfg.clients_per_round;
+    cfg.rounds = 1;
+    cfg.eval_every = 99;
+    let mut trainer = Trainer::new(cfg).unwrap();
+    let global_before = trainer.global.data.clone();
+
+    let out = trainer.run_round(0).unwrap();
+    assert!(out.aborted, "expected an aborted round");
+    assert!(out.survivors.len() < trainer.cfg.min_survivors);
+    assert!(out.aggregate.is_empty(), "aborted rounds produce no aggregate");
+    assert!(out.eval.is_none());
+    assert!(
+        trainer
+            .global
+            .data
+            .iter()
+            .zip(&global_before)
+            .all(|(a, b)| a.to_bits() == b.to_bits()),
+        "aborted round must not touch the global model"
+    );
+    assert!(
+        trainer.clients.iter().all(|c| c.participation == 0),
+        "aborted round must not count as participation"
+    );
+    // the round is still recorded (one row per round, accuracy NaN)
+    assert_eq!(trainer.recorder.rows.len(), 1);
+    assert!(trainer.recorder.rows[0].eval_accuracy.is_nan());
+    assert_eq!(trainer.recorder.rows[0].survivors, out.survivors.len());
+}
+
 /// Mask range sigma arithmetic (Eq. 4) at protocol level.
 #[test]
 fn sigma_boundaries() {
