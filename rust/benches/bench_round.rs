@@ -62,6 +62,7 @@ fn main() {
     let mut cases: Vec<Value> = Vec::new();
     for (label, alg, secure) in contenders {
         let mut trainer = Trainer::new(cfg_for(alg, secure)).unwrap();
+        let n = trainer.model_params();
         let mut round = 0u64;
         // warm the executable cache before measuring
         trainer.run_round(round).unwrap();
@@ -78,6 +79,7 @@ fn main() {
         let phases = phase_sum.scaled(1.0 / phase_n.max(1) as f64);
         cases.push(obj(vec![
             ("name", s(&stats.name)),
+            ("n", num(n as f64)),
             ("iters", num(stats.iters as f64)),
             ("mean_s", num(stats.mean.as_secs_f64())),
             ("std_dev_s", num(stats.std_dev.as_secs_f64())),
@@ -88,6 +90,9 @@ fn main() {
         ]));
     }
 
+    // Bench::finish writes the generic schema; overwrite with the
+    // phase-annotated report (same base fields + `phases`, including
+    // the new mask_gen_s column the streaming σ-filter is judged on).
     b.finish();
 
     let report = obj(vec![("bench", s("round")), ("cases", arr(cases))]);

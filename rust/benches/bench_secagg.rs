@@ -40,6 +40,15 @@ fn main() {
         black_box(masker.sparse_combined_mask(3, n, sigma));
     });
 
+    // same sweep through caller-owned scratch (the round engine's
+    // zero-allocation path — no dense stream, no fresh accumulators)
+    let mut acc = Vec::new();
+    let mut nz = Vec::new();
+    b.bench_throughput("mask/sparse_combined_into/159k", n as u64, || {
+        masker.sparse_combined_mask_into(3, n, sigma, &mut acc, &mut nz);
+        black_box((&acc, &nz));
+    });
+
     // full client-side masked update
     let mut rng = Rng::new(3);
     let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.05)).collect();

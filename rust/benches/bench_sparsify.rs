@@ -6,7 +6,7 @@
 //!     FEDSPARSE_BENCH_QUICK=1 cargo bench …   (CI-speed)
 
 use fedsparse::sparse::flat::{apply_threshold, flat_topk_sparsify};
-use fedsparse::sparse::thgs::{thgs_sparsify, ThgsConfig};
+use fedsparse::sparse::thgs::{thgs_sparsify, thgs_sparsify_into, ThgsConfig};
 use fedsparse::sparse::topk::threshold_for_topk_abs;
 use fedsparse::util::bench::{black_box, Bench};
 use fedsparse::util::rng::Rng;
@@ -38,6 +38,15 @@ fn main() {
     let cfg = ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 };
     b.bench_throughput("thgs/mlp159k", 159_010, || {
         black_box(thgs_sparsify(&g, &spans, &cfg));
+    });
+
+    // same split through caller-owned scratch (the round engine's
+    // zero-allocation path)
+    let mut scratch = Vec::new();
+    let mut out = fedsparse::sparse::flat::SparsifyOut::default();
+    b.bench_throughput("thgs_into/mlp159k", 159_010, || {
+        thgs_sparsify_into(&g, &spans, &cfg, &mut scratch, &mut out);
+        black_box(&out);
     });
 
     // split the two halves: selection vs application

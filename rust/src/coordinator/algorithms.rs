@@ -1,7 +1,7 @@
 //! The update-compression algorithms under test (§5's contenders).
 
-use crate::sparse::flat::{flat_topk_sparsify, SparsifyOut};
-use crate::sparse::thgs::{thgs_sparsify, ThgsConfig};
+use crate::sparse::flat::{flat_topk_sparsify_into, SparsifyOut};
+use crate::sparse::thgs::{thgs_sparsify_into, ThgsConfig};
 
 /// Which client-update algorithm a run uses.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -106,26 +106,46 @@ impl Algorithm {
         layer_spans: &[(usize, usize)],
         rate_scale: f64,
     ) -> SparsifyOut {
+        let mut out = SparsifyOut::default();
+        self.sparsify_into(update, layer_spans, rate_scale, &mut Vec::new(), &mut out);
+        out
+    }
+
+    /// [`Self::sparsify`] into caller-owned scratch + output — the
+    /// round engine's zero-allocation path (`scratch` feeds the Top-k
+    /// magnitude selection; STC still allocates internally, it is not
+    /// on the steady-state round path).
+    pub fn sparsify_into(
+        &self,
+        update: &[f32],
+        layer_spans: &[(usize, usize)],
+        rate_scale: f64,
+        scratch: &mut Vec<f32>,
+        out: &mut SparsifyOut,
+    ) {
         match self {
-            Algorithm::FedAvg | Algorithm::FedProx { .. } => SparsifyOut {
-                sparse: update.to_vec(),
-                residual: vec![0f32; update.len()],
-                nnz: update.len(),
-                thresholds: vec![0.0],
-            },
+            Algorithm::FedAvg | Algorithm::FedProx { .. } => {
+                out.sparse.clear();
+                out.sparse.extend_from_slice(update);
+                out.residual.clear();
+                out.residual.resize(update.len(), 0.0);
+                out.nnz = update.len();
+                out.thresholds.clear();
+                out.thresholds.push(0.0);
+            }
             Algorithm::FlatSparse { s } => {
-                flat_topk_sparsify(update, (s * rate_scale).clamp(1e-9, 1.0))
+                flat_topk_sparsify_into(update, (s * rate_scale).clamp(1e-9, 1.0), scratch, out)
             }
             Algorithm::Thgs(t) => {
                 let cfg = ThgsConfig {
                     s0: (t.s0 * rate_scale).clamp(t.s_min.min(1e-9), 1.0),
                     ..*t
                 };
-                thgs_sparsify(update, layer_spans, &cfg)
+                thgs_sparsify_into(update, layer_spans, &cfg, scratch, out)
             }
             Algorithm::Stc { s } => {
-                crate::sparse::stc::stc_sparsify(update, (s * rate_scale).clamp(1e-9, 1.0))
-                    .sparsify
+                *out = crate::sparse::stc::stc_sparsify(update, (s * rate_scale).clamp(1e-9, 1.0))
+                    .sparsify;
             }
         }
     }

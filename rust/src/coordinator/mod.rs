@@ -21,5 +21,5 @@ pub mod trainer;
 
 pub use algorithms::Algorithm;
 pub use client::{ClientSnapshot, ClientState};
-pub use round::{ClientPipeline, Cohort, RoundOutcome};
+pub use round::{ClientPipeline, ClientWorkspace, Cohort, RoundOutcome, WorkspacePool};
 pub use trainer::Trainer;

@@ -34,7 +34,7 @@
 //! only the communication that actually happened is metered.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
@@ -42,10 +42,12 @@ use crate::comm::transport::{Delivery, UplinkFrame};
 use crate::data::Dataset;
 use crate::metrics::recorder::{PhaseTimings, RoundRecord};
 use crate::models::params::ParamVector;
-use crate::runtime::ModelRunner;
+use crate::runtime::{ModelRunner, Workspace};
 use crate::secagg::protocol::{recover_pair_keys, SecAggClient, SecAggServer};
+use crate::secagg::sparse_mask::{MaskScratch, MaskedUpdate};
 use crate::sparse::codec::SparseVec;
 use crate::sparse::dynamic::DynamicRate;
+use crate::sparse::flat::SparsifyOut;
 use crate::sparse::momentum::MomentumCorrector;
 use crate::sparse::residual::ResidualStore;
 use crate::util::rng::Rng;
@@ -55,6 +57,58 @@ use super::algorithms::Algorithm;
 use super::client::ClientSnapshot;
 use super::selection::select_clients;
 use super::trainer::Trainer;
+
+/// Per-worker reusable scratch for the full client round path
+/// (LocalTrain → Sparsify → Mask → Encode). Every model-sized buffer
+/// the path touches lives here, sized on first use and reused for the
+/// rest of the run, so the steady-state per-client path performs zero
+/// model-sized heap allocations (pinned by
+/// `tests/alloc_steady_state.rs`).
+#[derive(Default)]
+pub struct ClientWorkspace {
+    /// Backend activation/delta scratch ([`Workspace`]).
+    backend: Workspace,
+    /// Flat gradient of one SGD step.
+    grads: Vec<f32>,
+    /// The client's local model, reset from the global snapshot.
+    local: ParamVector,
+    /// Δw = local − global after the E local iterations.
+    update: Vec<f32>,
+    /// Sampled batch indices / pixels / labels.
+    batch_idx: Vec<usize>,
+    x: Vec<f32>,
+    y: Vec<i32>,
+    /// Top-k magnitude-selection scratch.
+    topk: Vec<f32>,
+    /// Sparse/residual split output.
+    sparsify: SparsifyOut,
+    /// Secure mode: Top-k keep pattern, round peer ids, combined-mask
+    /// scratch, and the masked-update output.
+    keep: Vec<bool>,
+    peers: Vec<u32>,
+    mask: MaskScratch,
+    masked: MaskedUpdate,
+}
+
+/// Shared pool of [`ClientWorkspace`]s, owned by the [`Trainer`] so
+/// the warm buffers survive across rounds: a worker pops one per job
+/// and returns it afterwards, so the pool grows to the worker pool's
+/// concurrency during the first round and then every later round
+/// reuses the same allocations.
+#[derive(Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<ClientWorkspace>>,
+}
+
+impl WorkspacePool {
+    fn acquire(&self) -> ClientWorkspace {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn release(&self, ws: ClientWorkspace) {
+        self.free.lock().unwrap().push(ws);
+    }
+}
 
 /// What one round produced (returned for tests/harnesses).
 #[derive(Clone, Debug)]
@@ -122,6 +176,9 @@ pub struct ClientResult {
     train_s: f64,
     /// CPU-seconds this client spent in sparsify+mask+encode.
     encode_s: f64,
+    /// CPU-seconds of `encode_s` spent generating/applying pair masks
+    /// (secure mode; 0 in plain runs).
+    mask_s: f64,
 }
 
 /// Phase 1 output: the round's selected participant set.
@@ -176,6 +233,9 @@ pub struct ClientPipeline {
     layer_spans: Arc<Vec<(usize, usize)>>,
     secagg: Option<Arc<(Vec<SecAggClient>, SecAggServer)>>,
     selected: Arc<Vec<u32>>,
+    /// Trainer-owned workspace pool (warm buffers persist across
+    /// rounds; see [`WorkspacePool`]).
+    workspaces: Arc<WorkspacePool>,
     round: u64,
     seed: u64,
     iters: usize,
@@ -203,6 +263,7 @@ impl ClientPipeline {
             layer_spans: Arc::new(trainer.layer_spans.clone()),
             secagg: trainer.secagg.clone(),
             selected,
+            workspaces: Arc::clone(&trainer.client_workspaces),
             round,
             seed: cfg.seed,
             iters: cfg.local_iters,
@@ -223,43 +284,56 @@ impl ClientPipeline {
     /// One client's full round path: local SGD (E iterations), DGC
     /// momentum correction, residual fold-in, Eq. 2 rate, sparsify,
     /// (secure) mask + encode. Pure in the job + context — no shared
-    /// mutable state, so jobs parallelize freely.
+    /// mutable state, so jobs parallelize freely; the model-sized
+    /// scratch comes from the trainer's [`WorkspacePool`].
     pub fn run(&self, job: ClientJob) -> Result<ClientResult> {
+        let mut ws = self.workspaces.acquire();
+        let out = self.run_in(job, &mut ws);
+        self.workspaces.release(ws);
+        out
+    }
+
+    /// [`Self::run`] against explicit scratch. Every step writes into
+    /// `ws` buffers; the only per-call allocations are the k-sized
+    /// wire payload (and the audit vector when enabled).
+    fn run_in(&self, job: ClientJob, ws: &mut ClientWorkspace) -> Result<ClientResult> {
         let ClientJob { cid, indices, mut residual, mut rate, mut momentum } = job;
         let round = self.round;
 
         // -- LocalTrain: E local SGD iterations --
         let sw = Stopwatch::start();
-        let mut local = (*self.global).clone();
+        ws.local.copy_from(&self.global);
         let mut rng = Rng::new(
             self.seed ^ (cid as u64) << 32 ^ round.wrapping_mul(0x2545_F491_4F6C_DD1D),
         );
         let mut loss_sum = 0f64;
         for _ in 0..self.iters {
-            let batch_idx: Vec<usize> = (0..self.batch)
-                .map(|_| indices[rng.below(indices.len() as u64) as usize])
-                .collect();
-            let (x, y) = self.data.batch(&batch_idx);
-            let (loss, mut grads) = self.runner.grad(&local, &x, &y)?;
-            if let Some(mu) = self.prox_mu {
-                local.add_prox_term(&mut grads, &self.global, mu);
+            ws.batch_idx.clear();
+            for _ in 0..self.batch {
+                ws.batch_idx.push(indices[rng.below(indices.len() as u64) as usize]);
             }
-            local.sgd_step(&grads, self.lr);
+            self.data.batch_into(&ws.batch_idx, &mut ws.x, &mut ws.y);
+            let loss =
+                self.runner.grad_into(&ws.local, &ws.x, &ws.y, &mut ws.backend, &mut ws.grads)?;
+            if let Some(mu) = self.prox_mu {
+                ws.local.add_prox_term(&mut ws.grads, &self.global, mu);
+            }
+            ws.local.sgd_step(&ws.grads, self.lr);
             loss_sum += loss as f64;
         }
         let mean_loss = loss_sum / self.iters as f64;
-        let mut update = local.delta_from(&self.global);
+        ws.local.delta_into(&self.global, &mut ws.update);
         let train_s = sw.elapsed_secs();
 
         // -- Sparsify/Encode --
         let sw = Stopwatch::start();
         // DGC momentum correction (before residual fold)
         if let Some(mc) = &mut momentum {
-            update = mc.correct(&update);
+            mc.correct_in_place(&mut ws.update);
         }
 
         // residual fold + Eq.2 rate + DGC warm-up
-        residual.fold_into(&mut update);
+        residual.fold_into(&mut ws.update);
         let mut scale = match (self.dynamic, &mut rate) {
             (true, Some(ctrl)) => ctrl.observe(round, mean_loss) / self.base_rate,
             _ => {
@@ -278,30 +352,51 @@ impl ClientPipeline {
         }
 
         // sparsify + (secure) encode
-        let out = self.algorithm.sparsify(&update, &self.layer_spans, scale);
+        self.algorithm.sparsify_into(
+            &ws.update,
+            &self.layer_spans,
+            scale,
+            &mut ws.topk,
+            &mut ws.sparsify,
+        );
         if let Some(mc) = &mut momentum {
-            mc.mask_sent(&out.sparse); // DGC momentum factor masking
+            mc.mask_sent(&ws.sparsify.sparse); // DGC momentum factor masking
         }
-        let nnz_rate = out.nnz as f64 / self.m as f64;
+        let nnz_rate = ws.sparsify.nnz as f64 / self.m as f64;
         let mut plain: Option<Vec<f32>> = None;
-        let payload: SparseVec = if let Some(sec) = &self.secagg {
-            let keep: Vec<bool> = out.sparse.iter().map(|&v| v != 0.0).collect();
-            let peers: Vec<u32> =
-                self.selected.iter().copied().filter(|&p| p != cid).collect();
-            let mu = sec.0[cid as usize].build_update_among(&update, &keep, round, &peers);
+        let mut mask_s = 0f64;
+        let (encoded, counted_nnz) = if let Some(sec) = &self.secagg {
+            ws.keep.clear();
+            ws.keep.extend(ws.sparsify.sparse.iter().map(|&v| v != 0.0));
+            ws.peers.clear();
+            ws.peers.extend(self.selected.iter().copied().filter(|&p| p != cid));
+            let sw_mask = Stopwatch::start();
+            sec.0[cid as usize].build_update_among_into(
+                &ws.update,
+                &ws.keep,
+                round,
+                &ws.peers,
+                &mut ws.mask,
+                &mut ws.masked,
+            );
+            mask_s = sw_mask.elapsed_secs();
             if self.audit {
                 // what ships minus the masks: exact in f32,
                 // since the residual is g or 0 positionwise
-                plain = Some(update.iter().zip(&mu.residual).map(|(u, r)| u - r).collect());
+                plain = Some(
+                    ws.update.iter().zip(&ws.masked.residual).map(|(u, r)| u - r).collect(),
+                );
             }
-            residual.store(&mu.residual);
-            mu.payload
+            residual.store(&ws.masked.residual);
+            // secagg is only built in secure mode, where transmitted
+            // positions are always counted sparsely
+            (ws.masked.payload.encode(), ws.masked.payload.nnz())
         } else {
-            residual.store(&out.residual);
-            let sv = SparseVec::from_dense(&out.sparse);
+            residual.store(&ws.sparsify.residual);
+            let sv = SparseVec::from_dense(&ws.sparsify.sparse);
             // QSGD-style stochastic quantization (lossy; the
             // server receives the dequantized values)
-            if let Some(bits) = self.quant_bits {
+            let sv = if let Some(bits) = self.quant_bits {
                 let mut qrng = Rng::new(self.seed ^ 0x9a_17 ^ (cid as u64) << 16 ^ round);
                 let q = crate::sparse::quant::quantize(
                     &sv,
@@ -311,11 +406,11 @@ impl ClientPipeline {
                 crate::sparse::quant::dequantize(&q)
             } else {
                 sv
-            }
+            };
+            let counted =
+                if self.algorithm.is_sparse() || self.secure { sv.nnz() } else { self.m };
+            (sv.encode(), counted)
         };
-        let counted_nnz =
-            if self.algorithm.is_sparse() || self.secure { payload.nnz() } else { self.m };
-        let encoded = payload.encode();
         let encode_s = sw.elapsed_secs();
         Ok(ClientResult {
             cid,
@@ -330,6 +425,7 @@ impl ClientPipeline {
             nnz_rate,
             train_s,
             encode_s,
+            mask_s,
         })
     }
 }
@@ -374,6 +470,7 @@ impl Trainer {
         timings.train_s = sw.elapsed_secs();
         timings.client_train_cpu_s = results.iter().map(|r| r.train_s).sum();
         timings.client_encode_cpu_s = results.iter().map(|r| r.encode_s).sum();
+        timings.mask_gen_s = results.iter().map(|r| r.mask_s).sum();
 
         // ---- Collect (transport + survivor filter) -----------------
         let sw = Stopwatch::start();
@@ -471,6 +568,30 @@ impl Trainer {
             plain_sum: aggregated.plain_sum,
             timings,
         })
+    }
+
+    /// Drive JUST the per-client path (Select → LocalTrain →
+    /// Sparsify/Encode) for every selected client, inline on the
+    /// caller thread, committing the evolved state — no transport,
+    /// aggregation, apply, or eval. The perf/alloc harnesses use this
+    /// to observe the per-client hot path in isolation; the full
+    /// engine is exercised by [`Trainer::run_round`]. Returns the mean
+    /// local train loss.
+    pub fn run_client_phases(&mut self, round: u64) -> Result<f64> {
+        let cohort = self.phase_select(round);
+        let pipeline =
+            ClientPipeline::for_round(self, round, Arc::new(cohort.selected.clone()));
+        let mut loss_sum = 0f64;
+        let k = cohort.selected.len();
+        for &cid in &cohort.selected {
+            let cs = &mut self.clients[cid as usize];
+            let (residual, rate, momentum) = cs.take_round_state();
+            let job = ClientJob { cid, indices: cs.data.clone(), residual, rate, momentum };
+            let r = pipeline.run(job)?;
+            loss_sum += r.mean_loss;
+            self.clients[cid as usize].commit_round(r.residual, r.rate, r.momentum, r.mean_loss);
+        }
+        Ok(loss_sum / k as f64)
     }
 
     /// Best-effort rollback after a mid-round error: restore whatever

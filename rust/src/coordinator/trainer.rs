@@ -67,6 +67,10 @@ pub struct Trainer {
     pub transport: Transport,
     pub(crate) base_rate: f64,
     pub(crate) mask_cache: crate::secagg::mask::MaskCache,
+    /// Per-worker client scratch, reused across rounds (the warm
+    /// buffers are what make the steady-state per-client path
+    /// allocation-free; see [`super::round::WorkspacePool`]).
+    pub(crate) client_workspaces: Arc<super::round::WorkspacePool>,
 }
 
 impl Trainer {
@@ -177,6 +181,7 @@ impl Trainer {
             cfg,
             base_rate,
             mask_cache,
+            client_workspaces: Default::default(),
         })
     }
 

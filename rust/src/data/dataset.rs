@@ -169,14 +169,25 @@ impl Dataset {
     /// Materialize a batch: NHWC f32 pixels + i32 labels, in the order
     /// of `indices`.
     pub fn batch(&self, indices: &[usize]) -> (Vec<f32>, Vec<i32>) {
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        self.batch_into(indices, &mut xs, &mut ys);
+        (xs, ys)
+    }
+
+    /// [`Self::batch`] into caller-owned buffers (resized to fit) —
+    /// the round engine's per-worker workspaces reuse these across
+    /// every local SGD iteration, so the steady-state training loop
+    /// allocates no batch buffers.
+    pub fn batch_into(&self, indices: &[usize], xs: &mut Vec<f32>, ys: &mut Vec<i32>) {
         let m = self.sample_len();
-        let mut xs = vec![0f32; indices.len() * m];
-        let mut ys = Vec::with_capacity(indices.len());
+        xs.clear();
+        xs.resize(indices.len() * m, 0.0);
+        ys.clear();
         for (row, &idx) in indices.iter().enumerate() {
             self.fill_sample(idx, &mut xs[row * m..(row + 1) * m]);
             ys.push(self.label(idx) as i32);
         }
-        (xs, ys)
     }
 }
 

@@ -14,13 +14,16 @@ use crate::util::json::{arr, num, obj, s, Value};
 /// `client_encode_cpu_s` are CPU-seconds *summed over clients* inside
 /// it (local SGD vs sparsify+mask+encode), so the fan-out's
 /// parallel efficiency is `(train_cpu + encode_cpu) / (workers ·
-/// train_s)`.
+/// train_s)`. `mask_gen_s` is the slice of `client_encode_cpu_s`
+/// spent generating/applying pair masks (secure mode; 0 otherwise) —
+/// the mask-PRG trajectory the streaming σ-filter is judged on.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct PhaseTimings {
     pub select_s: f64,
     pub train_s: f64,
     pub client_train_cpu_s: f64,
     pub client_encode_cpu_s: f64,
+    pub mask_gen_s: f64,
     pub collect_s: f64,
     pub recover_s: f64,
     pub apply_s: f64,
@@ -39,6 +42,7 @@ impl PhaseTimings {
         self.train_s += o.train_s;
         self.client_train_cpu_s += o.client_train_cpu_s;
         self.client_encode_cpu_s += o.client_encode_cpu_s;
+        self.mask_gen_s += o.mask_gen_s;
         self.collect_s += o.collect_s;
         self.recover_s += o.recover_s;
         self.apply_s += o.apply_s;
@@ -52,6 +56,7 @@ impl PhaseTimings {
             train_s: self.train_s * k,
             client_train_cpu_s: self.client_train_cpu_s * k,
             client_encode_cpu_s: self.client_encode_cpu_s * k,
+            mask_gen_s: self.mask_gen_s * k,
             collect_s: self.collect_s * k,
             recover_s: self.recover_s * k,
             apply_s: self.apply_s * k,
@@ -66,6 +71,7 @@ impl PhaseTimings {
             ("train_s", num(self.train_s)),
             ("client_train_cpu_s", num(self.client_train_cpu_s)),
             ("client_encode_cpu_s", num(self.client_encode_cpu_s)),
+            ("mask_gen_s", num(self.mask_gen_s)),
             ("collect_s", num(self.collect_s)),
             ("recover_s", num(self.recover_s)),
             ("apply_s", num(self.apply_s)),
@@ -147,12 +153,12 @@ impl Recorder {
     /// positional readers of the original eight stay valid.
     const CSV_HEADER: &'static str = "label,round,train_loss,eval_loss,eval_accuracy,up_bytes,\
                                       wire_bytes,sim_time_s,mean_rate,survivors,recovered,\
-                                      t_train_s,t_collect_s,t_recover_s,t_eval_s";
+                                      t_train_s,t_collect_s,t_recover_s,t_eval_s,t_mask_gen_s";
 
     fn csv_row(&self, f: &mut dyn Write, r: &RoundRecord) -> std::io::Result<()> {
         writeln!(
             f,
-            "{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6},{},{},{:.6},{:.6},{:.6},{:.6}",
+            "{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6},{},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
             self.label,
             r.round,
             r.train_loss,
@@ -168,6 +174,7 @@ impl Recorder {
             r.timings.collect_s,
             r.timings.recover_s,
             r.timings.eval_s,
+            r.timings.mask_gen_s,
         )
     }
 
@@ -335,6 +342,7 @@ mod tests {
             train_s: 2.0,
             client_train_cpu_s: 3.0,
             client_encode_cpu_s: 1.0,
+            mask_gen_s: 0.5,
             collect_s: 0.25,
             recover_s: 0.125,
             apply_s: 0.0625,

@@ -10,7 +10,7 @@ use crate::util::rng::Rng;
 use super::manifest::{InitKind, ModelMeta};
 
 /// Flat model parameters + the tensor boundary table.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct ParamVector {
     pub data: Vec<f32>,
     /// (offset, numel) per tensor, manifest order.
@@ -76,14 +76,28 @@ impl ParamVector {
         }
     }
 
+    /// Become a copy of `other`, reusing this vector's allocations
+    /// (the per-worker local-model buffer resets from the global
+    /// snapshot this way every round — no model-sized clone).
+    pub fn copy_from(&mut self, other: &ParamVector) {
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+        self.tensors.clear();
+        self.tensors.extend_from_slice(&other.tensors);
+    }
+
     /// `self − other` (the round update Δw a client uploads).
     pub fn delta_from(&self, other: &ParamVector) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.delta_into(other, &mut out);
+        out
+    }
+
+    /// [`Self::delta_from`] into a caller-owned buffer.
+    pub fn delta_into(&self, other: &ParamVector, out: &mut Vec<f32>) {
         assert_eq!(self.len(), other.len(), "size mismatch");
-        self.data
-            .iter()
-            .zip(&other.data)
-            .map(|(a, b)| a - b)
-            .collect()
+        out.clear();
+        out.extend(self.data.iter().zip(&other.data).map(|(a, b)| a - b));
     }
 
     /// Apply an aggregated update: `w ← w + scale·u`.

@@ -21,7 +21,7 @@ use crate::config::RunConfig;
 use crate::models::manifest::{Manifest, ModelMeta};
 use crate::models::params::ParamVector;
 
-use super::native::NativeBackend;
+use super::native::{NativeBackend, Workspace};
 
 /// One model's compute implementation. Implementations must be usable
 /// concurrently from the client worker pool (`Send + Sync`).
@@ -35,6 +35,37 @@ pub trait Backend: Send + Sync {
 
     /// Evaluate one shard: returns `(loss_sum, correct_count)`.
     fn eval_shard(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, f32)>;
+
+    /// [`Self::grad`] into caller-owned scratch: activations/deltas
+    /// come from `ws`, the flat gradient lands in `grads` (resized to
+    /// the model). Identical results to [`Self::grad`]; the round
+    /// engine's per-worker workspaces ride this so steady-state local
+    /// training performs zero heap allocations. Backends without a
+    /// workspace-aware path fall back to [`Self::grad`].
+    fn grad_into(
+        &self,
+        params: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+        _ws: &mut Workspace,
+        grads: &mut Vec<f32>,
+    ) -> Result<f32> {
+        let (loss, g) = self.grad(params, x, y)?;
+        *grads = g; // hand the buffer over, no copy
+        Ok(loss)
+    }
+
+    /// [`Self::eval_shard`] against caller-owned scratch (same
+    /// fallback contract as [`Self::grad_into`]).
+    fn eval_into(
+        &self,
+        params: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+        _ws: &mut Workspace,
+    ) -> Result<(f32, f32)> {
+        self.eval_shard(params, x, y)
+    }
 }
 
 /// User-facing backend selection.
@@ -192,6 +223,23 @@ impl ModelRunner {
         self.backend.grad(params, x, y)
     }
 
+    /// [`Self::grad`] into caller-owned scratch (see
+    /// [`Backend::grad_into`]) — the round engine's hot path.
+    pub fn grad_into(
+        &self,
+        params: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+        grads: &mut Vec<f32>,
+    ) -> Result<f32> {
+        let b = self.train_batch;
+        if y.len() != b {
+            return Err(anyhow!("grad: expected batch {b}, got {}", y.len()));
+        }
+        self.backend.grad_into(params, x, y, ws, grads)
+    }
+
     /// Eval one shard: returns `(loss_sum, correct_count)`.
     pub fn eval_shard(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
         let b = self.eval_batch;
@@ -201,8 +249,24 @@ impl ModelRunner {
         self.backend.eval_shard(params, x, y)
     }
 
+    /// [`Self::eval_shard`] against caller-owned scratch.
+    pub fn eval_into(
+        &self,
+        params: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> Result<(f32, f32)> {
+        let b = self.eval_batch;
+        if y.len() != b {
+            return Err(anyhow!("eval: expected batch {b}, got {}", y.len()));
+        }
+        self.backend.eval_into(params, x, y, ws)
+    }
+
     /// Evaluate over a whole dataset subset (loops eval-batch shards,
-    /// truncating the tail so every shard is full). Returns
+    /// truncating the tail so every shard is full; one workspace and
+    /// one batch buffer serve every shard). Returns
     /// `(mean_loss, accuracy)`.
     pub fn evaluate(
         &self,
@@ -215,12 +279,17 @@ impl ModelRunner {
         if n == 0 {
             return Err(anyhow!("eval set smaller than one shard ({b})"));
         }
+        let mut ws = Workspace::new();
+        let mut idx: Vec<usize> = Vec::with_capacity(b);
+        let mut x: Vec<f32> = Vec::new();
+        let mut y: Vec<i32> = Vec::new();
         let mut loss_sum = 0f64;
         let mut correct = 0f64;
         for shard in 0..(n / b) {
-            let idx: Vec<usize> = (shard * b..(shard + 1) * b).collect();
-            let (x, y) = data.batch(&idx);
-            let (l, c) = self.eval_shard(params, &x, &y)?;
+            idx.clear();
+            idx.extend(shard * b..(shard + 1) * b);
+            data.batch_into(&idx, &mut x, &mut y);
+            let (l, c) = self.eval_into(params, &x, &y, &mut ws)?;
             loss_sum += l as f64;
             correct += c as f64;
         }

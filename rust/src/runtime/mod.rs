@@ -27,7 +27,7 @@ pub mod executor;
 pub mod runner;
 
 pub use backend::{Backend, BackendKind, ModelRunner};
-pub use native::NativeBackend;
+pub use native::{NativeBackend, Workspace};
 
 #[cfg(feature = "pjrt")]
 pub use executor::{ExecutorHandle, ExecutorPool, Tensor};

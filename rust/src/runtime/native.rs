@@ -5,13 +5,32 @@
 //! params) are alternating `(weight [d_in, d_out], bias [d_out])`
 //! pairs with ReLU between layers and softmax-cross-entropy at the
 //! top — exactly what the AOT grad/eval artifacts compute. This
-//! implementation reproduces that math in plain loops, so the full
-//! federated round loop runs deterministically on any machine with no
-//! Python, JAX, or PJRT artifacts.
+//! implementation reproduces that math with register-blocked kernels,
+//! so the full federated round loop runs deterministically on any
+//! machine with no Python, JAX, or PJRT artifacts.
 //!
 //! Layouts are row-major throughout: activations `[batch, d]`,
 //! weights `[d_in, d_out]` (manifest order). Gradients come back as
 //! one flat vector in manifest parameter order, like the PJRT path.
+//!
+//! ## Kernel shape & the bitwise-determinism constraint
+//!
+//! The kernels process [`ROW_BLOCK`] batch rows at once (each weight
+//! row is loaded once per block instead of once per row), tile the
+//! output dimension in [`OUT_TILE`]-wide strips whose accumulators
+//! live on the stack, fuse ReLU into the forward store, and skip
+//! all-zero input columns (image pixels and ReLU activations are
+//! mostly zero). Crucially, every individual accumulator still
+//! receives its additions in the ORIGINAL order — ascending `d_in`
+//! (forward / dprev) or ascending batch row (weight grads), with the
+//! same skip-if-zero predicate — so results are **bitwise identical**
+//! to the scalar triple loop this replaced (pinned by
+//! `blocked_grad_bitwise_matches_scalar_reference` below and the
+//! golden THGS tests). Rewrites of these kernels must preserve that
+//! per-accumulator op sequence or every golden test re-goldens.
+//!
+//! All buffers live in a reusable [`Workspace`], so steady-state
+//! `grad_into`/`eval_into` calls allocate nothing.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -20,11 +39,212 @@ use crate::models::params::ParamVector;
 
 use super::backend::Backend;
 
+/// Batch rows processed together by the blocked kernels: each weight
+/// row load is shared across the block.
+const ROW_BLOCK: usize = 4;
+
+/// Output-dimension tile width: `ROW_BLOCK × OUT_TILE` f32
+/// accumulators (1 KiB) stay in registers/L1 while a `d_in × OUT_TILE`
+/// weight strip streams through.
+const OUT_TILE: usize = 64;
+
 /// One dense layer's dimensions.
 #[derive(Clone, Copy, Debug)]
 struct DenseLayer {
     d_in: usize,
     d_out: usize,
+}
+
+/// Reusable scratch for one grad/eval call chain: per-layer activation
+/// buffers plus the two backprop delta buffers, sized once for a model
+/// + batch and reused every call ([`Backend::grad_into`] /
+/// [`Backend::eval_into`]). Growing the batch re-sizes lazily;
+/// steady-state calls perform zero heap allocations.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Per-layer activations `[batch, d_out]` (post-ReLU for hidden
+    /// layers, raw logits for the last).
+    acts: Vec<Vec<f32>>,
+    /// Backprop delta of the layer currently being walked.
+    delta: Vec<f32>,
+    /// Previous-layer delta under construction (swapped with `delta`
+    /// after each layer).
+    dprev: Vec<f32>,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// `out[r, :] = input[r, :]·W + bias` for a `[batch, d_in]` input,
+/// ReLU fused into the store when `relu`.
+fn dense_forward(
+    input: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+    relu: bool,
+) {
+    debug_assert_eq!(input.len(), batch * d_in);
+    debug_assert_eq!(w.len(), d_in * d_out);
+    debug_assert_eq!(bias.len(), d_out);
+    debug_assert_eq!(out.len(), batch * d_out);
+    let mut r0 = 0;
+    while r0 < batch {
+        let rb = (batch - r0).min(ROW_BLOCK);
+        let mut t0 = 0;
+        while t0 < d_out {
+            let tw = (d_out - t0).min(OUT_TILE);
+            let mut acc = [[0f32; OUT_TILE]; ROW_BLOCK];
+            for a in acc.iter_mut().take(rb) {
+                a[..tw].copy_from_slice(&bias[t0..t0 + tw]);
+            }
+            for i in 0..d_in {
+                let mut xv = [0f32; ROW_BLOCK];
+                let mut any = false;
+                for r in 0..rb {
+                    let v = input[(r0 + r) * d_in + i];
+                    xv[r] = v;
+                    any |= v != 0.0;
+                }
+                // mostly-zero inputs: skip the weight row when every
+                // row of the block is zero at this column
+                if !any {
+                    continue;
+                }
+                let wrow = &w[i * d_out + t0..i * d_out + t0 + tw];
+                for r in 0..rb {
+                    let c = xv[r];
+                    if c != 0.0 {
+                        // axpy: acc_r += c · wrow (ascending d_in per
+                        // accumulator — the bitwise-identity invariant)
+                        let a = &mut acc[r];
+                        for (j, &wv) in wrow.iter().enumerate() {
+                            a[j] += c * wv;
+                        }
+                    }
+                }
+            }
+            for r in 0..rb {
+                let off = (r0 + r) * d_out + t0;
+                let orow = &mut out[off..off + tw];
+                if relu {
+                    for (j, o) in orow.iter_mut().enumerate() {
+                        let v = acc[r][j];
+                        *o = if v < 0.0 { 0.0 } else { v };
+                    }
+                } else {
+                    orow.copy_from_slice(&acc[r][..tw]);
+                }
+            }
+            t0 += tw;
+        }
+        r0 += rb;
+    }
+}
+
+/// Parameter gradients of one layer: `gw += a_prevᵀ·delta` (i-major so
+/// each `gw` row is touched once per row block) and `gb += Σ_r
+/// delta[r, :]`. Per (i, o) accumulator the adds land in ascending
+/// batch-row order, exactly like the scalar sweep.
+fn dense_backward_params(
+    a_prev: &[f32],
+    delta: &[f32],
+    gw: &mut [f32],
+    gb: &mut [f32],
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    debug_assert_eq!(a_prev.len(), batch * d_in);
+    debug_assert_eq!(delta.len(), batch * d_out);
+    debug_assert_eq!(gb.len(), d_out);
+    let mut r0 = 0;
+    while r0 < batch {
+        let rb = (batch - r0).min(ROW_BLOCK);
+        for r in r0..r0 + rb {
+            let dr = &delta[r * d_out..(r + 1) * d_out];
+            for (o, &dv) in dr.iter().enumerate() {
+                gb[o] += dv;
+            }
+        }
+        for i in 0..d_in {
+            let mut av = [0f32; ROW_BLOCK];
+            let mut any = false;
+            for r in 0..rb {
+                let v = a_prev[(r0 + r) * d_in + i];
+                av[r] = v;
+                any |= v != 0.0;
+            }
+            if !any {
+                continue;
+            }
+            let gw_row = &mut gw[i * d_out..(i + 1) * d_out];
+            for r in 0..rb {
+                let c = av[r];
+                if c != 0.0 {
+                    let dr = &delta[(r0 + r) * d_out..(r0 + r + 1) * d_out];
+                    for (o, &dv) in dr.iter().enumerate() {
+                        gw_row[o] += c * dv;
+                    }
+                }
+            }
+        }
+        r0 += rb;
+    }
+}
+
+/// Input delta of one layer: `dprev[r, i] = delta[r, :]·W[i, :]` where
+/// the ReLU was live (`a_prev[r, i] > 0`), else 0. Each weight row is
+/// loaded once per row block; every dot product accumulates over
+/// ascending `d_out`, like the scalar sweep.
+fn dense_backward_input(
+    a_prev: &[f32],
+    delta: &[f32],
+    w: &[f32],
+    dprev: &mut [f32],
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+) {
+    debug_assert_eq!(a_prev.len(), batch * d_in);
+    debug_assert_eq!(delta.len(), batch * d_out);
+    debug_assert_eq!(dprev.len(), batch * d_in);
+    dprev.fill(0.0);
+    let mut r0 = 0;
+    while r0 < batch {
+        let rb = (batch - r0).min(ROW_BLOCK);
+        for i in 0..d_in {
+            let mut live = [false; ROW_BLOCK];
+            let mut any = false;
+            for r in 0..rb {
+                // a_prev > 0 ⟺ pre-activation > 0 (ReLU stored)
+                let l = a_prev[(r0 + r) * d_in + i] > 0.0;
+                live[r] = l;
+                any |= l;
+            }
+            if !any {
+                continue;
+            }
+            let wrow = &w[i * d_out..(i + 1) * d_out];
+            for r in 0..rb {
+                if live[r] {
+                    let dr = &delta[(r0 + r) * d_out..(r0 + r + 1) * d_out];
+                    let mut s = 0f32;
+                    for (o, &wv) in wrow.iter().enumerate() {
+                        s += dr[o] * wv;
+                    }
+                    dprev[(r0 + r) * d_in + i] = s;
+                }
+            }
+        }
+        r0 += rb;
+    }
 }
 
 /// MLP forward/backward on flat parameter vectors.
@@ -103,41 +323,29 @@ impl NativeBackend {
         Ok(b)
     }
 
-    /// Forward pass; returns one activation buffer per layer
-    /// (post-ReLU for hidden layers, raw logits for the last).
-    fn forward(&self, params: &ParamVector, x: &[f32], batch: usize) -> Vec<Vec<f32>> {
-        let n_layers = self.layers.len();
-        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+    /// Size the workspace for this model + batch (no-op once warm).
+    fn prepare(&self, ws: &mut Workspace, batch: usize) {
+        ws.acts.resize_with(self.layers.len(), Vec::new);
+        let mut max_out = 0;
         for (l, lay) in self.layers.iter().enumerate() {
-            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            ws.acts[l].resize(batch * lay.d_out, 0.0);
+            max_out = max_out.max(lay.d_out);
+        }
+        ws.delta.resize(batch * max_out, 0.0);
+        ws.dprev.resize(batch * max_out, 0.0);
+    }
+
+    /// Forward pass into the workspace's per-layer activation buffers.
+    fn forward_into(&self, params: &ParamVector, x: &[f32], batch: usize, ws: &mut Workspace) {
+        let n_layers = self.layers.len();
+        for (l, lay) in self.layers.iter().enumerate() {
+            let (head, tail) = ws.acts.split_at_mut(l);
+            let input: &[f32] = if l == 0 { x } else { &head[l - 1] };
+            let out = &mut tail[0][..batch * lay.d_out];
             let w = params.tensor(2 * l);
             let bias = params.tensor(2 * l + 1);
-            let mut out = vec![0f32; batch * lay.d_out];
-            for r in 0..batch {
-                let xr = &input[r * lay.d_in..(r + 1) * lay.d_in];
-                let or = &mut out[r * lay.d_out..(r + 1) * lay.d_out];
-                or.copy_from_slice(bias);
-                for (i, &xv) in xr.iter().enumerate() {
-                    // image pixels and ReLU activations are mostly
-                    // zero — skipping them is the hot-path win
-                    if xv != 0.0 {
-                        let wrow = &w[i * lay.d_out..(i + 1) * lay.d_out];
-                        for (o, &wv) in wrow.iter().enumerate() {
-                            or[o] += xv * wv;
-                        }
-                    }
-                }
-                if l + 1 < n_layers {
-                    for v in or.iter_mut() {
-                        if *v < 0.0 {
-                            *v = 0.0;
-                        }
-                    }
-                }
-            }
-            acts.push(out);
+            dense_forward(input, w, bias, out, batch, lay.d_in, lay.d_out, l + 1 < n_layers);
         }
-        acts
     }
 }
 
@@ -147,13 +355,29 @@ impl Backend for NativeBackend {
     }
 
     fn grad(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, Vec<f32>)> {
+        let mut ws = Workspace::new();
+        let mut grads = Vec::new();
+        let loss = self.grad_into(params, x, y, &mut ws, &mut grads)?;
+        Ok((loss, grads))
+    }
+
+    fn grad_into(
+        &self,
+        params: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+        grads: &mut Vec<f32>,
+    ) -> Result<f32> {
         let b = self.check_batch(params, x, y)?;
-        let acts = self.forward(params, x, b);
+        self.prepare(ws, b);
+        self.forward_into(params, x, b, ws);
         let c = self.classes;
 
         // softmax + mean cross-entropy; `delta` becomes (p − onehot)/B
-        let logits = acts.last().unwrap();
-        let mut delta = logits.clone();
+        let logits = ws.acts.last().unwrap();
+        let delta = &mut ws.delta[..b * c];
+        delta.copy_from_slice(&logits[..b * c]);
         let mut loss_sum = 0f64;
         for r in 0..b {
             let row = &mut delta[r * c..(r + 1) * c];
@@ -177,60 +401,56 @@ impl Backend for NativeBackend {
         }
 
         // backward walk, filling the flat grad vector in manifest order
-        let mut grads = vec![0f32; params.len()];
+        grads.clear();
+        grads.resize(params.len(), 0.0);
         for l in (0..self.layers.len()).rev() {
             let DenseLayer { d_in, d_out } = self.layers[l];
-            let a_prev: &[f32] = if l == 0 { x } else { &acts[l - 1] };
             let (w_off, w_len) = params.tensors[2 * l];
             let (b_off, b_len) = params.tensors[2 * l + 1];
             debug_assert_eq!(w_off + w_len, b_off, "bias not adjacent to weight");
             let (head, tail) = grads.split_at_mut(b_off);
             let gw = &mut head[w_off..];
             let gb = &mut tail[..b_len];
-            for r in 0..b {
-                let dr = &delta[r * d_out..(r + 1) * d_out];
-                for (o, &dv) in dr.iter().enumerate() {
-                    gb[o] += dv;
-                }
-                let ar = &a_prev[r * d_in..(r + 1) * d_in];
-                for (i, &av) in ar.iter().enumerate() {
-                    if av != 0.0 {
-                        let gw_row = &mut gw[i * d_out..(i + 1) * d_out];
-                        for (o, &dv) in dr.iter().enumerate() {
-                            gw_row[o] += av * dv;
-                        }
-                    }
+            {
+                let a_prev: &[f32] = if l == 0 { x } else { &ws.acts[l - 1] };
+                let delta = &ws.delta[..b * d_out];
+                dense_backward_params(a_prev, delta, gw, gb, b, d_in, d_out);
+                if l > 0 {
+                    // δ_prev = (δ · Wᵀ) ⊙ relu′
+                    let w = params.tensor(2 * l);
+                    dense_backward_input(
+                        a_prev,
+                        delta,
+                        w,
+                        &mut ws.dprev[..b * d_in],
+                        b,
+                        d_in,
+                        d_out,
+                    );
                 }
             }
             if l > 0 {
-                // δ_prev = (δ · Wᵀ) ⊙ relu′; a_prev > 0 ⟺ pre-act > 0
-                let w = params.tensor(2 * l);
-                let mut dprev = vec![0f32; b * d_in];
-                for r in 0..b {
-                    let dr = &delta[r * d_out..(r + 1) * d_out];
-                    let ar = &a_prev[r * d_in..(r + 1) * d_in];
-                    let dp = &mut dprev[r * d_in..(r + 1) * d_in];
-                    for i in 0..d_in {
-                        if ar[i] > 0.0 {
-                            let wrow = &w[i * d_out..(i + 1) * d_out];
-                            let mut s = 0f32;
-                            for (o, &dv) in dr.iter().enumerate() {
-                                s += dv * wrow[o];
-                            }
-                            dp[i] = s;
-                        }
-                    }
-                }
-                delta = dprev;
+                std::mem::swap(&mut ws.delta, &mut ws.dprev);
             }
         }
-        Ok(((loss_sum / b as f64) as f32, grads))
+        Ok((loss_sum / b as f64) as f32)
     }
 
     fn eval_shard(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<(f32, f32)> {
+        self.eval_into(params, x, y, &mut Workspace::new())
+    }
+
+    fn eval_into(
+        &self,
+        params: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+        ws: &mut Workspace,
+    ) -> Result<(f32, f32)> {
         let b = self.check_batch(params, x, y)?;
-        let acts = self.forward(params, x, b);
-        let logits = acts.last().unwrap();
+        self.prepare(ws, b);
+        self.forward_into(params, x, b, ws);
+        let logits = ws.acts.last().unwrap();
         let c = self.classes;
         let mut loss_sum = 0f64;
         let mut correct = 0u32;
@@ -289,12 +509,244 @@ mod tests {
         }
     }
 
+    /// An 8→100→3 MLP: its hidden layer spans two OUT_TILE strips
+    /// (100 = 64 + 36), so the parity tests exercise the multi-tile
+    /// path and the tile tail the tiny meta (d_out ≤ 6) cannot reach.
+    fn wide_meta() -> ModelMeta {
+        let spec = |name: &str, shape: Vec<usize>, layer: usize| ParamSpec {
+            name: name.into(),
+            shape,
+            init: InitKind::Normal { std: 0.3 },
+            layer,
+        };
+        ModelMeta {
+            name: "wide_mlp".into(),
+            input: vec![8],
+            classes: 3,
+            params: vec![
+                spec("l0/w", vec![8, 100], 0),
+                ParamSpec { init: InitKind::Zeros, ..spec("l0/b", vec![100], 0) },
+                spec("l1/w", vec![100, 3], 1),
+                ParamSpec { init: InitKind::Zeros, ..spec("l1/b", vec![3], 1) },
+            ],
+            layers: vec![
+                LayerGroup { name: "l0".into(), params: vec![0, 1] },
+                LayerGroup { name: "l1".into(), params: vec![2, 3] },
+            ],
+            param_count: 8 * 100 + 100 + 100 * 3 + 3,
+            grad_artifact: String::new(),
+            eval_artifact: String::new(),
+        }
+    }
+
     fn batch(meta: &ModelMeta, b: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
         let d: usize = meta.input.iter().product();
         let mut rng = Rng::new(seed);
         let x: Vec<f32> = (0..b * d).map(|_| rng.normal_f32(1.0)).collect();
         let y: Vec<i32> = (0..b).map(|_| (rng.below(meta.classes as u64)) as i32).collect();
         (x, y)
+    }
+
+    /// The pre-blocking scalar forward (verbatim from the original
+    /// implementation) — the reference the blocked kernels must match
+    /// bitwise.
+    fn reference_forward(
+        be: &NativeBackend,
+        params: &ParamVector,
+        x: &[f32],
+        batch: usize,
+    ) -> Vec<Vec<f32>> {
+        let n_layers = be.layers.len();
+        let mut acts: Vec<Vec<f32>> = Vec::with_capacity(n_layers);
+        for (l, lay) in be.layers.iter().enumerate() {
+            let input: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            let w = params.tensor(2 * l);
+            let bias = params.tensor(2 * l + 1);
+            let mut out = vec![0f32; batch * lay.d_out];
+            for r in 0..batch {
+                let xr = &input[r * lay.d_in..(r + 1) * lay.d_in];
+                let or = &mut out[r * lay.d_out..(r + 1) * lay.d_out];
+                or.copy_from_slice(bias);
+                for (i, &xv) in xr.iter().enumerate() {
+                    if xv != 0.0 {
+                        let wrow = &w[i * lay.d_out..(i + 1) * lay.d_out];
+                        for (o, &wv) in wrow.iter().enumerate() {
+                            or[o] += xv * wv;
+                        }
+                    }
+                }
+                if l + 1 < n_layers {
+                    for v in or.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                }
+            }
+            acts.push(out);
+        }
+        acts
+    }
+
+    /// The pre-blocking scalar grad (verbatim from the original
+    /// implementation).
+    fn reference_grad(
+        be: &NativeBackend,
+        params: &ParamVector,
+        x: &[f32],
+        y: &[i32],
+    ) -> (f32, Vec<f32>) {
+        let b = y.len();
+        let acts = reference_forward(be, params, x, b);
+        let c = be.classes;
+        let logits = acts.last().unwrap();
+        let mut delta = logits.clone();
+        let mut loss_sum = 0f64;
+        for r in 0..b {
+            let row = &mut delta[r * c..(r + 1) * c];
+            let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0f32;
+            for v in row.iter_mut() {
+                *v = (*v - max).exp();
+                z += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= z;
+            }
+            loss_sum += -(row[y[r] as usize].max(1e-30) as f64).ln();
+        }
+        let inv_b = 1.0 / b as f32;
+        for r in 0..b {
+            delta[r * c + y[r] as usize] -= 1.0;
+        }
+        for v in delta.iter_mut() {
+            *v *= inv_b;
+        }
+
+        let mut grads = vec![0f32; params.len()];
+        for l in (0..be.layers.len()).rev() {
+            let DenseLayer { d_in, d_out } = be.layers[l];
+            let a_prev: &[f32] = if l == 0 { x } else { &acts[l - 1] };
+            let (w_off, w_len) = params.tensors[2 * l];
+            let (b_off, b_len) = params.tensors[2 * l + 1];
+            assert_eq!(w_off + w_len, b_off, "bias not adjacent to weight");
+            let (head, tail) = grads.split_at_mut(b_off);
+            let gw = &mut head[w_off..];
+            let gb = &mut tail[..b_len];
+            for r in 0..b {
+                let dr = &delta[r * d_out..(r + 1) * d_out];
+                for (o, &dv) in dr.iter().enumerate() {
+                    gb[o] += dv;
+                }
+                let ar = &a_prev[r * d_in..(r + 1) * d_in];
+                for (i, &av) in ar.iter().enumerate() {
+                    if av != 0.0 {
+                        let gw_row = &mut gw[i * d_out..(i + 1) * d_out];
+                        for (o, &dv) in dr.iter().enumerate() {
+                            gw_row[o] += av * dv;
+                        }
+                    }
+                }
+            }
+            if l > 0 {
+                let w = params.tensor(2 * l);
+                let mut dprev = vec![0f32; b * d_in];
+                for r in 0..b {
+                    let dr = &delta[r * d_out..(r + 1) * d_out];
+                    let ar = &a_prev[r * d_in..(r + 1) * d_in];
+                    let dp = &mut dprev[r * d_in..(r + 1) * d_in];
+                    for i in 0..d_in {
+                        if ar[i] > 0.0 {
+                            let wrow = &w[i * d_out..(i + 1) * d_out];
+                            let mut s = 0f32;
+                            for (o, &dv) in dr.iter().enumerate() {
+                                s += dv * wrow[o];
+                            }
+                            dp[i] = s;
+                        }
+                    }
+                }
+                delta = dprev;
+            }
+        }
+        ((loss_sum / b as f64) as f32, grads)
+    }
+
+    #[test]
+    fn blocked_grad_bitwise_matches_scalar_reference() {
+        // batch 1/3/4/17 exercise the ROW_BLOCK remainder paths (0, 3,
+        // 0, 1 leftover rows); tiny_meta's d_out 6/3 exercise the
+        // sub-tile case, wide_meta's d_out 100 the multi-tile path
+        // (64 + 36) with a tile tail
+        for meta in [tiny_meta(), wide_meta()] {
+            let be = NativeBackend::new(&meta).unwrap();
+            for (seed, b) in [(21u64, 1usize), (22, 3), (23, 4), (24, 17)] {
+                let params = ParamVector::init(&meta, seed);
+                let (x, y) = batch(&meta, b, seed ^ 0xb17);
+                let (loss_new, grads_new) = be.grad(&params, &x, &y).unwrap();
+                let (loss_ref, grads_ref) = reference_grad(&be, &params, &x, &y);
+                assert_eq!(
+                    loss_new.to_bits(),
+                    loss_ref.to_bits(),
+                    "loss at {}/batch {b}",
+                    meta.name
+                );
+                assert_eq!(grads_new.len(), grads_ref.len());
+                for i in 0..grads_new.len() {
+                    assert_eq!(
+                        grads_new[i].to_bits(),
+                        grads_ref[i].to_bits(),
+                        "grad[{i}] differs at {}/batch {b}: {} vs {}",
+                        meta.name,
+                        grads_new[i],
+                        grads_ref[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_forward_bitwise_matches_scalar_reference() {
+        for meta in [tiny_meta(), wide_meta()] {
+            let be = NativeBackend::new(&meta).unwrap();
+            let params = ParamVector::init(&meta, 31);
+            for b in [1usize, 3, 4, 17] {
+                let (x, _) = batch(&meta, b, 7 + b as u64);
+                let mut ws = Workspace::new();
+                be.prepare(&mut ws, b);
+                be.forward_into(&params, &x, b, &mut ws);
+                let reference = reference_forward(&be, &params, &x, b);
+                for (l, r) in ws.acts.iter().zip(&reference) {
+                    assert_eq!(l.len(), r.len());
+                    for (a, c) in l.iter().zip(r) {
+                        assert_eq!(a.to_bits(), c.to_bits(), "{}/batch {b}", meta.name);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_is_transparent() {
+        // one workspace driven across shrinking/growing batches must
+        // give the same answers as fresh workspaces
+        let meta = tiny_meta();
+        let be = NativeBackend::new(&meta).unwrap();
+        let params = ParamVector::init(&meta, 41);
+        let mut ws = Workspace::new();
+        let mut grads = Vec::new();
+        for b in [17usize, 3, 4, 1, 17] {
+            let (x, y) = batch(&meta, b, 100 + b as u64);
+            let loss = be.grad_into(&params, &x, &y, &mut ws, &mut grads).unwrap();
+            let (loss_fresh, grads_fresh) = be.grad(&params, &x, &y).unwrap();
+            assert_eq!(loss.to_bits(), loss_fresh.to_bits());
+            assert_eq!(grads, grads_fresh);
+            let (l1, c1) = be.eval_into(&params, &x, &y, &mut ws).unwrap();
+            let (l2, c2) = be.eval_shard(&params, &x, &y).unwrap();
+            assert_eq!(l1.to_bits(), l2.to_bits());
+            assert_eq!(c1, c2);
+        }
     }
 
     #[test]

@@ -26,6 +26,38 @@ pub struct FilteredStream {
     pub entries: Vec<(u32, f32)>,
 }
 
+/// Exclusive raw-lane bound equivalent to the σ-filter: a keystream
+/// lane `u` is kept iff `(u as u64) < bound`, which holds iff
+/// `ChaCha20::lane_to_f32(u, lo, hi) < sigma`.
+///
+/// The lane→value map is monotone non-decreasing (see
+/// [`ChaCha20::lane_to_f32`]), so the kept set is exactly `[0, bound)`
+/// and a 32-step binary search recovers the boundary *exactly* — the
+/// streaming filter is bitwise identical to materialize-then-compare,
+/// while the ~(1 − k/x) discarded lanes skip the int→float conversion
+/// entirely. `u64` so that "keep everything" (σ above the range top)
+/// is representable as 2³².
+fn sigma_lane_bound(lo: f32, hi: f32, sigma: f32) -> u64 {
+    let val = |u: u32| ChaCha20::lane_to_f32(u, lo, hi);
+    if val(0) >= sigma {
+        return 0; // nothing kept (σ at/below the range bottom)
+    }
+    if val(u32::MAX) < sigma {
+        return 1 << 32; // everything kept
+    }
+    // invariant: val(a) < sigma ≤ val(b)
+    let (mut a, mut b) = (0u32, u32::MAX);
+    while b - a > 1 {
+        let mid = a + (b - a) / 2;
+        if val(mid) < sigma {
+            a = mid;
+        } else {
+            b = mid;
+        }
+    }
+    b as u64
+}
+
 /// Shared per-round cache of σ-filtered pair streams. In the
 /// in-process simulation each pair's stream is needed by BOTH
 /// endpoints within a round; caching halves ChaCha work AND shrinks
@@ -108,13 +140,17 @@ impl PairwiseMasker {
     /// Restrict to a subset of peers — the per-round participant set
     /// (masks only form among the round's selected clients; the DH
     /// pair keys are reused, matching §3.2's one-time key exchange).
+    /// `keep` is sorted once so membership is a binary search, not an
+    /// O(selected) scan per peer.
     pub fn restrict(&self, keep: &[u32]) -> PairwiseMasker {
+        let mut sorted = keep.to_vec();
+        sorted.sort_unstable();
         PairwiseMasker {
             id: self.id,
             peers: self
                 .peers
                 .iter()
-                .filter(|(pid, _)| keep.contains(pid))
+                .filter(|(pid, _)| sorted.binary_search(pid).is_ok())
                 .cloned()
                 .collect(),
             range: self.range,
@@ -122,23 +158,36 @@ impl PairwiseMasker {
         }
     }
 
-    /// The raw uniform stream for one pair at one round: identical on
-    /// both sides of the pair (keyed by normalized pair + round).
-    pub fn raw_pair_mask(&self, peer: u32, round: u64, n: usize) -> Vec<f32> {
+    /// This pair's per-round ChaCha stream, positioned at lane 0.
+    fn pair_prg(&self, secret: &[u8], peer: u32, round: u64) -> ChaCha20 {
+        let key = mask_seed(secret, self.id, peer, round);
+        ChaCha20::from_seed(&key, round)
+    }
+
+    fn peer_secret(&self, peer: u32) -> &[u8] {
         let (_, secret) = self
             .peers
             .iter()
             .find(|(pid, _)| *pid == peer)
             .expect("unknown peer");
-        let key = mask_seed(secret, self.id, peer, round);
-        let mut prg = ChaCha20::from_seed(&key, round);
+        secret
+    }
+
+    /// The raw uniform stream for one pair at one round: identical on
+    /// both sides of the pair (keyed by normalized pair + round).
+    pub fn raw_pair_mask(&self, peer: u32, round: u64, n: usize) -> Vec<f32> {
+        let mut prg = self.pair_prg(self.peer_secret(peer), peer, round);
         let mut out = vec![0f32; n];
         prg.fill_uniform_f32(&mut out, self.range.lo(), self.range.hi());
         out
     }
 
-    /// σ-filtered pair stream, cache-aware: generate the raw stream
-    /// once per (pair, round) and keep only the entries below σ.
+    /// σ-filtered pair stream, cache-aware. The PRG is streamed
+    /// block-wise: each raw u32 lane is compared against the
+    /// precomputed integer σ-bound and only the kept lanes (~k/x of n)
+    /// are converted to f32 and pushed — the dense n-float stream is
+    /// never materialized. Bitwise identical to generating the dense
+    /// stream and filtering `v < σ` (see [`sigma_lane_bound`]).
     fn filtered_pair_mask(&self, peer: u32, round: u64, n: usize, sigma: f32) -> Arc<FilteredStream> {
         let cache_key = {
             let (lo, hi) = if self.id < peer { (self.id, peer) } else { (peer, self.id) };
@@ -151,13 +200,18 @@ impl PairwiseMasker {
                 }
             }
         }
-        let raw = self.raw_pair_mask(peer, round, n);
-        let entries: Vec<(u32, f32)> = raw
-            .iter()
-            .enumerate()
-            .filter(|(_, &v)| v < sigma)
-            .map(|(i, &v)| (i as u32, v))
-            .collect();
+        let (lo, hi) = (self.range.lo(), self.range.hi());
+        let bound = sigma_lane_bound(lo, hi, sigma);
+        // expected keep count = (bound / 2³²) · n, plus slack so the
+        // binomial tail rarely reallocates
+        let expect = (bound as f64 / 4_294_967_296.0 * n as f64) as usize;
+        let mut entries: Vec<(u32, f32)> = Vec::with_capacity(expect + expect / 8 + 16);
+        let mut prg = self.pair_prg(self.peer_secret(peer), peer, round);
+        prg.for_each_uniform_f32(n, |i, lane| {
+            if (lane as u64) < bound {
+                entries.push((i as u32, ChaCha20::lane_to_f32(lane, lo, hi)));
+            }
+        });
         let out = Arc::new(FilteredStream { sigma, n, entries });
         if let Some(cache) = &self.cache {
             cache.lock().unwrap().insert(cache_key, Arc::clone(&out));
@@ -176,17 +230,24 @@ impl PairwiseMasker {
     }
 
     /// Dense combined mask `Σ_pairs sign · mask_r` (original secure
-    /// aggregation, no sparsification).
+    /// aggregation, no sparsification). Each pair stream accumulates
+    /// block-wise straight out of the PRG — no per-pair dense buffer.
     pub fn combined_mask(&self, round: u64, n: usize) -> Vec<f32> {
         let mut acc = vec![0f32; n];
-        for (peer, _) in self.peers.clone() {
-            let raw = self.raw_pair_mask(peer, round, n);
-            let sign = self.sign_for(peer);
-            for i in 0..n {
-                acc[i] += sign * raw[i];
-            }
-        }
+        self.accumulate_combined_mask(round, &mut acc);
         acc
+    }
+
+    /// [`Self::combined_mask`] into a caller-owned (zeroed) buffer.
+    pub fn accumulate_combined_mask(&self, round: u64, acc: &mut [f32]) {
+        let (lo, hi) = (self.range.lo(), self.range.hi());
+        for (peer, secret) in &self.peers {
+            let mut prg = self.pair_prg(secret, *peer, round);
+            let sign = self.sign_for(*peer);
+            prg.for_each_uniform_f32(acc.len(), |i, lane| {
+                acc[i] += sign * ChaCha20::lane_to_f32(lane, lo, hi);
+            });
+        }
     }
 
     /// Sparse combined mask: the paper's zero-local-value rule
@@ -195,22 +256,39 @@ impl PairwiseMasker {
     /// cancellation is preserved. Returns the signed combined sparse
     /// mask; `nonzero[j]` is true where ANY pair kept a mask value
     /// (needed for the transmission mask `mask_t`).
-    ///
-    /// The accumulate sweep only touches the σ-kept entries of each
-    /// pair stream (~k/x of n), via the shared [`FilteredStream`]
-    /// cache when attached (§Perf L3 iteration 5).
     pub fn sparse_combined_mask(&self, round: u64, n: usize, sigma: f32) -> (Vec<f32>, Vec<bool>) {
-        let mut acc = vec![0f32; n];
-        let mut nonzero = vec![false; n];
-        for (peer, _) in self.peers.clone() {
-            let filtered = self.filtered_pair_mask(peer, round, n, sigma);
-            let sign = self.sign_for(peer);
+        let mut acc = Vec::new();
+        let mut nonzero = Vec::new();
+        self.sparse_combined_mask_into(round, n, sigma, &mut acc, &mut nonzero);
+        (acc, nonzero)
+    }
+
+    /// [`Self::sparse_combined_mask`] into caller-owned scratch (the
+    /// per-worker `ClientWorkspace` holds these, so the steady-state
+    /// round path allocates nothing model-sized). The accumulate sweep
+    /// only touches the σ-kept entries of each pair stream (~k/x of
+    /// n), via the shared [`FilteredStream`] cache when attached
+    /// (§Perf L3 iteration 5).
+    pub fn sparse_combined_mask_into(
+        &self,
+        round: u64,
+        n: usize,
+        sigma: f32,
+        acc: &mut Vec<f32>,
+        nonzero: &mut Vec<bool>,
+    ) {
+        acc.clear();
+        acc.resize(n, 0.0);
+        nonzero.clear();
+        nonzero.resize(n, false);
+        for (peer, _) in &self.peers {
+            let filtered = self.filtered_pair_mask(*peer, round, n, sigma);
+            let sign = self.sign_for(*peer);
             for &(i, v) in &filtered.entries {
                 acc[i as usize] += sign * v;
                 nonzero[i as usize] = true;
             }
         }
-        (acc, nonzero)
     }
 }
 
@@ -294,6 +372,84 @@ mod tests {
                 "k={k}: frac={frac:.3} expect={expect:.3}"
             );
         }
+    }
+
+    #[test]
+    fn streamed_filter_matches_materialized_reference() {
+        // property: for every (σ, n, round), the block-streamed
+        // integer-threshold filter keeps EXACTLY the entries a
+        // materialize-then-compare reference keeps, with bit-identical
+        // values — the constraint that lets the golden secagg tests
+        // survive the streaming rewrite unchanged.
+        let f = fleet(3);
+        let cases = [
+            (1u64, 5000usize, 1.0f64, 10usize),
+            (2, 777, 0.5, 4),
+            (3, 4096, 3.0, 10),
+            (9, 100, 0.0, 2),
+        ];
+        for (round, n, k, x) in cases {
+            let sigma = f[0].range.sigma(k, x);
+            let streamed = f[0].filtered_pair_mask(1, round, n, sigma);
+            let raw = f[0].raw_pair_mask(1, round, n);
+            let reference: Vec<(u32, f32)> = raw
+                .iter()
+                .enumerate()
+                .filter(|(_, &v)| v < sigma)
+                .map(|(i, &v)| (i as u32, v))
+                .collect();
+            assert_eq!(streamed.entries.len(), reference.len(), "k={k} x={x}");
+            for (a, b) in streamed.entries.iter().zip(&reference) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.1.to_bits(), b.1.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn sigma_lane_bound_edges() {
+        let r = MaskRange::default();
+        // σ at/below the bottom keeps nothing; above the top keeps all
+        assert_eq!(sigma_lane_bound(r.lo(), r.hi(), r.lo()), 0);
+        assert_eq!(sigma_lane_bound(r.lo(), r.hi(), r.lo() - 1.0), 0);
+        assert_eq!(sigma_lane_bound(r.lo(), r.hi(), r.hi() + 1.0), 1 << 32);
+        // boundary exactness: lanes straddling the bound agree with
+        // the f32 comparison on either side
+        let sigma = r.sigma(1.0, 10);
+        let bound = sigma_lane_bound(r.lo(), r.hi(), sigma);
+        assert!(bound > 0 && bound < 1 << 32);
+        for d in 0..64u64 {
+            let below = (bound - 1).saturating_sub(d) as u32;
+            let at = (bound + d).min(u32::MAX as u64) as u32;
+            assert!(crate::util::chacha::ChaCha20::lane_to_f32(below, r.lo(), r.hi()) < sigma);
+            assert!(crate::util::chacha::ChaCha20::lane_to_f32(at, r.lo(), r.hi()) >= sigma);
+        }
+    }
+
+    #[test]
+    fn restrict_filters_and_preserves_order() {
+        let f = fleet(6);
+        // unsorted keep list — restrict must sort internally
+        let r = f[2].restrict(&[5, 0, 3]);
+        assert_eq!(r.n_peers(), 3);
+        let kept: Vec<u32> = r.peers.iter().map(|(p, _)| *p).collect();
+        assert_eq!(kept, vec![0, 3, 5], "peer construction order preserved");
+        // restricted masker still produces the same pair stream
+        assert_eq!(r.raw_pair_mask(5, 1, 32), f[2].raw_pair_mask(5, 1, 32));
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_path() {
+        let f = fleet(4);
+        let n = 1500;
+        let sigma = f[1].range.sigma(1.0, 4);
+        let (acc, nz) = f[1].sparse_combined_mask(5, n, sigma);
+        // pre-dirtied, differently-sized scratch must come out identical
+        let mut acc2 = vec![9.9f32; 3];
+        let mut nz2 = vec![true; 7];
+        f[1].sparse_combined_mask_into(5, n, sigma, &mut acc2, &mut nz2);
+        assert_eq!(acc, acc2);
+        assert_eq!(nz, nz2);
     }
 
     #[test]

@@ -22,4 +22,6 @@ pub mod sparse_mask;
 pub use dh::{DhKeyPair, DhParams};
 pub use mask::PairwiseMasker;
 pub use protocol::{recover_pair_keys, SecAggClient, SecAggConfig, SecAggServer};
-pub use sparse_mask::{mask_sparsify, CaseCensus, MaskSparsifyConfig, MaskedUpdate};
+pub use sparse_mask::{
+    mask_sparsify, mask_sparsify_into, CaseCensus, MaskScratch, MaskSparsifyConfig, MaskedUpdate,
+};

@@ -15,7 +15,9 @@ use crate::util::rng::Rng;
 use super::dh::{DhKeyPair, DhParams};
 use super::mask::{MaskRange, PairwiseMasker};
 use super::shamir::{self, Share};
-use super::sparse_mask::{mask_sparsify, MaskSparsifyConfig, MaskedUpdate};
+use super::sparse_mask::{
+    mask_sparsify, mask_sparsify_into, MaskScratch, MaskSparsifyConfig, MaskedUpdate,
+};
 
 /// Protocol configuration.
 #[derive(Clone, Debug)]
@@ -101,13 +103,32 @@ impl SecAggClient {
         round: u64,
         selected: &[u32],
     ) -> MaskedUpdate {
+        let mut scratch = MaskScratch::default();
+        let mut out = MaskedUpdate::default();
+        self.build_update_among_into(g, grad_keep, round, selected, &mut scratch, &mut out);
+        out
+    }
+
+    /// [`Self::build_update_among`] into caller-owned scratch + output
+    /// — the round engine's zero-allocation path (the per-worker
+    /// workspace holds both, so masking a 159k-param update allocates
+    /// nothing model-sized in steady state).
+    pub fn build_update_among_into(
+        &self,
+        g: &[f32],
+        grad_keep: &[bool],
+        round: u64,
+        selected: &[u32],
+        scratch: &mut MaskScratch,
+        out: &mut MaskedUpdate,
+    ) {
         let masker = self.masker_for(selected);
         let cfg = MaskSparsifyConfig {
             range: masker.range,
             mask_ratio_k: self.mask_ratio_k,
             participants: masker.n_peers() + 1,
         };
-        mask_sparsify(g, grad_keep, &masker, round, &cfg)
+        mask_sparsify_into(g, grad_keep, &masker, round, &cfg, scratch, out);
     }
 
     /// Surrender held shares for a dropped client (server request).

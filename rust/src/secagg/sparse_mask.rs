@@ -73,13 +73,23 @@ impl CaseCensus {
 }
 
 /// Output of the masked sparsification.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct MaskedUpdate {
     /// The wire payload: `(G + mask_e) ⊙ mask_t`, sparse.
     pub payload: SparseVec,
     /// `G ⊙ ¬mask_t`, accumulated locally.
     pub residual: Vec<f32>,
     pub census: CaseCensus,
+}
+
+/// Reusable scratch for [`mask_sparsify_into`]: the combined-mask
+/// accumulator and its nonzero map (both model-sized). Held in the
+/// per-worker `ClientWorkspace` so steady-state rounds never allocate
+/// them.
+#[derive(Debug, Default)]
+pub struct MaskScratch {
+    acc: Vec<f32>,
+    nz: Vec<bool>,
 }
 
 /// The masked-sparsify sweep (rust twin of the pallas `masked_agg` /
@@ -97,14 +107,38 @@ pub fn mask_sparsify(
     round: u64,
     cfg: &MaskSparsifyConfig,
 ) -> MaskedUpdate {
+    let mut scratch = MaskScratch::default();
+    let mut out = MaskedUpdate::default();
+    mask_sparsify_into(g, grad_keep, masker, round, cfg, &mut scratch, &mut out);
+    out
+}
+
+/// [`mask_sparsify`] into caller-owned scratch + output buffers —
+/// the zero-allocation hot path (identical results; the allocating
+/// wrapper above just feeds it fresh buffers).
+pub fn mask_sparsify_into(
+    g: &[f32],
+    grad_keep: &[bool],
+    masker: &PairwiseMasker,
+    round: u64,
+    cfg: &MaskSparsifyConfig,
+    scratch: &mut MaskScratch,
+    out: &mut MaskedUpdate,
+) {
     assert_eq!(g.len(), grad_keep.len(), "grad_keep length mismatch");
     let sigma = cfg.sigma();
-    let (mask_e, mask_nz) = masker.sparse_combined_mask(round, g.len(), sigma);
+    masker.sparse_combined_mask_into(round, g.len(), sigma, &mut scratch.acc, &mut scratch.nz);
+    let (mask_e, mask_nz) = (&scratch.acc, &scratch.nz);
 
     let mut census = CaseCensus::default();
-    let mut indices = Vec::new();
-    let mut values = Vec::new();
-    let mut residual = vec![0f32; g.len()];
+    out.payload.n = g.len() as u32;
+    let indices = &mut out.payload.indices;
+    let values = &mut out.payload.values;
+    indices.clear();
+    values.clear();
+    out.residual.clear();
+    out.residual.resize(g.len(), 0.0);
+    let residual = &mut out.residual;
 
     for j in 0..g.len() {
         match (grad_keep[j], mask_nz[j]) {
@@ -131,12 +165,7 @@ pub fn mask_sparsify(
             }
         }
     }
-
-    MaskedUpdate {
-        payload: SparseVec { n: g.len() as u32, indices, values },
-        residual,
-        census,
-    }
+    out.census = census;
 }
 
 /// Server side: sum masked sparse payloads; pair masks cancel, leaving

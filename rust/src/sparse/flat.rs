@@ -6,7 +6,7 @@
 //! whose parameters are orders of magnitude smaller are starved by a
 //! global threshold.
 
-use super::topk::threshold_for_topk_abs;
+use super::topk::threshold_for_topk_abs_with;
 
 /// Result of a sparsification pass.
 #[derive(Clone, Debug, Default)]
@@ -25,30 +25,51 @@ pub struct SparsifyOut {
 /// vector (strictly greater than the k-th magnitude; ties dropped to
 /// the residual, matching Alg. 1's `torch.where(|g| > δ)` semantics).
 pub fn flat_topk_sparsify(g: &[f32], s: f64) -> SparsifyOut {
+    let mut out = SparsifyOut::default();
+    flat_topk_sparsify_into(g, s, &mut Vec::new(), &mut out);
+    out
+}
+
+/// [`flat_topk_sparsify`] into caller-owned scratch + output: the
+/// selection magnitudes land in `scratch`, the split reuses `out`'s
+/// buffers — the zero-allocation sparsify path.
+pub fn flat_topk_sparsify_into(g: &[f32], s: f64, scratch: &mut Vec<f32>, out: &mut SparsifyOut) {
     let n = g.len();
     assert!(n > 0, "flat_topk_sparsify on empty update");
     assert!((0.0..=1.0).contains(&s), "sparsity rate {s} outside [0,1]");
     let k = ((n as f64 * s).ceil() as usize).clamp(1, n);
-    let delta = threshold_for_topk_abs(g, k);
-    apply_threshold(g, delta)
+    let delta = threshold_for_topk_abs_with(g, k, scratch);
+    apply_threshold_into(g, delta, out);
 }
 
 /// Threshold application sweep (the rust twin of the pallas
 /// `sparsify` kernel; parity is asserted in `rust/tests/pallas_parity.rs`).
 pub fn apply_threshold(g: &[f32], delta: f32) -> SparsifyOut {
-    let mut sparse = vec![0f32; g.len()];
-    let mut residual = vec![0f32; g.len()];
+    let mut out = SparsifyOut::default();
+    apply_threshold_into(g, delta, &mut out);
+    out
+}
+
+/// [`apply_threshold`] into a caller-owned [`SparsifyOut`] (buffers
+/// resized + rewritten; identical results).
+pub fn apply_threshold_into(g: &[f32], delta: f32, out: &mut SparsifyOut) {
+    out.sparse.clear();
+    out.sparse.resize(g.len(), 0.0);
+    out.residual.clear();
+    out.residual.resize(g.len(), 0.0);
+    out.thresholds.clear();
+    out.thresholds.push(delta);
     let mut nnz = 0usize;
     for i in 0..g.len() {
         let x = g[i];
         if x.abs() > delta {
-            sparse[i] = x;
+            out.sparse[i] = x;
             nnz += 1;
         } else {
-            residual[i] = x;
+            out.residual[i] = x;
         }
     }
-    SparsifyOut { sparse, residual, nnz, thresholds: vec![delta] }
+    out.nnz = nnz;
 }
 
 #[cfg(test)]

@@ -25,7 +25,7 @@ pub use momentum::{warmup_rate, MomentumCorrector};
 pub use quant::{dequantize, quantize, QuantConfig};
 pub use stc::stc_sparsify;
 pub use dynamic::DynamicRate;
-pub use flat::flat_topk_sparsify;
+pub use flat::{flat_topk_sparsify, flat_topk_sparsify_into};
 pub use residual::ResidualStore;
-pub use thgs::{layer_rates, thgs_sparsify, ThgsConfig};
-pub use topk::{threshold_for_topk, threshold_for_topk_abs};
+pub use thgs::{layer_rates, thgs_sparsify, thgs_sparsify_into, ThgsConfig};
+pub use topk::{threshold_for_topk, threshold_for_topk_abs, threshold_for_topk_abs_with};

@@ -32,11 +32,20 @@ impl MomentumCorrector {
     /// Fold this round's raw update `g` through the velocity and
     /// return the corrected update to be accumulated + sparsified.
     pub fn correct(&mut self, g: &[f32]) -> Vec<f32> {
+        let mut out = g.to_vec();
+        self.correct_in_place(&mut out);
+        out
+    }
+
+    /// [`Self::correct`] writing the corrected update back into `g` —
+    /// the round engine's allocation-free path (identical math:
+    /// velocity advances, then `g` becomes the velocity).
+    pub fn correct_in_place(&mut self, g: &mut [f32]) {
         assert_eq!(g.len(), self.velocity.len(), "velocity size mismatch");
-        for (u, &x) in self.velocity.iter_mut().zip(g) {
-            *u = self.momentum * *u + x;
+        for (u, x) in self.velocity.iter_mut().zip(g.iter_mut()) {
+            *u = self.momentum * *u + *x;
+            *x = *u;
         }
-        self.velocity.clone()
     }
 
     /// DGC "momentum factor masking": zero the velocity at positions

@@ -20,7 +20,7 @@
 //! network has its own characteristics").
 
 use super::flat::SparsifyOut;
-use super::topk::threshold_for_topk_abs;
+use super::topk::threshold_for_topk_abs_with;
 
 /// THGS hyper-parameters (paper Eq. 1 symbols).
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -76,6 +76,21 @@ pub fn layer_rates(cfg: &ThgsConfig, n_layers: usize) -> Vec<f64> {
 /// Returns the sparse/residual split (exact: `sparse + residual == g`)
 /// plus the per-layer thresholds δ_i actually used.
 pub fn thgs_sparsify(g: &[f32], layer_spans: &[(usize, usize)], cfg: &ThgsConfig) -> SparsifyOut {
+    let mut out = SparsifyOut::default();
+    thgs_sparsify_into(g, layer_spans, cfg, &mut Vec::new(), &mut out);
+    out
+}
+
+/// [`thgs_sparsify`] into caller-owned scratch + output: one magnitude
+/// scratch buffer serves every layer's Top-k selection and the split
+/// reuses `out`'s buffers — the round engine's zero-allocation path.
+pub fn thgs_sparsify_into(
+    g: &[f32],
+    layer_spans: &[(usize, usize)],
+    cfg: &ThgsConfig,
+    scratch: &mut Vec<f32>,
+    out: &mut SparsifyOut,
+) {
     cfg.validate().expect("invalid ThgsConfig");
     debug_assert_eq!(
         layer_spans.iter().map(|(_, l)| l).sum::<usize>(),
@@ -83,27 +98,29 @@ pub fn thgs_sparsify(g: &[f32], layer_spans: &[(usize, usize)], cfg: &ThgsConfig
         "layer spans must cover the update vector"
     );
     let rates = layer_rates(cfg, layer_spans.len());
-    let mut sparse = vec![0f32; g.len()];
-    let mut residual = vec![0f32; g.len()];
+    out.sparse.clear();
+    out.sparse.resize(g.len(), 0.0);
+    out.residual.clear();
+    out.residual.resize(g.len(), 0.0);
+    out.thresholds.clear();
     let mut nnz = 0usize;
-    let mut thresholds = Vec::with_capacity(layer_spans.len());
 
     for (li, &(start, len)) in layer_spans.iter().enumerate() {
         let layer = &g[start..start + len];
         let k = ((len as f64 * rates[li]).ceil() as usize).clamp(1, len);
-        let delta = threshold_for_topk_abs(layer, k);
-        thresholds.push(delta);
+        let delta = threshold_for_topk_abs_with(layer, k, scratch);
+        out.thresholds.push(delta);
         for (off, &x) in layer.iter().enumerate() {
             let i = start + off;
             if x.abs() > delta {
-                sparse[i] = x;
+                out.sparse[i] = x;
                 nnz += 1;
             } else {
-                residual[i] = x;
+                out.residual[i] = x;
             }
         }
     }
-    SparsifyOut { sparse, residual, nnz, thresholds }
+    out.nnz = nnz;
 }
 
 #[cfg(test)]

@@ -27,11 +27,22 @@ pub fn threshold_for_topk(vals: &[f32], k: usize) -> f32 {
 
 /// Threshold over magnitudes: k-th largest `|g|` (Alg. 1 line 6).
 pub fn threshold_for_topk_abs(g: &[f32], k: usize) -> f32 {
+    threshold_for_topk_abs_with(g, k, &mut Vec::new())
+}
+
+/// [`threshold_for_topk_abs`] with a caller-owned magnitude scratch
+/// buffer: selection is the only allocation in the Top-k half, so the
+/// per-worker workspace holds one model-sized `Vec<f32>` and the
+/// steady-state sparsify path allocates nothing. The scratch contents
+/// on return are the partially-ordered magnitudes (introselect
+/// leftovers) — opaque, reuse freely.
+pub fn threshold_for_topk_abs_with(g: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
     assert!(!g.is_empty(), "threshold_for_topk_abs on empty slice");
     let k = k.clamp(1, g.len());
-    let mut buf: Vec<f32> = g.iter().map(|x| x.abs()).collect();
-    let idx = buf.len() - k;
-    let (_, kth, _) = buf.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
+    scratch.clear();
+    scratch.extend(g.iter().map(|x| x.abs()));
+    let idx = scratch.len() - k;
+    let (_, kth, _) = scratch.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
     *kth
 }
 
@@ -79,6 +90,21 @@ mod tests {
         assert_eq!(threshold_for_topk_abs(&v, 1), 5.0);
         assert_eq!(threshold_for_topk_abs(&v, 3), 2.5);
         assert_eq!(threshold_for_topk_abs(&v, 8), 0.0);
+    }
+
+    #[test]
+    fn scratch_variant_matches_and_reuses() {
+        let mut rng = Rng::new(9);
+        let mut scratch = vec![99.0f32; 7]; // dirty, wrong-sized
+        for _ in 0..20 {
+            let n = 1 + rng.below(500) as usize;
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+            let k = 1 + rng.below(n as u64) as usize;
+            assert_eq!(
+                threshold_for_topk_abs_with(&g, k, &mut scratch),
+                threshold_for_topk_abs(&g, k)
+            );
+        }
     }
 
     #[test]

@@ -18,12 +18,16 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::{arr, num, obj, s, Value};
 use super::timer::fmt_duration;
 
 /// Result statistics for one benchmark case.
 #[derive(Clone, Debug)]
 pub struct Stats {
     pub name: String,
+    /// Elements processed per iteration (0 when the case has no
+    /// natural element count).
+    pub n: u64,
     pub iters: u64,
     pub mean: Duration,
     pub std_dev: Duration,
@@ -65,7 +69,11 @@ impl Bench {
     }
 
     /// Measure `f`, auto-scaling iterations per sample batch.
-    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Stats {
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> Stats {
+        self.bench_case(name, 0, f)
+    }
+
+    fn bench_case<F: FnMut()>(&mut self, name: &str, n: u64, mut f: F) -> Stats {
         // warm-up + per-iteration estimate
         let warm_start = Instant::now();
         let mut warm_iters = 0u64;
@@ -92,16 +100,18 @@ impl Bench {
         }
         sample_means.sort_by(|a, b| a.partial_cmp(b).unwrap());
 
-        let n = sample_means.len();
-        let mean = sample_means.iter().sum::<f64>() / n as f64;
-        let var = sample_means.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        let n_samples = sample_means.len();
+        let mean = sample_means.iter().sum::<f64>() / n_samples as f64;
+        let var =
+            sample_means.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n_samples as f64;
         let stats = Stats {
             name: format!("{}/{}", self.group, name),
-            iters: iters_per_sample * n as u64,
+            n,
+            iters: iters_per_sample * n_samples as u64,
             mean: Duration::from_secs_f64(mean),
             std_dev: Duration::from_secs_f64(var.sqrt()),
-            p50: Duration::from_secs_f64(sample_means[n / 2]),
-            p95: Duration::from_secs_f64(sample_means[(n * 95 / 100).min(n - 1)]),
+            p50: Duration::from_secs_f64(sample_means[n_samples / 2]),
+            p95: Duration::from_secs_f64(sample_means[(n_samples * 95 / 100).min(n_samples - 1)]),
             min: Duration::from_secs_f64(sample_means[0]),
         };
         println!(
@@ -119,7 +129,7 @@ impl Bench {
 
     /// Like [`bench`](Self::bench) but also prints element throughput.
     pub fn bench_throughput<F: FnMut()>(&mut self, name: &str, elems: u64, f: F) -> Stats {
-        let stats = self.bench(name, f);
+        let stats = self.bench_case(name, elems, f);
         let tput = stats.throughput(elems);
         println!(
             "{:<44} thrpt: {:.2} Melem/s",
@@ -129,11 +139,47 @@ impl Bench {
         stats
     }
 
-    /// Print the summary table; call once at the end of the bench bin.
+    /// Machine-readable report of every case so far — the shared
+    /// `BENCH_<group>.json` schema (name, n, iters, mean/σ/p50/p95/min
+    /// seconds) that tracks the perf trajectory across PRs.
+    pub fn to_json(&self) -> Value {
+        obj(vec![
+            ("bench", s(&self.group)),
+            (
+                "cases",
+                arr(self
+                    .results
+                    .iter()
+                    .map(|st| {
+                        obj(vec![
+                            ("name", s(&st.name)),
+                            ("n", num(st.n as f64)),
+                            ("iters", num(st.iters as f64)),
+                            ("mean_s", num(st.mean.as_secs_f64())),
+                            ("std_dev_s", num(st.std_dev.as_secs_f64())),
+                            ("p50_s", num(st.p50.as_secs_f64())),
+                            ("p95_s", num(st.p95.as_secs_f64())),
+                            ("min_s", num(st.min.as_secs_f64())),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    /// Print the summary table and write `BENCH_<group>.json` (cwd);
+    /// call once at the end of the bench bin. Bins that want a richer
+    /// report (e.g. `bench_round`'s per-phase timings) overwrite the
+    /// file afterwards.
     pub fn finish(self) -> Vec<Stats> {
         println!("\n== {} summary ==", self.group);
         for s in &self.results {
             println!("{:<44} {}", s.name, fmt_duration(s.mean));
+        }
+        let path = format!("BENCH_{}.json", self.group);
+        match std::fs::write(&path, self.to_json().to_string()) {
+            Ok(()) => println!("machine-readable report: {path}"),
+            Err(e) => eprintln!("could not write {path}: {e}"),
         }
         self.results
     }

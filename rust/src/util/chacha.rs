@@ -114,17 +114,34 @@ impl ChaCha20 {
         lo + (self.next_f64() as f32) * (hi - lo)
     }
 
-    /// Fill a mask vector with uniform `[lo, hi)` values.
+    /// Map one raw keystream lane to a uniform f32 in `[lo, hi)`.
+    ///
+    /// This is THE lane→value function of the mask PRG: both the dense
+    /// fill and the streaming σ-filter path go through it, so filtering
+    /// on the raw u32 lane (see `secagg::mask`) and converting only the
+    /// kept lanes produces bit-identical values. The map is monotone
+    /// non-decreasing in `lane` (every factor is positive and each f32
+    /// rounding step preserves order), which is what makes an exact
+    /// integer filter threshold possible.
+    #[inline]
+    pub fn lane_to_f32(lane: u32, lo: f32, hi: f32) -> f32 {
+        const SCALE: f32 = 1.0 / 4_294_967_296.0; // 2^-32
+        lo + lane as f32 * SCALE * (hi - lo)
+    }
+
+    /// Stream `n` keystream lanes block-wise: `f(index, raw_lane)` for
+    /// each, straight out of the 64-byte block buffer — no dense
+    /// allocation. Consumes the keystream exactly like
+    /// [`Self::fill_uniform_f32`] (one u32 per lane), so the two paths
+    /// see identical lanes.
     ///
     /// Hot path of the secure-aggregation round (one call per pair per
-    /// round over the full parameter vector): consumes the keystream as
-    /// one u32 per element, straight out of the block buffer (§Perf L3
-    /// iteration 2 — ~3× over the per-element `next_u64` path).
-    pub fn fill_uniform_f32(&mut self, out: &mut [f32], lo: f32, hi: f32) {
-        const SCALE: f32 = 1.0 / 4_294_967_296.0; // 2^-32
-        let span = hi - lo;
+    /// round over the full parameter vector): the σ-filtered mask build
+    /// streams lanes through this and materializes only the kept
+    /// entries (~k/x of n), instead of a dense n-float vector.
+    pub fn for_each_uniform_f32<F: FnMut(usize, u32)>(&mut self, n: usize, mut f: F) {
         let mut i = 0;
-        while i < out.len() {
+        while i < n {
             if self.offset == 64 {
                 self.refill();
             }
@@ -134,19 +151,26 @@ impl ChaCha20 {
                 // realign: consume the tail bytes
                 let mut b = [0u8; 4];
                 self.fill_bytes(&mut b);
-                out[i] = lo + u32::from_le_bytes(b) as f32 * SCALE * span;
+                f(i, u32::from_le_bytes(b));
                 i += 1;
                 continue;
             }
-            let take = lanes.min(out.len() - i);
+            let take = lanes.min(n - i);
             for l in 0..take {
                 let off = self.offset + 4 * l;
-                let v = u32::from_le_bytes(self.block[off..off + 4].try_into().unwrap());
-                out[i + l] = lo + v as f32 * SCALE * span;
+                f(i + l, u32::from_le_bytes(self.block[off..off + 4].try_into().unwrap()));
             }
             self.offset += 4 * take;
             i += take;
         }
+    }
+
+    /// Fill a mask vector with uniform `[lo, hi)` values (one u32 lane
+    /// per element; see [`Self::for_each_uniform_f32`], §Perf L3
+    /// iteration 2 — ~3× over the per-element `next_u64` path).
+    pub fn fill_uniform_f32(&mut self, out: &mut [f32], lo: f32, hi: f32) {
+        let n = out.len();
+        self.for_each_uniform_f32(n, |i, lane| out[i] = Self::lane_to_f32(lane, lo, hi));
     }
 }
 
@@ -203,6 +227,41 @@ mod tests {
         assert!(v.iter().all(|&x| (-5.0..5.0).contains(&x)));
         let mean: f32 = v.iter().sum::<f32>() / v.len() as f32;
         assert!(mean.abs() < 0.2, "mean={mean}");
+    }
+
+    #[test]
+    fn streamed_lanes_match_dense_fill() {
+        let key = [5u8; 32];
+        // n = 1000 is not a multiple of 16, so the final block is
+        // consumed partially on both paths
+        let n = 1000;
+        let mut dense = vec![0f32; n];
+        ChaCha20::from_seed(&key, 9).fill_uniform_f32(&mut dense, -10.0, 10.0);
+        let mut streamed = vec![0f32; n];
+        let mut seen = 0usize;
+        ChaCha20::from_seed(&key, 9).for_each_uniform_f32(n, |i, lane| {
+            streamed[i] = ChaCha20::lane_to_f32(lane, -10.0, 10.0);
+            seen += 1;
+        });
+        assert_eq!(seen, n);
+        // bitwise: the two paths must be the SAME stream
+        for i in 0..n {
+            assert_eq!(dense[i].to_bits(), streamed[i].to_bits(), "lane {i}");
+        }
+    }
+
+    #[test]
+    fn lane_map_is_monotone() {
+        // order-preservation is what the integer σ-threshold relies on
+        let (lo, hi) = (-10.0f32, 10.0);
+        let mut prev = ChaCha20::lane_to_f32(0, lo, hi);
+        for lane in (0u64..=u32::MAX as u64).step_by(65_537) {
+            let v = ChaCha20::lane_to_f32(lane as u32, lo, hi);
+            assert!(v >= prev, "lane {lane}: {v} < {prev}");
+            prev = v;
+        }
+        assert_eq!(ChaCha20::lane_to_f32(0, lo, hi), lo);
+        assert!(ChaCha20::lane_to_f32(u32::MAX, lo, hi) <= hi);
     }
 
     #[test]

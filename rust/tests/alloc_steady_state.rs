@@ -1,0 +1,129 @@
+//! Counting-allocator audit of the per-client round path.
+//!
+//! The kernel-layer contract (PERF.md): once the per-worker
+//! workspaces are warm, the steady-state client path — local SGD →
+//! sparsify → (secure) mask → encode — performs **zero heap
+//! allocations of model-sized buffers** per client. Everything
+//! model-sized (local params, grads, update, activations, Top-k
+//! scratch, sparse/residual split, keep map, mask accumulators,
+//! masked residual) lives in the trainer's `WorkspacePool` and is
+//! reused; per-client allocations are bounded by the *kept* entries
+//! (~k/x of n), never the model size.
+//!
+//! This test wraps the global allocator with a counter of "large"
+//! allocations (≥ 3/4 of the model's f32 footprint — every
+//! model-sized buffer is ≥ 4·m bytes, every legitimate
+//! kept-entry-scaled buffer is well under), warms the workspaces up,
+//! then drives the isolated client
+//! phases (`Trainer::run_client_phases`) and asserts the only large
+//! allocation left is the engine's once-per-round global-model
+//! snapshot — with 10 clients per round, any model-sized allocation
+//! on the per-client path would show up 10× that bound.
+//!
+//! This file is its own test binary (one test), so no parallel test
+//! pollutes the counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use fedsparse::config::RunConfig;
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::sparse::thgs::ThgsConfig;
+
+static TRACKING: AtomicBool = AtomicBool::new(false);
+static THRESHOLD_BYTES: AtomicUsize = AtomicUsize::new(usize::MAX);
+static LARGE_ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAllocator;
+
+fn note(size: usize) {
+    if TRACKING.load(Ordering::Relaxed) && size >= THRESHOLD_BYTES.load(Ordering::Relaxed) {
+        LARGE_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAllocator {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        note(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        note(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator;
+
+/// The acceptance configuration: 20 clients, 10 per round, THGS down
+/// to sparse rate 0.01, mnist_mlp (159,010 params). The mask
+/// keep-ratio is dialed to k = 0.2 so the *union* of the 9 pair
+/// streams (1 − (1 − k/x)^9 ≈ 17% of positions) keeps the per-client
+/// wire payload — a legitimate, kept-entry-scaled allocation — well
+/// below the model-sized threshold.
+fn cfg(secure: bool) -> RunConfig {
+    let mut cfg = RunConfig::smoke("mnist_mlp");
+    cfg.data_dir = None;
+    cfg.rounds = 1_000_000; // rounds driven manually
+    cfg.eval_every = u64::MAX;
+    cfg.clients = 20;
+    cfg.clients_per_round = 10;
+    cfg.local_iters = 2;
+    cfg.algorithm = Algorithm::Thgs(ThgsConfig { s0: 0.1, alpha: 0.8, s_min: 0.01 });
+    cfg.secure = secure;
+    cfg.mask_ratio_k = 0.2;
+    cfg
+}
+
+#[test]
+fn steady_state_client_path_allocates_nothing_model_sized() {
+    for secure in [false, true] {
+        let mut trainer = Trainer::new(cfg(secure)).unwrap();
+        let m = trainer.model_params();
+
+        // warm-up: workspaces and payload buffers size themselves
+        for round in 0..2u64 {
+            trainer.run_client_phases(round).unwrap();
+        }
+
+        // "model-sized" = at least 3/4 of the model's f32 footprint
+        // (4·m bytes). Every model-sized buffer (local params, grads,
+        // update, Top-k scratch, sparse/residual split, mask
+        // accumulator) is 4·m bytes = 636 KB ≥ this; every legitimate
+        // kept-entry-scaled buffer (σ-filtered streams ~25 KB/pair,
+        // the ~0.25n-entry wire payload ~240 KB, batch pixels 157 KB)
+        // sits well below it.
+        THRESHOLD_BYTES.store(m * 3, Ordering::SeqCst);
+        LARGE_ALLOCS.store(0, Ordering::SeqCst);
+        TRACKING.store(true, Ordering::SeqCst);
+        let rounds = 3u64;
+        for round in 2..2 + rounds {
+            trainer.run_client_phases(round).unwrap();
+        }
+        TRACKING.store(false, Ordering::SeqCst);
+
+        let count = LARGE_ALLOCS.load(Ordering::SeqCst);
+        // allowed: exactly one model-sized allocation per round — the
+        // engine's global-model snapshot (ClientPipeline::for_round).
+        // 10 clients run per round, so any model-sized allocation on
+        // the per-client path would push this to ≥ 10·rounds.
+        assert!(
+            count <= rounds as usize,
+            "secure={secure}: {count} model-sized (≥{} B) allocations across {rounds} \
+             steady-state rounds of 10 clients each — the per-client path must not \
+             allocate model-sized buffers (1 global snapshot per round is allowed)",
+            m * 3
+        );
+    }
+}
