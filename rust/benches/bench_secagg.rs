@@ -8,6 +8,7 @@ use fedsparse::secagg::mask::MaskRange;
 use fedsparse::secagg::protocol::{full_setup, SecAggConfig};
 use fedsparse::sparse::topk::threshold_for_topk_abs;
 use fedsparse::util::bench::{black_box, Bench};
+use fedsparse::util::pool::ThreadPool;
 use fedsparse::util::rng::Rng;
 
 fn main() {
@@ -46,6 +47,14 @@ fn main() {
     let mut nz = Vec::new();
     b.bench_throughput("mask/sparse_combined_into/159k", n as u64, || {
         masker.sparse_combined_mask_into(3, n, sigma, &mut acc, &mut nz);
+        black_box((&acc, &nz));
+    });
+
+    // per-pair fan-out over a worker pool (bitwise-identical reduction
+    // order — see PERF.md); same sweep, generation parallelized
+    let pool = ThreadPool::new(3);
+    b.bench_throughput("mask/sparse_combined_pooled/159k", n as u64, || {
+        masker.sparse_combined_mask_pooled_into(&pool, 3, n, sigma, &mut acc, &mut nz);
         black_box((&acc, &nz));
     });
 

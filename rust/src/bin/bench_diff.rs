@@ -1,0 +1,159 @@
+//! `bench_diff` — the CI perf-regression gate.
+//!
+//! Compares freshly produced `BENCH_*.json` reports (from `cargo
+//! bench`, quick mode in CI) against the committed baselines under
+//! `bench-history/`, with tolerance bands: exit 1 when any case's p50
+//! regresses more than `--fail-pct`, print warnings above `--warn-pct`
+//! (see `util::benchcmp` for the banding rules and PERF.md for how to
+//! read the bands). A markdown summary — full p50/p95 table per report
+//! — is printed and, with `--summary`, appended to a file (CI passes
+//! `$GITHUB_STEP_SUMMARY`).
+//!
+//! Bootstrap behavior: reports with no committed baseline are listed
+//! (current numbers only) and never fail, so the gate is safe to wire
+//! up before the first baselines land. `--inflate-current <pct>`
+//! scales the current numbers up before comparing — CI's self-test
+//! uses it to prove a synthetic >30% regression actually trips the
+//! gate.
+//!
+//! ```text
+//! cargo run --release --bin bench_diff -- \
+//!     --baseline-dir ../bench-history --current-dir . \
+//!     --fail-pct 30 --warn-pct 15 --summary "$GITHUB_STEP_SUMMARY"
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use fedsparse::util::benchcmp::{
+    compare, inflate_report, markdown, markdown_current_only, worst, BenchComparison, Tolerance,
+    Verdict,
+};
+use fedsparse::util::cli::{ArgSpec, Args, CliError};
+use fedsparse::util::json;
+
+const SPEC: &[ArgSpec] = &[
+    ArgSpec::opt("baseline-dir", "b", "../bench-history", "committed baseline BENCH_*.json directory"),
+    ArgSpec::opt("current-dir", "c", ".", "directory holding the fresh BENCH_*.json reports"),
+    ArgSpec::opt("fail-pct", "", "30", "fail the gate above this p50 regression (percent)"),
+    ArgSpec::opt("warn-pct", "", "15", "warn above this p50 regression (percent)"),
+    ArgSpec::opt("summary", "", "", "append the markdown summary to this file (e.g. $GITHUB_STEP_SUMMARY)"),
+    ArgSpec::opt("inflate-current", "", "0", "self-test aid: scale current p50/p95 up by this percent first"),
+];
+
+/// `BENCH_*.json` filenames in `dir`, sorted (empty when the directory
+/// does not exist).
+fn bench_files(dir: &Path) -> Vec<String> {
+    let mut out = Vec::new();
+    if let Ok(entries) = std::fs::read_dir(dir) {
+        for entry in entries.flatten() {
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with("BENCH_") && name.ends_with(".json") {
+                out.push(name);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+fn load(path: &Path) -> Result<json::Value, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
+}
+
+fn run() -> Result<ExitCode, String> {
+    let args = match Args::parse_spec("bench_diff", SPEC, std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(CliError::Help) => return Ok(ExitCode::SUCCESS),
+        Err(e) => return Err(e.to_string()),
+    };
+    let baseline_dir = PathBuf::from(args.get("baseline-dir").unwrap());
+    let current_dir = PathBuf::from(args.get("current-dir").unwrap());
+    let tol = Tolerance {
+        warn_pct: args.get_parsed::<f64>("warn-pct").map_err(|e| e.to_string())?,
+        fail_pct: args.get_parsed::<f64>("fail-pct").map_err(|e| e.to_string())?,
+    };
+    let inflate_pct = args.get_parsed::<f64>("inflate-current").map_err(|e| e.to_string())?;
+
+    let current_files = bench_files(&current_dir);
+    if current_files.is_empty() {
+        return Err(format!(
+            "no BENCH_*.json in {} — did the bench run produce reports?",
+            current_dir.display()
+        ));
+    }
+
+    let mut compared: Vec<BenchComparison> = Vec::new();
+    let mut md = String::new();
+    for file in &current_files {
+        let stem = file.trim_end_matches(".json");
+        let mut current = load(&current_dir.join(file))?;
+        if inflate_pct != 0.0 {
+            current = inflate_report(&current, inflate_pct);
+        }
+        let base_path = baseline_dir.join(file);
+        if base_path.is_file() {
+            let baseline = load(&base_path)?;
+            compared.push(compare(stem, &baseline, &current, tol));
+        } else {
+            md.push_str(&markdown_current_only(stem, &current));
+        }
+    }
+    // a baseline REPORT with no current counterpart means a whole
+    // bench group silently stopped producing numbers (binary deleted,
+    // renamed, or crashed before writing) — that is a gate failure,
+    // unlike vanished individual cases; intentional removals update
+    // bench-history/ in the same PR
+    let vanished: Vec<String> = bench_files(&baseline_dir)
+        .into_iter()
+        .filter(|f| !current_files.contains(f))
+        .collect();
+    let verdict =
+        if vanished.is_empty() { worst(&compared) } else { Verdict::Fail };
+    let mut summary = markdown(&compared, tol, verdict);
+    if !vanished.is_empty() {
+        summary.push_str(&format!(
+            "**FAIL**: baseline reports with no current counterpart (bench group \
+             vanished): {}\n\n",
+            vanished.join(", ")
+        ));
+    }
+    summary.push_str(&md);
+    if compared.is_empty() {
+        summary.push_str(&format!(
+            "no committed baselines under {} — gate is reporting-only until the \
+             first BENCH_*.json files are committed (see bench-history/README.md)\n",
+            baseline_dir.display()
+        ));
+    }
+    if inflate_pct != 0.0 {
+        summary.push_str(&format!(
+            "\n(self-test mode: current numbers inflated by {inflate_pct}% before comparing)\n"
+        ));
+    }
+    println!("{summary}");
+    if let Some(path) = args.get("summary").filter(|p| !p.is_empty()) {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .map_err(|e| format!("open summary {path}: {e}"))?;
+        f.write_all(summary.as_bytes()).map_err(|e| format!("write summary {path}: {e}"))?;
+    }
+    Ok(if verdict == Verdict::Fail { ExitCode::FAILURE } else { ExitCode::SUCCESS })
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("bench_diff: {e}");
+            // distinct from the gate's FAIL exit so CI logs show
+            // infrastructure errors as such
+            ExitCode::from(2)
+        }
+    }
+}

@@ -69,6 +69,14 @@ pub struct RunConfig {
     /// assert the masks cancel. Never enable outside a harness — it
     /// reveals exactly what the protocol exists to hide.
     pub audit_secure_sum: bool,
+    /// Test/harness observability: copy each round's server-side
+    /// aggregate into [`RoundOutcome::aggregate`]. Off by default —
+    /// the copy is the one model-sized allocation the steady-state
+    /// coordinator path would otherwise make per round (the aggregate
+    /// itself lives in the trainer-owned `ServerWorkspace`).
+    ///
+    /// [`RoundOutcome::aggregate`]: crate::coordinator::RoundOutcome
+    pub expose_aggregate: bool,
     /// Eq. 4 mask keep-ratio numerator k (secure mode).
     pub mask_ratio_k: f64,
     /// Eq. 2 dynamic sparsity-rate controller (secure / THGS modes).
@@ -126,6 +134,7 @@ impl Default for RunConfig {
             algorithm: Algorithm::Thgs(ThgsConfig::default()),
             secure: false,
             audit_secure_sum: false,
+            expose_aggregate: false,
             mask_ratio_k: 1.0,
             dynamic_rate: false,
             rate_alpha: 0.8,

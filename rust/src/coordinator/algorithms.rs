@@ -113,8 +113,8 @@ impl Algorithm {
 
     /// [`Self::sparsify`] into caller-owned scratch + output — the
     /// round engine's zero-allocation path (`scratch` feeds the Top-k
-    /// magnitude selection; STC still allocates internally, it is not
-    /// on the steady-state round path).
+    /// magnitude selection; every contender, STC included, reuses the
+    /// caller's buffers).
     pub fn sparsify_into(
         &self,
         update: &[f32],
@@ -144,8 +144,14 @@ impl Algorithm {
                 thgs_sparsify_into(update, layer_spans, &cfg, scratch, out)
             }
             Algorithm::Stc { s } => {
-                *out = crate::sparse::stc::stc_sparsify(update, (s * rate_scale).clamp(1e-9, 1.0))
-                    .sparsify;
+                // μ ships implicitly in the ternary values; the cost
+                // model recovers it via `stc_cost_bytes`
+                crate::sparse::stc::stc_sparsify_into(
+                    update,
+                    (s * rate_scale).clamp(1e-9, 1.0),
+                    scratch,
+                    out,
+                );
             }
         }
     }

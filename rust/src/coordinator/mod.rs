@@ -21,5 +21,7 @@ pub mod trainer;
 
 pub use algorithms::Algorithm;
 pub use client::{ClientSnapshot, ClientState};
-pub use round::{ClientPipeline, ClientWorkspace, Cohort, RoundOutcome, WorkspacePool};
+pub use round::{
+    ClientPipeline, ClientWorkspace, Cohort, RoundOutcome, ServerWorkspace, WorkspacePool,
+};
 pub use trainer::Trainer;

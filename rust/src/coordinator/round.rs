@@ -24,6 +24,17 @@
 //! into the job and back out through [`super::client::ClientState`]'s
 //! take/commit/restore protocol, so the hot path stays lock-free.
 //!
+//! Both sides of the engine run on reusable scratch: the per-worker
+//! [`ClientWorkspace`] pool covers LocalTrain → Encode, and the
+//! trainer-owned [`ServerWorkspace`] covers Collect → Unmask/Recover →
+//! Apply (the global model is `Arc`'d, so the round snapshot is a
+//! refcount bump and Apply is copy-on-write). In steady state neither
+//! side heap-allocates anything model-sized
+//! (`tests/alloc_steady_state.rs`). Secure-mode pair-mask generation —
+//! client masking and server dead-mask recovery — fans out per pair
+//! over the worker pool under a pinned serial reduction order, so
+//! results stay bitwise identical to the serial path (PERF.md).
+//!
 //! Failure semantics: a client the transport kills (crash or past-
 //! deadline straggler) rolls back to its pre-round snapshot — from its
 //! point of view the round never happened; the un-transmitted residual
@@ -50,6 +61,7 @@ use crate::sparse::dynamic::DynamicRate;
 use crate::sparse::flat::SparsifyOut;
 use crate::sparse::momentum::MomentumCorrector;
 use crate::sparse::residual::ResidualStore;
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -110,6 +122,32 @@ impl WorkspacePool {
     }
 }
 
+/// Coordinator-side reusable scratch — the server twin of
+/// [`ClientWorkspace`], owned by the [`Trainer`] so the warm buffers
+/// survive across rounds. Holds every model-sized buffer the Collect →
+/// Unmask/Recover → Apply phases touch:
+///
+/// * `agg` — the phase-5 aggregate accumulator (survivor payload sum,
+///   dead masks cancelled in place via the kept-entry reduction — the
+///   recovery path needs no model-sized scratch of its own);
+/// * `plain` — the `audit_secure_sum` f64 accumulator (only grown in
+///   audit runs).
+///
+/// Apply needs no delta buffer: the global model is `Arc`'d and
+/// updated copy-on-write through `Arc::make_mut`, which is in-place in
+/// steady state. With [`crate::config::RunConfig::expose_aggregate`]
+/// off (the default), the steady-state coordinator path performs zero
+/// model-sized heap allocations per round — pinned by
+/// `tests/alloc_steady_state.rs`.
+#[derive(Default)]
+pub struct ServerWorkspace {
+    /// Phase-5 aggregate accumulator (model-sized, reused).
+    pub(crate) agg: Vec<f32>,
+    /// Audit-mode plaintext f64 sum (model-sized, reused; empty unless
+    /// `audit_secure_sum`).
+    pub(crate) plain: Vec<f64>,
+}
+
 /// What one round produced (returned for tests/harnesses).
 #[derive(Clone, Debug)]
 pub struct RoundOutcome {
@@ -138,7 +176,10 @@ pub struct RoundOutcome {
     pub eval: Option<(f64, f64)>, // (loss, accuracy)
     /// The server-side aggregate (the summed survivor payloads, masks
     /// recovered) before the `1/k` FedAvg scaling — what tests assert
-    /// on. Empty when the round aborted.
+    /// on. Only populated when
+    /// [`crate::config::RunConfig::expose_aggregate`] is set (the copy
+    /// out of the trainer-owned [`ServerWorkspace`] is a model-sized
+    /// allocation); always empty when the round aborted.
     pub aggregate: Vec<f32>,
     /// [`crate::config::RunConfig::audit_secure_sum`] only: the f64 sum
     /// of the *survivors'* unmasked contributions, in the same order as
@@ -203,10 +244,10 @@ struct Collected {
     round_time_s: f64,
 }
 
-/// Phase 5 output: the unmasked server-side sum over survivors.
+/// Phase 5 output marker: the unmasked sum itself lives in the
+/// trainer-owned [`ServerWorkspace`] (`agg` / `plain`); this carries
+/// only the recovery metadata.
 struct Aggregated {
-    agg: Vec<f32>,
-    plain_sum: Option<Vec<f64>>,
     recovered_pairs: usize,
 }
 
@@ -236,6 +277,11 @@ pub struct ClientPipeline {
     /// Trainer-owned workspace pool (warm buffers persist across
     /// rounds; see [`WorkspacePool`]).
     workspaces: Arc<WorkspacePool>,
+    /// The trainer's client worker pool, shared back into the jobs so
+    /// secure-mode pair-mask generation can fan out per peer
+    /// (`ThreadPool::map_shared` is safe to call from inside the jobs
+    /// running on this very pool).
+    pool: Arc<ThreadPool>,
     round: u64,
     seed: u64,
     iters: usize,
@@ -258,12 +304,15 @@ impl ClientPipeline {
         let cfg = &trainer.cfg;
         Self {
             runner: trainer.runner.clone(),
-            global: Arc::new(trainer.global.clone()),
+            // refcount bump, NOT a model-sized copy: the global model
+            // is Arc'd and only mutated copy-on-write at Apply
+            global: Arc::clone(&trainer.global),
             data: Arc::clone(&trainer.train_data),
             layer_spans: Arc::new(trainer.layer_spans.clone()),
             secagg: trainer.secagg.clone(),
             selected,
             workspaces: Arc::clone(&trainer.client_workspaces),
+            pool: Arc::clone(&trainer.client_pool),
             round,
             seed: cfg.seed,
             iters: cfg.local_iters,
@@ -371,14 +420,30 @@ impl ClientPipeline {
             ws.peers.clear();
             ws.peers.extend(self.selected.iter().copied().filter(|&p| p != cid));
             let sw_mask = Stopwatch::start();
-            sec.0[cid as usize].build_update_among_into(
-                &ws.update,
-                &ws.keep,
-                round,
-                &ws.peers,
-                &mut ws.mask,
-                &mut ws.masked,
-            );
+            // fan the per-pair ChaCha streams out over the worker pool
+            // when there is parallelism to gain; the pooled path is
+            // bitwise identical to the serial one (pinned reduction
+            // order — see PERF.md), so this gate is pure scheduling
+            if self.pool.size() > 1 && ws.peers.len() >= 2 {
+                sec.0[cid as usize].build_update_among_pooled_into(
+                    &ws.update,
+                    &ws.keep,
+                    round,
+                    &ws.peers,
+                    &self.pool,
+                    &mut ws.mask,
+                    &mut ws.masked,
+                );
+            } else {
+                sec.0[cid as usize].build_update_among_into(
+                    &ws.update,
+                    &ws.keep,
+                    round,
+                    &ws.peers,
+                    &mut ws.mask,
+                    &mut ws.masked,
+                );
+            }
             mask_s = sw_mask.elapsed_secs();
             if self.audit {
                 // what ships minus the masks: exact in f32,
@@ -511,8 +576,7 @@ impl Trainer {
 
         // ---- Apply -------------------------------------------------
         let sw = Stopwatch::start();
-        let (scratch, dropped, stragglers, round_time_s) =
-            self.phase_apply(collected, snapshots, &aggregated);
+        let (scratch, dropped, stragglers, round_time_s) = self.phase_apply(collected, snapshots);
         timings.apply_s = sw.elapsed_secs();
 
         // ---- Eval + bookkeeping ------------------------------------
@@ -564,8 +628,16 @@ impl Trainer {
             nnz: scratch.nnz,
             wire_bytes: scratch.wire,
             eval,
-            aggregate: aggregated.agg,
-            plain_sum: aggregated.plain_sum,
+            // observability copies out of the server workspace, gated:
+            // with both flags off the steady-state coordinator path
+            // allocates nothing model-sized
+            aggregate: if self.cfg.expose_aggregate {
+                self.server_ws.agg.clone()
+            } else {
+                Vec::new()
+            },
+            plain_sum: (self.cfg.secure && self.cfg.audit_secure_sum)
+                .then(|| self.server_ws.plain.clone()),
             timings,
         })
     }
@@ -681,22 +753,37 @@ impl Trainer {
         })
     }
 
-    /// Phase 5 — sum the survivors' payloads (selection order, so the
-    /// f32 accumulation is deterministic), then in secure mode cancel
-    /// the dead clients' orphaned pair masks using Shamir-recovered
-    /// keys. `None` = recovery impossible → the caller aborts.
-    fn phase_unmask_recover(&self, cohort: &Cohort, collected: &Collected) -> Option<Aggregated> {
+    /// Phase 5 — sum the survivors' payloads into the trainer-owned
+    /// [`ServerWorkspace`] accumulator (selection order, so the f32
+    /// accumulation is deterministic), then in secure mode cancel the
+    /// dead clients' orphaned pair masks using Shamir-recovered keys —
+    /// regenerated in parallel over the worker pool and subtracted
+    /// under the pinned reduction order
+    /// ([`SecAggServer::cancel_dead_masks_pooled`]). `None` = recovery
+    /// impossible → the caller aborts.
+    fn phase_unmask_recover(
+        &mut self,
+        cohort: &Cohort,
+        collected: &Collected,
+    ) -> Option<Aggregated> {
         let m = self.global.len();
-        let mut agg = vec![0f32; m];
-        let mut plain_sum =
-            (self.cfg.secure && self.cfg.audit_secure_sum).then(|| vec![0f64; m]);
+        let audit = self.cfg.secure && self.cfg.audit_secure_sum;
+        let ws = &mut self.server_ws;
+        ws.agg.clear();
+        ws.agg.resize(m, 0.0);
+        ws.plain.clear();
+        if audit {
+            ws.plain.resize(m, 0.0);
+        }
         for (r, payload) in &collected.survivors {
-            if let (Some(ps), Some(p)) = (plain_sum.as_mut(), r.plain.as_ref()) {
-                for (acc, &v) in ps.iter_mut().zip(p) {
-                    *acc += v as f64;
+            if audit {
+                if let Some(p) = r.plain.as_ref() {
+                    for (acc, &v) in ws.plain.iter_mut().zip(p) {
+                        *acc += v as f64;
+                    }
                 }
             }
-            payload.add_into(&mut agg);
+            payload.add_into(&mut ws.agg);
         }
 
         let mut recovered_pairs = 0usize;
@@ -707,8 +794,13 @@ impl Trainer {
                 let recovered =
                     recover_pair_keys(&sec.0, &sec.1, &survivor_ids, &collected.dead)?;
                 recovered_pairs = recovered.len();
-                sec.1.cancel_dead_masks(
-                    &mut agg,
+                sec.1.cancel_dead_masks_pooled(
+                    &self.client_pool,
+                    // the surviving endpoint of each pair usually built
+                    // this stream already this round — recovery is
+                    // mostly cache hits
+                    Some(&self.mask_cache),
+                    &mut ws.agg,
                     cohort.round,
                     &survivor_ids,
                     &collected.dead,
@@ -717,7 +809,7 @@ impl Trainer {
                 );
             }
         }
-        Some(Aggregated { agg, plain_sum, recovered_pairs })
+        Some(Aggregated { recovered_pairs })
     }
 
     /// Phase 6 — commit the survivors' evolved state, roll failed
@@ -728,7 +820,6 @@ impl Trainer {
         &mut self,
         collected: Collected,
         mut snapshots: HashMap<u32, ClientSnapshot>,
-        aggregated: &Aggregated,
     ) -> (RoundScratch, Vec<u32>, Vec<u32>, f64) {
         let mut scratch = RoundScratch::default();
         for (r, _) in collected.survivors {
@@ -744,9 +835,12 @@ impl Trainer {
             let snap = snapshots.remove(&r.cid).expect("failed client has a snapshot");
             self.clients[r.cid as usize].restore(snap);
         }
-        // FedAvg mean over the *surviving* cohort
-        self.global
-            .apply_update(&aggregated.agg, 1.0 / scratch.survivors.len() as f32);
+        // FedAvg mean over the *surviving* cohort. Copy-on-write: the
+        // round's pipeline clones of the global Arc are dropped by now,
+        // so `make_mut` updates in place (no model-sized copy).
+        let scale = 1.0 / scratch.survivors.len() as f32;
+        let Trainer { global, server_ws, .. } = self;
+        Arc::make_mut(global).apply_update(&server_ws.agg, scale);
         (scratch, collected.dropped, collected.stragglers, collected.round_time_s)
     }
 

@@ -56,11 +56,19 @@ pub struct Trainer {
     pub(crate) runner: ModelRunner,
     pub(crate) train_data: Arc<Dataset>,
     pub(crate) test_data: Dataset,
-    pub global: ParamVector,
+    /// The global model. Arc'd so the per-round snapshot handed to the
+    /// client pipeline is a refcount bump, not a model-sized copy;
+    /// Apply mutates through [`Arc::make_mut`] (copy-on-write — by
+    /// Apply time the round's pipeline clones are dropped, so the
+    /// steady-state update is in-place).
+    pub global: Arc<ParamVector>,
     pub clients: Vec<ClientState>,
     pub(crate) secagg: Option<Arc<(Vec<SecAggClient>, SecAggServer)>>,
     pub(crate) layer_spans: Vec<(usize, usize)>,
-    pub(crate) client_pool: ThreadPool,
+    /// Client-job worker pool. Arc'd so the pipeline's client jobs can
+    /// fan pair-mask generation back out over the same pool
+    /// (`ThreadPool::map_shared` is nesting-safe).
+    pub(crate) client_pool: Arc<ThreadPool>,
     pub recorder: Recorder,
     pub ledger: CostLedger,
     /// The in-process uplink (network model + failure plan).
@@ -71,6 +79,10 @@ pub struct Trainer {
     /// buffers are what make the steady-state per-client path
     /// allocation-free; see [`super::round::WorkspacePool`]).
     pub(crate) client_workspaces: Arc<super::round::WorkspacePool>,
+    /// Coordinator-side scratch, reused across rounds — the server
+    /// twin of the client workspaces (see
+    /// [`super::round::ServerWorkspace`]).
+    pub(crate) server_ws: super::round::ServerWorkspace,
 }
 
 impl Trainer {
@@ -166,11 +178,11 @@ impl Trainer {
         let base_rate = base_rate_of(&cfg.algorithm);
 
         Ok(Self {
-            client_pool: ThreadPool::new(cfg.client_workers),
+            client_pool: Arc::new(ThreadPool::new(cfg.client_workers)),
             recorder: Recorder::new(&label),
             ledger: CostLedger::new(m),
             transport,
-            global: ParamVector::init(&meta, cfg.seed),
+            global: Arc::new(ParamVector::init(&meta, cfg.seed)),
             train_data: Arc::new(train_data),
             test_data,
             clients,
@@ -182,6 +194,7 @@ impl Trainer {
             base_rate,
             mask_cache,
             client_workspaces: Default::default(),
+            server_ws: Default::default(),
         })
     }
 

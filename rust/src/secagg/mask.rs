@@ -14,6 +14,7 @@ use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use crate::util::chacha::ChaCha20;
+use crate::util::pool::ThreadPool;
 
 use super::kdf::mask_seed;
 
@@ -56,6 +57,69 @@ fn sigma_lane_bound(lo: f32, hi: f32, sigma: f32) -> u64 {
         }
     }
     b as u64
+}
+
+/// Build (or fetch from `cache`) the σ-filtered stream of pair
+/// (id, peer) from the pair secret. Standalone (not a
+/// [`PairwiseMasker`] method) so the parallel fan-out paths — the
+/// client-side pooled combined mask and the server's dead-mask
+/// recovery — can run it from worker tasks that own only the pair's
+/// key material. The PRG is streamed block-wise against the integer
+/// σ-bound exactly as documented on
+/// `PairwiseMasker::filtered_pair_mask`.
+pub(crate) fn filtered_stream_for_pair(
+    id: u32,
+    peer: u32,
+    secret: &[u8],
+    range: MaskRange,
+    cache: Option<&MaskCache>,
+    round: u64,
+    n: usize,
+    sigma: f32,
+) -> Arc<FilteredStream> {
+    let cache_key = {
+        let (lo, hi) = if id < peer { (id, peer) } else { (peer, id) };
+        (lo, hi, round)
+    };
+    if let Some(cache) = cache {
+        if let Some(hit) = cache.lock().unwrap().get(&cache_key) {
+            if hit.n == n && hit.sigma == sigma {
+                return Arc::clone(hit);
+            }
+        }
+    }
+    let (lo, hi) = (range.lo(), range.hi());
+    let bound = sigma_lane_bound(lo, hi, sigma);
+    // expected keep count = (bound / 2³²) · n, plus slack so the
+    // binomial tail rarely reallocates
+    let expect = (bound as f64 / 4_294_967_296.0 * n as f64) as usize;
+    let mut entries: Vec<(u32, f32)> = Vec::with_capacity(expect + expect / 8 + 16);
+    let key = mask_seed(secret, id, peer, round);
+    let mut prg = ChaCha20::from_seed(&key, round);
+    prg.for_each_uniform_f32(n, |i, lane| {
+        if (lane as u64) < bound {
+            entries.push((i as u32, ChaCha20::lane_to_f32(lane, lo, hi)));
+        }
+    });
+    let out = Arc::new(FilteredStream { sigma, n, entries });
+    if let Some(cache) = cache {
+        cache.lock().unwrap().insert(cache_key, Arc::clone(&out));
+    }
+    out
+}
+
+/// One (id, peer) stream-generation task for the pooled fan-out: owns
+/// a copy of the pair's key material so it can cross into pool workers
+/// (small — the secret is 32 bytes, never model-sized).
+struct PairGenTask {
+    id: u32,
+    peer: u32,
+    secret: Vec<u8>,
+    range: MaskRange,
+    cache: Option<MaskCache>,
+    round: u64,
+    n: usize,
+    sigma: f32,
 }
 
 /// Shared per-round cache of σ-filtered pair streams. In the
@@ -189,34 +253,34 @@ impl PairwiseMasker {
     /// never materialized. Bitwise identical to generating the dense
     /// stream and filtering `v < σ` (see [`sigma_lane_bound`]).
     fn filtered_pair_mask(&self, peer: u32, round: u64, n: usize, sigma: f32) -> Arc<FilteredStream> {
-        let cache_key = {
-            let (lo, hi) = if self.id < peer { (self.id, peer) } else { (peer, self.id) };
-            (lo, hi, round)
-        };
-        if let Some(cache) = &self.cache {
-            if let Some(hit) = cache.lock().unwrap().get(&cache_key) {
-                if hit.n == n && hit.sigma == sigma {
-                    return Arc::clone(hit);
-                }
-            }
-        }
-        let (lo, hi) = (self.range.lo(), self.range.hi());
-        let bound = sigma_lane_bound(lo, hi, sigma);
-        // expected keep count = (bound / 2³²) · n, plus slack so the
-        // binomial tail rarely reallocates
-        let expect = (bound as f64 / 4_294_967_296.0 * n as f64) as usize;
-        let mut entries: Vec<(u32, f32)> = Vec::with_capacity(expect + expect / 8 + 16);
-        let mut prg = self.pair_prg(self.peer_secret(peer), peer, round);
-        prg.for_each_uniform_f32(n, |i, lane| {
-            if (lane as u64) < bound {
-                entries.push((i as u32, ChaCha20::lane_to_f32(lane, lo, hi)));
-            }
-        });
-        let out = Arc::new(FilteredStream { sigma, n, entries });
-        if let Some(cache) = &self.cache {
-            cache.lock().unwrap().insert(cache_key, Arc::clone(&out));
-        }
-        out
+        filtered_stream_for_pair(
+            self.id,
+            peer,
+            self.peer_secret(peer),
+            self.range,
+            self.cache.as_ref(),
+            round,
+            n,
+            sigma,
+        )
+    }
+
+    /// The per-peer stream-generation tasks for the pooled fan-out
+    /// (each owns a copy of its pair's 32-byte key material).
+    fn pair_gen_tasks(&self, round: u64, n: usize, sigma: f32) -> Vec<PairGenTask> {
+        self.peers
+            .iter()
+            .map(|(peer, secret)| PairGenTask {
+                id: self.id,
+                peer: *peer,
+                secret: secret.clone(),
+                range: self.range,
+                cache: self.cache.clone(),
+                round,
+                n,
+                sigma,
+            })
+            .collect()
     }
 
     /// Sign convention: +1 if this client has the smaller id of the
@@ -287,6 +351,80 @@ impl PairwiseMasker {
             for &(i, v) in &filtered.entries {
                 acc[i as usize] += sign * v;
                 nonzero[i as usize] = true;
+            }
+        }
+    }
+
+    /// [`Self::sparse_combined_mask_into`] with the per-pair stream
+    /// *generation* fanned out over `pool` — each pair's ChaCha
+    /// expansion is independent, so large cohorts spread the PRG work
+    /// across workers (via [`ThreadPool::map_shared`], which is safe
+    /// to call from inside a pool job: the round engine's client jobs
+    /// already run on this pool).
+    ///
+    /// **Reduction-order contract** (PERF.md): the reduce into `acc`
+    /// stays strictly serial — peers in construction order, positions
+    /// ascending within each stream. That is exactly the
+    /// per-accumulator f32 op order of the serial path, so the result
+    /// is **bitwise identical** to [`Self::sparse_combined_mask_into`]
+    /// (pinned by `parallel_fanout_bitwise_matches_serial`).
+    pub fn sparse_combined_mask_pooled_into(
+        &self,
+        pool: &ThreadPool,
+        round: u64,
+        n: usize,
+        sigma: f32,
+        acc: &mut Vec<f32>,
+        nonzero: &mut Vec<bool>,
+    ) {
+        let streams = pool.map_shared(self.pair_gen_tasks(round, n, sigma), |t: &PairGenTask| {
+            filtered_stream_for_pair(
+                t.id,
+                t.peer,
+                &t.secret,
+                t.range,
+                t.cache.as_ref(),
+                t.round,
+                t.n,
+                t.sigma,
+            )
+        });
+        acc.clear();
+        acc.resize(n, 0.0);
+        nonzero.clear();
+        nonzero.resize(n, false);
+        for ((peer, _), filtered) in self.peers.iter().zip(&streams) {
+            let sign = self.sign_for(*peer);
+            for &(i, v) in &filtered.entries {
+                acc[i as usize] += sign * v;
+                nonzero[i as usize] = true;
+            }
+        }
+    }
+
+    /// [`Self::accumulate_combined_mask`] with per-pair generation
+    /// fanned out over `pool`: each pair expands its full dense stream
+    /// into its own buffer in parallel, then the buffers reduce into
+    /// `acc` serially in peer order — every `acc[i]` receives the same
+    /// additions in the same order as the serial path
+    /// (`fill_uniform_f32` is keystream-identical to the lane
+    /// callback), so the result is bitwise identical. The per-pair
+    /// dense buffers make this a large-cohort / bench path, not a
+    /// steady-state zero-allocation one; the round engine's secure
+    /// path uses the σ-filtered variant.
+    pub fn accumulate_combined_mask_pooled(&self, pool: &ThreadPool, round: u64, acc: &mut [f32]) {
+        let n = acc.len();
+        let bufs = pool.map_shared(self.pair_gen_tasks(round, n, 0.0), |t: &PairGenTask| {
+            let key = mask_seed(&t.secret, t.id, t.peer, t.round);
+            let mut prg = ChaCha20::from_seed(&key, t.round);
+            let mut out = vec![0f32; t.n];
+            prg.fill_uniform_f32(&mut out, t.range.lo(), t.range.hi());
+            out
+        });
+        for ((peer, _), buf) in self.peers.iter().zip(&bufs) {
+            let sign = self.sign_for(*peer);
+            for (a, &v) in acc.iter_mut().zip(buf) {
+                *a += sign * v;
             }
         }
     }
@@ -450,6 +588,66 @@ mod tests {
         f[1].sparse_combined_mask_into(5, n, sigma, &mut acc2, &mut nz2);
         assert_eq!(acc, acc2);
         assert_eq!(nz, nz2);
+    }
+
+    #[test]
+    fn parallel_fanout_bitwise_matches_serial() {
+        // The reduction-order contract (PERF.md): pooled generation +
+        // serial peer-order reduction must be BITWISE equal to the
+        // serial path, for dense and σ-filtered masks, across cohort
+        // sizes spanning the block remainders and sign mixes.
+        let pool = ThreadPool::new(3);
+        for &x in &[2u32, 3, 8, 17] {
+            let f = fleet(x);
+            let n = 3000;
+            let sigma = f[0].range.sigma(1.0, x as usize);
+            // a low, a middle, and the highest id — covers both sign
+            // directions without running all 17 clients
+            for &ci in &[0usize, (x / 2) as usize, (x - 1) as usize] {
+                let c = &f[ci];
+                // σ-filtered
+                let (acc_s, nz_s) = c.sparse_combined_mask(5, n, sigma);
+                let mut acc_p = vec![7.0f32; 1]; // dirty, wrong-sized
+                let mut nz_p = vec![true; 3];
+                c.sparse_combined_mask_pooled_into(&pool, 5, n, sigma, &mut acc_p, &mut nz_p);
+                assert_eq!(nz_s, nz_p, "x={x} client={ci}");
+                assert!(
+                    acc_s.iter().zip(&acc_p).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "x={x} client={ci}: σ-filtered pooled mask diverged"
+                );
+                // dense
+                let dense_s = c.combined_mask(6, n);
+                let mut dense_p = vec![0f32; n];
+                c.accumulate_combined_mask_pooled(&pool, 6, &mut dense_p);
+                assert!(
+                    dense_s.iter().zip(&dense_p).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "x={x} client={ci}: dense pooled mask diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_fanout_uses_and_fills_the_cache() {
+        let mut f = fleet(4);
+        let cache: MaskCache = Default::default();
+        for c in f.iter_mut() {
+            c.set_cache(Arc::clone(&cache));
+        }
+        let pool = ThreadPool::new(2);
+        let n = 1200;
+        let sigma = f[0].range.sigma(1.0, 4);
+        let (mut a1, mut z1) = (Vec::new(), Vec::new());
+        f[0].sparse_combined_mask_pooled_into(&pool, 3, n, sigma, &mut a1, &mut z1);
+        // all three pair streams of client 0 are now cached
+        assert_eq!(cache.lock().unwrap().len(), 3);
+        // a second pooled build (other endpoint of pair (0,1)) hits the
+        // cache and stays bitwise-consistent with the serial path
+        let (mut a2, mut z2) = (Vec::new(), Vec::new());
+        f[1].sparse_combined_mask_pooled_into(&pool, 3, n, sigma, &mut a2, &mut z2);
+        let (a2s, z2s) = f[1].sparse_combined_mask(3, n, sigma);
+        assert_eq!(z2, z2s);
+        assert!(a2.iter().zip(&a2s).all(|(a, b)| a.to_bits() == b.to_bits()));
     }
 
     #[test]

@@ -10,13 +10,15 @@
 use std::collections::HashMap;
 
 use crate::sparse::codec::SparseVec;
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 
 use super::dh::{DhKeyPair, DhParams};
-use super::mask::{MaskRange, PairwiseMasker};
+use super::mask::{filtered_stream_for_pair, MaskCache, MaskRange, PairwiseMasker};
 use super::shamir::{self, Share};
 use super::sparse_mask::{
-    mask_sparsify, mask_sparsify_into, MaskScratch, MaskSparsifyConfig, MaskedUpdate,
+    mask_sparsify, mask_sparsify_into, mask_sparsify_pooled_into, MaskScratch, MaskSparsifyConfig,
+    MaskedUpdate,
 };
 
 /// Protocol configuration.
@@ -131,6 +133,31 @@ impl SecAggClient {
         mask_sparsify_into(g, grad_keep, &masker, round, &cfg, scratch, out);
     }
 
+    /// [`Self::build_update_among_into`] with the pair-mask stream
+    /// generation fanned out over `pool` — bitwise identical to the
+    /// serial path (the reduction order is pinned; see PERF.md and
+    /// [`PairwiseMasker::sparse_combined_mask_pooled_into`]). The
+    /// round engine uses this from inside its client jobs:
+    /// [`ThreadPool::map_shared`] is nesting-safe.
+    pub fn build_update_among_pooled_into(
+        &self,
+        g: &[f32],
+        grad_keep: &[bool],
+        round: u64,
+        selected: &[u32],
+        pool: &ThreadPool,
+        scratch: &mut MaskScratch,
+        out: &mut MaskedUpdate,
+    ) {
+        let masker = self.masker_for(selected);
+        let cfg = MaskSparsifyConfig {
+            range: masker.range,
+            mask_ratio_k: self.mask_ratio_k,
+            participants: masker.n_peers() + 1,
+        };
+        mask_sparsify_pooled_into(g, grad_keep, &masker, round, &cfg, pool, scratch, out);
+    }
+
     /// Surrender held shares for a dropped client (server request).
     pub fn shares_for(&self, owner: u32, peer: u32) -> Option<&Vec<Share>> {
         self.held_shares.get(&(owner, peer))
@@ -205,6 +232,78 @@ impl SecAggServer {
                 let (mask, _) = masker.sparse_combined_mask(round, n, sigma);
                 for i in 0..n {
                     acc[i] -= mask[i];
+                }
+            }
+        }
+    }
+
+    /// [`Self::cancel_dead_masks`] with the per-pair mask regeneration
+    /// fanned out over `pool` and **no model-sized scratch**: instead
+    /// of materializing each pair's dense mask and subtracting all `n`
+    /// positions, only the σ-kept entries of each stream are
+    /// subtracted directly from `acc` (subtracting the zero positions
+    /// is the f32 identity `x − 0 == x`, so skipping them is bitwise
+    /// exact; entries that are themselves `+0.0` are skipped for the
+    /// same reason — `sign · 0.0` may be `−0.0`, and `x − (−0.0)`
+    /// flushes a `−0.0` accumulator to `+0.0` where the dense path
+    /// would not).
+    ///
+    /// **Reduction-order contract** (PERF.md): generation is
+    /// order-free (independent ChaCha streams), the reduce into `acc`
+    /// is strictly serial — survivors in the given order (outer), dead
+    /// clients in the given order (inner), positions ascending within
+    /// each pair stream — matching the serial path per accumulator, so
+    /// the result is bitwise identical
+    /// (`pooled_cancel_matches_serial_reference`).
+    ///
+    /// `cache`: the in-process simulation's shared per-round stream
+    /// cache. A dead client's (survivor, dead) stream was usually
+    /// already generated by the surviving endpoint while masking this
+    /// round, so recovery is mostly cache hits.
+    pub fn cancel_dead_masks_pooled(
+        &self,
+        pool: &ThreadPool,
+        cache: Option<&MaskCache>,
+        acc: &mut [f32],
+        round: u64,
+        survivors: &[u32],
+        dead: &[u32],
+        recovered_keys: &HashMap<(u32, u32), [u8; 32]>,
+        participants: usize,
+    ) {
+        if dead.is_empty() {
+            return;
+        }
+        let n = acc.len();
+        let sigma = self.range.sigma(self.mask_ratio_k, participants);
+        // generation fan-out: one task per (survivor, dead) pair
+        let mut tasks: Vec<(u32, u32, Vec<u8>)> =
+            Vec::with_capacity(survivors.len() * dead.len());
+        for &v in survivors {
+            for &u in dead {
+                let key = recovered_keys
+                    .get(&(v, u))
+                    .or_else(|| recovered_keys.get(&(u, v)))
+                    .expect("missing recovered pair key");
+                tasks.push((v, u, key.to_vec()));
+            }
+        }
+        let range = self.range;
+        let cache = cache.cloned();
+        let streams = pool.map_shared(tasks, move |(v, u, key): &(u32, u32, Vec<u8>)| {
+            filtered_stream_for_pair(*v, *u, key, range, cache.as_ref(), round, n, sigma)
+        });
+        // fixed serial reduction: same (survivor, dead) nesting as the
+        // dense reference, ascending positions within each stream
+        let mut streams = streams.iter();
+        for &v in survivors {
+            for &u in dead {
+                let stream = streams.next().expect("one stream per pair");
+                let sign = if v < u { 1.0f32 } else { -1.0 };
+                for &(i, val) in &stream.entries {
+                    if val != 0.0 {
+                        acc[i as usize] -= sign * val;
+                    }
                 }
             }
         }
@@ -415,6 +514,65 @@ mod tests {
                 agg[j],
                 expect[j]
             );
+        }
+    }
+
+    #[test]
+    fn pooled_cancel_matches_serial_reference() {
+        // the parallel recovery path (fan-out generation + kept-entry
+        // serial-order reduction) must be BITWISE equal to the dense
+        // serial reference, with and without the shared stream cache
+        let cfg = SecAggConfig { share_threshold: 2, ..Default::default() };
+        for (fleet_n, dead) in [(4u32, vec![3u32]), (6, vec![1, 4])] {
+            let (clients, server) = full_setup(fleet_n, 31 + fleet_n as u64, &cfg);
+            let n = 2000;
+            let mut rng = Rng::new(fleet_n as u64);
+            let survivors: Vec<u32> =
+                (0..fleet_n).filter(|id| !dead.contains(id)).collect();
+            let mut payloads = Vec::new();
+            for c in &clients {
+                let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.1)).collect();
+                let keep = keep_top(&g, 0.02);
+                let out = c.build_update(&g, &keep, 6, clients.len());
+                if survivors.contains(&c.id) {
+                    payloads.push(out.payload);
+                }
+            }
+            let recovered = recover_pair_keys(&clients, &server, &survivors, &dead)
+                .expect("quorum met");
+
+            let mut base = vec![0f32; n];
+            for p in &payloads {
+                p.add_into(&mut base);
+            }
+            let mut serial = base.clone();
+            server.cancel_dead_masks(
+                &mut serial,
+                6,
+                &survivors,
+                &dead,
+                &recovered,
+                fleet_n as usize,
+            );
+            let pool = ThreadPool::new(3);
+            for cache in [None, Some(crate::secagg::mask::MaskCache::default())] {
+                let mut pooled = base.clone();
+                server.cancel_dead_masks_pooled(
+                    &pool,
+                    cache.as_ref(),
+                    &mut pooled,
+                    6,
+                    &survivors,
+                    &dead,
+                    &recovered,
+                    fleet_n as usize,
+                );
+                assert!(
+                    serial.iter().zip(&pooled).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "fleet={fleet_n} dead={dead:?} cache={}: pooled cancel diverged",
+                    cache.is_some()
+                );
+            }
         }
     }
 

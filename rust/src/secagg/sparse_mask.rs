@@ -18,6 +18,7 @@
 //! we census in [`CaseCensus`].
 
 use crate::sparse::codec::SparseVec;
+use crate::util::pool::ThreadPool;
 
 use super::mask::{MaskRange, PairwiseMasker};
 
@@ -128,6 +129,40 @@ pub fn mask_sparsify_into(
     assert_eq!(g.len(), grad_keep.len(), "grad_keep length mismatch");
     let sigma = cfg.sigma();
     masker.sparse_combined_mask_into(round, g.len(), sigma, &mut scratch.acc, &mut scratch.nz);
+    split_with_masks(g, grad_keep, scratch, out);
+}
+
+/// [`mask_sparsify_into`] with the pair-mask stream generation fanned
+/// out over `pool` (see
+/// [`PairwiseMasker::sparse_combined_mask_pooled_into`] for the
+/// reduction-order contract). Bitwise identical to the serial path.
+pub fn mask_sparsify_pooled_into(
+    g: &[f32],
+    grad_keep: &[bool],
+    masker: &PairwiseMasker,
+    round: u64,
+    cfg: &MaskSparsifyConfig,
+    pool: &ThreadPool,
+    scratch: &mut MaskScratch,
+    out: &mut MaskedUpdate,
+) {
+    assert_eq!(g.len(), grad_keep.len(), "grad_keep length mismatch");
+    let sigma = cfg.sigma();
+    masker.sparse_combined_mask_pooled_into(
+        pool,
+        round,
+        g.len(),
+        sigma,
+        &mut scratch.acc,
+        &mut scratch.nz,
+    );
+    split_with_masks(g, grad_keep, scratch, out);
+}
+
+/// The Eq. 3-5 split sweep shared by the serial and pooled entry
+/// points: consumes the combined mask in `scratch` and writes the
+/// payload / residual / census into `out`.
+fn split_with_masks(g: &[f32], grad_keep: &[bool], scratch: &MaskScratch, out: &mut MaskedUpdate) {
     let (mask_e, mask_nz) = (&scratch.acc, &scratch.nz);
 
     let mut census = CaseCensus::default();
@@ -249,6 +284,51 @@ mod tests {
             );
         }
         assert!(sent_any.iter().any(|&b| b));
+    }
+
+    #[test]
+    fn pooled_mask_sparsify_bitwise_matches_serial() {
+        let n = 2500;
+        for x in [2u32, 3, 8, 17] {
+            let f = fleet(x);
+            let mut rng = Rng::new(7 + x as u64);
+            let g: Vec<f32> = (0..n).map(|_| rng.normal_f32(0.5)).collect();
+            let delta = crate::sparse::topk::threshold_for_topk_abs(&g, n / 50);
+            let keep: Vec<bool> = g.iter().map(|v| v.abs() > delta).collect();
+            let pool = ThreadPool::new(3);
+            let serial = mask_sparsify(&g, &keep, &f[0], 4, &cfg(x as usize));
+            let mut scratch = MaskScratch::default();
+            let mut pooled = MaskedUpdate::default();
+            mask_sparsify_pooled_into(
+                &g,
+                &keep,
+                &f[0],
+                4,
+                &cfg(x as usize),
+                &pool,
+                &mut scratch,
+                &mut pooled,
+            );
+            assert_eq!(serial.payload.indices, pooled.payload.indices, "x={x}");
+            assert!(
+                serial
+                    .payload
+                    .values
+                    .iter()
+                    .zip(&pooled.payload.values)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "x={x}: pooled payload values diverged"
+            );
+            assert_eq!(serial.census, pooled.census, "x={x}");
+            assert!(
+                serial
+                    .residual
+                    .iter()
+                    .zip(&pooled.residual)
+                    .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "x={x}: pooled residual diverged"
+            );
+        }
     }
 
     #[test]

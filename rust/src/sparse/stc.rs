@@ -8,7 +8,7 @@
 //! (`examples/ablation_compression.rs`).
 
 use super::flat::SparsifyOut;
-use super::topk::threshold_for_topk_abs;
+use super::topk::threshold_for_topk_abs_with;
 
 /// STC output: the ternarized sparse vector plus its codebook value μ.
 #[derive(Clone, Debug)]
@@ -24,10 +24,20 @@ pub struct StcOut {
 /// at kept positions (the ternarization error feeds back) and the full
 /// value elsewhere, so no mass is lost across rounds.
 pub fn stc_sparsify(g: &[f32], s: f64) -> StcOut {
+    let mut out = SparsifyOut::default();
+    let mu = stc_sparsify_into(g, s, &mut Vec::new(), &mut out);
+    StcOut { sparsify: out, mu }
+}
+
+/// [`stc_sparsify`] into caller-owned scratch + output — the
+/// zero-allocation path (`scratch` feeds the Top-k magnitude
+/// selection, `out`'s buffers are resized and rewritten). Returns the
+/// ± codebook value μ; identical results to the allocating wrapper.
+pub fn stc_sparsify_into(g: &[f32], s: f64, scratch: &mut Vec<f32>, out: &mut SparsifyOut) -> f32 {
     let n = g.len();
     assert!(n > 0, "stc on empty update");
     let k = ((n as f64 * s).ceil() as usize).clamp(1, n);
-    let delta = threshold_for_topk_abs(g, k);
+    let delta = threshold_for_topk_abs_with(g, k, scratch);
 
     // pass 1: μ over kept entries
     let mut sum = 0f64;
@@ -41,22 +51,24 @@ pub fn stc_sparsify(g: &[f32], s: f64) -> StcOut {
     let mu = if kept == 0 { 0.0 } else { (sum / kept as f64) as f32 };
 
     // pass 2: ternarize + residual
-    let mut sparse = vec![0f32; n];
-    let mut residual = vec![0f32; n];
+    out.sparse.clear();
+    out.sparse.resize(n, 0.0);
+    out.residual.clear();
+    out.residual.resize(n, 0.0);
     for i in 0..n {
         let x = g[i];
         if x.abs() > delta && mu > 0.0 {
             let t = mu * x.signum();
-            sparse[i] = t;
-            residual[i] = x - t; // ternarization error feeds back
+            out.sparse[i] = t;
+            out.residual[i] = x - t; // ternarization error feeds back
         } else {
-            residual[i] = x;
+            out.residual[i] = x;
         }
     }
-    StcOut {
-        sparsify: SparsifyOut { sparse, residual, nnz: kept, thresholds: vec![delta] },
-        mu,
-    }
+    out.nnz = kept;
+    out.thresholds.clear();
+    out.thresholds.push(delta);
+    mu
 }
 
 /// Paper-model wire cost of an STC update: positions (32 bit) + signs
@@ -117,6 +129,22 @@ mod tests {
             if v != 0.0 {
                 assert_eq!(v.signum(), g[i].signum());
             }
+        }
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_path() {
+        let mut scratch = vec![99.0f32; 5]; // dirty, wrong-sized
+        let mut out = SparsifyOut::default();
+        for (seed, s) in [(7u64, 0.02), (8, 0.1), (9, 1.0)] {
+            let g = rand_vec(seed, 3000);
+            let reference = stc_sparsify(&g, s);
+            let mu = stc_sparsify_into(&g, s, &mut scratch, &mut out);
+            assert_eq!(mu, reference.mu);
+            assert_eq!(out.sparse, reference.sparsify.sparse);
+            assert_eq!(out.residual, reference.sparsify.residual);
+            assert_eq!(out.nnz, reference.sparsify.nnz);
+            assert_eq!(out.thresholds, reference.sparsify.thresholds);
         }
     }
 

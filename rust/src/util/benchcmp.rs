@@ -1,0 +1,343 @@
+//! Tolerance-banded comparison of `BENCH_*.json` reports against
+//! committed baselines — the logic behind the `bench_diff` binary and
+//! CI's `perf-smoke` regression gate (see PERF.md §bench-history).
+//!
+//! Cases are matched by their `name` field; the gate judges the **p50**
+//! per-iteration latency (p95 is reported alongside for context but
+//! does not gate — it is too noisy on shared CI runners). A case above
+//! `fail_pct` p50 regression fails the gate, above `warn_pct` warns;
+//! new cases (no baseline) and vanished cases are reported but never
+//! fail, so adding/renaming benches does not wedge CI.
+
+use super::json::Value;
+
+/// Gate outcome, ordered by severity (`Pass < Warn < Fail`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    Pass,
+    Warn,
+    Fail,
+}
+
+impl Verdict {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "ok",
+            Verdict::Warn => "WARN",
+            Verdict::Fail => "FAIL",
+        }
+    }
+}
+
+/// Regression tolerance bands, in percent of the baseline p50.
+#[derive(Clone, Copy, Debug)]
+pub struct Tolerance {
+    pub warn_pct: f64,
+    pub fail_pct: f64,
+}
+
+impl Default for Tolerance {
+    fn default() -> Self {
+        // generous bands: GitHub-hosted runners vary run to run, and
+        // the quick-mode benches sample for only ~200 ms per case
+        Self { warn_pct: 15.0, fail_pct: 30.0 }
+    }
+}
+
+impl Tolerance {
+    /// Judge one p50 delta (percent; negative = faster than baseline).
+    pub fn verdict(&self, p50_delta_pct: f64) -> Verdict {
+        if p50_delta_pct > self.fail_pct {
+            Verdict::Fail
+        } else if p50_delta_pct > self.warn_pct {
+            Verdict::Warn
+        } else {
+            Verdict::Pass
+        }
+    }
+}
+
+/// One matched case: baseline vs current latency plus the verdict.
+#[derive(Clone, Debug)]
+pub struct CaseDelta {
+    pub name: String,
+    pub base_p50_s: f64,
+    pub cur_p50_s: f64,
+    /// `(cur − base) / base · 100`; negative = faster.
+    pub p50_delta_pct: f64,
+    pub base_p95_s: f64,
+    pub cur_p95_s: f64,
+    pub p95_delta_pct: f64,
+    pub verdict: Verdict,
+}
+
+/// Comparison of one bench report file against its baseline.
+#[derive(Clone, Debug, Default)]
+pub struct BenchComparison {
+    /// Report file stem, e.g. `BENCH_round`.
+    pub bench: String,
+    pub cases: Vec<CaseDelta>,
+    /// Cases present only in the current report (no baseline yet).
+    pub new_cases: Vec<String>,
+    /// Baseline cases that vanished from the current report.
+    pub missing_cases: Vec<String>,
+}
+
+impl BenchComparison {
+    pub fn worst(&self) -> Verdict {
+        self.cases.iter().map(|c| c.verdict).max().unwrap_or(Verdict::Pass)
+    }
+}
+
+/// (name, p50_s, p95_s) rows of a report; cases without the shared
+/// numeric fields are skipped (they cannot be compared).
+fn case_rows(report: &Value) -> Vec<(String, f64, f64)> {
+    let mut rows = Vec::new();
+    if let Some(cases) = report.get("cases").and_then(|c| c.as_array()) {
+        for case in cases {
+            let name = case.get("name").and_then(|v| v.as_str());
+            let p50 = case.get("p50_s").and_then(|v| v.as_f64());
+            let p95 = case.get("p95_s").and_then(|v| v.as_f64());
+            if let (Some(name), Some(p50), Some(p95)) = (name, p50, p95) {
+                rows.push((name.to_string(), p50, p95));
+            }
+        }
+    }
+    rows
+}
+
+fn pct(base: f64, cur: f64) -> f64 {
+    (cur - base) / base * 100.0
+}
+
+/// Compare a current report against its committed baseline.
+pub fn compare(bench: &str, baseline: &Value, current: &Value, tol: Tolerance) -> BenchComparison {
+    let base_rows = case_rows(baseline);
+    let cur_rows = case_rows(current);
+    let mut out = BenchComparison { bench: bench.to_string(), ..Default::default() };
+    for (name, cur_p50, cur_p95) in &cur_rows {
+        match base_rows.iter().find(|(b, _, _)| b == name) {
+            // a zero baseline p50 cannot be banded (division by zero);
+            // treat the case as new rather than inventing a verdict
+            Some((_, base_p50, base_p95)) if *base_p50 > 0.0 => {
+                let p50_delta_pct = pct(*base_p50, *cur_p50);
+                out.cases.push(CaseDelta {
+                    name: name.clone(),
+                    base_p50_s: *base_p50,
+                    cur_p50_s: *cur_p50,
+                    p50_delta_pct,
+                    base_p95_s: *base_p95,
+                    cur_p95_s: *cur_p95,
+                    p95_delta_pct: if *base_p95 > 0.0 { pct(*base_p95, *cur_p95) } else { 0.0 },
+                    verdict: tol.verdict(p50_delta_pct),
+                });
+            }
+            _ => out.new_cases.push(name.clone()),
+        }
+    }
+    for (name, _, _) in &base_rows {
+        if !cur_rows.iter().any(|(c, _, _)| c == name) {
+            out.missing_cases.push(name.clone());
+        }
+    }
+    out
+}
+
+/// Worst verdict across a set of report comparisons.
+pub fn worst(cmps: &[BenchComparison]) -> Verdict {
+    cmps.iter().map(|c| c.worst()).max().unwrap_or(Verdict::Pass)
+}
+
+/// Scale every case's p50/p95 up by `pct` percent — the synthetic-
+/// regression aid behind `bench_diff --inflate-current`, which CI uses
+/// to prove the gate actually trips on a >fail_pct regression.
+pub fn inflate_report(report: &Value, pct: f64) -> Value {
+    let factor = 1.0 + pct / 100.0;
+    let mut out = report.clone();
+    if let Value::Object(obj) = &mut out {
+        if let Some(Value::Array(cases)) = obj.get_mut("cases") {
+            for case in cases {
+                if let Value::Object(fields) = case {
+                    for key in ["p50_s", "p95_s"] {
+                        if let Some(Value::Num(x)) = fields.get_mut(key) {
+                            *x *= factor;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+fn fmt_s(secs: f64) -> String {
+    super::timer::fmt_duration(std::time::Duration::from_secs_f64(secs.max(0.0)))
+}
+
+fn fmt_pct(p: f64) -> String {
+    format!("{p:+.1}%")
+}
+
+/// Markdown summary of the gate run — one table per compared report —
+/// sized for `$GITHUB_STEP_SUMMARY` so regressions are readable
+/// without downloading artifacts. `verdict` is the caller's FINAL
+/// gate outcome (it may be worse than `worst(cmps)`, e.g. when a
+/// whole baseline report vanished), so the headline never contradicts
+/// the exit code.
+pub fn markdown(cmps: &[BenchComparison], tol: Tolerance, verdict: Verdict) -> String {
+    let mut md = format!(
+        "## perf gate: {} (fail >{:.0}% p50, warn >{:.0}%)\n\n",
+        verdict.label(),
+        tol.fail_pct,
+        tol.warn_pct
+    );
+    for cmp in cmps {
+        md.push_str(&format!("### {}\n\n", cmp.bench));
+        if !cmp.cases.is_empty() {
+            md.push_str("| case | base p50 | cur p50 | Δp50 | base p95 | cur p95 | Δp95 | verdict |\n");
+            md.push_str("|---|---|---|---|---|---|---|---|\n");
+            for c in &cmp.cases {
+                md.push_str(&format!(
+                    "| {} | {} | {} | {} | {} | {} | {} | {} |\n",
+                    c.name,
+                    fmt_s(c.base_p50_s),
+                    fmt_s(c.cur_p50_s),
+                    fmt_pct(c.p50_delta_pct),
+                    fmt_s(c.base_p95_s),
+                    fmt_s(c.cur_p95_s),
+                    fmt_pct(c.p95_delta_pct),
+                    c.verdict.label(),
+                ));
+            }
+            md.push('\n');
+        }
+        if !cmp.new_cases.is_empty() {
+            md.push_str(&format!("new cases (no baseline): {}\n\n", cmp.new_cases.join(", ")));
+        }
+        if !cmp.missing_cases.is_empty() {
+            md.push_str(&format!(
+                "baseline cases missing from this run: {}\n\n",
+                cmp.missing_cases.join(", ")
+            ));
+        }
+    }
+    md
+}
+
+/// Markdown p50/p95 table for a report with **no** committed baseline
+/// (the bootstrap state — see bench-history/README.md): current
+/// numbers only, so the step summary is still informative.
+pub fn markdown_current_only(bench: &str, current: &Value) -> String {
+    let mut md = format!("### {} (no committed baseline — reporting only)\n\n", bench);
+    md.push_str("| case | p50 | p95 |\n|---|---|---|\n");
+    for (name, p50, p95) in case_rows(current) {
+        md.push_str(&format!("| {} | {} | {} |\n", name, fmt_s(p50), fmt_s(p95)));
+    }
+    md.push('\n');
+    md
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{arr, num, obj, s};
+
+    fn report(cases: &[(&str, f64, f64)]) -> Value {
+        obj(vec![
+            ("bench", s("round")),
+            (
+                "cases",
+                arr(cases
+                    .iter()
+                    .map(|(name, p50, p95)| {
+                        obj(vec![
+                            ("name", s(name)),
+                            ("n", num(100.0)),
+                            ("p50_s", num(*p50)),
+                            ("p95_s", num(*p95)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+
+    #[test]
+    fn bands_classify_deltas() {
+        let tol = Tolerance::default();
+        assert_eq!(tol.verdict(-40.0), Verdict::Pass); // improvement
+        assert_eq!(tol.verdict(0.0), Verdict::Pass);
+        assert_eq!(tol.verdict(14.9), Verdict::Pass);
+        assert_eq!(tol.verdict(15.1), Verdict::Warn);
+        assert_eq!(tol.verdict(30.1), Verdict::Fail);
+    }
+
+    #[test]
+    fn compare_matches_by_name_and_judges_p50() {
+        let base = report(&[("a", 1.0, 2.0), ("b", 1.0, 2.0), ("c", 1.0, 2.0)]);
+        let cur = report(&[("a", 1.05, 2.2), ("b", 1.2, 2.0), ("c", 1.5, 2.0)]);
+        let cmp = compare("BENCH_x", &base, &cur, Tolerance::default());
+        assert_eq!(cmp.cases.len(), 3);
+        assert_eq!(cmp.cases[0].verdict, Verdict::Pass);
+        assert_eq!(cmp.cases[1].verdict, Verdict::Warn);
+        assert_eq!(cmp.cases[2].verdict, Verdict::Fail);
+        assert_eq!(cmp.worst(), Verdict::Fail);
+        assert!((cmp.cases[2].p50_delta_pct - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn p95_reports_but_never_gates() {
+        let base = report(&[("a", 1.0, 1.0)]);
+        let cur = report(&[("a", 1.0, 9.0)]); // p95 ×9, p50 flat
+        let cmp = compare("BENCH_x", &base, &cur, Tolerance::default());
+        assert_eq!(cmp.worst(), Verdict::Pass);
+        assert!(cmp.cases[0].p95_delta_pct > 700.0);
+    }
+
+    #[test]
+    fn new_and_missing_cases_never_fail() {
+        let base = report(&[("gone", 1.0, 1.0)]);
+        let cur = report(&[("fresh", 1.0, 1.0)]);
+        let cmp = compare("BENCH_x", &base, &cur, Tolerance::default());
+        assert!(cmp.cases.is_empty());
+        assert_eq!(cmp.new_cases, vec!["fresh"]);
+        assert_eq!(cmp.missing_cases, vec!["gone"]);
+        assert_eq!(cmp.worst(), Verdict::Pass);
+    }
+
+    #[test]
+    fn zero_baseline_is_not_a_division() {
+        let base = report(&[("a", 0.0, 0.0)]);
+        let cur = report(&[("a", 1.0, 1.0)]);
+        let cmp = compare("BENCH_x", &base, &cur, Tolerance::default());
+        assert!(cmp.cases.is_empty());
+        assert_eq!(cmp.new_cases, vec!["a"]);
+    }
+
+    #[test]
+    fn inflation_trips_the_gate() {
+        // the CI self-test contract: a report inflated by 50% must
+        // FAIL against itself under the default 30% band
+        let base = report(&[("a", 0.010, 0.012), ("b", 0.5, 0.6)]);
+        let cur = inflate_report(&base, 50.0);
+        let cmp = compare("BENCH_x", &base, &cur, Tolerance::default());
+        assert_eq!(cmp.worst(), Verdict::Fail);
+        assert!(cmp.cases.iter().all(|c| (c.p50_delta_pct - 50.0).abs() < 1e-6));
+        // and un-inflated passes against itself
+        let clean = compare("BENCH_x", &base, &base, Tolerance::default());
+        assert_eq!(clean.worst(), Verdict::Pass);
+    }
+
+    #[test]
+    fn markdown_lists_every_case_and_verdict() {
+        let base = report(&[("alpha/case", 1.0, 2.0)]);
+        let cur = report(&[("alpha/case", 1.4, 2.0), ("beta/new", 1.0, 1.0)]);
+        let cmps = vec![compare("BENCH_x", &base, &cur, Tolerance::default())];
+        let md = markdown(&cmps, Tolerance::default(), worst(&cmps));
+        assert!(md.contains("alpha/case"));
+        assert!(md.contains("FAIL"));
+        assert!(md.contains("beta/new"));
+        let solo = markdown_current_only("BENCH_y", &cur);
+        assert!(solo.contains("beta/new") && solo.contains("no committed baseline"));
+    }
+}

@@ -7,10 +7,13 @@
 //! * [`cli`] — declarative command-line argument parser
 //! * [`pool`] — fixed thread pool + `parallel_map`
 //! * [`bench`] — criterion-style micro-benchmark harness
+//! * [`benchcmp`] — tolerance-banded BENCH_*.json comparison (the CI
+//!   perf-regression gate behind the `bench_diff` binary)
 //! * [`prop`] — seeded property-testing helper with shrinking
 //! * [`timer`] — stopwatch / duration formatting
 
 pub mod bench;
+pub mod benchcmp;
 pub mod chacha;
 pub mod cli;
 pub mod json;

@@ -9,8 +9,9 @@
 //! the pure-rust work: native-backend local training, sparsification,
 //! masking, encoding, data synthesis.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -97,6 +98,106 @@ impl ThreadPool {
     }
 }
 
+/// Claim-based work state for [`ThreadPool::map_shared`]: tasks are
+/// immutable, indices are claimed from an atomic counter, results land
+/// in per-index slots, and a (count, condvar) pair signals completion.
+struct Shared<T, R, F> {
+    tasks: Vec<T>,
+    f: F,
+    next: AtomicUsize,
+    slots: Mutex<Vec<Option<R>>>,
+    done: (Mutex<usize>, Condvar),
+}
+
+/// Signals one task's completion on drop — including during unwind,
+/// so a panicking task leaves its slot empty but still wakes the
+/// waiting caller, which then panics on the missing result instead of
+/// wedging on the condvar forever.
+struct DoneGuard<'a> {
+    done: &'a Mutex<usize>,
+    cv: &'a Condvar,
+    n: usize,
+}
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let mut done = self.done.lock().unwrap();
+        *done += 1;
+        if *done == self.n {
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Claim and run tasks until the counter runs past the end. Called by
+/// the `map_shared` caller *and* by its best-effort pool helpers: each
+/// index is claimed exactly once, whoever gets there first.
+fn drain_shared<T, R, F: Fn(&T) -> R>(st: &Shared<T, R, F>) {
+    loop {
+        let i = st.next.fetch_add(1, Ordering::Relaxed);
+        if i >= st.tasks.len() {
+            return;
+        }
+        let guard = DoneGuard { done: &st.done.0, cv: &st.done.1, n: st.tasks.len() };
+        let r = (st.f)(&st.tasks[i]);
+        st.slots.lock().unwrap()[i] = Some(r);
+        drop(guard);
+    }
+}
+
+impl ThreadPool {
+    /// Parallel map where the **caller participates**: task indices are
+    /// claimed from a shared counter by the caller and by best-effort
+    /// helper jobs, so the call always makes progress even when every
+    /// pool worker is busy. That makes it safe to call from *inside* a
+    /// pool job (nested fan-out) — unlike [`Self::map`], which parks
+    /// the caller until workers drain the queue and therefore
+    /// deadlocks when all workers are themselves waiting on nested
+    /// maps. Worst case (no worker ever frees up) the caller simply
+    /// runs every task itself.
+    ///
+    /// Results come back in input order; `f` runs exactly once per
+    /// item. A panicking task does NOT wedge the caller: completion is
+    /// signalled by a drop guard, so the panic surfaces here as a
+    /// missing-result panic (the worker that ran it is lost, as with
+    /// [`Self::map`]).
+    pub fn map_shared<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + Sync + 'static,
+        R: Send + 'static,
+        F: Fn(&T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let st = Arc::new(Shared {
+            tasks: items,
+            f,
+            next: AtomicUsize::new(0),
+            slots: Mutex::new((0..n).map(|_| None).collect()),
+            done: (Mutex::new(0), Condvar::new()),
+        });
+        // Helpers are opportunistic: each claims whatever the caller
+        // has not reached yet and exits as soon as nothing is left. At
+        // most n−1 of them can ever hold work (the caller takes one).
+        for _ in 0..self.size().min(n.saturating_sub(1)) {
+            let st = Arc::clone(&st);
+            self.submit(move || drain_shared(&st));
+        }
+        drain_shared(&st);
+        // the caller ran out of claimable tasks; wait for in-flight
+        // helper claims to finish
+        let mut done = st.done.0.lock().unwrap();
+        while *done < n {
+            done = st.done.1.wait(done).unwrap();
+        }
+        drop(done);
+        let slots = std::mem::take(&mut *st.slots.lock().unwrap());
+        slots.into_iter().map(|s| s.expect("map_shared task panicked")).collect()
+    }
+}
+
 impl Drop for ThreadPool {
     fn drop(&mut self) {
         for _ in &self.workers {
@@ -161,5 +262,67 @@ mod tests {
         let pool = ThreadPool::new(2);
         let out: Vec<usize> = pool.map(Vec::<usize>::new(), |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_shared_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map_shared((0..200).collect(), |&x: &usize| x * 3);
+        assert_eq!(out, (0..200).map(|x| x * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_shared_empty() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.map_shared(Vec::<usize>::new(), |&x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn map_shared_runs_each_task_once() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = Arc::clone(&counter);
+        let out = pool.map_shared((0..64).collect(), move |&x: &usize| {
+            c.fetch_add(1, Ordering::SeqCst);
+            x
+        });
+        assert_eq!(out.len(), 64);
+        assert_eq!(counter.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn map_shared_panicking_task_panics_not_hangs() {
+        // whichever thread claims the poisoned index — caller (panic
+        // propagates directly) or helper (caller panics on the empty
+        // slot) — the call must end in a panic, never a hang
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map_shared((0..8).collect(), |&i: &usize| {
+                if i == 3 {
+                    panic!("boom");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn map_shared_nested_inside_workers_does_not_deadlock() {
+        // the round engine's shape: an outer `map` of client jobs, each
+        // fanning pair-mask generation out with `map_shared` on the
+        // SAME pool. With `map` this would deadlock (all workers block
+        // waiting for queued inner jobs); `map_shared` callers claim
+        // their own tasks, so every nesting level makes progress.
+        for workers in [1usize, 2, 4] {
+            let pool = Arc::new(ThreadPool::new(workers));
+            let p = Arc::clone(&pool);
+            let out = pool.map((0..6).collect(), move |outer: usize| {
+                let inner = p.map_shared((0..9).collect(), |&i: &usize| i + 1);
+                outer * inner.iter().sum::<usize>()
+            });
+            assert_eq!(out, (0..6).map(|o| o * 45).collect::<Vec<_>>());
+        }
     }
 }

@@ -1,24 +1,29 @@
-//! Counting-allocator audit of the per-client round path.
+//! Counting-allocator audit of the steady-state round path — BOTH
+//! sides of the engine.
 //!
-//! The kernel-layer contract (PERF.md): once the per-worker
-//! workspaces are warm, the steady-state client path — local SGD →
-//! sparsify → (secure) mask → encode — performs **zero heap
-//! allocations of model-sized buffers** per client. Everything
-//! model-sized (local params, grads, update, activations, Top-k
-//! scratch, sparse/residual split, keep map, mask accumulators,
-//! masked residual) lives in the trainer's `WorkspacePool` and is
-//! reused; per-client allocations are bounded by the *kept* entries
-//! (~k/x of n), never the model size.
+//! The kernel-layer contract (PERF.md): once the per-worker client
+//! workspaces and the trainer's `ServerWorkspace` are warm, a
+//! steady-state round performs **zero heap allocations of model-sized
+//! buffers** — on the per-client path (local SGD → sparsify → mask →
+//! encode) *and* on the coordinator path (Collect → Unmask/Recover →
+//! Apply). Everything model-sized lives in trainer-owned scratch: the
+//! client `WorkspacePool` (local params, grads, update, activations,
+//! Top-k scratch, sparse/residual split, keep map, mask accumulators,
+//! masked residual) and the `ServerWorkspace` (aggregate accumulator,
+//! audit sum); the global model is `Arc`'d so the per-round pipeline
+//! snapshot is a refcount bump and Apply mutates copy-on-write in
+//! place. Per-round allocations are bounded by the *kept* entries
+//! (~k/x of n) — wire payloads, σ-filtered pair streams, decoded
+//! survivor payloads — never the model size.
 //!
 //! This test wraps the global allocator with a counter of "large"
 //! allocations (≥ 3/4 of the model's f32 footprint — every
 //! model-sized buffer is ≥ 4·m bytes, every legitimate
 //! kept-entry-scaled buffer is well under), warms the workspaces up,
-//! then drives the isolated client
-//! phases (`Trainer::run_client_phases`) and asserts the only large
-//! allocation left is the engine's once-per-round global-model
-//! snapshot — with 10 clients per round, any model-sized allocation
-//! on the per-client path would show up 10× that bound.
+//! then drives (a) the isolated client phases
+//! (`Trainer::run_client_phases`) and (b) the full engine
+//! (`Trainer::run_round`), asserting **zero** large allocations in
+//! steady state for plain and secure modes alike.
 //!
 //! This file is its own test binary (one test), so no parallel test
 //! pollutes the counter.
@@ -71,7 +76,10 @@ static ALLOC: CountingAllocator = CountingAllocator;
 /// keep-ratio is dialed to k = 0.2 so the *union* of the 9 pair
 /// streams (1 − (1 − k/x)^9 ≈ 17% of positions) keeps the per-client
 /// wire payload — a legitimate, kept-entry-scaled allocation — well
-/// below the model-sized threshold.
+/// below the model-sized threshold. Failure injection stays off (the
+/// rollback snapshots are model-sized by design and priced per
+/// *injected-failure* run, not steady state), and `expose_aggregate` /
+/// `audit_secure_sum` keep their zero-copy defaults.
 fn cfg(secure: bool) -> RunConfig {
     let mut cfg = RunConfig::smoke("mnist_mlp");
     cfg.data_dir = None;
@@ -86,43 +94,63 @@ fn cfg(secure: bool) -> RunConfig {
     cfg
 }
 
+/// Track `rounds` steady-state iterations of `step` and return the
+/// number of model-sized allocations observed.
+fn count_large<F: FnMut(u64)>(m: usize, rounds: u64, mut step: F) -> usize {
+    // "model-sized" = at least 3/4 of the model's f32 footprint
+    // (4·m bytes). Every model-sized buffer (local params, grads,
+    // update, Top-k scratch, sparse/residual split, mask accumulator,
+    // server aggregate) is 4·m bytes = 636 KB ≥ this; every
+    // legitimate kept-entry-scaled buffer (σ-filtered streams
+    // ~25 KB/pair, the ~0.25n-entry wire payload ~240 KB, batch
+    // pixels 157 KB) sits well below it.
+    THRESHOLD_BYTES.store(m * 3, Ordering::SeqCst);
+    LARGE_ALLOCS.store(0, Ordering::SeqCst);
+    TRACKING.store(true, Ordering::SeqCst);
+    for round in 2..2 + rounds {
+        step(round);
+    }
+    TRACKING.store(false, Ordering::SeqCst);
+    LARGE_ALLOCS.load(Ordering::SeqCst)
+}
+
 #[test]
-fn steady_state_client_path_allocates_nothing_model_sized() {
+fn steady_state_round_allocates_nothing_model_sized() {
+    let rounds = 3u64;
     for secure in [false, true] {
+        // --- (a) isolated client phases -----------------------------
         let mut trainer = Trainer::new(cfg(secure)).unwrap();
         let m = trainer.model_params();
-
         // warm-up: workspaces and payload buffers size themselves
         for round in 0..2u64 {
             trainer.run_client_phases(round).unwrap();
         }
-
-        // "model-sized" = at least 3/4 of the model's f32 footprint
-        // (4·m bytes). Every model-sized buffer (local params, grads,
-        // update, Top-k scratch, sparse/residual split, mask
-        // accumulator) is 4·m bytes = 636 KB ≥ this; every legitimate
-        // kept-entry-scaled buffer (σ-filtered streams ~25 KB/pair,
-        // the ~0.25n-entry wire payload ~240 KB, batch pixels 157 KB)
-        // sits well below it.
-        THRESHOLD_BYTES.store(m * 3, Ordering::SeqCst);
-        LARGE_ALLOCS.store(0, Ordering::SeqCst);
-        TRACKING.store(true, Ordering::SeqCst);
-        let rounds = 3u64;
-        for round in 2..2 + rounds {
+        let count = count_large(m, rounds, |round| {
             trainer.run_client_phases(round).unwrap();
-        }
-        TRACKING.store(false, Ordering::SeqCst);
-
-        let count = LARGE_ALLOCS.load(Ordering::SeqCst);
-        // allowed: exactly one model-sized allocation per round — the
-        // engine's global-model snapshot (ClientPipeline::for_round).
-        // 10 clients run per round, so any model-sized allocation on
-        // the per-client path would push this to ≥ 10·rounds.
-        assert!(
-            count <= rounds as usize,
+        });
+        assert_eq!(
+            count, 0,
             "secure={secure}: {count} model-sized (≥{} B) allocations across {rounds} \
-             steady-state rounds of 10 clients each — the per-client path must not \
-             allocate model-sized buffers (1 global snapshot per round is allowed)",
+             steady-state client-phase rounds of 10 clients each — the per-client path \
+             must not allocate model-sized buffers (the global snapshot is an Arc bump)",
+            m * 3
+        );
+
+        // --- (b) the full engine, coordinator side included ---------
+        let mut trainer = Trainer::new(cfg(secure)).unwrap();
+        for round in 0..2u64 {
+            trainer.run_round(round).unwrap();
+        }
+        let count = count_large(m, rounds, |round| {
+            let out = trainer.run_round(round).unwrap();
+            assert!(!out.aborted);
+            assert!(out.aggregate.is_empty(), "expose_aggregate off ⇒ no copy");
+        });
+        assert_eq!(
+            count, 0,
+            "secure={secure}: {count} model-sized (≥{} B) allocations across {rounds} \
+             steady-state full rounds — the coordinator path (Collect → Unmask/Recover \
+             → Apply) must run entirely on the ServerWorkspace + copy-on-write global",
             m * 3
         );
     }

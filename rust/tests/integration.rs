@@ -119,7 +119,7 @@ fn fedprox_differs_from_fedavg() {
         cfg.algorithm = alg;
         let mut t = Trainer::new(cfg).unwrap();
         t.run().unwrap();
-        t.global.data
+        t.global.data.clone()
     };
     let a = run(Algorithm::FedAvg);
     let b = run(Algorithm::FedProx { mu: 0.5 });
@@ -147,7 +147,7 @@ fn run_is_deterministic_per_seed() {
         cfg.eval_every = 3;
         let mut t = Trainer::new(cfg).unwrap();
         t.run().unwrap();
-        t.global.data
+        t.global.data.clone()
     };
     let a = run();
     let b = run();

@@ -197,7 +197,7 @@ fn golden_run_reproduces_bitwise_per_seed() {
         cfg.eval_every = 99;
         let mut t = Trainer::new(cfg).unwrap();
         t.run().unwrap();
-        t.global.data
+        t.global.data.clone()
     };
     let a = run();
     let b = run();

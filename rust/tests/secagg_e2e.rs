@@ -221,6 +221,7 @@ fn secure_trainer_aggregate_equals_plaintext_bitwise() {
         cfg.mask_ratio_k = 0.0;
         cfg.rounds = 2;
         cfg.eval_every = 99;
+        cfg.expose_aggregate = true; // this test asserts on the sums
         let mut t = Trainer::new(cfg).unwrap();
         let mut aggs = Vec::new();
         for r in 0..2 {
@@ -257,6 +258,7 @@ fn secure_trainer_masks_cancel_every_round() {
     let mut cfg = secure_trainer_cfg();
     cfg.mask_ratio_k = 0.5;
     cfg.audit_secure_sum = true;
+    cfg.expose_aggregate = true;
     cfg.rounds = 3;
     cfg.eval_every = 99;
     let mut trainer = Trainer::new(cfg).unwrap();
@@ -297,6 +299,7 @@ fn secure_trainer_recovers_dropped_clients() {
     cfg.clients_per_round = 6;
     cfg.mask_ratio_k = 0.5;
     cfg.audit_secure_sum = true;
+    cfg.expose_aggregate = true;
     cfg.dropout_prob = 0.25;
     cfg.min_survivors = 2;
     cfg.rounds = 4;
@@ -354,6 +357,7 @@ fn secure_trainer_recovers_dropped_clients() {
 #[test]
 fn round_aborts_below_min_survivors() {
     let mut cfg = secure_trainer_cfg();
+    cfg.expose_aggregate = true; // aborted rounds must still yield none
     cfg.dropout_prob = 0.95; // this seed: all 4 selected clients crash
     cfg.min_survivors = cfg.clients_per_round;
     cfg.rounds = 1;
