@@ -1,0 +1,68 @@
+//! Kernel-layer microbenchmarks (PERF.md §SIMD layer): the vectorized
+//! blocked-matmul grad, the quad-block ChaCha dispatch, and the
+//! σ-filter compress — each with its forced-scalar twin where the
+//! toggle is public, so `bench_diff` tracks the SIMD win per kernel
+//! instead of only through the aggregate round benches.
+
+use fedsparse::models::manifest::Manifest;
+use fedsparse::models::params::ParamVector;
+use fedsparse::runtime::{Backend, NativeBackend, Workspace};
+use fedsparse::secagg::mask::{MaskRange, PairwiseMasker};
+use fedsparse::util::bench::{black_box, Bench};
+use fedsparse::util::chacha::ChaCha20;
+use fedsparse::util::rng::Rng;
+use fedsparse::util::simd;
+
+fn main() {
+    let mut b = Bench::new("kernels");
+    let n = 159_010usize; // mnist_mlp
+    eprintln!("bench_kernels: simd enabled = {}", simd::enabled());
+
+    // -- blocked matmul: full grad at the paper's model size ---------
+    let manifest = Manifest::builtin();
+    let meta = manifest.model("mnist_mlp").expect("builtin mnist_mlp");
+    let params = ParamVector::init(meta, 7);
+    let mut rng = Rng::new(9);
+    let batch = 32usize;
+    let d: usize = meta.input.iter().product();
+    let x: Vec<f32> = (0..batch * d).map(|_| rng.normal_f32(1.0).max(0.0)).collect();
+    let y: Vec<i32> = (0..batch).map(|_| rng.below(meta.classes as u64) as i32).collect();
+    let mut ws = Workspace::new();
+    let mut grads = Vec::new();
+    for (label, use_simd) in [("simd", true), ("scalar", false)] {
+        let mut be = NativeBackend::new(meta).unwrap();
+        be.set_simd(use_simd);
+        b.bench_throughput(&format!("matmul/grad159k_b32/{label}"), n as u64, || {
+            black_box(be.grad_into(&params, &x, &y, &mut ws, &mut grads).unwrap());
+        });
+    }
+
+    // -- ChaCha keystream: quad-block vs single-block dispatch -------
+    let key = [0x42u8; 32];
+    for (label, quad) in [("quad", true), ("scalar", false)] {
+        b.bench_throughput(&format!("chacha_blocks/159k_lanes/{label}"), n as u64, || {
+            let mut prg = ChaCha20::from_seed(&key, 3);
+            prg.set_quad_blocks(quad);
+            let mut acc = 0u32;
+            prg.for_each_uniform_f32(n, |_, lane| acc = acc.wrapping_add(lane));
+            black_box(acc);
+        });
+    }
+
+    // -- σ-filter compress: one pair stream at round keep-ratios -----
+    // (the SIMD/scalar filter branch follows FEDSPARSE_NO_SIMD; run
+    // the bench under both env settings to compare)
+    let peers = vec![(1, b"bench-pair-secret".to_vec())];
+    let masker = PairwiseMasker::new(0, peers, MaskRange::default());
+    let mut acc = Vec::new();
+    let mut nz = Vec::new();
+    for (label, k) in [("k1.0", 1.0f64), ("k0.2", 0.2)] {
+        let sigma = masker.range.sigma(k, 10);
+        b.bench_throughput(&format!("sigma_filter/pair159k/{label}"), n as u64, || {
+            masker.sparse_combined_mask_into(5, n, sigma, &mut acc, &mut nz);
+            black_box((&acc, &nz));
+        });
+    }
+
+    b.finish();
+}

@@ -11,7 +11,9 @@
 //!
 //! Bootstrap behavior: reports with no committed baseline are listed
 //! (current numbers only) and never fail, so the gate is safe to wire
-//! up before the first baselines land. `--inflate-current <pct>`
+//! up before the first baselines land; when *nothing* was compared the
+//! headline says "reporting-only" explicitly rather than a vacuous
+//! "ok" over zero cases. `--inflate-current <pct>`
 //! scales the current numbers up before comparing — CI's self-test
 //! uses it to prove a synthetic >30% regression actually trips the
 //! gate.
@@ -26,8 +28,8 @@ use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use fedsparse::util::benchcmp::{
-    compare, inflate_report, markdown, markdown_current_only, worst, BenchComparison, Tolerance,
-    Verdict,
+    compare, inflate_report, markdown, markdown_current_only, markdown_reporting_only, worst,
+    BenchComparison, Tolerance, Verdict,
 };
 use fedsparse::util::cli::{ArgSpec, Args, CliError};
 use fedsparse::util::json;
@@ -112,7 +114,15 @@ fn run() -> Result<ExitCode, String> {
         .collect();
     let verdict =
         if vanished.is_empty() { worst(&compared) } else { Verdict::Fail };
-    let mut summary = markdown(&compared, tol, verdict);
+    // with nothing compared and nothing vanished, the run is
+    // reporting-only: say so in the headline instead of printing a
+    // vacuous "perf gate: ok" over zero cases
+    let reporting_only = compared.is_empty() && vanished.is_empty();
+    let mut summary = if reporting_only {
+        markdown_reporting_only(current_files.len(), &baseline_dir.display().to_string())
+    } else {
+        markdown(&compared, tol, verdict)
+    };
     if !vanished.is_empty() {
         summary.push_str(&format!(
             "**FAIL**: baseline reports with no current counterpart (bench group \
@@ -121,13 +131,6 @@ fn run() -> Result<ExitCode, String> {
         ));
     }
     summary.push_str(&md);
-    if compared.is_empty() {
-        summary.push_str(&format!(
-            "no committed baselines under {} — gate is reporting-only until the \
-             first BENCH_*.json files are committed (see bench-history/README.md)\n",
-            baseline_dir.display()
-        ));
-    }
     if inflate_pct != 0.0 {
         summary.push_str(&format!(
             "\n(self-test mode: current numbers inflated by {inflate_pct}% before comparing)\n"

@@ -6,6 +6,29 @@
 //! / [`ClientState::commit_round`]. When transport failure injection is
 //! on, a [`ClientSnapshot`] taken before dispatch lets a dropped or
 //! timed-out client roll back as if it had never been selected.
+//!
+//! ## Copy-on-write snapshots (double-buffered residuals)
+//!
+//! The residual store — the one model-sized piece of per-client state
+//! — lives behind an `Arc`, so [`ClientState::snapshot`] is a refcount
+//! bump, not a model-sized copy. The round job never mutates the
+//! pre-round store: it *reads* it (fold-in, staleness counters) and
+//! writes the evolved residual into a recycled spare store
+//! ([`crate::sparse::residual::ResidualStore::store_from`]). At commit
+//! the two stores swap roles — the spare becomes the live store and
+//! the pre-round store is reclaimed as the next spare once the round's
+//! snapshots release it (`retired` holds it for exactly that gap). Net
+//! effect: failure-injection runs take per-cohort snapshots every
+//! round without ever paying a model-sized copy or allocation in
+//! steady state (pinned by `tests/alloc_steady_state.rs`), at the cost
+//! of each client owning two model-sized stores instead of one.
+//!
+//! The rate controller is a few scalars and is still cloned; the DGC
+//! momentum velocity (optional, off by default) is the one remaining
+//! model-sized snapshot copy when momentum and failure injection are
+//! combined.
+
+use std::sync::Arc;
 
 use crate::sparse::dynamic::DynamicRate;
 use crate::sparse::momentum::MomentumCorrector;
@@ -17,8 +40,17 @@ pub struct ClientState {
     pub id: u32,
     /// Indices into the train split this client owns.
     pub data: Vec<usize>,
-    /// Residual accumulation (Alg. 1 line 12).
-    pub residual: ResidualStore,
+    /// Residual accumulation (Alg. 1 line 12). `Arc`'d so rollback
+    /// snapshots are refcount bumps (module docs); the round job reads
+    /// it and writes the evolved state into the recycled spare.
+    pub residual: Arc<ResidualStore>,
+    /// The write target handed to the next round job (the double-buffer
+    /// twin of `residual`, same size once warm).
+    spare: Option<ResidualStore>,
+    /// Pre-round store retired at the last commit while a rollback
+    /// snapshot still referenced it; reclaimed as the next `spare` once
+    /// its refcount drops back to one.
+    retired: Option<Arc<ResidualStore>>,
     /// Eq. 2 controller (None when static rates are used).
     pub rate: Option<DynamicRate>,
     /// DGC momentum corrector (None when momentum = 0).
@@ -29,14 +61,15 @@ pub struct ClientState {
     pub participation: u64,
 }
 
-/// Pre-round copy of the mutable client state. Restored when the
+/// Pre-round view of the mutable client state, restored when the
 /// transport reports the client failed mid-round: from the client's
 /// point of view the round never happened (its update was lost in
 /// flight, so neither the residual split nor the rate/momentum
-/// controllers may advance).
+/// controllers may advance). Taking one is O(1) in the model size —
+/// the residual is shared by `Arc`, never copied (module docs).
 #[derive(Clone, Debug)]
 pub struct ClientSnapshot {
-    residual: ResidualStore,
+    residual: Arc<ResidualStore>,
     rate: Option<DynamicRate>,
     momentum: Option<MomentumCorrector>,
 }
@@ -46,7 +79,11 @@ impl ClientState {
         Self {
             id,
             data,
-            residual: ResidualStore::new(model_params),
+            residual: Arc::new(ResidualStore::new(model_params)),
+            // pre-size the write target so a client first selected
+            // mid-run does not allocate on the steady-state round path
+            spare: Some(ResidualStore::new(model_params)),
+            retired: None,
             rate: None,
             momentum: None,
             last_loss: f64::NAN,
@@ -60,11 +97,14 @@ impl ClientState {
         self
     }
 
-    /// Copy the mutable round state (call *before*
-    /// [`Self::take_round_state`]; only needed under failure injection).
+    /// Capture the pre-round state (call *before*
+    /// [`Self::take_round_state`]; only needed under failure
+    /// injection). O(1) in the model size: the residual is shared, the
+    /// controllers are cloned (rate is scalars; momentum velocity is
+    /// the one model-sized clone, only when DGC momentum is on).
     pub fn snapshot(&self) -> ClientSnapshot {
         ClientSnapshot {
-            residual: self.residual.clone(),
+            residual: Arc::clone(&self.residual),
             rate: self.rate.clone(),
             momentum: self.momentum.clone(),
         }
@@ -79,30 +119,62 @@ impl ClientState {
         self.momentum = snap.momentum;
     }
 
-    /// Move the mutable state into a round job (cheap: leaves empties
-    /// behind; the state comes back via [`Self::commit_round`] or
-    /// [`Self::restore`]).
-    pub fn take_round_state(
-        &mut self,
-    ) -> (ResidualStore, Option<DynamicRate>, Option<MomentumCorrector>) {
-        (
-            std::mem::replace(&mut self.residual, ResidualStore::new(0)),
-            self.rate.take(),
-            self.momentum.take(),
-        )
+    /// Recycle an unused round write target (the job of a rolled-back
+    /// or aborted client evolved state that will never be committed)
+    /// so the next selection of this client stays allocation-free.
+    pub fn reclaim_spare(&mut self, store: ResidualStore) {
+        self.spare = Some(store);
     }
 
-    /// Commit a delivered round: hand the evolved state back and do the
-    /// participation bookkeeping. This is the *single* owner of
+    /// Move the round inputs into a round job: the pre-round residual
+    /// (shared, read-only from the job's perspective), a recycled
+    /// write target for the evolved residual, and the controllers
+    /// (cheap: leaves empties behind; the state comes back via
+    /// [`Self::commit_round`] or [`Self::restore`]).
+    pub fn take_round_state(
+        &mut self,
+    ) -> (Arc<ResidualStore>, ResidualStore, Option<DynamicRate>, Option<MomentumCorrector>) {
+        let residual = std::mem::replace(&mut self.residual, Arc::new(ResidualStore::new(0)));
+        let fresh = match self.spare.take() {
+            Some(s) => s,
+            // reclaim the store retired at the last commit — by now the
+            // snapshots that pinned it are gone (previous round ended)
+            None => match self.retired.take() {
+                Some(arc) => match Arc::try_unwrap(arc) {
+                    Ok(s) => s,
+                    Err(arc) => {
+                        // still referenced (unusual — a caller kept a
+                        // snapshot across rounds): leave it parked and
+                        // pay a one-off grow in the job instead
+                        self.retired = Some(arc);
+                        ResidualStore::new(0)
+                    }
+                },
+                None => ResidualStore::new(0),
+            },
+        };
+        (residual, fresh, self.rate.take(), self.momentum.take())
+    }
+
+    /// Commit a delivered round: the evolved store (`residual`)
+    /// becomes the live state, the pre-round store (`prev`) is
+    /// recycled as the next write target — immediately when nothing
+    /// else references it, or via `retired` until the round's rollback
+    /// snapshots drop. This is the *single* owner of
     /// participation/loss accounting — nothing else increments it.
     pub fn commit_round(
         &mut self,
+        prev: Arc<ResidualStore>,
         residual: ResidualStore,
         rate: Option<DynamicRate>,
         momentum: Option<MomentumCorrector>,
         mean_loss: f64,
     ) {
-        self.residual = residual;
+        self.residual = Arc::new(residual);
+        match Arc::try_unwrap(prev) {
+            Ok(s) => self.spare = Some(s),
+            Err(arc) => self.retired = Some(arc),
+        }
         self.rate = rate;
         self.momentum = momentum;
         self.last_loss = mean_loss;
@@ -117,25 +189,33 @@ mod tests {
     #[test]
     fn commit_round_owns_participation() {
         let mut c = ClientState::new(0, vec![1, 2, 3], 10);
-        let (residual, rate, momentum) = c.take_round_state();
+        let (prev, mut fresh, rate, momentum) = c.take_round_state();
         assert_eq!(c.residual.len(), 0, "state moved out");
-        c.commit_round(residual, rate, momentum, 1.25);
+        fresh.store_from(&prev, &[0.5; 10]);
+        c.commit_round(prev, fresh, rate, momentum, 1.25);
         assert_eq!(c.participation, 1);
         assert_eq!(c.last_loss, 1.25);
         assert_eq!(c.residual.len(), 10, "state moved back");
+        assert_eq!(c.residual.as_slice(), &[0.5f32; 10][..]);
     }
 
     #[test]
-    fn restore_rolls_back_everything_but_history() {
+    fn snapshot_is_a_refcount_bump_and_restores() {
         let mut c = ClientState::new(1, vec![], 4).with_dynamic_rate(0.1, 0.8, 100, 0.01);
-        c.residual.store(&[1.0, 0.0, 2.0, 0.0]);
+        Arc::make_mut(&mut c.residual).store(&[1.0, 0.0, 2.0, 0.0]);
         c.last_loss = 3.0;
         c.participation = 5;
         let snap = c.snapshot();
+        assert!(
+            Arc::ptr_eq(&snap.residual, &c.residual),
+            "snapshot shares the store instead of copying it"
+        );
 
-        // a failed round: state moved out, evolved elsewhere, lost
-        let (mut residual, _, _) = c.take_round_state();
-        residual.store(&[0.0; 4]);
+        // a failed round: state moved out, evolved into the spare, lost
+        let (prev, mut fresh, _, _) = c.take_round_state();
+        fresh.store_from(&prev, &[0.0; 4]);
+        c.reclaim_spare(fresh);
+        drop(prev);
         c.restore(snap);
 
         assert_eq!(c.residual.as_slice().to_vec(), vec![1.0, 0.0, 2.0, 0.0]);
@@ -146,14 +226,46 @@ mod tests {
     }
 
     #[test]
+    fn double_buffer_recycles_without_snapshots() {
+        let mut c = ClientState::new(2, vec![], 8);
+        for t in 0..4 {
+            let (prev, mut fresh, rate, momentum) = c.take_round_state();
+            fresh.store_from(&prev, &[t as f32; 8]);
+            c.commit_round(prev, fresh, rate, momentum, t as f64);
+            assert!(c.spare.is_some(), "round {t}: prev recycled immediately");
+            assert!(c.retired.is_none(), "round {t}: nothing parked");
+            assert_eq!(c.residual.as_slice(), &[t as f32; 8][..]);
+        }
+    }
+
+    #[test]
+    fn double_buffer_parks_prev_while_snapshot_lives() {
+        let mut c = ClientState::new(3, vec![], 8);
+        // round A: snapshot held across commit (the engine holds the
+        // cohort's snapshots until the round ends)
+        let snap = c.snapshot();
+        let (prev, mut fresh, rate, momentum) = c.take_round_state();
+        fresh.store_from(&prev, &[1.0; 8]);
+        c.commit_round(prev, fresh, rate, momentum, 0.0);
+        assert!(c.spare.is_none(), "prev still pinned by the snapshot");
+        assert!(c.retired.is_some(), "prev parked for later reclaim");
+        // round ends: snapshots drop, round B reclaims the parked store
+        drop(snap);
+        let (prev, fresh, rate, momentum) = c.take_round_state();
+        assert_eq!(fresh.len(), 8, "parked store reclaimed, not a fresh alloc");
+        c.commit_round(prev, fresh, rate, momentum, 0.0);
+    }
+
+    #[test]
     fn dynamic_rate_controller_survives_commit_cycle() {
         let mut c = ClientState::new(2, vec![], 8).with_dynamic_rate(0.1, 0.8, 100, 0.01);
         for t in 0..3 {
-            let (residual, mut rate, momentum) = c.take_round_state();
+            let (prev, mut fresh, mut rate, momentum) = c.take_round_state();
             if let Some(ctrl) = &mut rate {
                 ctrl.observe(t, 2.0);
             }
-            c.commit_round(residual, rate, momentum, 2.0);
+            fresh.store_from(&prev, &[0.0; 8]);
+            c.commit_round(prev, fresh, rate, momentum, 2.0);
         }
         assert_eq!(c.participation, 3);
         assert!(c.rate.is_some());

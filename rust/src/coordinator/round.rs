@@ -39,6 +39,11 @@
 //! deadline straggler) rolls back to its pre-round snapshot — from its
 //! point of view the round never happened; the un-transmitted residual
 //! mass stays put and is folded into its next participating round.
+//! Snapshots are copy-on-write: the pre-round residual is shared by
+//! `Arc` and the job writes the evolved state into a recycled spare
+//! store, so failure-injection rounds take no model-sized copies or
+//! allocations in steady state (see [`super::client`] and
+//! `tests/alloc_steady_state.rs`).
 //! When too few uploads arrive (`min_survivors`, or fewer than the
 //! Shamir threshold while dead masks need recovery), the whole round
 //! aborts: the global model and every selected client roll back, and
@@ -190,10 +195,14 @@ pub struct RoundOutcome {
 }
 
 /// Per-client mutable state moved into the parallel round pipeline.
+/// The pre-round residual is shared (`Arc`), never mutated by the job;
+/// the evolved residual is written into `fresh`, the client's recycled
+/// double-buffer twin (see [`super::client::ClientState`]).
 pub struct ClientJob {
     cid: u32,
     indices: Vec<usize>,
-    residual: ResidualStore,
+    residual: Arc<ResidualStore>,
+    fresh: ResidualStore,
     rate: Option<DynamicRate>,
     momentum: Option<MomentumCorrector>,
 }
@@ -207,7 +216,12 @@ pub struct ClientResult {
     wire: usize,
     /// Unmasked contribution (secure mode + audit only).
     plain: Option<Vec<f32>>,
+    /// The evolved residual (committed on delivery; recycled into the
+    /// client's spare on rollback).
     residual: ResidualStore,
+    /// The untouched pre-round residual (becomes the next spare at
+    /// commit; simply dropped on rollback — the snapshot holds it).
+    residual_prev: Arc<ResidualStore>,
     rate: Option<DynamicRate>,
     momentum: Option<MomentumCorrector>,
     mean_loss: f64,
@@ -346,7 +360,7 @@ impl ClientPipeline {
     /// `ws` buffers; the only per-call allocations are the k-sized
     /// wire payload (and the audit vector when enabled).
     fn run_in(&self, job: ClientJob, ws: &mut ClientWorkspace) -> Result<ClientResult> {
-        let ClientJob { cid, indices, mut residual, mut rate, mut momentum } = job;
+        let ClientJob { cid, indices, residual, mut fresh, mut rate, mut momentum } = job;
         let round = self.round;
 
         // -- LocalTrain: E local SGD iterations --
@@ -452,12 +466,15 @@ impl ClientPipeline {
                     ws.update.iter().zip(&ws.masked.residual).map(|(u, r)| u - r).collect(),
                 );
             }
-            residual.store(&ws.masked.residual);
+            // evolved residual into the recycled write target — the
+            // shared pre-round store stays untouched for the rollback
+            // snapshot (CoW; see `super::client`)
+            fresh.store_from(&residual, &ws.masked.residual);
             // secagg is only built in secure mode, where transmitted
             // positions are always counted sparsely
             (ws.masked.payload.encode(), ws.masked.payload.nnz())
         } else {
-            residual.store(&ws.sparsify.residual);
+            fresh.store_from(&residual, &ws.sparsify.residual);
             let sv = SparseVec::from_dense(&ws.sparsify.sparse);
             // QSGD-style stochastic quantization (lossy; the
             // server receives the dequantized values)
@@ -482,7 +499,8 @@ impl ClientPipeline {
             wire: encoded.len(),
             encoded,
             plain,
-            residual,
+            residual: fresh,
+            residual_prev: residual,
             rate,
             momentum,
             mean_loss,
@@ -657,11 +675,17 @@ impl Trainer {
         let k = cohort.selected.len();
         for &cid in &cohort.selected {
             let cs = &mut self.clients[cid as usize];
-            let (residual, rate, momentum) = cs.take_round_state();
-            let job = ClientJob { cid, indices: cs.data.clone(), residual, rate, momentum };
+            let (residual, fresh, rate, momentum) = cs.take_round_state();
+            let job = ClientJob { cid, indices: cs.data.clone(), residual, fresh, rate, momentum };
             let r = pipeline.run(job)?;
             loss_sum += r.mean_loss;
-            self.clients[cid as usize].commit_round(r.residual, r.rate, r.momentum, r.mean_loss);
+            self.clients[cid as usize].commit_round(
+                r.residual_prev,
+                r.residual,
+                r.rate,
+                r.momentum,
+                r.mean_loss,
+            );
         }
         Ok(loss_sum / k as f64)
     }
@@ -694,8 +718,8 @@ impl Trainer {
             .iter()
             .map(|&cid| {
                 let cs = &mut self.clients[cid as usize];
-                let (residual, rate, momentum) = cs.take_round_state();
-                ClientJob { cid, indices: cs.data.clone(), residual, rate, momentum }
+                let (residual, fresh, rate, momentum) = cs.take_round_state();
+                ClientJob { cid, indices: cs.data.clone(), residual, fresh, rate, momentum }
             })
             .collect();
         let pipeline =
@@ -824,7 +848,7 @@ impl Trainer {
         let mut scratch = RoundScratch::default();
         for (r, _) in collected.survivors {
             let cs = &mut self.clients[r.cid as usize];
-            cs.commit_round(r.residual, r.rate, r.momentum, r.mean_loss);
+            cs.commit_round(r.residual_prev, r.residual, r.rate, r.momentum, r.mean_loss);
             scratch.survivors.push(r.cid);
             scratch.loss_sum += r.mean_loss;
             scratch.rate_sum += r.nnz_rate;
@@ -833,7 +857,11 @@ impl Trainer {
         }
         for r in collected.rolled_back {
             let snap = snapshots.remove(&r.cid).expect("failed client has a snapshot");
-            self.clients[r.cid as usize].restore(snap);
+            let cs = &mut self.clients[r.cid as usize];
+            // the evolved residual is discarded, but its buffer is
+            // recycled so the client's next round stays allocation-free
+            cs.reclaim_spare(r.residual);
+            cs.restore(snap);
         }
         // FedAvg mean over the *surviving* cohort. Copy-on-write: the
         // round's pipeline clones of the global Arc are dropped by now,
@@ -861,11 +889,17 @@ impl Trainer {
         let mut nnz = Vec::new();
         let mut wire = Vec::new();
         let mut loss_sum = 0f64;
-        for (r, _) in &collected.survivors {
+        for (r, _) in collected.survivors {
             survivors.push(r.cid);
             nnz.push(r.nnz);
             wire.push(r.wire);
             loss_sum += r.mean_loss;
+            // nothing commits on abort, but the evolved-residual
+            // buffers are still recycled (allocation-free next round)
+            self.clients[r.cid as usize].reclaim_spare(r.residual);
+        }
+        for r in collected.rolled_back {
+            self.clients[r.cid as usize].reclaim_spare(r.residual);
         }
         // every selected client — delivered or not — rolls back (aborts
         // only happen under failure injection, so snapshots exist)

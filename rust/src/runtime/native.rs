@@ -29,6 +29,18 @@
 //! golden THGS tests). Rewrites of these kernels must preserve that
 //! per-accumulator op sequence or every golden test re-goldens.
 //!
+//! The axpy inner loops of the forward and weight-grad kernels run
+//! eight accumulators per step through [`crate::util::simd::axpy_with`]
+//! — vectorization **across** the independent `OUT_TILE` accumulators,
+//! which leaves every accumulator's op sequence untouched (one
+//! non-fused mul + add per `d_in`/row step), so the SIMD and scalar
+//! paths are bitwise interchangeable (`FEDSPARSE_NO_SIMD=1` forces
+//! scalar; `blocked_grad_bitwise_matches_scalar_reference` pins both).
+//! The input-delta kernel stays scalar: its per-`(row, i)` accumulator
+//! is a *dot product over `d_out`* — lane-parallelizing that sum would
+//! split it into partial sums and reorder the f32 adds, which is
+//! exactly the re-goldening event the contract forbids.
+//!
 //! All buffers live in a reusable [`Workspace`], so steady-state
 //! `grad_into`/`eval_into` calls allocate nothing.
 
@@ -36,6 +48,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::models::manifest::ModelMeta;
 use crate::models::params::ParamVector;
+use crate::util::simd;
 
 use super::backend::Backend;
 
@@ -89,6 +102,7 @@ fn dense_forward(
     d_in: usize,
     d_out: usize,
     relu: bool,
+    use_simd: bool,
 ) {
     debug_assert_eq!(input.len(), batch * d_in);
     debug_assert_eq!(w.len(), d_in * d_out);
@@ -121,12 +135,10 @@ fn dense_forward(
                 for r in 0..rb {
                     let c = xv[r];
                     if c != 0.0 {
-                        // axpy: acc_r += c · wrow (ascending d_in per
-                        // accumulator — the bitwise-identity invariant)
-                        let a = &mut acc[r];
-                        for (j, &wv) in wrow.iter().enumerate() {
-                            a[j] += c * wv;
-                        }
+                        // axpy: acc_r += c · wrow, eight accumulators
+                        // per SIMD step (ascending d_in per accumulator
+                        // — the bitwise-identity invariant)
+                        simd::axpy_with(&mut acc[r][..tw], c, wrow, use_simd);
                     }
                 }
             }
@@ -160,6 +172,7 @@ fn dense_backward_params(
     batch: usize,
     d_in: usize,
     d_out: usize,
+    use_simd: bool,
 ) {
     debug_assert_eq!(a_prev.len(), batch * d_in);
     debug_assert_eq!(delta.len(), batch * d_out);
@@ -188,10 +201,11 @@ fn dense_backward_params(
             for r in 0..rb {
                 let c = av[r];
                 if c != 0.0 {
+                    // axpy: gw_row += c · delta_row, eight accumulators
+                    // per SIMD step (ascending batch row per (i, o)
+                    // accumulator — the bitwise-identity invariant)
                     let dr = &delta[(r0 + r) * d_out..(r0 + r + 1) * d_out];
-                    for (o, &dv) in dr.iter().enumerate() {
-                        gw_row[o] += c * dv;
-                    }
+                    simd::axpy_with(gw_row, c, dr, use_simd);
                 }
             }
         }
@@ -203,6 +217,11 @@ fn dense_backward_params(
 /// the ReLU was live (`a_prev[r, i] > 0`), else 0. Each weight row is
 /// loaded once per row block; every dot product accumulates over
 /// ascending `d_out`, like the scalar sweep.
+///
+/// Deliberately scalar: per `(r, i)` the accumulator is a single f32
+/// dot over `d_out` — lane-splitting that reduction would reorder its
+/// adds and re-golden every pinned test (module docs). Vectorizing
+/// *across* `i` would need stride-`d_out` gathers, which SSE2 lacks.
 fn dense_backward_input(
     a_prev: &[f32],
     delta: &[f32],
@@ -251,6 +270,9 @@ fn dense_backward_input(
 pub struct NativeBackend {
     layers: Vec<DenseLayer>,
     classes: usize,
+    /// Take the vectorized axpy branches (read once from
+    /// [`simd::enabled`] at construction; bitwise-identical either way).
+    use_simd: bool,
 }
 
 impl NativeBackend {
@@ -298,7 +320,14 @@ impl NativeBackend {
                 meta.classes
             );
         }
-        Ok(Self { layers, classes: meta.classes })
+        Ok(Self { layers, classes: meta.classes, use_simd: simd::enabled() })
+    }
+
+    /// Force the SIMD/scalar kernel branch. Parity-test and bench hook
+    /// — the two branches are bitwise identical by the accumulator-
+    /// order contract (module docs), so this is pure scheduling.
+    pub fn set_simd(&mut self, on: bool) {
+        self.use_simd = on;
     }
 
     fn check_batch(&self, params: &ParamVector, x: &[f32], y: &[i32]) -> Result<usize> {
@@ -344,7 +373,17 @@ impl NativeBackend {
             let out = &mut tail[0][..batch * lay.d_out];
             let w = params.tensor(2 * l);
             let bias = params.tensor(2 * l + 1);
-            dense_forward(input, w, bias, out, batch, lay.d_in, lay.d_out, l + 1 < n_layers);
+            dense_forward(
+                input,
+                w,
+                bias,
+                out,
+                batch,
+                lay.d_in,
+                lay.d_out,
+                l + 1 < n_layers,
+                self.use_simd,
+            );
         }
     }
 }
@@ -414,7 +453,7 @@ impl Backend for NativeBackend {
             {
                 let a_prev: &[f32] = if l == 0 { x } else { &ws.acts[l - 1] };
                 let delta = &ws.delta[..b * d_out];
-                dense_backward_params(a_prev, delta, gw, gb, b, d_in, d_out);
+                dense_backward_params(a_prev, delta, gw, gb, b, d_in, d_out, self.use_simd);
                 if l > 0 {
                     // δ_prev = (δ · Wᵀ) ⊙ relu′
                     let w = params.tensor(2 * l);
@@ -534,6 +573,37 @@ mod tests {
                 LayerGroup { name: "l1".into(), params: vec![2, 3] },
             ],
             param_count: 8 * 100 + 100 + 100 * 3 + 3,
+            grad_artifact: String::new(),
+            eval_artifact: String::new(),
+        }
+    }
+
+    /// An 8→65→9 MLP: d_out 65 drives the axpy through a full 8-lane
+    /// tile run plus a 1-lane remainder, and d_out 9 through one SIMD
+    /// group plus 1 — the lane-remainder widths the tiny/wide metas
+    /// (6/3, 100/3) do not hit.
+    fn lane_meta() -> ModelMeta {
+        let spec = |name: &str, shape: Vec<usize>, layer: usize| ParamSpec {
+            name: name.into(),
+            shape,
+            init: InitKind::Normal { std: 0.3 },
+            layer,
+        };
+        ModelMeta {
+            name: "lane_mlp".into(),
+            input: vec![8],
+            classes: 9,
+            params: vec![
+                spec("l0/w", vec![8, 65], 0),
+                ParamSpec { init: InitKind::Zeros, ..spec("l0/b", vec![65], 0) },
+                spec("l1/w", vec![65, 9], 1),
+                ParamSpec { init: InitKind::Zeros, ..spec("l1/b", vec![9], 1) },
+            ],
+            layers: vec![
+                LayerGroup { name: "l0".into(), params: vec![0, 1] },
+                LayerGroup { name: "l1".into(), params: vec![2, 3] },
+            ],
+            param_count: 8 * 65 + 65 + 65 * 9 + 9,
             grad_artifact: String::new(),
             eval_artifact: String::new(),
         }
@@ -677,30 +747,35 @@ mod tests {
         // batch 1/3/4/17 exercise the ROW_BLOCK remainder paths (0, 3,
         // 0, 1 leftover rows); tiny_meta's d_out 6/3 exercise the
         // sub-tile case, wide_meta's d_out 100 the multi-tile path
-        // (64 + 36) with a tile tail
-        for meta in [tiny_meta(), wide_meta()] {
-            let be = NativeBackend::new(&meta).unwrap();
-            for (seed, b) in [(21u64, 1usize), (22, 3), (23, 4), (24, 17)] {
-                let params = ParamVector::init(&meta, seed);
-                let (x, y) = batch(&meta, b, seed ^ 0xb17);
-                let (loss_new, grads_new) = be.grad(&params, &x, &y).unwrap();
-                let (loss_ref, grads_ref) = reference_grad(&be, &params, &x, &y);
-                assert_eq!(
-                    loss_new.to_bits(),
-                    loss_ref.to_bits(),
-                    "loss at {}/batch {b}",
-                    meta.name
-                );
-                assert_eq!(grads_new.len(), grads_ref.len());
-                for i in 0..grads_new.len() {
+        // (64 + 36) with a tile tail, lane_meta's 65/9 the 8-lane SIMD
+        // group remainders. Both kernel branches (vectorized axpy and
+        // forced scalar) must match the reference bitwise.
+        for meta in [tiny_meta(), wide_meta(), lane_meta()] {
+            for use_simd in [true, false] {
+                let mut be = NativeBackend::new(&meta).unwrap();
+                be.set_simd(use_simd);
+                for (seed, b) in [(21u64, 1usize), (22, 3), (23, 4), (24, 17)] {
+                    let params = ParamVector::init(&meta, seed);
+                    let (x, y) = batch(&meta, b, seed ^ 0xb17);
+                    let (loss_new, grads_new) = be.grad(&params, &x, &y).unwrap();
+                    let (loss_ref, grads_ref) = reference_grad(&be, &params, &x, &y);
                     assert_eq!(
-                        grads_new[i].to_bits(),
-                        grads_ref[i].to_bits(),
-                        "grad[{i}] differs at {}/batch {b}: {} vs {}",
-                        meta.name,
-                        grads_new[i],
-                        grads_ref[i]
+                        loss_new.to_bits(),
+                        loss_ref.to_bits(),
+                        "loss at {}/batch {b}/simd {use_simd}",
+                        meta.name
                     );
+                    assert_eq!(grads_new.len(), grads_ref.len());
+                    for i in 0..grads_new.len() {
+                        assert_eq!(
+                            grads_new[i].to_bits(),
+                            grads_ref[i].to_bits(),
+                            "grad[{i}] differs at {}/batch {b}/simd {use_simd}: {} vs {}",
+                            meta.name,
+                            grads_new[i],
+                            grads_ref[i]
+                        );
+                    }
                 }
             }
         }
@@ -708,19 +783,27 @@ mod tests {
 
     #[test]
     fn blocked_forward_bitwise_matches_scalar_reference() {
-        for meta in [tiny_meta(), wide_meta()] {
-            let be = NativeBackend::new(&meta).unwrap();
-            let params = ParamVector::init(&meta, 31);
-            for b in [1usize, 3, 4, 17] {
-                let (x, _) = batch(&meta, b, 7 + b as u64);
-                let mut ws = Workspace::new();
-                be.prepare(&mut ws, b);
-                be.forward_into(&params, &x, b, &mut ws);
-                let reference = reference_forward(&be, &params, &x, b);
-                for (l, r) in ws.acts.iter().zip(&reference) {
-                    assert_eq!(l.len(), r.len());
-                    for (a, c) in l.iter().zip(r) {
-                        assert_eq!(a.to_bits(), c.to_bits(), "{}/batch {b}", meta.name);
+        for meta in [tiny_meta(), wide_meta(), lane_meta()] {
+            for use_simd in [true, false] {
+                let mut be = NativeBackend::new(&meta).unwrap();
+                be.set_simd(use_simd);
+                let params = ParamVector::init(&meta, 31);
+                for b in [1usize, 3, 4, 17] {
+                    let (x, _) = batch(&meta, b, 7 + b as u64);
+                    let mut ws = Workspace::new();
+                    be.prepare(&mut ws, b);
+                    be.forward_into(&params, &x, b, &mut ws);
+                    let reference = reference_forward(&be, &params, &x, b);
+                    for (l, r) in ws.acts.iter().zip(&reference) {
+                        assert_eq!(l.len(), r.len());
+                        for (a, c) in l.iter().zip(r) {
+                            assert_eq!(
+                                a.to_bits(),
+                                c.to_bits(),
+                                "{}/batch {b}/simd {use_simd}",
+                                meta.name
+                            );
+                        }
                     }
                 }
             }

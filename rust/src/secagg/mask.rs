@@ -15,6 +15,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::util::chacha::ChaCha20;
 use crate::util::pool::ThreadPool;
+use crate::util::simd::{self, LaneFilter};
 
 use super::kdf::mask_seed;
 
@@ -59,6 +60,69 @@ fn sigma_lane_bound(lo: f32, hi: f32, sigma: f32) -> u64 {
     b as u64
 }
 
+/// Stream `n` keystream lanes of `prg` against the exclusive integer
+/// σ-bound, pushing `(position, value)` for every kept lane in
+/// ascending position order — the compress half of the σ-filter.
+///
+/// With `use_simd`, eight raw u32 lanes at a time are compared
+/// straight out of the PRG's buffered block bytes
+/// ([`LaneFilter::keep_mask`]); only the kept lanes (~k/x of n) are
+/// decoded and converted to f32, and an all-discarded group — the
+/// overwhelmingly common case at round keep-ratios — costs one
+/// compare + one branch. The integer compare is exact and the kept
+/// lanes decode through the same [`ChaCha20::lane_to_f32`] map, so
+/// both branches emit bit-identical entries (pinned by
+/// `filter_compress_bitwise_matches_scalar`); the scalar branch is
+/// also taken for the `bound == 2³²` keep-everything edge, where a
+/// compare-and-compress step has nothing to discard.
+fn filter_lanes_into(
+    prg: &mut ChaCha20,
+    n: usize,
+    bound: u64,
+    lo: f32,
+    hi: f32,
+    entries: &mut Vec<(u32, f32)>,
+    use_simd: bool,
+) {
+    if bound == 0 {
+        return; // nothing kept — no entry the PRG could contribute
+    }
+    if !use_simd || bound >= 1 << 32 {
+        prg.for_each_uniform_f32(n, |i, lane| {
+            if (lane as u64) < bound {
+                entries.push((i as u32, ChaCha20::lane_to_f32(lane, lo, hi)));
+            }
+        });
+        return;
+    }
+    let filter = LaneFilter::new(bound as u32);
+    prg.for_each_lane_chunk(n, |base, bytes| {
+        let lanes = bytes.len() / 4;
+        let mut l = 0;
+        while l + 8 <= lanes {
+            let mut mask = filter.keep_mask(&bytes[4 * l..]);
+            // compress: emit kept lanes only, low bit first (ascending
+            // positions — the scalar emission order)
+            while mask != 0 {
+                let bit = mask.trailing_zeros() as usize;
+                mask &= mask - 1;
+                let off = 4 * (l + bit);
+                let lane = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+                entries.push(((base + l + bit) as u32, ChaCha20::lane_to_f32(lane, lo, hi)));
+            }
+            l += 8;
+        }
+        while l < lanes {
+            let off = 4 * l;
+            let lane = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap());
+            if (lane as u64) < bound {
+                entries.push(((base + l) as u32, ChaCha20::lane_to_f32(lane, lo, hi)));
+            }
+            l += 1;
+        }
+    });
+}
+
 /// Build (or fetch from `cache`) the σ-filtered stream of pair
 /// (id, peer) from the pair secret. Standalone (not a
 /// [`PairwiseMasker`] method) so the parallel fan-out paths — the
@@ -96,11 +160,7 @@ pub(crate) fn filtered_stream_for_pair(
     let mut entries: Vec<(u32, f32)> = Vec::with_capacity(expect + expect / 8 + 16);
     let key = mask_seed(secret, id, peer, round);
     let mut prg = ChaCha20::from_seed(&key, round);
-    prg.for_each_uniform_f32(n, |i, lane| {
-        if (lane as u64) < bound {
-            entries.push((i as u32, ChaCha20::lane_to_f32(lane, lo, hi)));
-        }
-    });
+    filter_lanes_into(&mut prg, n, bound, lo, hi, &mut entries, simd::enabled());
     let out = Arc::new(FilteredStream { sigma, n, entries });
     if let Some(cache) = cache {
         cache.lock().unwrap().insert(cache_key, Arc::clone(&out));
@@ -540,6 +600,54 @@ mod tests {
             for (a, b) in streamed.entries.iter().zip(&reference) {
                 assert_eq!(a.0, b.0);
                 assert_eq!(a.1.to_bits(), b.1.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn filter_compress_bitwise_matches_scalar() {
+        // property: the SIMD compare+compress and the scalar filter
+        // emit identical entry lists for every combination of block
+        // dispatch width (quad/scalar ChaCha) and filter branch, at
+        // lane counts exercising the 8-lane group remainders and the
+        // 64/256-byte block boundaries, across keep fractions from
+        // "almost nothing" to "everything".
+        let key = [0x7cu8; 32];
+        let (lo, hi) = (-10.0f32, 10.0);
+        // from "nothing kept" through ~0.4% and half up to "everything"
+        let bounds: [u64; 6] = [0, 1, 1 << 24, 1 << 31, u32::MAX as u64, 1 << 32];
+        for &n in &[1usize, 7, 8, 9, 17, 64, 65, 100, 1000] {
+            for &bound in &bounds {
+                let run = |quad: bool, use_simd: bool| -> Vec<(u32, f32)> {
+                    let mut prg = ChaCha20::from_seed(&key, 21);
+                    prg.set_quad_blocks(quad);
+                    let mut entries = Vec::new();
+                    filter_lanes_into(&mut prg, n, bound, lo, hi, &mut entries, use_simd);
+                    entries
+                };
+                let reference = run(false, false);
+                for (quad, use_simd) in [(false, true), (true, false), (true, true)] {
+                    let got = run(quad, use_simd);
+                    assert_eq!(
+                        got.len(),
+                        reference.len(),
+                        "n={n} bound={bound} quad={quad} simd={use_simd}"
+                    );
+                    for (a, b) in got.iter().zip(&reference) {
+                        assert_eq!(a.0, b.0, "n={n} bound={bound}");
+                        assert_eq!(a.1.to_bits(), b.1.to_bits(), "n={n} bound={bound}");
+                    }
+                }
+                // and the scalar reference itself matches the dense map
+                let mut prg = ChaCha20::from_seed(&key, 21);
+                prg.set_quad_blocks(false);
+                let mut want = Vec::new();
+                prg.for_each_uniform_f32(n, |i, lane| {
+                    if (lane as u64) < bound {
+                        want.push((i as u32, ChaCha20::lane_to_f32(lane, lo, hi)));
+                    }
+                });
+                assert_eq!(reference, want, "n={n} bound={bound}");
             }
         }
     }

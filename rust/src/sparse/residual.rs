@@ -48,6 +48,29 @@ impl ResidualStore {
         }
     }
 
+    /// Double-buffered twin of [`Self::store`]: fill *this* store with
+    /// the round's unsent mass while reading the staleness counters
+    /// from the untouched pre-round store `prev` — exactly the state
+    /// `prev.clone()` + `store(residual)` would produce, without
+    /// mutating `prev`. This is what lets the round engine keep the
+    /// pre-round store alive inside a copy-on-write rollback snapshot
+    /// (an `Arc` bump) instead of deep-copying it: the evolved state is
+    /// written into a recycled spare buffer (resized in place — no
+    /// allocation once warm) and the two stores swap roles at commit.
+    pub fn store_from(&mut self, prev: &ResidualStore, residual: &[f32]) {
+        assert_eq!(residual.len(), prev.buf.len(), "residual size mismatch");
+        self.buf.clear();
+        self.buf.extend_from_slice(residual);
+        self.age.clear();
+        self.age.extend(residual.iter().zip(&prev.age).map(|(&v, &a)| {
+            if v == 0.0 {
+                0
+            } else {
+                a.saturating_add(1)
+            }
+        }));
+    }
+
     /// L2 norm of the held-back mass (convergence diagnostics).
     pub fn norm(&self) -> f64 {
         self.buf.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
@@ -129,6 +152,32 @@ mod tests {
                 "mass leak at {i}"
             );
         }
+    }
+
+    #[test]
+    fn store_from_matches_clone_then_store() {
+        let mut rng = Rng::new(11);
+        let n = 200;
+        let mut prev = ResidualStore::new(n);
+        // evolve `prev` a few rounds so ages are non-trivial
+        for _ in 0..3 {
+            let vals: Vec<f32> =
+                (0..n).map(|_| if rng.below(3) == 0 { 0.0 } else { rng.normal_f32(1.0) }).collect();
+            prev.store(&vals);
+        }
+        let vals: Vec<f32> =
+            (0..n).map(|_| if rng.below(3) == 0 { 0.0 } else { rng.normal_f32(1.0) }).collect();
+        let mut reference = prev.clone();
+        reference.store(&vals);
+        // a dirty, wrong-sized spare must come out identical to the
+        // clone-then-store reference, with `prev` untouched
+        let mut fresh = ResidualStore::new(3);
+        fresh.store(&[7.0, 0.0, 7.0]);
+        let before = prev.as_slice().to_vec();
+        fresh.store_from(&prev, &vals);
+        assert_eq!(fresh.as_slice(), reference.as_slice());
+        assert_eq!(fresh.age, reference.age);
+        assert_eq!(prev.as_slice().to_vec(), before, "prev untouched");
     }
 
     #[test]

@@ -36,11 +36,18 @@ pub fn threshold_for_topk_abs(g: &[f32], k: usize) -> f32 {
 /// steady-state sparsify path allocates nothing. The scratch contents
 /// on return are the partially-ordered magnitudes (introselect
 /// leftovers) — opaque, reuse freely.
+///
+/// The magnitude scan runs through the vectorized
+/// [`crate::util::simd::abs_into`] (|x| is a sign-bit clear, so the
+/// SIMD and scalar sweeps are bitwise identical and the selected
+/// threshold cannot move).
 pub fn threshold_for_topk_abs_with(g: &[f32], k: usize, scratch: &mut Vec<f32>) -> f32 {
     assert!(!g.is_empty(), "threshold_for_topk_abs on empty slice");
     let k = k.clamp(1, g.len());
-    scratch.clear();
-    scratch.extend(g.iter().map(|x| x.abs()));
+    // no clear-first: resize is a steady-state no-op (same model size
+    // every call) and abs_into overwrites every element anyway
+    scratch.resize(g.len(), 0.0);
+    crate::util::simd::abs_into(g, scratch);
     let idx = scratch.len() - k;
     let (_, kth, _) = scratch.select_nth_unstable_by(idx, |a, b| a.total_cmp(b));
     *kth

@@ -224,6 +224,20 @@ pub fn markdown(cmps: &[BenchComparison], tol: Tolerance, verdict: Verdict) -> S
     md
 }
 
+/// Headline for a gate run that compared **nothing** because no
+/// committed baselines matched (the bootstrap state): say
+/// "reporting-only" explicitly instead of a vacuous "perf gate: ok"
+/// over zero cases, which read as a passing comparison when nothing
+/// was compared at all.
+pub fn markdown_reporting_only(n_reports: usize, baseline_dir: &str) -> String {
+    format!(
+        "## perf gate: reporting-only — no committed baselines under `{}` \
+         ({} report(s) listed, 0 compared)\n\nThe gate arms once the first \
+         BENCH_*.json files are committed (see bench-history/README.md).\n\n",
+        baseline_dir, n_reports
+    )
+}
+
 /// Markdown p50/p95 table for a report with **no** committed baseline
 /// (the bootstrap state — see bench-history/README.md): current
 /// numbers only, so the step summary is still informative.
@@ -326,6 +340,19 @@ mod tests {
         // and un-inflated passes against itself
         let clean = compare("BENCH_x", &base, &base, Tolerance::default());
         assert_eq!(clean.worst(), Verdict::Pass);
+    }
+
+    #[test]
+    fn reporting_only_headline_is_explicit() {
+        let md = markdown_reporting_only(3, "../bench-history");
+        assert!(md.contains("reporting-only"));
+        assert!(md.contains("../bench-history"));
+        assert!(md.contains("0 compared"));
+        assert!(md.contains("bench-history/README.md"), "arming recipe pointer");
+        assert!(
+            !md.contains("perf gate: ok"),
+            "reporting-only must not read as a passing comparison"
+        );
     }
 
     #[test]

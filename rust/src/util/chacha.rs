@@ -6,13 +6,32 @@
 //! whole mask path is auditable in-repo (and the offline vendor set has
 //! no chacha crate anyway). Verified against the RFC 8439 §2.3.2 test
 //! vector below.
+//!
+//! ## Multi-block dispatch
+//!
+//! ChaCha blocks are independent expansions of (state, counter), so
+//! the hot mask-PRG path generates **four blocks per dispatch** with
+//! the 4-lane integer vectors from [`crate::util::simd`] (lane b =
+//! counter + b): every round operation runs on all four blocks at
+//! once, and the serialized 256-byte buffer is keystream-identical to
+//! four sequential single-block refills **by construction** — the
+//! per-block math is untouched, only scheduled side by side. The
+//! scalar single-block path stays as the `FEDSPARSE_NO_SIMD` fallback
+//! and the reference the parity tests pin against.
+
+use crate::util::simd::{self, U32x4};
 
 /// ChaCha20 keystream generator.
 pub struct ChaCha20 {
     state: [u32; 16],
-    /// Buffered keystream block and read offset.
-    block: [u8; 64],
+    /// Buffered keystream (one block scalar, four per quad dispatch)
+    /// and its read window: `offset..filled` is unread.
+    block: [u8; 256],
+    filled: usize,
     offset: usize,
+    /// Four-blocks-per-dispatch mode (the SIMD default; both modes
+    /// produce the identical keystream).
+    quad: bool,
 }
 
 const SIGMA: [u32; 4] = [0x6170_7865, 0x3320_646e, 0x7962_2d32, 0x6b20_6574];
@@ -29,7 +48,7 @@ impl ChaCha20 {
         for i in 0..3 {
             state[13 + i] = u32::from_le_bytes(nonce[4 * i..4 * i + 4].try_into().unwrap());
         }
-        Self { state, block: [0u8; 64], offset: 64 }
+        Self { state, block: [0u8; 256], filled: 0, offset: 0, quad: simd::enabled() }
     }
 
     /// Convenience: derive nonce from a u64 label (e.g. round number).
@@ -51,6 +70,15 @@ impl ChaCha20 {
         s[b] = (s[b] ^ s[c]).rotate_left(7);
     }
 
+    /// Force the block dispatch width: `true` = four blocks per
+    /// dispatch, `false` = the scalar single-block path. Testing/bench
+    /// hook — the two modes are keystream-identical by construction
+    /// (pinned by `quad_dispatch_matches_scalar_blocks`); callers
+    /// normally keep the [`simd::enabled`] default.
+    pub fn set_quad_blocks(&mut self, quad: bool) {
+        self.quad = quad;
+    }
+
     fn refill(&mut self) {
         let mut w = self.state;
         for _ in 0..10 {
@@ -70,17 +98,82 @@ impl ChaCha20 {
             self.block[4 * i..4 * i + 4].copy_from_slice(&v.to_le_bytes());
         }
         self.state[12] = self.state[12].wrapping_add(1);
+        self.filled = 64;
         self.offset = 0;
+    }
+
+    #[inline]
+    fn quarter_round4(s: &mut [U32x4; 16], a: usize, b: usize, c: usize, d: usize) {
+        s[a] = s[a].wrapping_add(s[b]);
+        s[d] = s[d].xor(s[a]).rotl(16);
+        s[c] = s[c].wrapping_add(s[d]);
+        s[b] = s[b].xor(s[c]).rotl(12);
+        s[a] = s[a].wrapping_add(s[b]);
+        s[d] = s[d].xor(s[a]).rotl(8);
+        s[c] = s[c].wrapping_add(s[d]);
+        s[b] = s[b].xor(s[c]).rotl(7);
+    }
+
+    /// Four independent blocks per dispatch: lane b of every state
+    /// vector carries block `counter + b`, the 20 rounds run on all
+    /// four at once, and the 256-byte buffer serializes them in
+    /// counter order — the identical keystream [`Self::refill`]
+    /// produces one block at a time.
+    fn refill4(&mut self) {
+        let ctr = self.state[12];
+        let mut init = [U32x4::splat(0); 16];
+        for (v, &s) in init.iter_mut().zip(&self.state) {
+            *v = U32x4::splat(s);
+        }
+        init[12] = U32x4::from_array([
+            ctr,
+            ctr.wrapping_add(1),
+            ctr.wrapping_add(2),
+            ctr.wrapping_add(3),
+        ]);
+        let mut w = init;
+        for _ in 0..10 {
+            // column rounds
+            Self::quarter_round4(&mut w, 0, 4, 8, 12);
+            Self::quarter_round4(&mut w, 1, 5, 9, 13);
+            Self::quarter_round4(&mut w, 2, 6, 10, 14);
+            Self::quarter_round4(&mut w, 3, 7, 11, 15);
+            // diagonal rounds
+            Self::quarter_round4(&mut w, 0, 5, 10, 15);
+            Self::quarter_round4(&mut w, 1, 6, 11, 12);
+            Self::quarter_round4(&mut w, 2, 7, 8, 13);
+            Self::quarter_round4(&mut w, 3, 4, 9, 14);
+        }
+        for i in 0..16 {
+            let sum = w[i].wrapping_add(init[i]).to_array();
+            for (b, v) in sum.iter().enumerate() {
+                let off = 64 * b + 4 * i;
+                self.block[off..off + 4].copy_from_slice(&v.to_le_bytes());
+            }
+        }
+        self.state[12] = ctr.wrapping_add(4);
+        self.filled = 256;
+        self.offset = 0;
+    }
+
+    /// Refill the exhausted buffer at the configured dispatch width.
+    #[inline]
+    fn refill_buffer(&mut self) {
+        if self.quad {
+            self.refill4();
+        } else {
+            self.refill();
+        }
     }
 
     /// Fill `out` with keystream bytes.
     pub fn fill_bytes(&mut self, out: &mut [u8]) {
         let mut i = 0;
         while i < out.len() {
-            if self.offset == 64 {
-                self.refill();
+            if self.offset == self.filled {
+                self.refill_buffer();
             }
-            let take = (out.len() - i).min(64 - self.offset);
+            let take = (out.len() - i).min(self.filled - self.offset);
             out[i..i + take].copy_from_slice(&self.block[self.offset..self.offset + take]);
             self.offset += take;
             i += take;
@@ -129,40 +222,53 @@ impl ChaCha20 {
         lo + lane as f32 * SCALE * (hi - lo)
     }
 
+    /// Visit the next `n` keystream u32 lanes as contiguous
+    /// little-endian byte runs straight out of the block buffer:
+    /// `f(start_lane, bytes)` with `bytes.len()` a non-zero multiple
+    /// of 4 (up to 256 — one quad dispatch). Consumes the keystream
+    /// exactly like [`Self::fill_uniform_f32`] (one u32 per lane).
+    ///
+    /// This is the SIMD seam of the mask PRG: `secagg::mask` runs the
+    /// vectorized σ-compare straight over these byte runs, and
+    /// [`Self::for_each_uniform_f32`] decodes them lane-wise — both on
+    /// the same buffered bytes, so the two views are the same stream.
+    pub fn for_each_lane_chunk<F: FnMut(usize, &[u8])>(&mut self, n: usize, mut f: F) {
+        let mut i = 0;
+        while i < n {
+            if self.offset == self.filled {
+                self.refill_buffer();
+            }
+            // whole u32 lanes available in the buffered keystream
+            let lanes = (self.filled - self.offset) / 4;
+            if lanes == 0 {
+                // realign: consume the (post-`fill_bytes`) tail bytes
+                let mut b = [0u8; 4];
+                self.fill_bytes(&mut b);
+                f(i, &b);
+                i += 1;
+                continue;
+            }
+            let take = lanes.min(n - i);
+            let start = self.offset;
+            self.offset += 4 * take;
+            f(i, &self.block[start..start + 4 * take]);
+            i += take;
+        }
+    }
+
     /// Stream `n` keystream lanes block-wise: `f(index, raw_lane)` for
-    /// each, straight out of the 64-byte block buffer — no dense
-    /// allocation. Consumes the keystream exactly like
-    /// [`Self::fill_uniform_f32`] (one u32 per lane), so the two paths
-    /// see identical lanes.
+    /// each, straight out of the block buffer — no dense allocation.
     ///
     /// Hot path of the secure-aggregation round (one call per pair per
     /// round over the full parameter vector): the σ-filtered mask build
     /// streams lanes through this and materializes only the kept
     /// entries (~k/x of n), instead of a dense n-float vector.
     pub fn for_each_uniform_f32<F: FnMut(usize, u32)>(&mut self, n: usize, mut f: F) {
-        let mut i = 0;
-        while i < n {
-            if self.offset == 64 {
-                self.refill();
+        self.for_each_lane_chunk(n, |base, bytes| {
+            for (l, ch) in bytes.chunks_exact(4).enumerate() {
+                f(base + l, u32::from_le_bytes(ch.try_into().unwrap()));
             }
-            // whole u32 lanes available in the buffered block
-            let lanes = (64 - self.offset) / 4;
-            if lanes == 0 {
-                // realign: consume the tail bytes
-                let mut b = [0u8; 4];
-                self.fill_bytes(&mut b);
-                f(i, u32::from_le_bytes(b));
-                i += 1;
-                continue;
-            }
-            let take = lanes.min(n - i);
-            for l in 0..take {
-                let off = self.offset + 4 * l;
-                f(i + l, u32::from_le_bytes(self.block[off..off + 4].try_into().unwrap()));
-            }
-            self.offset += 4 * take;
-            i += take;
-        }
+        });
     }
 
     /// Fill a mask vector with uniform `[lo, hi)` values (one u32 lane
@@ -262,6 +368,63 @@ mod tests {
         }
         assert_eq!(ChaCha20::lane_to_f32(0, lo, hi), lo);
         assert!(ChaCha20::lane_to_f32(u32::MAX, lo, hi) <= hi);
+    }
+
+    #[test]
+    fn quad_dispatch_matches_scalar_blocks() {
+        // the four-blocks-per-dispatch path must be keystream-identical
+        // to the single-block path, for byte reads and lane streams
+        // alike, at widths that land inside, at, and across the 64-byte
+        // block and 256-byte quad boundaries
+        let key = [0x2au8; 32];
+        for n_lanes in [1usize, 7, 8, 9, 15, 16, 17, 63, 64, 65, 100, 1000] {
+            let mut quad = ChaCha20::from_seed(&key, 11);
+            quad.set_quad_blocks(true);
+            let mut scalar = ChaCha20::from_seed(&key, 11);
+            scalar.set_quad_blocks(false);
+            let mut lanes_q = Vec::new();
+            quad.for_each_uniform_f32(n_lanes, |i, lane| lanes_q.push((i, lane)));
+            let mut lanes_s = Vec::new();
+            scalar.for_each_uniform_f32(n_lanes, |i, lane| lanes_s.push((i, lane)));
+            assert_eq!(lanes_q, lanes_s, "n={n_lanes}");
+        }
+        for n_bytes in [1usize, 63, 64, 65, 255, 256, 257, 777] {
+            let mut quad = ChaCha20::from_seed(&key, 12);
+            quad.set_quad_blocks(true);
+            let mut scalar = ChaCha20::from_seed(&key, 12);
+            scalar.set_quad_blocks(false);
+            let mut bq = vec![0u8; n_bytes];
+            let mut bs = vec![0u8; n_bytes];
+            quad.fill_bytes(&mut bq);
+            scalar.fill_bytes(&mut bs);
+            assert_eq!(bq, bs, "n={n_bytes}");
+        }
+    }
+
+    #[test]
+    fn quad_dispatch_survives_mode_and_alignment_mixes() {
+        // reading bytes (including a misaligning 3-byte read) and then
+        // lanes from one stream must match a pure byte stream
+        let key = [0x3bu8; 32];
+        for quad in [false, true] {
+            let mut a = ChaCha20::from_seed(&key, 4);
+            a.set_quad_blocks(quad);
+            let mut reference = vec![0u8; 3 + 4 * 100];
+            a.fill_bytes(&mut reference);
+
+            let mut b = ChaCha20::from_seed(&key, 4);
+            b.set_quad_blocks(quad);
+            let mut head = [0u8; 3];
+            b.fill_bytes(&mut head);
+            assert_eq!(head[..], reference[..3]);
+            let mut lanes = Vec::new();
+            b.for_each_uniform_f32(100, |i, lane| lanes.push((i, lane)));
+            for (i, lane) in lanes {
+                let off = 3 + 4 * i;
+                let want = u32::from_le_bytes(reference[off..off + 4].try_into().unwrap());
+                assert_eq!(lane, want, "quad={quad} lane {i}");
+            }
+        }
     }
 
     #[test]

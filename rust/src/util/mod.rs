@@ -6,6 +6,8 @@
 //! * [`json`] — minimal JSON parser/serializer (manifest, metrics)
 //! * [`cli`] — declarative command-line argument parser
 //! * [`pool`] — fixed thread pool + `parallel_map`
+//! * [`simd`] — portable f32x8/u32x8/u32x4 lane types (SSE2/AVX2 with
+//!   scalar fallback) behind the bitwise-determinism contract
 //! * [`bench`] — criterion-style micro-benchmark harness
 //! * [`benchcmp`] — tolerance-banded BENCH_*.json comparison (the CI
 //!   perf-regression gate behind the `bench_diff` binary)
@@ -20,4 +22,5 @@ pub mod json;
 pub mod pool;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod timer;

@@ -1,0 +1,664 @@
+//! Dependency-free portable SIMD lane types for the hot kernels.
+//!
+//! Three fixed-width lane types over `core::arch` with a scalar
+//! fallback, selected by `cfg` at compile time:
+//!
+//! * [`F32x8`] — eight f32 lanes (AVX2 `__m256`, else two SSE2
+//!   `__m128`s, else a `[f32; 8]` loop) — the blocked-matmul axpy
+//!   sweeps (`runtime::native`) and the Top-k abs-scan
+//!   (`sparse::topk`);
+//! * [`U32x8`] — eight u32 lanes, used through [`LaneFilter`] for the
+//!   σ-filter's integer compare + compress (`secagg::mask`);
+//! * [`U32x4`] — four u32 lanes (always 128-bit on x86_64), the
+//!   four-blocks-per-dispatch ChaCha core (`util::chacha`).
+//!
+//! ## The bitwise contract (PERF.md)
+//!
+//! Every consumer vectorizes **across independent accumulators/lanes**
+//! only: each f32 accumulator still receives exactly the same
+//! `mul`-then-`add` op sequence as the scalar code (no FMA — a fused
+//! multiply-add rounds once where the scalar code rounds twice, which
+//! would break every golden test), integer compares are exact, and the
+//! ChaCha blocks a quad dispatch produces are the same independent
+//! expansions the scalar loop produces one at a time. SIMD on/off is
+//! therefore bitwise invisible; the property tests in this module and
+//! in each consumer pin that at lane-remainder widths.
+//!
+//! ## Runtime escape hatch
+//!
+//! `FEDSPARSE_NO_SIMD=1` (any value other than empty or `0`) makes
+//! [`enabled`] return false; kernels read it once per call and take
+//! their scalar branch. The lane types themselves stay compiled — the
+//! switch selects code paths, not types — so CI runs the whole suite
+//! both ways (see the test matrix in ci.yml) and the scalar fallback
+//! cannot rot.
+
+use std::sync::OnceLock;
+
+/// Whether the vectorized kernel branches should run: true unless the
+/// `FEDSPARSE_NO_SIMD` environment variable is set to something other
+/// than `""` or `"0"`. Read once per process and cached (kernels
+/// consult this per kernel call, not per lane).
+pub fn enabled() -> bool {
+    static ENABLED: OnceLock<bool> = OnceLock::new();
+    *ENABLED.get_or_init(|| match std::env::var_os("FEDSPARSE_NO_SIMD") {
+        None => true,
+        Some(v) => v.is_empty() || v == "0",
+    })
+}
+
+// Intrinsic safety varies by toolchain (newer rustc makes the
+// non-memory x86 intrinsics safe when the target feature is enabled,
+// making the `unsafe` blocks below redundant-but-harmless); keep the
+// blocks for older toolchains and silence the newer ones' lint.
+#[allow(unused_unsafe)]
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2"))]
+mod lanes {
+    use core::arch::x86_64::*;
+
+    /// Eight f32 lanes (AVX2 `__m256`).
+    #[derive(Clone, Copy)]
+    pub struct F32x8(__m256);
+
+    impl F32x8 {
+        #[inline]
+        pub fn splat(v: f32) -> Self {
+            unsafe { Self(_mm256_set1_ps(v)) }
+        }
+
+        /// Load eight lanes from the head of `s` (`s.len() >= 8`).
+        #[inline]
+        pub fn load(s: &[f32]) -> Self {
+            debug_assert!(s.len() >= 8);
+            unsafe { Self(_mm256_loadu_ps(s.as_ptr())) }
+        }
+
+        /// Store the eight lanes to the head of `s` (`s.len() >= 8`).
+        #[inline]
+        pub fn store(self, s: &mut [f32]) {
+            debug_assert!(s.len() >= 8);
+            unsafe { _mm256_storeu_ps(s.as_mut_ptr(), self.0) }
+        }
+
+        #[inline]
+        pub fn add(self, o: Self) -> Self {
+            unsafe { Self(_mm256_add_ps(self.0, o.0)) }
+        }
+
+        #[inline]
+        pub fn mul(self, o: Self) -> Self {
+            unsafe { Self(_mm256_mul_ps(self.0, o.0)) }
+        }
+
+        /// Per-lane |x| (sign-bit clear — bitwise `f32::abs`).
+        #[inline]
+        pub fn abs(self) -> Self {
+            unsafe {
+                let mask = _mm256_set1_ps(f32::from_bits(0x7fff_ffff));
+                Self(_mm256_and_ps(self.0, mask))
+            }
+        }
+    }
+
+    /// Eight u32 lanes (AVX2 `__m256i`).
+    #[derive(Clone, Copy)]
+    pub struct U32x8(__m256i);
+
+    impl U32x8 {
+        #[inline]
+        pub fn splat(v: u32) -> Self {
+            unsafe { Self(_mm256_set1_epi32(v as i32)) }
+        }
+
+        /// Load eight little-endian u32 lanes from 32 bytes.
+        #[inline]
+        pub fn load_le(bytes: &[u8]) -> Self {
+            debug_assert!(bytes.len() >= 32);
+            unsafe { Self(_mm256_loadu_si256(bytes.as_ptr() as *const __m256i)) }
+        }
+
+        #[inline]
+        pub fn xor(self, o: Self) -> Self {
+            unsafe { Self(_mm256_xor_si256(self.0, o.0)) }
+        }
+
+        /// Bitmask (bit l ⟺ lane l) of `self > o` as signed i32 lanes.
+        #[inline]
+        pub fn gt_i32_mask(self, o: Self) -> u32 {
+            unsafe {
+                let gt = _mm256_cmpgt_epi32(self.0, o.0);
+                _mm256_movemask_ps(_mm256_castsi256_ps(gt)) as u32 & 0xff
+            }
+        }
+    }
+
+    pub use super::sse_u32x4::U32x4;
+}
+
+#[allow(unused_unsafe)]
+#[cfg(all(target_arch = "x86_64", not(target_feature = "avx2")))]
+mod lanes {
+    use core::arch::x86_64::*;
+
+    /// Eight f32 lanes (two SSE2 `__m128` halves — the x86-64
+    /// baseline; build with `-C target-cpu=native` for the AVX2
+    /// variant).
+    #[derive(Clone, Copy)]
+    pub struct F32x8(__m128, __m128);
+
+    impl F32x8 {
+        #[inline]
+        pub fn splat(v: f32) -> Self {
+            unsafe {
+                let h = _mm_set1_ps(v);
+                Self(h, h)
+            }
+        }
+
+        /// Load eight lanes from the head of `s` (`s.len() >= 8`).
+        #[inline]
+        pub fn load(s: &[f32]) -> Self {
+            debug_assert!(s.len() >= 8);
+            unsafe { Self(_mm_loadu_ps(s.as_ptr()), _mm_loadu_ps(s.as_ptr().add(4))) }
+        }
+
+        /// Store the eight lanes to the head of `s` (`s.len() >= 8`).
+        #[inline]
+        pub fn store(self, s: &mut [f32]) {
+            debug_assert!(s.len() >= 8);
+            unsafe {
+                _mm_storeu_ps(s.as_mut_ptr(), self.0);
+                _mm_storeu_ps(s.as_mut_ptr().add(4), self.1);
+            }
+        }
+
+        #[inline]
+        pub fn add(self, o: Self) -> Self {
+            unsafe { Self(_mm_add_ps(self.0, o.0), _mm_add_ps(self.1, o.1)) }
+        }
+
+        #[inline]
+        pub fn mul(self, o: Self) -> Self {
+            unsafe { Self(_mm_mul_ps(self.0, o.0), _mm_mul_ps(self.1, o.1)) }
+        }
+
+        /// Per-lane |x| (sign-bit clear — bitwise `f32::abs`).
+        #[inline]
+        pub fn abs(self) -> Self {
+            unsafe {
+                let mask = _mm_set1_ps(f32::from_bits(0x7fff_ffff));
+                Self(_mm_and_ps(self.0, mask), _mm_and_ps(self.1, mask))
+            }
+        }
+    }
+
+    /// Eight u32 lanes (two SSE2 `__m128i` halves).
+    #[derive(Clone, Copy)]
+    pub struct U32x8(__m128i, __m128i);
+
+    impl U32x8 {
+        #[inline]
+        pub fn splat(v: u32) -> Self {
+            unsafe {
+                let h = _mm_set1_epi32(v as i32);
+                Self(h, h)
+            }
+        }
+
+        /// Load eight little-endian u32 lanes from 32 bytes.
+        #[inline]
+        pub fn load_le(bytes: &[u8]) -> Self {
+            debug_assert!(bytes.len() >= 32);
+            unsafe {
+                Self(
+                    _mm_loadu_si128(bytes.as_ptr() as *const __m128i),
+                    _mm_loadu_si128(bytes.as_ptr().add(16) as *const __m128i),
+                )
+            }
+        }
+
+        #[inline]
+        pub fn xor(self, o: Self) -> Self {
+            unsafe { Self(_mm_xor_si128(self.0, o.0), _mm_xor_si128(self.1, o.1)) }
+        }
+
+        /// Bitmask (bit l ⟺ lane l) of `self > o` as signed i32 lanes.
+        #[inline]
+        pub fn gt_i32_mask(self, o: Self) -> u32 {
+            unsafe {
+                let lo = _mm_movemask_ps(_mm_castsi128_ps(_mm_cmpgt_epi32(self.0, o.0))) as u32;
+                let hi = _mm_movemask_ps(_mm_castsi128_ps(_mm_cmpgt_epi32(self.1, o.1))) as u32;
+                (lo & 0xf) | ((hi & 0xf) << 4)
+            }
+        }
+    }
+
+    pub use super::sse_u32x4::U32x4;
+}
+
+/// The 128-bit u32 quad used by the ChaCha multi-block core — shared
+/// by both x86_64 variants (four blocks per dispatch is a 128-bit
+/// problem regardless of AVX2).
+#[allow(unused_unsafe)]
+#[cfg(target_arch = "x86_64")]
+mod sse_u32x4 {
+    use core::arch::x86_64::*;
+
+    /// Four u32 lanes (SSE2 `__m128i`).
+    #[derive(Clone, Copy)]
+    pub struct U32x4(__m128i);
+
+    impl U32x4 {
+        #[inline]
+        pub fn splat(v: u32) -> Self {
+            unsafe { Self(_mm_set1_epi32(v as i32)) }
+        }
+
+        #[inline]
+        pub fn from_array(a: [u32; 4]) -> Self {
+            unsafe { Self(_mm_loadu_si128(a.as_ptr() as *const __m128i)) }
+        }
+
+        #[inline]
+        pub fn to_array(self) -> [u32; 4] {
+            let mut out = [0u32; 4];
+            unsafe { _mm_storeu_si128(out.as_mut_ptr() as *mut __m128i, self.0) };
+            out
+        }
+
+        #[inline]
+        pub fn wrapping_add(self, o: Self) -> Self {
+            unsafe { Self(_mm_add_epi32(self.0, o.0)) }
+        }
+
+        #[inline]
+        pub fn xor(self, o: Self) -> Self {
+            unsafe { Self(_mm_xor_si128(self.0, o.0)) }
+        }
+
+        /// Per-lane rotate-left by `n` bits (`0 < n < 32`).
+        #[inline]
+        pub fn rotl(self, n: u32) -> Self {
+            debug_assert!(n > 0 && n < 32);
+            unsafe {
+                let l = _mm_sll_epi32(self.0, _mm_cvtsi32_si128(n as i32));
+                let r = _mm_srl_epi32(self.0, _mm_cvtsi32_si128(32 - n as i32));
+                Self(_mm_or_si128(l, r))
+            }
+        }
+    }
+}
+
+/// Scalar fallback for non-x86_64 targets: same API, plain loops. The
+/// kernels built on these types stay bitwise identical by the same
+/// argument (per-lane ops in the same order), just without the
+/// hardware parallelism.
+#[cfg(not(target_arch = "x86_64"))]
+mod lanes {
+    /// Eight f32 lanes (portable array fallback).
+    #[derive(Clone, Copy)]
+    pub struct F32x8([f32; 8]);
+
+    impl F32x8 {
+        #[inline]
+        pub fn splat(v: f32) -> Self {
+            Self([v; 8])
+        }
+
+        /// Load eight lanes from the head of `s` (`s.len() >= 8`).
+        #[inline]
+        pub fn load(s: &[f32]) -> Self {
+            let mut a = [0f32; 8];
+            a.copy_from_slice(&s[..8]);
+            Self(a)
+        }
+
+        /// Store the eight lanes to the head of `s` (`s.len() >= 8`).
+        #[inline]
+        pub fn store(self, s: &mut [f32]) {
+            s[..8].copy_from_slice(&self.0);
+        }
+
+        #[inline]
+        pub fn add(self, o: Self) -> Self {
+            let mut a = self.0;
+            for (x, y) in a.iter_mut().zip(&o.0) {
+                *x += *y;
+            }
+            Self(a)
+        }
+
+        #[inline]
+        pub fn mul(self, o: Self) -> Self {
+            let mut a = self.0;
+            for (x, y) in a.iter_mut().zip(&o.0) {
+                *x *= *y;
+            }
+            Self(a)
+        }
+
+        /// Per-lane |x| (sign-bit clear — bitwise `f32::abs`).
+        #[inline]
+        pub fn abs(self) -> Self {
+            let mut a = self.0;
+            for x in a.iter_mut() {
+                *x = f32::from_bits(x.to_bits() & 0x7fff_ffff);
+            }
+            Self(a)
+        }
+    }
+
+    /// Eight u32 lanes (portable array fallback).
+    #[derive(Clone, Copy)]
+    pub struct U32x8([u32; 8]);
+
+    impl U32x8 {
+        #[inline]
+        pub fn splat(v: u32) -> Self {
+            Self([v; 8])
+        }
+
+        /// Load eight little-endian u32 lanes from 32 bytes.
+        #[inline]
+        pub fn load_le(bytes: &[u8]) -> Self {
+            let mut a = [0u32; 8];
+            for (l, ch) in a.iter_mut().zip(bytes[..32].chunks_exact(4)) {
+                *l = u32::from_le_bytes(ch.try_into().unwrap());
+            }
+            Self(a)
+        }
+
+        #[inline]
+        pub fn xor(self, o: Self) -> Self {
+            let mut a = self.0;
+            for (x, y) in a.iter_mut().zip(&o.0) {
+                *x ^= *y;
+            }
+            Self(a)
+        }
+
+        /// Bitmask (bit l ⟺ lane l) of `self > o` as signed i32 lanes.
+        #[inline]
+        pub fn gt_i32_mask(self, o: Self) -> u32 {
+            let mut m = 0u32;
+            for l in 0..8 {
+                if (self.0[l] as i32) > (o.0[l] as i32) {
+                    m |= 1 << l;
+                }
+            }
+            m
+        }
+    }
+
+    /// Four u32 lanes (portable array fallback).
+    #[derive(Clone, Copy)]
+    pub struct U32x4([u32; 4]);
+
+    impl U32x4 {
+        #[inline]
+        pub fn splat(v: u32) -> Self {
+            Self([v; 4])
+        }
+
+        #[inline]
+        pub fn from_array(a: [u32; 4]) -> Self {
+            Self(a)
+        }
+
+        #[inline]
+        pub fn to_array(self) -> [u32; 4] {
+            self.0
+        }
+
+        #[inline]
+        pub fn wrapping_add(self, o: Self) -> Self {
+            let mut a = self.0;
+            for (x, y) in a.iter_mut().zip(&o.0) {
+                *x = x.wrapping_add(*y);
+            }
+            Self(a)
+        }
+
+        #[inline]
+        pub fn xor(self, o: Self) -> Self {
+            let mut a = self.0;
+            for (x, y) in a.iter_mut().zip(&o.0) {
+                *x ^= *y;
+            }
+            Self(a)
+        }
+
+        /// Per-lane rotate-left by `n` bits (`0 < n < 32`).
+        #[inline]
+        pub fn rotl(self, n: u32) -> Self {
+            let mut a = self.0;
+            for x in a.iter_mut() {
+                *x = x.rotate_left(n);
+            }
+            Self(a)
+        }
+    }
+}
+
+pub use lanes::{F32x8, U32x4, U32x8};
+
+/// `acc[i] += c · x[i]` over equal-length slices — the axpy inner loop
+/// of the blocked matmul kernels, eight accumulators per step with a
+/// scalar tail. Each accumulator receives exactly one `mul` + one
+/// `add` per call in both branches (no FMA), so the two paths are
+/// bitwise identical; `use_simd` is therefore pure scheduling
+/// (kernels pass [`enabled`], tests force both).
+#[inline]
+pub fn axpy_with(acc: &mut [f32], c: f32, x: &[f32], use_simd: bool) {
+    assert_eq!(acc.len(), x.len(), "axpy length mismatch");
+    let n = acc.len();
+    let mut i = 0;
+    if use_simd && n >= 8 {
+        let cv = F32x8::splat(c);
+        while i + 8 <= n {
+            let a = F32x8::load(&acc[i..]);
+            let w = F32x8::load(&x[i..]);
+            a.add(w.mul(cv)).store(&mut acc[i..]);
+            i += 8;
+        }
+    }
+    while i < n {
+        acc[i] += c * x[i];
+        i += 1;
+    }
+}
+
+/// [`axpy_with`] at the process-wide SIMD setting.
+#[inline]
+pub fn axpy(acc: &mut [f32], c: f32, x: &[f32]) {
+    axpy_with(acc, c, x, enabled());
+}
+
+/// `dst[i] = |src[i]|` over equal-length slices — the Top-k magnitude
+/// scan. |x| clears the sign bit in both branches, so the paths are
+/// bitwise identical for every input including `-0.0` and NaNs.
+#[inline]
+pub fn abs_into_with(src: &[f32], dst: &mut [f32], use_simd: bool) {
+    assert_eq!(src.len(), dst.len(), "abs_into length mismatch");
+    let n = src.len();
+    let mut i = 0;
+    if use_simd && n >= 8 {
+        while i + 8 <= n {
+            F32x8::load(&src[i..]).abs().store(&mut dst[i..]);
+            i += 8;
+        }
+    }
+    while i < n {
+        dst[i] = src[i].abs();
+        i += 1;
+    }
+}
+
+/// [`abs_into_with`] at the process-wide SIMD setting.
+#[inline]
+pub fn abs_into(src: &[f32], dst: &mut [f32]) {
+    abs_into_with(src, dst, enabled());
+}
+
+/// The σ-filter's vectorized integer compare: a prepared
+/// `lane < bound` (unsigned) test over eight LE u32 lanes at a time.
+/// The signed-compare bias trick (`a <u b ⟺ a⊕2³¹ <s b⊕2³¹`) is
+/// precomputed once; [`Self::keep_mask`] returns the kept-lane
+/// bitmask for the caller's compress step (`secagg::mask` pushes only
+/// the set bits' entries). Exactness: the compare is integer, so the
+/// kept set matches the scalar `(lane as u64) < bound` test bit for
+/// bit — callers handle the `bound == 2³²` keep-everything case
+/// before constructing a filter.
+pub struct LaneFilter {
+    bias: U32x8,
+    bound_biased: U32x8,
+}
+
+impl LaneFilter {
+    pub fn new(bound: u32) -> Self {
+        Self {
+            bias: U32x8::splat(0x8000_0000),
+            bound_biased: U32x8::splat(bound ^ 0x8000_0000),
+        }
+    }
+
+    /// Bitmask (bit l ⟺ lane l kept) of `lane < bound` over the eight
+    /// LE u32 lanes at the head of `lanes_le` (`len >= 32`).
+    #[inline]
+    pub fn keep_mask(&self, lanes_le: &[u8]) -> u32 {
+        self.bound_biased.gt_i32_mask(U32x8::load_le(lanes_le).xor(self.bias))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// The lane-remainder widths every vectorized kernel is pinned at:
+    /// below/at/above one vector, a ragged middle, and a full tile ±1.
+    const REMAINDER_WIDTHS: [usize; 7] = [1, 7, 8, 9, 17, 64, 65];
+
+    #[test]
+    fn f32x8_roundtrip_and_ops() {
+        let a: Vec<f32> = (0..8).map(|i| i as f32 - 3.5).collect();
+        let b: Vec<f32> = (0..8).map(|i| 0.25 * i as f32 + 1.0).collect();
+        let mut out = vec![0f32; 8];
+        F32x8::load(&a).add(F32x8::load(&b)).store(&mut out);
+        for i in 0..8 {
+            assert_eq!(out[i].to_bits(), (a[i] + b[i]).to_bits());
+        }
+        F32x8::load(&a).mul(F32x8::load(&b)).store(&mut out);
+        for i in 0..8 {
+            assert_eq!(out[i].to_bits(), (a[i] * b[i]).to_bits());
+        }
+        F32x8::splat(2.5).store(&mut out);
+        assert!(out.iter().all(|&v| v == 2.5));
+    }
+
+    #[test]
+    fn f32x8_abs_is_sign_bit_clear() {
+        let vals = [-1.5f32, 0.0, -0.0, 3.25, f32::NEG_INFINITY, -f32::NAN, 1e-38, -1e38];
+        let mut out = vec![0f32; 8];
+        F32x8::load(&vals).abs().store(&mut out);
+        for i in 0..8 {
+            assert_eq!(out[i].to_bits(), vals[i].to_bits() & 0x7fff_ffff, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn u32x4_ops_match_scalar() {
+        let a = [1u32, u32::MAX, 0x8000_0000, 0x1234_5678];
+        let b = [2u32, 1, 0x8000_0000, 0x0fed_cba9];
+        let add = U32x4::from_array(a).wrapping_add(U32x4::from_array(b)).to_array();
+        let xor = U32x4::from_array(a).xor(U32x4::from_array(b)).to_array();
+        for i in 0..4 {
+            assert_eq!(add[i], a[i].wrapping_add(b[i]));
+            assert_eq!(xor[i], a[i] ^ b[i]);
+        }
+        for n in [7u32, 8, 12, 16] {
+            let rot = U32x4::from_array(a).rotl(n).to_array();
+            for i in 0..4 {
+                assert_eq!(rot[i], a[i].rotate_left(n), "rotl {n} lane {i}");
+            }
+        }
+        assert_eq!(U32x4::splat(9).to_array(), [9; 4]);
+    }
+
+    #[test]
+    fn lane_filter_matches_scalar_compare() {
+        let mut rng = Rng::new(0x51f7);
+        for bound in [0u32, 1, 77, 0x7fff_ffff, 0x8000_0000, 0x8000_0001, u32::MAX] {
+            let filter = LaneFilter::new(bound);
+            for _ in 0..50 {
+                let lanes: Vec<u32> = (0..8)
+                    .map(|_| {
+                        // mix uniform draws with values clustered at the
+                        // boundary so off-by-one compares get exercised
+                        let r = rng.next_u64() as u32;
+                        match r % 4 {
+                            0 => bound.wrapping_add((r >> 8) % 3),
+                            1 => bound.wrapping_sub((r >> 8) % 3),
+                            _ => r,
+                        }
+                    })
+                    .collect();
+                let mut bytes = Vec::with_capacity(32);
+                for l in &lanes {
+                    bytes.extend_from_slice(&l.to_le_bytes());
+                }
+                let mask = filter.keep_mask(&bytes);
+                for (l, &lane) in lanes.iter().enumerate() {
+                    assert_eq!(
+                        (mask >> l) & 1 == 1,
+                        lane < bound,
+                        "bound {bound} lane {lane}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_simd_bitwise_matches_scalar_at_remainder_widths() {
+        let mut rng = Rng::new(0xa1);
+        for &n in &REMAINDER_WIDTHS {
+            for case in 0..10 {
+                let x: Vec<f32> = (0..n).map(|_| rng.normal_f32(1.0)).collect();
+                let base: Vec<f32> = (0..n).map(|_| rng.normal_f32(2.0)).collect();
+                let c = rng.normal_f32(1.0);
+                let mut a_simd = base.clone();
+                let mut a_scalar = base.clone();
+                axpy_with(&mut a_simd, c, &x, true);
+                axpy_with(&mut a_scalar, c, &x, false);
+                for i in 0..n {
+                    assert_eq!(
+                        a_simd[i].to_bits(),
+                        a_scalar[i].to_bits(),
+                        "n={n} case={case} i={i}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn abs_into_simd_bitwise_matches_scalar_at_remainder_widths() {
+        let mut rng = Rng::new(0xab5);
+        for &n in &REMAINDER_WIDTHS {
+            let mut src: Vec<f32> = (0..n).map(|_| rng.normal_f32(3.0)).collect();
+            if n >= 2 {
+                src[0] = -0.0;
+                src[1] = f32::NEG_INFINITY;
+            }
+            let mut d_simd = vec![9.9f32; n];
+            let mut d_scalar = vec![-7.0f32; n];
+            abs_into_with(&src, &mut d_simd, true);
+            abs_into_with(&src, &mut d_scalar, false);
+            for i in 0..n {
+                assert_eq!(d_simd[i].to_bits(), d_scalar[i].to_bits(), "n={n} i={i}");
+                assert_eq!(d_scalar[i].to_bits(), src[i].abs().to_bits(), "n={n} i={i}");
+            }
+        }
+    }
+}

@@ -76,10 +76,12 @@ static ALLOC: CountingAllocator = CountingAllocator;
 /// keep-ratio is dialed to k = 0.2 so the *union* of the 9 pair
 /// streams (1 − (1 − k/x)^9 ≈ 17% of positions) keeps the per-client
 /// wire payload — a legitimate, kept-entry-scaled allocation — well
-/// below the model-sized threshold. Failure injection stays off (the
-/// rollback snapshots are model-sized by design and priced per
-/// *injected-failure* run, not steady state), and `expose_aggregate` /
-/// `audit_secure_sum` keep their zero-copy defaults.
+/// below the model-sized threshold. `expose_aggregate` /
+/// `audit_secure_sum` keep their zero-copy defaults. Failure injection
+/// is exercised by its own scenario below: rollback snapshots are
+/// copy-on-write (`Arc`-shared residuals + a recycled spare write
+/// target — see coordinator/client.rs), so injected rounds must be as
+/// allocation-free as clean ones.
 fn cfg(secure: bool) -> RunConfig {
     let mut cfg = RunConfig::smoke("mnist_mlp");
     cfg.data_dir = None;
@@ -152,6 +154,40 @@ fn steady_state_round_allocates_nothing_model_sized() {
              steady-state full rounds — the coordinator path (Collect → Unmask/Recover \
              → Apply) must run entirely on the ServerWorkspace + copy-on-write global",
             m * 3
+        );
+
+        // --- (c) injected-failure rounds: CoW rollback snapshots ----
+        // dropout injection forces per-cohort snapshots, rollbacks,
+        // and (secure) Shamir dead-mask recovery every round; with the
+        // Arc-shared residual + recycled spare write target none of
+        // that may copy or allocate anything model-sized either
+        let mut icfg = cfg(secure);
+        icfg.dropout_prob = 0.25;
+        icfg.min_survivors = 2;
+        let mut trainer = Trainer::new(icfg).unwrap();
+        let mut failures = 0usize;
+        // two warm-up rounds, like (a)/(b): the double-buffer
+        // spare/retired cycle reaches steady state after the first
+        // committed round, and count_large tracks rounds 2.. — fresh,
+        // non-replayed round numbers
+        for round in 0..2u64 {
+            trainer.run_round(round).unwrap();
+        }
+        let count = count_large(m, rounds, |round| {
+            let out = trainer.run_round(round).unwrap();
+            failures += out.dropped.len() + out.stragglers.len();
+        });
+        assert_eq!(
+            count, 0,
+            "secure={secure}: {count} model-sized (≥{} B) allocations across {rounds} \
+             injected-failure rounds — rollback snapshots must be copy-on-write \
+             (Arc'd residuals + recycled spares), not per-round deep copies",
+            m * 3
+        );
+        assert!(
+            failures > 0,
+            "secure={secure}: dropout injection produced no failures — the scenario \
+             no longer exercises the rollback path (adjust seed/dropout_prob)"
         );
     }
 }
