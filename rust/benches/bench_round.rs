@@ -90,6 +90,124 @@ fn main() {
         ]));
     }
 
+    // --- headline: one secure round at 10,000 simulated clients -----
+    // Local SGD at this scale is not the subject, so the case drives
+    // the protocol + coordinator layers directly: every client builds
+    // its masked uplink once (setup; the shared stream cache generates
+    // each k-regular pair stream a single time), then the timed legs
+    // are (1) the coordinator's streaming Collect — decode + fold all
+    // 10k uplinks into a 4-shard accumulator whose footprint is
+    // O(model), not O(cohort) — and (2) dead-client mask recovery,
+    // which under the k-regular topology touches one neighborhood
+    // (degree 16), not 9,999 survivor pairs.
+    {
+        use std::collections::HashMap;
+
+        use fedsparse::coordinator::ShardedAccumulator;
+        use fedsparse::secagg::neighborhood::Neighborhood;
+        use fedsparse::secagg::protocol::{full_setup, SecAggConfig};
+        use fedsparse::sparse::codec::SparseVec;
+        use fedsparse::sparse::topk::threshold_for_topk_abs;
+        use fedsparse::util::pool::ThreadPool;
+        use fedsparse::util::rng::Rng;
+
+        const COHORT: usize = 10_000;
+        const DIM: usize = 4_096;
+        const SHARDS: usize = 4;
+        let round = 1u64;
+        let sc = SecAggConfig { share_keys: false, mask_ratio_k: 0.2, ..Default::default() };
+        let (mut clients, server) = full_setup(COHORT as u32, 42, &sc);
+        let cache: fedsparse::secagg::mask::MaskCache = Default::default();
+        for c in clients.iter_mut() {
+            c.attach_cache(cache.clone());
+        }
+        let selected: Vec<u32> = (0..COHORT as u32).collect();
+        let topo = Neighborhood::build(&selected, 16, 42, round);
+        assert!(!topo.is_complete(), "10k cohort must get a k-regular graph");
+        eprintln!(
+            "bench_round: secure10k — cohort {COHORT}, degree {}, dim {DIM}, {SHARDS} shards",
+            topo.degree()
+        );
+
+        let mut rng = Rng::new(7);
+        let mut peers: Vec<u32> = Vec::new();
+        let payloads: Vec<Vec<u8>> = clients
+            .iter()
+            .map(|c| {
+                let g: Vec<f32> = (0..DIM).map(|_| rng.normal_f32(0.1)).collect();
+                let d = threshold_for_topk_abs(&g, DIM / 100);
+                let keep: Vec<bool> = g.iter().map(|v| v.abs() > d).collect();
+                topo.neighbors_into(c.id, &mut peers);
+                c.build_update_among(&g, &keep, round, &peers).payload.encode()
+            })
+            .collect();
+
+        let mut acc = ShardedAccumulator::default();
+        let mut decode = SparseVec::default();
+        let mut agg: Vec<f32> = Vec::new();
+        let stats = b.bench("secure10k/collect_stream", || {
+            acc.reset(DIM, SHARDS);
+            for p in &payloads {
+                SparseVec::decode_into(p, &mut decode).unwrap();
+                acc.fold(&decode);
+            }
+            acc.merge_into(&mut agg);
+            black_box(agg.len());
+        });
+        cases.push(obj(vec![
+            ("name", s(&stats.name)),
+            ("n", num(DIM as f64)),
+            ("clients", num(COHORT as f64)),
+            ("iters", num(stats.iters as f64)),
+            ("mean_s", num(stats.mean.as_secs_f64())),
+            ("std_dev_s", num(stats.std_dev.as_secs_f64())),
+            ("p50_s", num(stats.p50.as_secs_f64())),
+            ("p95_s", num(stats.p95.as_secs_f64())),
+            ("min_s", num(stats.min.as_secs_f64())),
+        ]));
+
+        // recovery leg: the reconstructable pair keys are handed in
+        // (Shamir re-sharing at 10k is out of scope for the bench) and
+        // the cache is None so stream regeneration — the actual
+        // recovery work — is what gets measured
+        let pool = ThreadPool::new(2);
+        let dead = [clients[0].id];
+        topo.neighbors_into(dead[0], &mut peers);
+        let survivors: Vec<u32> =
+            selected.iter().copied().filter(|&v| v != dead[0]).collect();
+        let mut recovered: HashMap<(u32, u32), [u8; 32]> = HashMap::new();
+        for &v in &peers {
+            let (lo, hi) = if v < dead[0] { (v, dead[0]) } else { (dead[0], v) };
+            recovered.insert((lo, hi), clients[v as usize].pair_key_with(dead[0]));
+        }
+        let stats = b.bench("secure10k/recover_one_dead", || {
+            server.cancel_dead_masks_pooled_sink(
+                &pool,
+                None,
+                DIM,
+                round,
+                &survivors,
+                &dead,
+                &recovered,
+                topo.participants(),
+                Some(&topo),
+                |i, x| acc.sub_at(i, x),
+            );
+            black_box(acc.len());
+        });
+        cases.push(obj(vec![
+            ("name", s(&stats.name)),
+            ("n", num(DIM as f64)),
+            ("clients", num(COHORT as f64)),
+            ("iters", num(stats.iters as f64)),
+            ("mean_s", num(stats.mean.as_secs_f64())),
+            ("std_dev_s", num(stats.std_dev.as_secs_f64())),
+            ("p50_s", num(stats.p50.as_secs_f64())),
+            ("p95_s", num(stats.p95.as_secs_f64())),
+            ("min_s", num(stats.min.as_secs_f64())),
+        ]));
+    }
+
     // Bench::finish writes the generic schema; overwrite with the
     // phase-annotated report (same base fields + `phases`, including
     // the new mask_gen_s column the streaming σ-filter is judged on).

@@ -79,6 +79,17 @@ pub struct RunConfig {
     pub expose_aggregate: bool,
     /// Eq. 4 mask keep-ratio numerator k (secure mode).
     pub mask_ratio_k: f64,
+    /// Secure-mode pair-mask topology: each client masks against a
+    /// seeded k-regular neighborhood of ~`neighbors_k` peers instead
+    /// of the full cohort. 0 (default) = complete graph (every pair),
+    /// which is bitwise-identical to the pre-neighborhood behavior.
+    /// Values ≥ cohort−1 also collapse to the complete graph.
+    pub neighbors_k: usize,
+    /// Coordinator aggregation shards: Collect streams each uplink
+    /// into a range-sharded accumulator with this many folders. Any
+    /// value reproduces the serial sum bit-for-bit (shards partition
+    /// coordinates, and merge is a copy in ascending shard order).
+    pub shards: usize,
     /// Eq. 2 dynamic sparsity-rate controller (secure / THGS modes).
     pub dynamic_rate: bool,
     pub rate_alpha: f64,
@@ -136,6 +147,8 @@ impl Default for RunConfig {
             audit_secure_sum: false,
             expose_aggregate: false,
             mask_ratio_k: 1.0,
+            neighbors_k: 0,
+            shards: 1,
             dynamic_rate: false,
             rate_alpha: 0.8,
             rate_min: 0.01,
@@ -200,6 +213,9 @@ impl RunConfig {
             if !(2..=8).contains(&b) {
                 return Err(format!("quant_bits {b} outside 2..=8"));
             }
+        }
+        if self.shards == 0 {
+            return Err("shards must be ≥ 1".into());
         }
         if !(0.0..1.0).contains(&self.momentum) {
             return Err(format!("momentum {} outside [0,1)", self.momentum));
@@ -327,6 +343,19 @@ mod tests {
         c.min_survivors = 1;
         assert!(c.validate().is_err());
         c.min_survivors = 2;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn topology_and_shard_knobs_validate() {
+        let c = RunConfig::default();
+        assert_eq!(c.neighbors_k, 0, "default is the complete pair graph");
+        assert_eq!(c.shards, 1, "default is a single aggregation shard");
+        let mut c = RunConfig::default();
+        c.shards = 0;
+        assert!(c.validate().is_err());
+        c.shards = 8;
+        c.neighbors_k = 12;
         assert!(c.validate().is_ok());
     }
 

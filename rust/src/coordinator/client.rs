@@ -23,10 +23,13 @@
 //! steady state (pinned by `tests/alloc_steady_state.rs`), at the cost
 //! of each client owning two model-sized stores instead of one.
 //!
-//! The rate controller is a few scalars and is still cloned; the DGC
-//! momentum velocity (optional, off by default) is the one remaining
-//! model-sized snapshot copy when momentum and failure injection are
-//! combined.
+//! The DGC momentum corrector (optional, off by default) gets the
+//! identical treatment: the velocity lives behind an `Arc`, the round
+//! job advances it into a recycled spare corrector
+//! ([`crate::sparse::momentum::MomentumCorrector::correct_from`]), and
+//! commit swaps the buffers — so momentum + failure injection rounds
+//! are also snapshot-copy-free. The rate controller is a few scalars
+//! and is still cloned.
 
 use std::sync::Arc;
 
@@ -53,12 +56,37 @@ pub struct ClientState {
     retired: Option<Arc<ResidualStore>>,
     /// Eq. 2 controller (None when static rates are used).
     pub rate: Option<DynamicRate>,
-    /// DGC momentum corrector (None when momentum = 0).
-    pub momentum: Option<MomentumCorrector>,
+    /// DGC momentum corrector (None when momentum = 0). `Arc`'d like
+    /// the residual: snapshots share it, the round job reads it and
+    /// writes the advanced velocity into the recycled spare.
+    pub momentum: Option<Arc<MomentumCorrector>>,
+    /// The momentum write target handed to the next round job (the
+    /// double-buffer twin of `momentum`).
+    momentum_spare: Option<MomentumCorrector>,
+    /// Pre-round corrector retired at the last commit while a rollback
+    /// snapshot still referenced it (see `retired`).
+    momentum_retired: Option<Arc<MomentumCorrector>>,
     /// Mean local training loss of the last participating round.
     pub last_loss: f64,
     /// Rounds this client was selected AND delivered (diagnostics).
     pub participation: u64,
+}
+
+/// The mutable round inputs [`ClientState::take_round_state`] moves
+/// into a round job: the shared pre-round stores (read-only from the
+/// job's perspective) plus recycled write targets for the evolved
+/// state.
+pub struct RoundState {
+    /// Pre-round residual (shared with snapshots; never mutated).
+    pub residual: Arc<ResidualStore>,
+    /// Recycled write target for the evolved residual.
+    pub fresh: ResidualStore,
+    pub rate: Option<DynamicRate>,
+    /// Pre-round momentum corrector (shared with snapshots).
+    pub momentum: Option<Arc<MomentumCorrector>>,
+    /// Recycled write target for the advanced velocity; `Some` exactly
+    /// when `momentum` is.
+    pub momentum_fresh: Option<MomentumCorrector>,
 }
 
 /// Pre-round view of the mutable client state, restored when the
@@ -71,7 +99,7 @@ pub struct ClientState {
 pub struct ClientSnapshot {
     residual: Arc<ResidualStore>,
     rate: Option<DynamicRate>,
-    momentum: Option<MomentumCorrector>,
+    momentum: Option<Arc<MomentumCorrector>>,
 }
 
 impl ClientState {
@@ -86,6 +114,8 @@ impl ClientState {
             retired: None,
             rate: None,
             momentum: None,
+            momentum_spare: None,
+            momentum_retired: None,
             last_loss: f64::NAN,
             participation: 0,
         }
@@ -97,11 +127,18 @@ impl ClientState {
         self
     }
 
+    /// Attach the DGC momentum corrector, pre-sizing its double-buffer
+    /// twin so the steady-state round path stays allocation-free.
+    pub fn enable_momentum(&mut self, model_params: usize, coeff: f32) {
+        self.momentum = Some(Arc::new(MomentumCorrector::new(model_params, coeff)));
+        self.momentum_spare = Some(MomentumCorrector::new(model_params, coeff));
+    }
+
     /// Capture the pre-round state (call *before*
     /// [`Self::take_round_state`]; only needed under failure
-    /// injection). O(1) in the model size: the residual is shared, the
-    /// controllers are cloned (rate is scalars; momentum velocity is
-    /// the one model-sized clone, only when DGC momentum is on).
+    /// injection). O(1) in the model size: the residual and the
+    /// momentum corrector are shared by `Arc`, the rate controller is a
+    /// few cloned scalars — no model-sized copies.
     pub fn snapshot(&self) -> ClientSnapshot {
         ClientSnapshot {
             residual: Arc::clone(&self.residual),
@@ -119,21 +156,22 @@ impl ClientState {
         self.momentum = snap.momentum;
     }
 
-    /// Recycle an unused round write target (the job of a rolled-back
+    /// Recycle unused round write targets (the job of a rolled-back
     /// or aborted client evolved state that will never be committed)
     /// so the next selection of this client stays allocation-free.
-    pub fn reclaim_spare(&mut self, store: ResidualStore) {
+    pub fn reclaim_spare(&mut self, store: ResidualStore, momentum: Option<MomentumCorrector>) {
         self.spare = Some(store);
+        if momentum.is_some() {
+            self.momentum_spare = momentum;
+        }
     }
 
     /// Move the round inputs into a round job: the pre-round residual
-    /// (shared, read-only from the job's perspective), a recycled
-    /// write target for the evolved residual, and the controllers
-    /// (cheap: leaves empties behind; the state comes back via
-    /// [`Self::commit_round`] or [`Self::restore`]).
-    pub fn take_round_state(
-        &mut self,
-    ) -> (Arc<ResidualStore>, ResidualStore, Option<DynamicRate>, Option<MomentumCorrector>) {
+    /// and momentum corrector (shared, read-only from the job's
+    /// perspective), recycled write targets for the evolved state, and
+    /// the rate controller (cheap: leaves empties behind; the state
+    /// comes back via [`Self::commit_round`] or [`Self::restore`]).
+    pub fn take_round_state(&mut self) -> RoundState {
         let residual = std::mem::replace(&mut self.residual, Arc::new(ResidualStore::new(0)));
         let fresh = match self.spare.take() {
             Some(s) => s,
@@ -153,20 +191,39 @@ impl ClientState {
                 None => ResidualStore::new(0),
             },
         };
-        (residual, fresh, self.rate.take(), self.momentum.take())
+        let momentum = self.momentum.take();
+        // same spare → retired → fresh-alloc ladder for the velocity
+        // (`correct_from` adapts the write target's size, so the rare
+        // fallback is an empty corrector that grows once in the job)
+        let momentum_fresh = momentum.as_ref().map(|prev| {
+            self.momentum_spare
+                .take()
+                .or_else(|| {
+                    self.momentum_retired.take().and_then(|arc| match Arc::try_unwrap(arc) {
+                        Ok(mc) => Some(mc),
+                        Err(arc) => {
+                            self.momentum_retired = Some(arc);
+                            None
+                        }
+                    })
+                })
+                .unwrap_or_else(|| MomentumCorrector::new(0, prev.momentum))
+        });
+        RoundState { residual, fresh, rate: self.rate.take(), momentum, momentum_fresh }
     }
 
-    /// Commit a delivered round: the evolved store (`residual`)
-    /// becomes the live state, the pre-round store (`prev`) is
-    /// recycled as the next write target — immediately when nothing
-    /// else references it, or via `retired` until the round's rollback
-    /// snapshots drop. This is the *single* owner of
+    /// Commit a delivered round: the evolved stores (`residual`,
+    /// `momentum`) become the live state, the pre-round stores are
+    /// recycled as the next write targets — immediately when nothing
+    /// else references them, or via the retired slots until the
+    /// round's rollback snapshots drop. This is the *single* owner of
     /// participation/loss accounting — nothing else increments it.
     pub fn commit_round(
         &mut self,
         prev: Arc<ResidualStore>,
         residual: ResidualStore,
         rate: Option<DynamicRate>,
+        momentum_prev: Option<Arc<MomentumCorrector>>,
         momentum: Option<MomentumCorrector>,
         mean_loss: f64,
     ) {
@@ -176,7 +233,13 @@ impl ClientState {
             Err(arc) => self.retired = Some(arc),
         }
         self.rate = rate;
-        self.momentum = momentum;
+        self.momentum = momentum.map(Arc::new);
+        if let Some(arc) = momentum_prev {
+            match Arc::try_unwrap(arc) {
+                Ok(mc) => self.momentum_spare = Some(mc),
+                Err(arc) => self.momentum_retired = Some(arc),
+            }
+        }
         self.last_loss = mean_loss;
         self.participation += 1;
     }
@@ -189,10 +252,10 @@ mod tests {
     #[test]
     fn commit_round_owns_participation() {
         let mut c = ClientState::new(0, vec![1, 2, 3], 10);
-        let (prev, mut fresh, rate, momentum) = c.take_round_state();
+        let mut st = c.take_round_state();
         assert_eq!(c.residual.len(), 0, "state moved out");
-        fresh.store_from(&prev, &[0.5; 10]);
-        c.commit_round(prev, fresh, rate, momentum, 1.25);
+        st.fresh.store_from(&st.residual, &[0.5; 10]);
+        c.commit_round(st.residual, st.fresh, st.rate, st.momentum, st.momentum_fresh, 1.25);
         assert_eq!(c.participation, 1);
         assert_eq!(c.last_loss, 1.25);
         assert_eq!(c.residual.len(), 10, "state moved back");
@@ -212,10 +275,10 @@ mod tests {
         );
 
         // a failed round: state moved out, evolved into the spare, lost
-        let (prev, mut fresh, _, _) = c.take_round_state();
-        fresh.store_from(&prev, &[0.0; 4]);
-        c.reclaim_spare(fresh);
-        drop(prev);
+        let mut st = c.take_round_state();
+        st.fresh.store_from(&st.residual, &[0.0; 4]);
+        c.reclaim_spare(st.fresh, st.momentum_fresh);
+        drop(st.residual);
         c.restore(snap);
 
         assert_eq!(c.residual.as_slice().to_vec(), vec![1.0, 0.0, 2.0, 0.0]);
@@ -229,9 +292,9 @@ mod tests {
     fn double_buffer_recycles_without_snapshots() {
         let mut c = ClientState::new(2, vec![], 8);
         for t in 0..4 {
-            let (prev, mut fresh, rate, momentum) = c.take_round_state();
-            fresh.store_from(&prev, &[t as f32; 8]);
-            c.commit_round(prev, fresh, rate, momentum, t as f64);
+            let mut st = c.take_round_state();
+            st.fresh.store_from(&st.residual, &[t as f32; 8]);
+            c.commit_round(st.residual, st.fresh, st.rate, st.momentum, st.momentum_fresh, t as f64);
             assert!(c.spare.is_some(), "round {t}: prev recycled immediately");
             assert!(c.retired.is_none(), "round {t}: nothing parked");
             assert_eq!(c.residual.as_slice(), &[t as f32; 8][..]);
@@ -244,31 +307,89 @@ mod tests {
         // round A: snapshot held across commit (the engine holds the
         // cohort's snapshots until the round ends)
         let snap = c.snapshot();
-        let (prev, mut fresh, rate, momentum) = c.take_round_state();
-        fresh.store_from(&prev, &[1.0; 8]);
-        c.commit_round(prev, fresh, rate, momentum, 0.0);
+        let mut st = c.take_round_state();
+        st.fresh.store_from(&st.residual, &[1.0; 8]);
+        c.commit_round(st.residual, st.fresh, st.rate, st.momentum, st.momentum_fresh, 0.0);
         assert!(c.spare.is_none(), "prev still pinned by the snapshot");
         assert!(c.retired.is_some(), "prev parked for later reclaim");
         // round ends: snapshots drop, round B reclaims the parked store
         drop(snap);
-        let (prev, fresh, rate, momentum) = c.take_round_state();
-        assert_eq!(fresh.len(), 8, "parked store reclaimed, not a fresh alloc");
-        c.commit_round(prev, fresh, rate, momentum, 0.0);
+        let st = c.take_round_state();
+        assert_eq!(st.fresh.len(), 8, "parked store reclaimed, not a fresh alloc");
+        c.commit_round(st.residual, st.fresh, st.rate, st.momentum, st.momentum_fresh, 0.0);
     }
 
     #[test]
     fn dynamic_rate_controller_survives_commit_cycle() {
         let mut c = ClientState::new(2, vec![], 8).with_dynamic_rate(0.1, 0.8, 100, 0.01);
         for t in 0..3 {
-            let (prev, mut fresh, mut rate, momentum) = c.take_round_state();
-            if let Some(ctrl) = &mut rate {
+            let mut st = c.take_round_state();
+            if let Some(ctrl) = &mut st.rate {
                 ctrl.observe(t, 2.0);
             }
-            fresh.store_from(&prev, &[0.0; 8]);
-            c.commit_round(prev, fresh, rate, momentum, 2.0);
+            st.fresh.store_from(&st.residual, &[0.0; 8]);
+            c.commit_round(st.residual, st.fresh, st.rate, st.momentum, st.momentum_fresh, 2.0);
         }
         assert_eq!(c.participation, 3);
         assert!(c.rate.is_some());
+    }
+
+    #[test]
+    fn momentum_snapshot_is_a_refcount_bump_and_double_buffers() {
+        let mut c = ClientState::new(4, vec![], 4);
+        c.enable_momentum(4, 0.5);
+        // failure-injection shape: the snapshot is held across commit
+        let snap = c.snapshot();
+        assert!(
+            Arc::ptr_eq(snap.momentum.as_ref().unwrap(), c.momentum.as_ref().unwrap()),
+            "snapshot shares the corrector instead of deep-copying it"
+        );
+        let mut st = c.take_round_state();
+        let mut g = [1.0f32; 4];
+        let mut fresh_mc = st.momentum_fresh.take().unwrap();
+        fresh_mc.correct_from(st.momentum.as_ref().unwrap(), &mut g);
+        assert_eq!(g, [1.0; 4], "first round: velocity == g");
+        st.fresh.store_from(&st.residual, &[0.0; 4]);
+        c.commit_round(st.residual, st.fresh, st.rate, st.momentum, Some(fresh_mc), 0.0);
+        assert!(c.momentum_spare.is_none(), "prev corrector pinned by the snapshot");
+        assert!(c.momentum_retired.is_some(), "prev corrector parked for later reclaim");
+        // the snapshot drops at round end; the next take reclaims the
+        // parked corrector instead of allocating
+        drop(snap);
+        let st = c.take_round_state();
+        assert!(c.momentum_retired.is_none(), "parked corrector reclaimed");
+        let mut g = [1.0f32; 4];
+        let mut fresh_mc = st.momentum_fresh.unwrap();
+        fresh_mc.correct_from(st.momentum.as_ref().unwrap(), &mut g);
+        assert_eq!(g, [1.5; 4], "velocity advanced: 0.5·1 + 1");
+        c.commit_round(st.residual, st.fresh, st.rate, st.momentum, Some(fresh_mc), 0.0);
+        assert!(c.momentum_spare.is_some(), "no snapshot → prev recycled immediately");
+    }
+
+    #[test]
+    fn momentum_restore_rolls_back_velocity() {
+        let mut c = ClientState::new(5, vec![], 2);
+        c.enable_momentum(2, 0.9);
+        // round A commits velocity [1, 1]
+        let mut st = c.take_round_state();
+        let mut g = [1.0f32; 2];
+        let mut mc = st.momentum_fresh.take().unwrap();
+        mc.correct_from(st.momentum.as_ref().unwrap(), &mut g);
+        st.fresh.store_from(&st.residual, &[0.0; 2]);
+        c.commit_round(st.residual, st.fresh, st.rate, st.momentum, Some(mc), 0.0);
+        let committed_norm = c.momentum.as_ref().unwrap().velocity_norm();
+        assert!(committed_norm > 0.0);
+        // round B fails: evolved velocity discarded, snapshot restored
+        let snap = c.snapshot();
+        let mut st = c.take_round_state();
+        let mut g = [5.0f32; 2];
+        let mut mc = st.momentum_fresh.take().unwrap();
+        mc.correct_from(st.momentum.as_ref().unwrap(), &mut g);
+        c.reclaim_spare(st.fresh, Some(mc));
+        drop((st.residual, st.momentum));
+        c.restore(snap);
+        assert_eq!(c.momentum.as_ref().unwrap().velocity_norm(), committed_norm);
+        assert!(c.momentum_spare.is_some(), "evolved corrector recycled on rollback");
     }
 
     #[test]

@@ -10,6 +10,8 @@
 //! * [`round`] — the phased round engine: `Select → LocalTrain →
 //!   Sparsify/Encode → Collect → Unmask/Recover → Apply → Eval`, with
 //!   the per-client path owned by [`round::ClientPipeline`]
+//! * [`shard`] — the range-sharded aggregate accumulator Collect
+//!   streams uplinks into (bitwise-exact at any shard count)
 //! * [`trainer`] — construction and run-level state: backend, data
 //!   partition, secure-aggregation setup, transport, metrics
 
@@ -17,11 +19,13 @@ pub mod algorithms;
 pub mod client;
 pub mod round;
 pub mod selection;
+pub mod shard;
 pub mod trainer;
 
 pub use algorithms::Algorithm;
-pub use client::{ClientSnapshot, ClientState};
+pub use client::{ClientSnapshot, ClientState, RoundState};
 pub use round::{
     ClientPipeline, ClientWorkspace, Cohort, RoundOutcome, ServerWorkspace, WorkspacePool,
 };
+pub use shard::ShardedAccumulator;
 pub use trainer::Trainer;

@@ -28,12 +28,18 @@
 //! [`ClientWorkspace`] pool covers LocalTrain → Encode, and the
 //! trainer-owned [`ServerWorkspace`] covers Collect → Unmask/Recover →
 //! Apply (the global model is `Arc`'d, so the round snapshot is a
-//! refcount bump and Apply is copy-on-write). In steady state neither
-//! side heap-allocates anything model-sized
-//! (`tests/alloc_steady_state.rs`). Secure-mode pair-mask generation —
-//! client masking and server dead-mask recovery — fans out per pair
-//! over the worker pool under a pinned serial reduction order, so
-//! results stay bitwise identical to the serial path (PERF.md).
+//! refcount bump and Apply is copy-on-write). Collect is *streaming*:
+//! each delivered payload folds into the range-sharded accumulator on
+//! arrival, so the coordinator never buffers the cohort's decoded
+//! payloads. In steady state neither side heap-allocates anything
+//! model-sized (`tests/alloc_steady_state.rs`). Secure-mode pair-mask
+//! generation — client masking and server dead-mask recovery — fans
+//! out per pair over the worker pool under a pinned serial reduction
+//! order, and the shards merge in ascending shard id, so results stay
+//! bitwise identical to the serial path at any shard count (PERF.md).
+//! Under a k-regular [`Neighborhood`] (`neighbors_k` > 0) each secure
+//! client masks against only its seeded neighbors and dead-client
+//! recovery walks one neighborhood, not the cohort.
 //!
 //! Failure semantics: a client the transport kills (crash or past-
 //! deadline straggler) rolls back to its pre-round snapshot — from its
@@ -59,7 +65,8 @@ use crate::data::Dataset;
 use crate::metrics::recorder::{PhaseTimings, RoundRecord};
 use crate::models::params::ParamVector;
 use crate::runtime::{ModelRunner, Workspace};
-use crate::secagg::protocol::{recover_pair_keys, SecAggClient, SecAggServer};
+use crate::secagg::neighborhood::Neighborhood;
+use crate::secagg::protocol::{recover_pair_keys_in, SecAggClient, SecAggServer};
 use crate::secagg::sparse_mask::{MaskScratch, MaskedUpdate};
 use crate::sparse::codec::SparseVec;
 use crate::sparse::dynamic::DynamicRate;
@@ -73,6 +80,7 @@ use crate::util::timer::Stopwatch;
 use super::algorithms::Algorithm;
 use super::client::ClientSnapshot;
 use super::selection::select_clients;
+use super::shard::ShardedAccumulator;
 use super::trainer::Trainer;
 
 /// Per-worker reusable scratch for the full client round path
@@ -132,9 +140,16 @@ impl WorkspacePool {
 /// survive across rounds. Holds every model-sized buffer the Collect →
 /// Unmask/Recover → Apply phases touch:
 ///
-/// * `agg` — the phase-5 aggregate accumulator (survivor payload sum,
-///   dead masks cancelled in place via the kept-entry reduction — the
-///   recovery path needs no model-sized scratch of its own);
+/// * `sharded` — the streaming Collect accumulator: each delivered
+///   uplink folds into its range shard on arrival, so the coordinator
+///   never buffers the cohort's decoded payloads (per-aggregator
+///   memory O(model), not O(cohort × k_sparse));
+/// * `decode` — one reusable [`SparseVec`] the wire codec decodes
+///   into (k-sized, recycled per delivery);
+/// * `agg` — the flat aggregate the shards merge into (ascending
+///   shard id — the documented shard-merge order, bitwise identical
+///   to a serial single-accumulator run at any shard count) after
+///   dead masks are cancelled in place via the kept-entry reduction;
 /// * `plain` — the `audit_secure_sum` f64 accumulator (only grown in
 ///   audit runs).
 ///
@@ -146,7 +161,12 @@ impl WorkspacePool {
 /// `tests/alloc_steady_state.rs`.
 #[derive(Default)]
 pub struct ServerWorkspace {
-    /// Phase-5 aggregate accumulator (model-sized, reused).
+    /// Streaming Collect accumulator (model-sized across its shards,
+    /// reused).
+    pub(crate) sharded: ShardedAccumulator,
+    /// Wire-decode scratch (k-sized, reused).
+    pub(crate) decode: SparseVec,
+    /// Post-merge flat aggregate (model-sized, reused).
     pub(crate) agg: Vec<f32>,
     /// Audit-mode plaintext f64 sum (model-sized, reused; empty unless
     /// `audit_secure_sum`).
@@ -204,7 +224,12 @@ pub struct ClientJob {
     residual: Arc<ResidualStore>,
     fresh: ResidualStore,
     rate: Option<DynamicRate>,
-    momentum: Option<MomentumCorrector>,
+    /// Pre-round DGC momentum (shared with the rollback snapshot —
+    /// read-only in the job; see [`super::client::ClientState`]).
+    momentum: Option<Arc<MomentumCorrector>>,
+    /// The recycled write target the evolved velocity lands in (the
+    /// momentum twin of `fresh`).
+    momentum_fresh: Option<MomentumCorrector>,
 }
 
 /// What each client job hands back.
@@ -223,7 +248,12 @@ pub struct ClientResult {
     /// commit; simply dropped on rollback — the snapshot holds it).
     residual_prev: Arc<ResidualStore>,
     rate: Option<DynamicRate>,
+    /// The evolved momentum corrector (committed on delivery; recycled
+    /// into the client's momentum spare on rollback).
     momentum: Option<MomentumCorrector>,
+    /// The untouched pre-round corrector (the momentum twin of
+    /// `residual_prev`).
+    momentum_prev: Option<Arc<MomentumCorrector>>,
     mean_loss: f64,
     nnz: usize,
     nnz_rate: f64,
@@ -236,17 +266,22 @@ pub struct ClientResult {
     mask_s: f64,
 }
 
-/// Phase 1 output: the round's selected participant set.
+/// Phase 1 output: the round's selected participant set plus its mask
+/// topology (complete graph unless `neighbors_k` > 0 — see
+/// [`Neighborhood`]).
 pub struct Cohort {
     pub round: u64,
     pub selected: Vec<u32>,
+    pub topology: Arc<Neighborhood>,
 }
 
-/// Phase 4 output: what survived the transport.
+/// Phase 4 output: what survived the transport. Payloads are **not**
+/// buffered here — Collect streams each delivered payload into the
+/// sharded accumulator on arrival ([`ServerWorkspace`]).
 struct Collected {
-    /// Survivor results zipped with their server-side decoded payloads,
-    /// in selection order (deterministic f32 aggregation order).
-    survivors: Vec<(ClientResult, SparseVec)>,
+    /// Survivor results in selection order (their payloads already
+    /// folded into the accumulator in this same order).
+    survivors: Vec<ClientResult>,
     /// dropped ∪ stragglers — every selected client whose masks are now
     /// orphaned in secure mode.
     dead: Vec<u32>,
@@ -287,7 +322,9 @@ pub struct ClientPipeline {
     data: Arc<Dataset>,
     layer_spans: Arc<Vec<(usize, usize)>>,
     secagg: Option<Arc<(Vec<SecAggClient>, SecAggServer)>>,
-    selected: Arc<Vec<u32>>,
+    /// The round's mask topology — each secure client masks against
+    /// its neighbors (the full cohort when complete).
+    topology: Arc<Neighborhood>,
     /// Trainer-owned workspace pool (warm buffers persist across
     /// rounds; see [`WorkspacePool`]).
     workspaces: Arc<WorkspacePool>,
@@ -314,7 +351,7 @@ pub struct ClientPipeline {
 
 impl ClientPipeline {
     /// Snapshot the trainer's round-invariant context for one round.
-    fn for_round(trainer: &Trainer, round: u64, selected: Arc<Vec<u32>>) -> Self {
+    fn for_round(trainer: &Trainer, cohort: &Cohort) -> Self {
         let cfg = &trainer.cfg;
         Self {
             runner: trainer.runner.clone(),
@@ -324,10 +361,10 @@ impl ClientPipeline {
             data: Arc::clone(&trainer.train_data),
             layer_spans: Arc::new(trainer.layer_spans.clone()),
             secagg: trainer.secagg.clone(),
-            selected,
+            topology: Arc::clone(&cohort.topology),
             workspaces: Arc::clone(&trainer.client_workspaces),
             pool: Arc::clone(&trainer.client_pool),
-            round,
+            round: cohort.round,
             seed: cfg.seed,
             iters: cfg.local_iters,
             lr: cfg.lr,
@@ -360,7 +397,8 @@ impl ClientPipeline {
     /// `ws` buffers; the only per-call allocations are the k-sized
     /// wire payload (and the audit vector when enabled).
     fn run_in(&self, job: ClientJob, ws: &mut ClientWorkspace) -> Result<ClientResult> {
-        let ClientJob { cid, indices, residual, mut fresh, mut rate, mut momentum } = job;
+        let ClientJob { cid, indices, residual, mut fresh, mut rate, momentum, mut momentum_fresh } =
+            job;
         let round = self.round;
 
         // -- LocalTrain: E local SGD iterations --
@@ -390,9 +428,15 @@ impl ClientPipeline {
 
         // -- Sparsify/Encode --
         let sw = Stopwatch::start();
-        // DGC momentum correction (before residual fold)
-        if let Some(mc) = &mut momentum {
-            mc.correct_in_place(&mut ws.update);
+        // DGC momentum correction (before residual fold). Double-
+        // buffered like the residual: the shared pre-round corrector is
+        // read-only (the rollback snapshot may hold it), the advanced
+        // velocity lands in the recycled write target.
+        if let Some(prev) = &momentum {
+            momentum_fresh
+                .as_mut()
+                .expect("momentum write target paired with the corrector")
+                .correct_from(prev, &mut ws.update);
         }
 
         // residual fold + Eq.2 rate + DGC warm-up
@@ -422,7 +466,7 @@ impl ClientPipeline {
             &mut ws.topk,
             &mut ws.sparsify,
         );
-        if let Some(mc) = &mut momentum {
+        if let Some(mc) = &mut momentum_fresh {
             mc.mask_sent(&ws.sparsify.sparse); // DGC momentum factor masking
         }
         let nnz_rate = ws.sparsify.nnz as f64 / self.m as f64;
@@ -431,8 +475,9 @@ impl ClientPipeline {
         let (encoded, counted_nnz) = if let Some(sec) = &self.secagg {
             ws.keep.clear();
             ws.keep.extend(ws.sparsify.sparse.iter().map(|&v| v != 0.0));
-            ws.peers.clear();
-            ws.peers.extend(self.selected.iter().copied().filter(|&p| p != cid));
+            // this client's mask peers: its neighborhood under a
+            // k-regular topology, the whole cohort when complete
+            self.topology.neighbors_into(cid, &mut ws.peers);
             let sw_mask = Stopwatch::start();
             // fan the per-pair ChaCha streams out over the worker pool
             // when there is parallelism to gain; the pooled path is
@@ -502,7 +547,8 @@ impl ClientPipeline {
             residual: fresh,
             residual_prev: residual,
             rate,
-            momentum,
+            momentum: momentum_fresh,
+            momentum_prev: momentum,
             mean_loss,
             nnz: counted_nnz,
             nnz_rate,
@@ -669,20 +715,28 @@ impl Trainer {
     /// local train loss.
     pub fn run_client_phases(&mut self, round: u64) -> Result<f64> {
         let cohort = self.phase_select(round);
-        let pipeline =
-            ClientPipeline::for_round(self, round, Arc::new(cohort.selected.clone()));
+        let pipeline = ClientPipeline::for_round(self, &cohort);
         let mut loss_sum = 0f64;
         let k = cohort.selected.len();
         for &cid in &cohort.selected {
             let cs = &mut self.clients[cid as usize];
-            let (residual, fresh, rate, momentum) = cs.take_round_state();
-            let job = ClientJob { cid, indices: cs.data.clone(), residual, fresh, rate, momentum };
+            let st = cs.take_round_state();
+            let job = ClientJob {
+                cid,
+                indices: cs.data.clone(),
+                residual: st.residual,
+                fresh: st.fresh,
+                rate: st.rate,
+                momentum: st.momentum,
+                momentum_fresh: st.momentum_fresh,
+            };
             let r = pipeline.run(job)?;
             loss_sum += r.mean_loss;
             self.clients[cid as usize].commit_round(
                 r.residual_prev,
                 r.residual,
                 r.rate,
+                r.momentum_prev,
                 r.momentum,
                 r.mean_loss,
             );
@@ -700,13 +754,23 @@ impl Trainer {
         }
     }
 
-    /// Phase 1 — seeded cohort selection + per-round cache hygiene.
+    /// Phase 1 — seeded cohort selection, the round's mask topology,
+    /// and per-round cache hygiene.
     fn phase_select(&mut self, round: u64) -> Cohort {
         let selected =
             select_clients(self.cfg.clients, self.cfg.clients_per_round, self.cfg.seed, round);
+        // deterministic per (seed, round), so any round replays exactly;
+        // neighbors_k = 0 (the default) yields the complete graph and
+        // the pre-neighborhood bitwise behavior
+        let topology = Arc::new(Neighborhood::build(
+            &selected,
+            self.cfg.neighbors_k,
+            self.cfg.seed,
+            round,
+        ));
         // previous round's pair streams are dead weight — drop them
         self.mask_cache.lock().unwrap().clear();
-        Cohort { round, selected }
+        Cohort { round, selected, topology }
     }
 
     /// Phases 2+3 — fan the cohort out over the worker pool, one
@@ -718,12 +782,19 @@ impl Trainer {
             .iter()
             .map(|&cid| {
                 let cs = &mut self.clients[cid as usize];
-                let (residual, fresh, rate, momentum) = cs.take_round_state();
-                ClientJob { cid, indices: cs.data.clone(), residual, fresh, rate, momentum }
+                let st = cs.take_round_state();
+                ClientJob {
+                    cid,
+                    indices: cs.data.clone(),
+                    residual: st.residual,
+                    fresh: st.fresh,
+                    rate: st.rate,
+                    momentum: st.momentum,
+                    momentum_fresh: st.momentum_fresh,
+                }
             })
             .collect();
-        let pipeline =
-            ClientPipeline::for_round(self, cohort.round, Arc::new(cohort.selected.clone()));
+        let pipeline = ClientPipeline::for_round(self, cohort);
         let results: Vec<Result<ClientResult>> =
             self.client_pool.map(jobs, move |job: ClientJob| pipeline.run(job));
         results.into_iter().collect()
@@ -731,10 +802,16 @@ impl Trainer {
 
     /// Phase 4 — move every encoded payload into the transport; the
     /// seeded failure plan decides who survives. Delivered frames are
-    /// decoded server-side (the codec round-trips bit-exactly, so the
-    /// aggregate matches summing the in-memory payloads).
+    /// decoded server-side and **streamed** straight into the sharded
+    /// accumulator: each payload folds in on arrival and its decoded
+    /// form is immediately recycled, so the coordinator holds O(model)
+    /// accumulator memory instead of O(cohort × k_sparse) buffered
+    /// payloads. The transport delivers in submission (= selection)
+    /// order — pinned by `delivery_order_is_submission_order` — so the
+    /// streaming fold is bitwise identical to buffering all payloads
+    /// and summing them afterwards.
     fn phase_collect(
-        &self,
+        &mut self,
         cohort: &Cohort,
         mut results: Vec<ClientResult>,
     ) -> Result<Collected> {
@@ -752,14 +829,17 @@ impl Trainer {
 
         let mut delivered: HashMap<u32, Delivery> =
             outcome.delivered.into_iter().map(|d| (d.cid, d)).collect();
+        let ws = &mut self.server_ws;
+        ws.sharded.reset(m, self.cfg.shards);
         let mut survivors = Vec::with_capacity(delivered.len());
         let mut rolled_back = Vec::new();
         for r in results {
             match delivered.remove(&r.cid) {
                 Some(d) => {
-                    let payload = SparseVec::decode(&d.bytes)
+                    SparseVec::decode_into(&d.bytes, &mut ws.decode)
                         .map_err(|e| anyhow!("client {} payload: {e}", r.cid))?;
-                    survivors.push((r, payload));
+                    ws.sharded.fold(&ws.decode);
+                    survivors.push(r);
                 }
                 None => rolled_back.push(r),
             }
@@ -777,14 +857,17 @@ impl Trainer {
         })
     }
 
-    /// Phase 5 — sum the survivors' payloads into the trainer-owned
-    /// [`ServerWorkspace`] accumulator (selection order, so the f32
-    /// accumulation is deterministic), then in secure mode cancel the
-    /// dead clients' orphaned pair masks using Shamir-recovered keys —
-    /// regenerated in parallel over the worker pool and subtracted
-    /// under the pinned reduction order
-    /// ([`SecAggServer::cancel_dead_masks_pooled`]). `None` = recovery
-    /// impossible → the caller aborts.
+    /// Phase 5 — the survivors' payloads are already folded into the
+    /// sharded accumulator (streaming Collect); in secure mode, cancel
+    /// the dead clients' orphaned pair masks using Shamir-recovered
+    /// keys — recovery and cancellation walk only the dead clients'
+    /// *neighborhoods* under a k-regular topology — then merge the
+    /// shards (ascending shard id, pure concatenation) into the flat
+    /// aggregate Apply consumes. The per-position f32 operation
+    /// sequence is identical to the serial single-accumulator path, so
+    /// the merged result is bitwise exact at any shard count (PERF.md
+    /// shard-merge contract). `None` = recovery impossible → the
+    /// caller aborts.
     fn phase_unmask_recover(
         &mut self,
         cohort: &Cohort,
@@ -792,47 +875,64 @@ impl Trainer {
     ) -> Option<Aggregated> {
         let m = self.global.len();
         let audit = self.cfg.secure && self.cfg.audit_secure_sum;
-        let ws = &mut self.server_ws;
-        ws.agg.clear();
-        ws.agg.resize(m, 0.0);
-        ws.plain.clear();
-        if audit {
-            ws.plain.resize(m, 0.0);
-        }
-        for (r, payload) in &collected.survivors {
+        {
+            let ws = &mut self.server_ws;
+            ws.plain.clear();
             if audit {
-                if let Some(p) = r.plain.as_ref() {
-                    for (acc, &v) in ws.plain.iter_mut().zip(p) {
-                        *acc += v as f64;
+                ws.plain.resize(m, 0.0);
+                for r in &collected.survivors {
+                    if let Some(p) = r.plain.as_ref() {
+                        for (acc, &v) in ws.plain.iter_mut().zip(p) {
+                            *acc += v as f64;
+                        }
                     }
                 }
             }
-            payload.add_into(&mut ws.agg);
         }
 
         let mut recovered_pairs = 0usize;
         if !collected.dead.is_empty() {
-            if let Some(sec) = self.secagg.as_deref() {
+            // refcount bump so the secagg borrow does not pin `self`
+            // across the mutable workspace destructure below
+            if let Some(sec) = self.secagg.clone() {
                 let survivor_ids: Vec<u32> =
-                    collected.survivors.iter().map(|(r, _)| r.cid).collect();
-                let recovered =
-                    recover_pair_keys(&sec.0, &sec.1, &survivor_ids, &collected.dead)?;
+                    collected.survivors.iter().map(|r| r.cid).collect();
+                // a dead client only masked against its neighbors, so
+                // both recovery and cancellation are restricted to its
+                // neighborhood (complete topology → the full cohort,
+                // the exact pre-neighborhood behavior)
+                let topo = (!cohort.topology.is_complete()).then(|| &*cohort.topology);
+                let recovered = recover_pair_keys_in(
+                    &sec.0,
+                    &sec.1,
+                    &survivor_ids,
+                    &collected.dead,
+                    topo,
+                )?;
                 recovered_pairs = recovered.len();
-                sec.1.cancel_dead_masks_pooled(
-                    &self.client_pool,
+                let Trainer { server_ws, client_pool, mask_cache, .. } = self;
+                let sharded = &mut server_ws.sharded;
+                sec.1.cancel_dead_masks_pooled_sink(
+                    client_pool,
                     // the surviving endpoint of each pair usually built
                     // this stream already this round — recovery is
                     // mostly cache hits
-                    Some(&self.mask_cache),
-                    &mut ws.agg,
+                    Some(mask_cache),
+                    m,
                     cohort.round,
                     &survivor_ids,
                     &collected.dead,
                     &recovered,
-                    cohort.selected.len(),
+                    cohort.topology.participants(),
+                    topo,
+                    |i, x| sharded.sub_at(i, x),
                 );
             }
         }
+        // shard-merge: ascending shard id, pure concatenation — never
+        // an f32 addition
+        let ServerWorkspace { sharded, agg, .. } = &mut self.server_ws;
+        sharded.merge_into(agg);
         Some(Aggregated { recovered_pairs })
     }
 
@@ -846,9 +946,16 @@ impl Trainer {
         mut snapshots: HashMap<u32, ClientSnapshot>,
     ) -> (RoundScratch, Vec<u32>, Vec<u32>, f64) {
         let mut scratch = RoundScratch::default();
-        for (r, _) in collected.survivors {
+        for r in collected.survivors {
             let cs = &mut self.clients[r.cid as usize];
-            cs.commit_round(r.residual_prev, r.residual, r.rate, r.momentum, r.mean_loss);
+            cs.commit_round(
+                r.residual_prev,
+                r.residual,
+                r.rate,
+                r.momentum_prev,
+                r.momentum,
+                r.mean_loss,
+            );
             scratch.survivors.push(r.cid);
             scratch.loss_sum += r.mean_loss;
             scratch.rate_sum += r.nnz_rate;
@@ -858,9 +965,10 @@ impl Trainer {
         for r in collected.rolled_back {
             let snap = snapshots.remove(&r.cid).expect("failed client has a snapshot");
             let cs = &mut self.clients[r.cid as usize];
-            // the evolved residual is discarded, but its buffer is
-            // recycled so the client's next round stays allocation-free
-            cs.reclaim_spare(r.residual);
+            // the evolved residual/velocity are discarded, but their
+            // buffers are recycled so the client's next round stays
+            // allocation-free
+            cs.reclaim_spare(r.residual, r.momentum);
             cs.restore(snap);
         }
         // FedAvg mean over the *surviving* cohort. Copy-on-write: the
@@ -889,17 +997,18 @@ impl Trainer {
         let mut nnz = Vec::new();
         let mut wire = Vec::new();
         let mut loss_sum = 0f64;
-        for (r, _) in collected.survivors {
+        for r in collected.survivors {
             survivors.push(r.cid);
             nnz.push(r.nnz);
             wire.push(r.wire);
             loss_sum += r.mean_loss;
-            // nothing commits on abort, but the evolved-residual
-            // buffers are still recycled (allocation-free next round)
-            self.clients[r.cid as usize].reclaim_spare(r.residual);
+            // nothing commits on abort, but the evolved-residual (and
+            // velocity) buffers are still recycled (allocation-free
+            // next round)
+            self.clients[r.cid as usize].reclaim_spare(r.residual, r.momentum);
         }
         for r in collected.rolled_back {
-            self.clients[r.cid as usize].reclaim_spare(r.residual);
+            self.clients[r.cid as usize].reclaim_spare(r.residual, r.momentum);
         }
         // every selected client — delivered or not — rolls back (aborts
         // only happen under failure injection, so snapshots exist)

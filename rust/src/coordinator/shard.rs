@@ -1,0 +1,197 @@
+//! Range-sharded aggregate accumulator — the coordinator's answer to
+//! "one aggregator thread owns one model-sized buffer".
+//!
+//! The model's coordinate space `[0, n)` is split into `S` contiguous
+//! spans (`starts[s] = s·n/S` fenceposts); shard `s` owns span
+//! `[starts[s], starts[s+1])`. Every add/subtract routes to the one
+//! shard owning that position, so per-shard memory is `O(n/S)` and the
+//! shards could live on separate aggregator workers without any
+//! cross-shard f32 traffic.
+//!
+//! **Bitwise-exactness argument** (the shard-merge reduction-order
+//! contract, PERF.md): a position belongs to exactly one shard, so the
+//! sequence of f32 operations applied to any single position is
+//! *identical* to the serial single-accumulator path — sharding
+//! partitions the coordinate space, never the operation stream of one
+//! coordinate. The final merge is pure concatenation ascending shard id
+//! (`starts` spans are contiguous and ascending), never an f32
+//! addition. Therefore ANY shard count reproduces the serial result
+//! bit-for-bit — pinned by the tests below and by
+//! `tests/neighborhood_secagg.rs`.
+//!
+//! Buffers are retained across [`Self::reset`] calls (capacity reuse),
+//! so the steady-state round path allocates nothing model-sized
+//! (`tests/alloc_steady_state.rs`).
+
+use crate::sparse::codec::SparseVec;
+
+/// A model-sized accumulator stored as `S` contiguous range shards.
+#[derive(Default)]
+pub struct ShardedAccumulator {
+    n: usize,
+    /// `S + 1` fenceposts: shard `s` owns `[starts[s], starts[s+1])`.
+    starts: Vec<usize>,
+    bufs: Vec<Vec<f32>>,
+    /// Monotonic routing cursor for [`Self::fold`] (payload indices
+    /// are ascending, so the common case is "same shard as last time").
+    cursor: usize,
+}
+
+impl ShardedAccumulator {
+    /// Zero the accumulator for an `n`-dimensional model over `shards`
+    /// spans. Reuses existing buffer capacity.
+    pub fn reset(&mut self, n: usize, shards: usize) {
+        assert!(shards >= 1, "need at least one shard");
+        self.n = n;
+        self.starts.clear();
+        self.starts.extend((0..=shards).map(|s| s * n / shards));
+        self.bufs.resize_with(shards, Vec::new);
+        for (s, buf) in self.bufs.iter_mut().enumerate() {
+            buf.clear();
+            buf.resize(self.starts[s + 1] - self.starts[s], 0.0);
+        }
+        self.cursor = 0;
+    }
+
+    pub fn shards(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    fn shard_of(&self, i: usize) -> usize {
+        debug_assert!(i < self.n, "position {i} out of range {}", self.n);
+        self.starts.partition_point(|&st| st <= i) - 1
+    }
+
+    /// Fold one uplink payload in: `acc[i] += v` per entry, each entry
+    /// routed to its owning shard. Entries stream in ascending-index
+    /// order (the codec invariant), so routing is a monotonic cursor
+    /// walk; out-of-order indices still route correctly, just slower.
+    pub fn fold(&mut self, payload: &SparseVec) {
+        assert_eq!(payload.n as usize, self.n, "accumulator size mismatch");
+        let mut s = self.cursor.min(self.bufs.len() - 1);
+        for (&i, &v) in payload.indices.iter().zip(&payload.values) {
+            let i = i as usize;
+            if i < self.starts[s] || i >= self.starts[s + 1] {
+                s = self.shard_of(i);
+            }
+            self.bufs[s][i - self.starts[s]] += v;
+        }
+        self.cursor = 0;
+    }
+
+    /// `acc[i] -= x` — the dead-mask cancellation sink
+    /// ([`crate::secagg::SecAggServer::cancel_dead_masks_pooled_sink`]).
+    pub fn sub_at(&mut self, i: u32, x: f32) {
+        let i = i as usize;
+        let s = self.shard_of(i);
+        self.bufs[s][i - self.starts[s]] -= x;
+    }
+
+    /// Concatenate the shards (ascending shard id) into `out` — the
+    /// documented shard-merge order. Pure copy, no f32 arithmetic, so
+    /// the merged vector is bitwise identical to a serial
+    /// single-accumulator run regardless of shard count.
+    pub fn merge_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        for buf in &self.bufs {
+            out.extend_from_slice(buf);
+        }
+        debug_assert_eq!(out.len(), self.n);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn payload(n: u32, seed: u64, frac: f64) -> SparseVec {
+        let mut rng = Rng::new(seed);
+        let dense: Vec<f32> = (0..n)
+            .map(|_| if rng.next_f64() < frac { rng.normal_f32(1.0) } else { 0.0 })
+            .collect();
+        SparseVec::from_dense(&dense)
+    }
+
+    #[test]
+    fn sharded_fold_is_bitwise_equal_to_serial() {
+        let n = 997usize; // prime: uneven spans at every shard count
+        let payloads: Vec<SparseVec> =
+            (0..7).map(|i| payload(n as u32, 40 + i, 0.05)).collect();
+        let mut serial = vec![0f32; n];
+        for p in &payloads {
+            p.add_into(&mut serial);
+        }
+        for shards in [1usize, 2, 3, 4, 8, 997, 1500] {
+            let mut acc = ShardedAccumulator::default();
+            acc.reset(n, shards);
+            for p in &payloads {
+                acc.fold(p);
+            }
+            let mut merged = Vec::new();
+            acc.merge_into(&mut merged);
+            assert_eq!(merged.len(), n);
+            assert!(
+                serial.iter().zip(&merged).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shards={shards}: merge diverged from serial"
+            );
+        }
+    }
+
+    #[test]
+    fn sub_at_matches_serial_subtraction() {
+        let n = 256usize;
+        let mut rng = Rng::new(9);
+        let ops: Vec<(u32, f32)> =
+            (0..300).map(|_| (rng.below(n as u64) as u32, rng.normal_f32(1.0))).collect();
+        let mut serial = vec![0f32; n];
+        for &(i, x) in &ops {
+            serial[i as usize] -= x;
+        }
+        for shards in [1usize, 3, 5] {
+            let mut acc = ShardedAccumulator::default();
+            acc.reset(n, shards);
+            for &(i, x) in &ops {
+                acc.sub_at(i, x);
+            }
+            let mut merged = Vec::new();
+            acc.merge_into(&mut merged);
+            assert!(serial.iter().zip(&merged).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
+    }
+
+    #[test]
+    fn reset_reuses_and_rezeroes() {
+        let mut acc = ShardedAccumulator::default();
+        acc.reset(100, 4);
+        acc.sub_at(50, 1.0);
+        acc.reset(100, 4);
+        let mut merged = Vec::new();
+        acc.merge_into(&mut merged);
+        assert!(merged.iter().all(|&v| v == 0.0));
+        // shrinking/growing the model dimension mid-run also works
+        acc.reset(64, 4);
+        let mut merged = Vec::new();
+        acc.merge_into(&mut merged);
+        assert_eq!(merged.len(), 64);
+    }
+
+    #[test]
+    fn more_shards_than_positions_is_fine() {
+        let mut acc = ShardedAccumulator::default();
+        acc.reset(3, 8); // several empty spans
+        acc.sub_at(0, 1.0);
+        acc.sub_at(2, 2.0);
+        let mut merged = Vec::new();
+        acc.merge_into(&mut merged);
+        assert_eq!(merged, vec![-1.0, 0.0, -2.0]);
+    }
+}

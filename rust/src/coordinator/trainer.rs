@@ -126,10 +126,7 @@ impl Trainer {
                     c = c.with_dynamic_rate(r0, cfg.rate_alpha, cfg.rounds, cfg.rate_min);
                 }
                 if cfg.momentum > 0.0 {
-                    c.momentum = Some(crate::sparse::momentum::MomentumCorrector::new(
-                        m,
-                        cfg.momentum,
-                    ));
+                    c.enable_momentum(m, cfg.momentum);
                 }
                 c
             })

@@ -38,6 +38,8 @@ const TRAIN_SPEC: &[ArgSpec] = &[
     ArgSpec::opt("train-samples", "", "0", "cap synthetic train split (0 = full size)"),
     ArgSpec::opt("seed", "", "42", "run seed"),
     ArgSpec::opt("mask-ratio", "", "1.0", "secure mode: Eq.4 mask keep-ratio k"),
+    ArgSpec::opt("neighbors-k", "", "0", "secure mode: pair-mask neighborhood degree (0 = every pair)"),
+    ArgSpec::opt("shards", "", "1", "server aggregation shards (any count is bitwise-equal)"),
     ArgSpec::opt("rate-alpha", "", "0.8", "Eq.2 attenuation factor (with --dynamic-rate)"),
     ArgSpec::opt("rate-min", "", "0.01", "Eq.2 rate floor"),
     ArgSpec::opt("quant-bits", "", "0", "QSGD stochastic quantization bits (0 = off)"),
@@ -116,6 +118,8 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     cfg.train_samples = (ts > 0).then_some(ts);
     cfg.seed = args.get_parsed("seed")?;
     cfg.mask_ratio_k = args.get_parsed("mask-ratio")?;
+    cfg.neighbors_k = args.get_parsed("neighbors-k")?;
+    cfg.shards = args.get_parsed("shards")?;
     cfg.rate_alpha = args.get_parsed("rate-alpha")?;
     cfg.rate_min = args.get_parsed("rate-min")?;
     cfg.backend = BackendKind::parse(args.get("backend").unwrap_or("auto"))
@@ -163,6 +167,13 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
         trainer.cfg.dataset,
         if trainer_is_synth(&trainer) { " (synthetic)" } else { " (real)" },
     );
+
+    if !out.is_empty() {
+        // stream rows as rounds complete (append + flush per row): a
+        // crashed or killed run leaves a parseable CSV prefix behind
+        // instead of nothing
+        trainer.recorder.stream_to(PathBuf::from(&out))?;
+    }
 
     for round in 0..trainer.cfg.rounds {
         let out = trainer.run_round(round)?;
@@ -217,9 +228,7 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
         fmt_bytes(summary.total_wire_bytes),
     );
     if !out.is_empty() {
-        let path = PathBuf::from(out);
-        trainer.recorder.append_csv(&path)?;
-        println!("rows appended to {}", path.display());
+        println!("rows streamed to {out}");
     }
     Ok(())
 }

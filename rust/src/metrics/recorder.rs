@@ -121,15 +121,44 @@ pub struct RunSummary {
 pub struct Recorder {
     pub label: String,
     pub rows: Vec<RoundRecord>,
+    /// Live CSV stream (see [`Self::stream_to`]): when attached, every
+    /// pushed row is appended and flushed immediately, so a crashed or
+    /// killed run leaves a parseable CSV prefix on disk.
+    sink: Option<std::io::BufWriter<std::fs::File>>,
 }
 
 impl Recorder {
     pub fn new(label: &str) -> Self {
-        Self { label: label.to_string(), rows: Vec::new() }
+        Self { label: label.to_string(), rows: Vec::new(), sink: None }
     }
 
     pub fn push(&mut self, row: RoundRecord) {
+        if let Some(f) = &mut self.sink {
+            let res = write_row(f, &self.label, &row).and_then(|_| f.flush());
+            if let Err(e) = res {
+                // losing the live trace must not kill the run; rows
+                // stay in memory for the end-of-run writers
+                eprintln!("warning: metrics stream lost ({e}); rows kept in memory only");
+                self.sink = None;
+            }
+        }
         self.rows.push(row);
+    }
+
+    /// Attach a live CSV stream: opens `path` in append mode (creating
+    /// it with a header when new, with the same schema check as
+    /// [`Self::append_csv`]), writes out any already-recorded rows, and
+    /// from then on each [`Self::push`] appends + flushes its row
+    /// before returning — an interrupted run loses at most the round
+    /// in flight.
+    pub fn stream_to(&mut self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut f = std::io::BufWriter::new(open_csv_append(path.as_ref())?);
+        for r in &self.rows {
+            write_row(&mut f, &self.label, r)?;
+        }
+        f.flush()?;
+        self.sink = Some(f);
+        Ok(())
     }
 
     pub fn summary(&self) -> RunSummary {
@@ -155,29 +184,6 @@ impl Recorder {
                                       wire_bytes,sim_time_s,mean_rate,survivors,recovered,\
                                       t_train_s,t_collect_s,t_recover_s,t_eval_s,t_mask_gen_s";
 
-    fn csv_row(&self, f: &mut dyn Write, r: &RoundRecord) -> std::io::Result<()> {
-        writeln!(
-            f,
-            "{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6},{},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
-            self.label,
-            r.round,
-            r.train_loss,
-            r.eval_loss,
-            r.eval_accuracy,
-            r.up_bytes,
-            r.wire_bytes,
-            r.sim_time_s,
-            r.mean_rate,
-            r.survivors,
-            r.recovered,
-            r.timings.train_s,
-            r.timings.collect_s,
-            r.timings.recover_s,
-            r.timings.eval_s,
-            r.timings.mask_gen_s,
-        )
-    }
-
     /// CSV with a header; figures are plotted straight from this.
     pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
@@ -186,7 +192,7 @@ impl Recorder {
         let mut f = std::fs::File::create(path)?;
         writeln!(f, "{}", Self::CSV_HEADER)?;
         for r in &self.rows {
-            self.csv_row(&mut f, r)?;
+            write_row(&mut f, &self.label, r)?;
         }
         Ok(())
     }
@@ -196,29 +202,9 @@ impl Recorder {
     /// schema (e.g. a trace written before a column was added) — mixed
     /// row widths would silently misalign downstream readers.
     pub fn append_csv(&self, path: &Path) -> std::io::Result<()> {
-        let exists = path.exists();
-        if exists {
-            let text = std::fs::read_to_string(path)?;
-            let header = text.lines().next().unwrap_or("");
-            if header != Self::CSV_HEADER {
-                return Err(std::io::Error::new(
-                    std::io::ErrorKind::InvalidData,
-                    format!(
-                        "refusing to append to {path:?}: its header does not match the \
-                         current schema (was it written by an older version?)"
-                    ),
-                ));
-            }
-        }
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
-        if !exists {
-            writeln!(f, "{}", Self::CSV_HEADER)?;
-        }
+        let mut f = open_csv_append(path)?;
         for r in &self.rows {
-            self.csv_row(&mut f, r)?;
+            write_row(&mut f, &self.label, r)?;
         }
         Ok(())
     }
@@ -263,6 +249,60 @@ impl Recorder {
             ),
         ])
     }
+}
+
+/// One CSV data row in [`Recorder::CSV_HEADER`] order. Free function
+/// (not a method) so the streaming `push` can write through the sink
+/// while the row is still outside `self.rows`.
+fn write_row(f: &mut dyn Write, label: &str, r: &RoundRecord) -> std::io::Result<()> {
+    writeln!(
+        f,
+        "{},{},{:.6},{:.6},{:.6},{},{},{:.6},{:.6},{},{},{:.6},{:.6},{:.6},{:.6},{:.6}",
+        label,
+        r.round,
+        r.train_loss,
+        r.eval_loss,
+        r.eval_accuracy,
+        r.up_bytes,
+        r.wire_bytes,
+        r.sim_time_s,
+        r.mean_rate,
+        r.survivors,
+        r.recovered,
+        r.timings.train_s,
+        r.timings.collect_s,
+        r.timings.recover_s,
+        r.timings.eval_s,
+        r.timings.mask_gen_s,
+    )
+}
+
+/// Open `path` for row appends: creates parent dirs and writes the
+/// header when the file is new; refuses a file whose header does not
+/// match the current schema.
+fn open_csv_append(path: &Path) -> std::io::Result<std::fs::File> {
+    let exists = path.exists();
+    if exists {
+        let text = std::fs::read_to_string(path)?;
+        let header = text.lines().next().unwrap_or("");
+        if header != Recorder::CSV_HEADER {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "refusing to append to {path:?}: its header does not match the \
+                     current schema (was it written by an older version?)"
+                ),
+            ));
+        }
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    if !exists {
+        writeln!(f, "{}", Recorder::CSV_HEADER)?;
+    }
+    Ok(f)
 }
 
 #[cfg(test)]
@@ -316,6 +356,33 @@ mod tests {
         assert!(lines[0].starts_with("label,round"));
         assert!(lines[1].starts_with("a,0,"));
         assert!(lines[2].starts_with("b,1,"));
+    }
+
+    #[test]
+    fn stream_flushes_each_pushed_row() {
+        let dir =
+            std::env::temp_dir().join(format!("fedsparse-metrics-stream-{}", std::process::id()));
+        let path = dir.join("stream.csv");
+        let _ = std::fs::remove_file(&path);
+        let mut r = Recorder::new("s");
+        r.push(row(0, 0.1)); // recorded before the stream attaches
+        r.stream_to(&path).unwrap();
+        r.push(row(1, 0.2));
+        // recorder still alive, no explicit flush call: the rows must
+        // already be on disk (push flushes per row)
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "header + backlog row + streamed row");
+        assert_eq!(lines[0], Recorder::CSV_HEADER);
+        assert!(lines[1].starts_with("s,0,"));
+        assert!(lines[2].starts_with("s,1,"));
+        // a later run streams into the same file (multi-series append)
+        let mut r2 = Recorder::new("t");
+        r2.stream_to(&path).unwrap();
+        r2.push(row(0, 0.3));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4);
+        assert!(text.lines().last().unwrap().starts_with("t,0,"));
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! * [`kdf`] — HKDF-SHA256 shared-secret → mask-seed derivation
 //! * [`mask`] — pairwise additive masks expanded by ChaCha20
 //! * [`sparse_mask`] — the zero-local-value mask matrix (Eq. 3-5)
+//! * [`neighborhood`] — seeded k-regular mask topologies (the
+//!   sparsified-secagg graph replacing the complete pair graph)
 //! * [`shamir`] — Shamir secret sharing (Bonawitz-style dropout
 //!   recovery, the paper's SA baseline substrate)
 //! * [`protocol`] — client/server round protocol gluing it together
@@ -15,13 +17,15 @@ pub mod bignum;
 pub mod dh;
 pub mod kdf;
 pub mod mask;
+pub mod neighborhood;
 pub mod protocol;
 pub mod shamir;
 pub mod sparse_mask;
 
 pub use dh::{DhKeyPair, DhParams};
 pub use mask::PairwiseMasker;
-pub use protocol::{recover_pair_keys, SecAggClient, SecAggConfig, SecAggServer};
+pub use neighborhood::Neighborhood;
+pub use protocol::{recover_pair_keys, recover_pair_keys_in, SecAggClient, SecAggConfig, SecAggServer};
 pub use sparse_mask::{
     mask_sparsify, mask_sparsify_into, CaseCensus, MaskScratch, MaskSparsifyConfig, MaskedUpdate,
 };

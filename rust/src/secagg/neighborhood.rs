@@ -1,0 +1,244 @@
+//! Seeded k-regular mask neighborhoods — the sparsified-secagg graph
+//! (Ergün et al., Beguier et al.: the complete pair graph can be
+//! replaced by sparse neighborhoods without losing cancellation).
+//!
+//! The complete pair-mask graph costs O(cohort²) pair streams per
+//! round; at 10k+ clients that wall dominates everything. This module
+//! replaces it with a **circulant ring**: the round's cohort is
+//! shuffled by a PRNG seeded from `(run_seed, round)`, laid on a ring,
+//! and every client masks against the `half` positions on each side —
+//! a uniform-degree (`2·half`-regular) symmetric graph, deterministic
+//! per `(seed, round)` so any round replays bit-for-bit.
+//!
+//! Uniform degree is load-bearing: Eq. 4's σ depends on the
+//! participant count `x`, and both endpoints of a pair *and* the
+//! server's dead-mask cancellation must use the same σ. With every
+//! vertex at degree `d`, all three agree on `x = d + 1`.
+//!
+//! `k = 0` (the config default) or any `k` whose ring covers the whole
+//! cohort short-circuits to the **complete graph** — bitwise identical
+//! to the pre-neighborhood behavior, which is what keeps the golden
+//! secagg tests pinned.
+
+use crate::util::rng::Rng;
+
+/// Domain constant mixed into the neighborhood shuffle seed (distinct
+/// from the selection/transport/keygen constants).
+const NEIGHBORHOOD_SALT: u64 = 0x6e65_6967;
+
+/// One round's mask topology over the selected cohort.
+#[derive(Clone, Debug)]
+pub struct Neighborhood {
+    /// The cohort, in selection (ascending id) order.
+    members: Vec<u32>,
+    /// Ring order (seeded shuffle of `members`); empty when complete.
+    ring: Vec<u32>,
+    /// Ring position per member, aligned with `members`.
+    pos: Vec<usize>,
+    /// Neighbors per side on the ring (0 when complete).
+    half: usize,
+}
+
+impl Neighborhood {
+    /// The complete graph over `selected` — every pair masks.
+    pub fn complete(selected: &[u32]) -> Self {
+        Self { members: selected.to_vec(), ring: Vec::new(), pos: Vec::new(), half: 0 }
+    }
+
+    /// Seeded `k`-regular topology over `selected` for `round`.
+    ///
+    /// `k` is the target degree; the ring construction uses
+    /// `half = ⌈k/2⌉` neighbors per side, so the realized degree is
+    /// `min(2·half, n−1)`. `k = 0`, cohorts of ≤ 3, and any `k` whose
+    /// ring already covers the cohort all collapse to the complete
+    /// graph (same masks, same σ — the zero-cost bypass).
+    pub fn build(selected: &[u32], k: usize, seed: u64, round: u64) -> Self {
+        let n = selected.len();
+        let half = k.div_ceil(2);
+        if k == 0 || n < 2 || 2 * half >= n - 1 {
+            return Self::complete(selected);
+        }
+        let mut ring = selected.to_vec();
+        let mut rng = Rng::new(
+            seed ^ NEIGHBORHOOD_SALT ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        rng.shuffle(&mut ring);
+        // members is sorted (selection order); map each to its ring slot
+        let members = selected.to_vec();
+        let mut pos = vec![0usize; n];
+        for (slot, &cid) in ring.iter().enumerate() {
+            let i = members.binary_search(&cid).expect("ring is a permutation of members");
+            pos[i] = slot;
+        }
+        Self { members, ring, pos, half }
+    }
+
+    pub fn is_complete(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Uniform per-vertex degree (circulant graphs are regular).
+    pub fn degree(&self) -> usize {
+        if self.is_complete() {
+            self.members.len().saturating_sub(1)
+        } else {
+            2 * self.half
+        }
+    }
+
+    /// Eq. 4's `x` as seen by every endpoint and the server:
+    /// degree + 1.
+    pub fn participants(&self) -> usize {
+        self.degree() + 1
+    }
+
+    pub fn members(&self) -> &[u32] {
+        &self.members
+    }
+
+    /// Fill `out` with `cid`'s neighbors, ascending by id (the pinned
+    /// masker construction order — PERF.md reduction-order contract).
+    pub fn neighbors_into(&self, cid: u32, out: &mut Vec<u32>) {
+        out.clear();
+        let i = self
+            .members
+            .binary_search(&cid)
+            .unwrap_or_else(|_| panic!("client {cid} not in cohort"));
+        if self.is_complete() {
+            out.extend(self.members.iter().copied().filter(|&p| p != cid));
+            return;
+        }
+        let n = self.members.len();
+        let p = self.pos[i];
+        for d in 1..=self.half {
+            out.push(self.ring[(p + d) % n]);
+            out.push(self.ring[(p + n - d) % n]);
+        }
+        out.sort_unstable();
+    }
+
+    /// `cid`'s neighbors, ascending (allocating twin of
+    /// [`Self::neighbors_into`]).
+    pub fn neighbors_of(&self, cid: u32) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.degree());
+        self.neighbors_into(cid, &mut out);
+        out
+    }
+
+    /// Whether `(u, v)` is an edge (symmetric; false for self-pairs
+    /// and non-members).
+    pub fn are_neighbors(&self, u: u32, v: u32) -> bool {
+        if u == v {
+            return false;
+        }
+        let (Ok(i), Ok(j)) = (self.members.binary_search(&u), self.members.binary_search(&v))
+        else {
+            return false;
+        };
+        if self.is_complete() {
+            return true;
+        }
+        let n = self.members.len();
+        let d = (self.pos[i] + n - self.pos[j]) % n;
+        d.min(n - d) <= self.half
+    }
+}
+
+/// The paper-suggested degree target for a cohort of `n`:
+/// `⌈log₂ n⌉ + c` (connectivity with overwhelming probability needs
+/// Ω(log n); the slack `c` buys dropout tolerance).
+pub fn log_degree(n: usize, c: usize) -> usize {
+    (usize::BITS - n.max(1).leading_zeros()) as usize + c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cohort(n: u32) -> Vec<u32> {
+        (0..n).collect()
+    }
+
+    #[test]
+    fn complete_bypass_matches_all_pairs() {
+        for k in [0usize, 9, 10, 100] {
+            let sel = cohort(10);
+            // k ≥ n−1 (or 0) must yield the complete graph
+            if k == 0 || 2 * k.div_ceil(2) >= 9 {
+                let nb = Neighborhood::build(&sel, k, 7, 3);
+                assert!(nb.is_complete(), "k={k}");
+                assert_eq!(nb.degree(), 9);
+                assert_eq!(nb.participants(), 10);
+                assert_eq!(nb.neighbors_of(4), vec![0, 1, 2, 3, 5, 6, 7, 8, 9]);
+            }
+        }
+    }
+
+    #[test]
+    fn ring_degree_is_uniform_and_symmetric() {
+        let sel = cohort(17);
+        let nb = Neighborhood::build(&sel, 4, 11, 2);
+        assert!(!nb.is_complete());
+        assert_eq!(nb.degree(), 4);
+        assert_eq!(nb.participants(), 5);
+        for &c in &sel {
+            let peers = nb.neighbors_of(c);
+            assert_eq!(peers.len(), 4, "client {c}");
+            assert!(peers.windows(2).all(|w| w[0] < w[1]), "sorted ascending");
+            assert!(!peers.contains(&c), "no self edge");
+            for &p in &peers {
+                assert!(nb.are_neighbors(c, p));
+                assert!(nb.are_neighbors(p, c), "symmetric");
+                assert!(nb.neighbors_of(p).contains(&c), "edge listed both ends");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed_round_and_varies_by_round() {
+        let sel = cohort(64);
+        let a = Neighborhood::build(&sel, 8, 5, 1);
+        let b = Neighborhood::build(&sel, 8, 5, 1);
+        let c = Neighborhood::build(&sel, 8, 5, 2);
+        for &id in &sel {
+            assert_eq!(a.neighbors_of(id), b.neighbors_of(id));
+        }
+        assert!(
+            sel.iter().any(|&id| a.neighbors_of(id) != c.neighbors_of(id)),
+            "round must reshuffle the ring"
+        );
+    }
+
+    #[test]
+    fn works_on_non_contiguous_cohorts() {
+        let sel = vec![2u32, 5, 11, 12, 40, 41, 77, 90, 91];
+        let nb = Neighborhood::build(&sel, 4, 9, 0);
+        for &c in &sel {
+            let peers = nb.neighbors_of(c);
+            assert_eq!(peers.len(), 4);
+            assert!(peers.iter().all(|p| sel.contains(p)));
+        }
+        assert!(!nb.are_neighbors(2, 3), "non-member is never a neighbor");
+    }
+
+    #[test]
+    fn odd_k_rounds_up_to_even_degree() {
+        let nb = Neighborhood::build(&cohort(32), 5, 3, 0);
+        assert_eq!(nb.degree(), 6); // half = 3
+    }
+
+    #[test]
+    fn tiny_cohorts_are_complete() {
+        for n in [2u32, 3] {
+            let nb = Neighborhood::build(&cohort(n), 2, 1, 0);
+            assert!(nb.is_complete());
+        }
+    }
+
+    #[test]
+    fn log_degree_grows_with_n() {
+        assert_eq!(log_degree(1024, 2), 13);
+        assert!(log_degree(10_000, 2) >= 15);
+        assert!(log_degree(2, 0) >= 1);
+    }
+}

@@ -8,13 +8,16 @@
 //! *shares*; the server never touches a client's raw update or masker.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::sparse::codec::SparseVec;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 
+use super::bignum::BigUint;
 use super::dh::{DhKeyPair, DhParams};
 use super::mask::{filtered_stream_for_pair, MaskCache, MaskRange, PairwiseMasker};
+use super::neighborhood::Neighborhood;
 use super::shamir::{self, Share};
 use super::sparse_mask::{
     mask_sparsify, mask_sparsify_into, mask_sparsify_pooled_into, MaskScratch, MaskSparsifyConfig,
@@ -56,9 +59,22 @@ fn pair_key(shared_secret: &[u8]) -> [u8; 32] {
 }
 
 /// One federated participant's secagg state.
+///
+/// Pair keys are derived **lazily**: the client holds only its own DH
+/// keypair plus the fleet's public keys (`Arc`-shared), and derives
+/// the symmetric pair key for a peer on demand. Setup is therefore
+/// O(n) in the fleet size, and a round under a k-regular
+/// [`Neighborhood`] derives exactly the k keys it masks with — the
+/// eager all-pairs key table the complete-graph design materialized is
+/// gone (derivation is deterministic, so lazy ≡ eager key-for-key).
 pub struct SecAggClient {
     pub id: u32,
-    masker: PairwiseMasker,
+    params: Arc<DhParams>,
+    keypair: DhKeyPair,
+    /// Every participant's DH public key (index = client id).
+    publics: Arc<Vec<BigUint>>,
+    range: MaskRange,
+    cache: Option<MaskCache>,
     /// Shares this client holds of (owner, peer) pair keys.
     held_shares: HashMap<(u32, u32), Vec<Share>>,
     /// Eq. 4 mask keep-ratio numerator `k` (from [`SecAggConfig`]).
@@ -66,7 +82,20 @@ pub struct SecAggClient {
 }
 
 impl SecAggClient {
-    /// Build this round's masked sparse update.
+    /// Derive the symmetric pair key shared with `peer` (both ends
+    /// compute the same value from the DH agreement).
+    ///
+    /// In a real deployment this secret never leaves the two
+    /// endpoints; it is `pub` here because the simulation's benches and
+    /// property tests play both sides of the wire.
+    pub fn pair_key_with(&self, peer: u32) -> [u8; 32] {
+        assert_ne!(peer, self.id, "no pair key with self");
+        let secret =
+            self.keypair.shared_secret(&self.params, &self.publics[peer as usize]);
+        pair_key(&secret)
+    }
+
+    /// Build this round's masked sparse update (all-peers graph).
     pub fn build_update(
         &self,
         g: &[f32],
@@ -75,11 +104,11 @@ impl SecAggClient {
         participants: usize,
     ) -> MaskedUpdate {
         let cfg = MaskSparsifyConfig {
-            range: self.masker.range,
+            range: self.range,
             mask_ratio_k: self.mask_ratio_for(participants),
             participants,
         };
-        mask_sparsify(g, grad_keep, &self.masker, round, &cfg)
+        mask_sparsify(g, grad_keep, &self.masker_all(), round, &cfg)
     }
 
     fn mask_ratio_for(&self, _participants: usize) -> f64 {
@@ -87,14 +116,33 @@ impl SecAggClient {
     }
 
     pub fn n_peers(&self) -> usize {
-        self.masker.n_peers()
+        self.publics.len() - 1
     }
 
-    /// Masker restricted to the round's selected participant set
-    /// (exclusive of self). Needed because masks only cancel among the
-    /// clients that actually contribute this round.
+    /// Masker over the complete fleet (exclusive of self).
+    fn masker_all(&self) -> PairwiseMasker {
+        let all: Vec<u32> = (0..self.publics.len() as u32).collect();
+        self.masker_for(&all)
+    }
+
+    /// Masker over the round's participant set (exclusive of self) —
+    /// the full cohort, or this client's [`Neighborhood`] under a
+    /// k-regular topology. Masks only cancel among clients that mask
+    /// against each other, so the caller must hand every member of a
+    /// pair the same edge set. Peers are keyed lazily and ordered
+    /// ascending by id — the pinned masker construction order.
     pub fn masker_for(&self, selected: &[u32]) -> PairwiseMasker {
-        self.masker.restrict(selected)
+        let mut ids: Vec<u32> =
+            selected.iter().copied().filter(|&p| p != self.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        let peers: Vec<(u32, Vec<u8>)> =
+            ids.into_iter().map(|p| (p, self.pair_key_with(p).to_vec())).collect();
+        let mut masker = PairwiseMasker::new(self.id, peers, self.range);
+        if let Some(cache) = &self.cache {
+            masker.set_cache(cache.clone());
+        }
+        masker
     }
 
     /// Build an update against an explicit participant subset.
@@ -164,9 +212,10 @@ impl SecAggClient {
     }
 
     /// Attach a shared per-round mask-stream cache (simulation-only
-    /// speedup; see [`crate::secagg::mask::MaskCache`]).
+    /// speedup; see [`crate::secagg::mask::MaskCache`]). Every masker
+    /// subsequently built by [`Self::masker_for`] carries it.
     pub fn attach_cache(&mut self, cache: crate::secagg::mask::MaskCache) {
-        self.masker.set_cache(cache);
+        self.cache = Some(cache);
     }
 }
 
@@ -271,20 +320,72 @@ impl SecAggServer {
         recovered_keys: &HashMap<(u32, u32), [u8; 32]>,
         participants: usize,
     ) {
+        let n = acc.len();
+        self.cancel_dead_masks_pooled_sink(
+            pool,
+            cache,
+            n,
+            round,
+            survivors,
+            dead,
+            recovered_keys,
+            participants,
+            None,
+            |i, x| acc[i as usize] -= x,
+        );
+    }
+
+    /// [`Self::cancel_dead_masks_pooled`] generalized two ways:
+    ///
+    /// * the subtraction goes through `sub(i, x)` (contract:
+    ///   `acc[i] -= x`), so a sharded accumulator can route each
+    ///   position to its owning shard without this method knowing the
+    ///   storage layout — `x` is the already-signed entry, so the f32
+    ///   op per position is identical to the slice path;
+    /// * an optional [`Neighborhood`] restricts the pair walk to the
+    ///   dead clients' edges: a dead client only ever masked against
+    ///   its neighbors, so recovery work is O(|dead| · degree), not
+    ///   O(|dead| · |survivors|). `None` (or a complete topology) is
+    ///   the exact pre-neighborhood behavior — every skipped pair is a
+    ///   pair with no mask to cancel, and every kept pair must have a
+    ///   recovered key (missing ⇒ panic, as before).
+    ///
+    /// The reduction order is unchanged: survivors-outer, dead-inner
+    /// (non-edges skipped), positions ascending within each stream.
+    #[allow(clippy::too_many_arguments)]
+    pub fn cancel_dead_masks_pooled_sink<F: FnMut(u32, f32)>(
+        &self,
+        pool: &ThreadPool,
+        cache: Option<&MaskCache>,
+        n: usize,
+        round: u64,
+        survivors: &[u32],
+        dead: &[u32],
+        recovered_keys: &HashMap<(u32, u32), [u8; 32]>,
+        participants: usize,
+        topology: Option<&Neighborhood>,
+        mut sub: F,
+    ) {
         if dead.is_empty() {
             return;
         }
-        let n = acc.len();
         let sigma = self.range.sigma(self.mask_ratio_k, participants);
-        // generation fan-out: one task per (survivor, dead) pair
+        // generation fan-out: one task per (survivor, dead) edge
+        let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(survivors.len() * dead.len());
         let mut tasks: Vec<(u32, u32, Vec<u8>)> =
             Vec::with_capacity(survivors.len() * dead.len());
         for &v in survivors {
             for &u in dead {
+                if let Some(t) = topology {
+                    if !t.are_neighbors(v, u) {
+                        continue;
+                    }
+                }
                 let key = recovered_keys
                     .get(&(v, u))
                     .or_else(|| recovered_keys.get(&(u, v)))
                     .expect("missing recovered pair key");
+                pairs.push((v, u));
                 tasks.push((v, u, key.to_vec()));
             }
         }
@@ -295,15 +396,11 @@ impl SecAggServer {
         });
         // fixed serial reduction: same (survivor, dead) nesting as the
         // dense reference, ascending positions within each stream
-        let mut streams = streams.iter();
-        for &v in survivors {
-            for &u in dead {
-                let stream = streams.next().expect("one stream per pair");
-                let sign = if v < u { 1.0f32 } else { -1.0 };
-                for &(i, val) in &stream.entries {
-                    if val != 0.0 {
-                        acc[i as usize] -= sign * val;
-                    }
+        for (&(v, u), stream) in pairs.iter().zip(&streams) {
+            let sign = if v < u { 1.0f32 } else { -1.0 };
+            for &(i, val) in &stream.entries {
+                if val != 0.0 {
+                    sub(i, sign * val);
                 }
             }
         }
@@ -343,9 +440,30 @@ pub fn recover_pair_keys(
     survivors: &[u32],
     dead: &[u32],
 ) -> Option<HashMap<(u32, u32), [u8; 32]>> {
+    recover_pair_keys_in(clients, server, survivors, dead, None)
+}
+
+/// [`recover_pair_keys`] restricted to a [`Neighborhood`]: a dead
+/// client under a k-regular topology only ever masked against its
+/// neighbors, so only the `(survivor, dead)` pairs that are *edges*
+/// need their keys reconstructed — recovery work proportional to one
+/// neighborhood, not the whole cohort. `None` topology (or a complete
+/// one) is the exact all-pairs behavior.
+pub fn recover_pair_keys_in(
+    clients: &[SecAggClient],
+    server: &SecAggServer,
+    survivors: &[u32],
+    dead: &[u32],
+    topology: Option<&Neighborhood>,
+) -> Option<HashMap<(u32, u32), [u8; 32]>> {
     let mut recovered = HashMap::new();
     for &u in dead {
         for &v in survivors {
+            if let Some(t) = topology {
+                if !t.are_neighbors(u, v) {
+                    continue;
+                }
+            }
             let pair = if v < u { (v, u) } else { (u, v) };
             let share_sets: Vec<Vec<Share>> = survivors
                 .iter()
@@ -361,30 +479,27 @@ pub fn recover_pair_keys(
     Some(recovered)
 }
 
-/// Run the full setup phase: DH key generation + all-pairs agreement +
-/// Shamir sharing of pair keys. Returns the client fleet and server.
+/// Run the full setup phase: DH key generation + (optionally) Shamir
+/// sharing of pair keys. Returns the client fleet and server.
+///
+/// Pair keys themselves are **not** materialized here — clients derive
+/// them lazily from the shared public-key vector ([`SecAggClient`]),
+/// so with `share_keys: false` setup is O(n). The Shamir loop below is
+/// the one remaining all-pairs walk (O(n³) share material); it only
+/// runs under failure injection, and replacing it with per-round
+/// neighborhood-local share re-keying is tracked as future work in the
+/// ROADMAP.
 pub fn full_setup(n: u32, seed: u64, cfg: &SecAggConfig) -> (Vec<SecAggClient>, SecAggServer) {
     assert!(n >= 2, "secagg needs ≥2 participants");
-    let params = if cfg.full_dh {
+    let params = Arc::new(if cfg.full_dh {
         DhParams::rfc3526_1536()
     } else {
         DhParams::toy()
-    };
+    });
     let mut rng = Rng::new(seed);
     let keypairs: Vec<DhKeyPair> = (0..n).map(|_| DhKeyPair::generate(&params, &mut rng)).collect();
-
-    // all-pairs shared secrets → pair keys (both sides derive the same)
-    let mut keys: HashMap<(u32, u32), [u8; 32]> = HashMap::new();
-    for u in 0..n {
-        for v in (u + 1)..n {
-            let secret = keypairs[u as usize].shared_secret(&params, &keypairs[v as usize].public);
-            keys.insert((u, v), pair_key(&secret));
-        }
-    }
-    let key_of = |a: u32, b: u32| -> [u8; 32] {
-        let (lo, hi) = if a < b { (a, b) } else { (b, a) };
-        keys[&(lo, hi)]
-    };
+    let publics: Arc<Vec<BigUint>> =
+        Arc::new(keypairs.iter().map(|kp| kp.public.clone()).collect());
 
     // Shamir-share every pair key among all OTHER clients: share j of
     // pair (u,v) goes to client j (j ≠ u, j ≠ v gets a share too —
@@ -394,7 +509,9 @@ pub fn full_setup(n: u32, seed: u64, cfg: &SecAggConfig) -> (Vec<SecAggClient>, 
     if cfg.share_keys {
         for u in 0..n {
             for v in (u + 1)..n {
-                let k = key_of(u, v);
+                let secret =
+                    keypairs[u as usize].shared_secret(&params, &publics[v as usize]);
+                let k = pair_key(&secret);
                 let limb_shares = shamir::split_seed(&k, n as usize, t, &mut rng);
                 // client j's share vector = j-th share of each limb
                 for j in 0..n as usize {
@@ -405,18 +522,18 @@ pub fn full_setup(n: u32, seed: u64, cfg: &SecAggConfig) -> (Vec<SecAggClient>, 
         }
     }
 
-    let clients = (0..n)
-        .map(|id| {
-            let peers: Vec<(u32, Vec<u8>)> = (0..n)
-                .filter(|&p| p != id)
-                .map(|p| (p, key_of(id, p).to_vec()))
-                .collect();
-            SecAggClient {
-                id,
-                masker: PairwiseMasker::new(id, peers, cfg.range),
-                held_shares: std::mem::take(&mut held[id as usize]),
-                mask_ratio_k: cfg.mask_ratio_k,
-            }
+    let clients = keypairs
+        .into_iter()
+        .enumerate()
+        .map(|(id, keypair)| SecAggClient {
+            id: id as u32,
+            params: Arc::clone(&params),
+            keypair,
+            publics: Arc::clone(&publics),
+            range: cfg.range,
+            cache: None,
+            held_shares: std::mem::take(&mut held[id]),
+            mask_ratio_k: cfg.mask_ratio_k,
         })
         .collect();
 
@@ -641,9 +758,27 @@ mod tests {
         let cfg = SecAggConfig::default();
         let (c1, _) = full_setup(3, 42, &cfg);
         let (c2, _) = full_setup(3, 42, &cfg);
-        let m1 = c1[0].masker.raw_pair_mask(1, 0, 16);
-        let m2 = c2[0].masker.raw_pair_mask(1, 0, 16);
+        let m1 = c1[0].masker_for(&[0, 1, 2]).raw_pair_mask(1, 0, 16);
+        let m2 = c2[0].masker_for(&[0, 1, 2]).raw_pair_mask(1, 0, 16);
         assert_eq!(m1, m2);
+    }
+
+    #[test]
+    fn lazy_pair_keys_agree_across_endpoints() {
+        // both ends of every pair must derive the same key on demand —
+        // the property the deleted eager all-pairs table guaranteed by
+        // construction, now guaranteed by DH agreement
+        let cfg = SecAggConfig { share_keys: false, ..Default::default() };
+        let (clients, _) = full_setup(5, 77, &cfg);
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                assert_eq!(
+                    clients[u as usize].pair_key_with(v),
+                    clients[v as usize].pair_key_with(u),
+                    "pair ({u},{v})"
+                );
+            }
+        }
     }
 
     #[test]

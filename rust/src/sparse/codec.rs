@@ -91,35 +91,63 @@ impl SparseVec {
 
     /// Decode [`encode`](Self::encode) output.
     pub fn decode(bytes: &[u8]) -> Result<Self, CodecError> {
+        let mut out = Self::default();
+        Self::decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`decode`](Self::decode) into a caller-owned vector, reusing its
+    /// index/value buffers — the coordinator's streaming-Collect path,
+    /// which decodes every uplink into one warm scratch `SparseVec`
+    /// instead of allocating per payload. On error `out` is left
+    /// cleared, never partially decoded.
+    pub fn decode_into(bytes: &[u8], out: &mut SparseVec) -> Result<(), CodecError> {
+        out.n = 0;
+        out.indices.clear();
+        out.values.clear();
         if bytes.len() < 8 {
             return Err(CodecError::Truncated);
         }
         let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
         let nnz = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
         let mut pos = 8usize;
-        let mut indices = Vec::with_capacity(nnz);
+        out.indices.reserve(nnz);
         let mut prev = 0u32;
         for _ in 0..nnz {
-            let (delta, used) = read_varint(&bytes[pos..]).ok_or(CodecError::Truncated)?;
+            let (delta, used) = match read_varint(&bytes[pos..]) {
+                Some(x) => x,
+                None => {
+                    out.indices.clear();
+                    return Err(CodecError::Truncated);
+                }
+            };
             pos += used;
-            let idx = prev
-                .checked_add(delta as u32)
-                .ok_or(CodecError::Corrupt("index overflow"))?;
-            if idx >= n {
-                return Err(CodecError::Corrupt("index out of range"));
-            }
-            indices.push(idx);
+            let idx = match prev.checked_add(delta as u32) {
+                Some(i) if i < n => i,
+                Some(_) => {
+                    out.indices.clear();
+                    return Err(CodecError::Corrupt("index out of range"));
+                }
+                None => {
+                    out.indices.clear();
+                    return Err(CodecError::Corrupt("index overflow"));
+                }
+            };
+            out.indices.push(idx);
             prev = idx;
         }
         if bytes.len() < pos + nnz * 4 {
+            out.indices.clear();
             return Err(CodecError::Truncated);
         }
-        let mut values = Vec::with_capacity(nnz);
+        out.values.reserve(nnz);
         for i in 0..nnz {
             let off = pos + 4 * i;
-            values.push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
+            out.values
+                .push(f32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()));
         }
-        Ok(Self { n, indices, values })
+        out.n = n;
+        Ok(())
     }
 
     /// Deflate-compressed wire encoding (the paper's "subsequent
@@ -254,6 +282,28 @@ mod tests {
         let mut acc = vec![1.0f32; 4];
         sv.add_into(&mut acc);
         assert_eq!(acc, vec![1.0, 1.5, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn decode_into_reuses_buffers_and_clears_on_error() {
+        let a = random_sparse(11, 10_000, 0.02);
+        let b = random_sparse(12, 10_000, 0.01);
+        let mut scratch = SparseVec::default();
+        SparseVec::decode_into(&a.encode(), &mut scratch).unwrap();
+        assert_eq!(scratch, a);
+        let cap = scratch.indices.capacity();
+        // smaller payload into the same scratch: no regrowth
+        SparseVec::decode_into(&b.encode(), &mut scratch).unwrap();
+        assert_eq!(scratch, b);
+        assert_eq!(scratch.indices.capacity(), cap);
+        // a failed decode must not leave stale partial contents behind
+        let bytes = a.encode();
+        assert_eq!(
+            SparseVec::decode_into(&bytes[..bytes.len() - 2], &mut scratch),
+            Err(CodecError::Truncated)
+        );
+        assert_eq!(scratch.nnz(), 0);
+        assert_eq!(scratch.n, 0);
     }
 
     #[test]

@@ -48,6 +48,22 @@ impl MomentumCorrector {
         }
     }
 
+    /// [`Self::correct_in_place`] in double-buffer form: advance
+    /// `prev`'s velocity into `self` (leaving `prev` untouched — a
+    /// rollback snapshot may share it) while writing the corrected
+    /// update back into `g`. Bitwise-identical math to the in-place
+    /// path (`m·u + x` per position, then `g` becomes the velocity);
+    /// `self` adapts its size and coefficient to `prev`, so any
+    /// recycled corrector works as the write target.
+    pub fn correct_from(&mut self, prev: &MomentumCorrector, g: &mut [f32]) {
+        assert_eq!(g.len(), prev.velocity.len(), "velocity size mismatch");
+        self.momentum = prev.momentum;
+        self.velocity.clear();
+        self.velocity
+            .extend(prev.velocity.iter().zip(g.iter()).map(|(&u, &x)| prev.momentum * u + x));
+        g.copy_from_slice(&self.velocity);
+    }
+
     /// DGC "momentum factor masking": zero the velocity at positions
     /// that shipped this round (they start fresh).
     pub fn mask_sent(&mut self, sparse: &[f32]) {
@@ -97,6 +113,42 @@ mod tests {
         let g = vec![0.1f32, -0.5, 2.0];
         assert_eq!(mc.correct(&g), g);
         assert_eq!(mc.correct(&g), g);
+    }
+
+    #[test]
+    fn correct_from_matches_in_place_bitwise() {
+        let mut rng_state = 0x9e3779b97f4a7c15u64;
+        let mut next = move || {
+            rng_state = rng_state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((rng_state >> 40) as f32 / (1u32 << 24) as f32) - 0.5
+        };
+        let mut serial = MomentumCorrector::new(64, 0.7);
+        let mut prev = MomentumCorrector::new(64, 0.7);
+        // the write target starts deliberately mis-sized: correct_from
+        // must adapt it
+        let mut fresh = MomentumCorrector::new(3, 0.1);
+        for _ in 0..5 {
+            let g: Vec<f32> = (0..64).map(|_| next()).collect();
+            let mut a = g.clone();
+            serial.correct_in_place(&mut a);
+            let mut b = g.clone();
+            fresh.correct_from(&prev, &mut b);
+            assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
+            // the double-buffer swap the round engine performs
+            std::mem::swap(&mut prev, &mut fresh);
+        }
+        assert_eq!(prev.momentum, 0.7);
+    }
+
+    #[test]
+    fn correct_from_leaves_prev_untouched() {
+        let mut prev = MomentumCorrector::new(2, 0.5);
+        prev.correct(&[1.0, 2.0]);
+        let norm_before = prev.velocity_norm();
+        let mut fresh = MomentumCorrector::new(2, 0.5);
+        fresh.correct_from(&prev, &mut [3.0, 3.0]);
+        assert_eq!(prev.velocity_norm(), norm_before);
+        assert!(fresh.velocity_norm() > norm_before);
     }
 
     #[test]

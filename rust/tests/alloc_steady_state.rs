@@ -161,9 +161,13 @@ fn steady_state_round_allocates_nothing_model_sized() {
         // and (secure) Shamir dead-mask recovery every round; with the
         // Arc-shared residual + recycled spare write target none of
         // that may copy or allocate anything model-sized either
+        // momentum on: the DGC velocity is model-sized state that the
+        // snapshot/rollback cycle used to deep-copy — with the Arc +
+        // spare/retired double buffer it must be a refcount bump
         let mut icfg = cfg(secure);
         icfg.dropout_prob = 0.25;
         icfg.min_survivors = 2;
+        icfg.momentum = 0.9;
         let mut trainer = Trainer::new(icfg).unwrap();
         let mut failures = 0usize;
         // two warm-up rounds, like (a)/(b): the double-buffer
