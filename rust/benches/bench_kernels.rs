@@ -37,6 +37,33 @@ fn main() {
         });
     }
 
+    // -- backward-input kernel: gather vs scalar sweep ---------------
+    // (the mnist_mlp hidden layer, the only backward-input site in the
+    // 159k model: dprev = delta · Wᵀ at d_in=200, d_out=10, batch 32 —
+    // the stride-d_out gather branch vs the scalar per-cell dots)
+    {
+        let (d_in, d_out) = (200usize, 10usize);
+        let mut rng = Rng::new(0xb1);
+        let a_prev: Vec<f32> = (0..batch * d_in)
+            .map(|_| rng.normal_f32(1.0).max(0.0)) // ~half dead, ReLU-like
+            .collect();
+        let delta: Vec<f32> = (0..batch * d_out).map(|_| rng.normal_f32(0.1)).collect();
+        let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal_f32(0.05)).collect();
+        let mut dprev = vec![0f32; batch * d_in];
+        for (label, use_simd) in [("simd", true), ("scalar", false)] {
+            b.bench_throughput(
+                &format!("backward_input/grad159k/{label}"),
+                (batch * d_in * d_out) as u64,
+                || {
+                    fedsparse::runtime::bench_dense_backward_input(
+                        &a_prev, &delta, &w, &mut dprev, batch, d_in, d_out, use_simd,
+                    );
+                    black_box(&dprev);
+                },
+            );
+        }
+    }
+
     // -- ChaCha keystream: quad-block vs single-block dispatch -------
     let key = [0x42u8; 32];
     for (label, quad) in [("quad", true), ("scalar", false)] {

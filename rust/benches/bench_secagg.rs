@@ -5,7 +5,9 @@
 use std::collections::HashMap;
 
 use fedsparse::secagg::mask::MaskRange;
+use fedsparse::secagg::neighborhood::Neighborhood;
 use fedsparse::secagg::protocol::{full_setup, SecAggConfig};
+use fedsparse::secagg::rekey::RekeyRegistry;
 use fedsparse::sparse::topk::threshold_for_topk_abs;
 use fedsparse::util::bench::{black_box, Bench};
 use fedsparse::util::pool::ThreadPool;
@@ -67,6 +69,39 @@ fn main() {
     b.bench_throughput("client/build_update/159k", n as u64, || {
         black_box(clients[0].build_update(&g, &keep, 5, x));
     });
+
+    // per-round neighborhood-local re-keying at 10k clients, degree 16
+    // (O(n·k): 160k shares/round). The old all-pairs setup walk is
+    // O(n³) field evaluations — infeasible at 10k — so the honest
+    // contrast runs both paths at n = 64 and lets the asymptotics
+    // speak; round advances per iteration so every owner re-shares.
+    {
+        let big = 10_000u32;
+        let cfg = SecAggConfig { share_keys: false, ..Default::default() };
+        let (clients10k, _server) = full_setup(big, 4, &cfg);
+        let sel: Vec<u32> = (0..big).collect();
+        let mut reg = RekeyRegistry::new(3);
+        let mut round = 0u64;
+        b.bench("rekey10k/per_round_10k_deg16", || {
+            round += 1;
+            let topo = Neighborhood::build(&sel, 16, 5, round);
+            black_box(reg.rekey_for(&clients10k, &topo, round, 5));
+        });
+
+        let (clients64, _s) = full_setup(64, 4, &cfg);
+        let sel64: Vec<u32> = (0..64u32).collect();
+        let mut reg64 = RekeyRegistry::new(3);
+        let mut round64 = 0u64;
+        b.bench("rekey10k/per_round_64_deg16", || {
+            round64 += 1;
+            let topo = Neighborhood::build(&sel64, 16, 5, round64);
+            black_box(reg64.rekey_for(&clients64, &topo, round64, 5));
+        });
+        b.bench("rekey10k/allpairs_setup_64", || {
+            let cfg = SecAggConfig { share_keys: true, ..Default::default() };
+            black_box(full_setup(64, 4, &cfg));
+        });
+    }
 
     // server aggregation of x masked payloads
     let payloads: Vec<_> = clients

@@ -67,6 +67,7 @@ use crate::models::params::ParamVector;
 use crate::runtime::{ModelRunner, Workspace};
 use crate::secagg::neighborhood::Neighborhood;
 use crate::secagg::protocol::{recover_pair_keys_in, SecAggClient, SecAggServer};
+use crate::secagg::rekey::recover_pair_keys_rekeyed;
 use crate::secagg::sparse_mask::{MaskScratch, MaskedUpdate};
 use crate::sparse::codec::SparseVec;
 use crate::sparse::dynamic::DynamicRate;
@@ -770,6 +771,14 @@ impl Trainer {
         ));
         // previous round's pair streams are dead weight — drop them
         self.mask_cache.lock().unwrap().clear();
+        // per-round neighborhood-local Shamir re-keying (k-regular
+        // secure runs with failure injection): before any masks are
+        // built, each cohort member's exponent shares move to exactly
+        // its round neighbors; owners whose neighborhood is unchanged
+        // carry their existing shares
+        if let (Some(sec), Some(reg)) = (self.secagg.clone(), self.rekey.as_mut()) {
+            reg.rekey_for(&sec.0, &topology, round, self.cfg.seed);
+        }
         Cohort { round, selected, topology }
     }
 
@@ -902,13 +911,22 @@ impl Trainer {
                 // neighborhood (complete topology → the full cohort,
                 // the exact pre-neighborhood behavior)
                 let topo = (!cohort.topology.is_complete()).then(|| &*cohort.topology);
-                let recovered = recover_pair_keys_in(
-                    &sec.0,
-                    &sec.1,
-                    &survivor_ids,
-                    &collected.dead,
-                    topo,
-                )?;
+                let recovered = if let Some(reg) = self.rekey.as_ref() {
+                    // re-keyed material: a dead client's shares live
+                    // only at its round neighbors; reconstruct its DH
+                    // exponent and rederive the pair keys (the same
+                    // bytes `pair_key_with` produces, so cancellation
+                    // below is unchanged)
+                    recover_pair_keys_rekeyed(
+                        reg,
+                        &sec.1,
+                        &survivor_ids,
+                        &collected.dead,
+                        &cohort.topology,
+                    )?
+                } else {
+                    recover_pair_keys_in(&sec.0, &sec.1, &survivor_ids, &collected.dead, topo)?
+                };
                 recovered_pairs = recovered.len();
                 let Trainer { server_ws, client_pool, mask_cache, .. } = self;
                 let sharded = &mut server_ws.sharded;

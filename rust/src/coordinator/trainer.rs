@@ -83,6 +83,11 @@ pub struct Trainer {
     /// twin of the client workspaces (see
     /// [`super::round::ServerWorkspace`]).
     pub(crate) server_ws: super::round::ServerWorkspace,
+    /// Per-round Shamir re-keying registry
+    /// ([`crate::secagg::rekey`]) — present for k-regular secure runs
+    /// with failure injection; `neighbors_k = 0` runs keep the one-off
+    /// all-pairs setup and leave this `None`.
+    pub(crate) rekey: Option<crate::secagg::rekey::RekeyRegistry>,
 }
 
 impl Trainer {
@@ -139,10 +144,12 @@ impl Trainer {
                 mask_ratio_k: cfg.mask_ratio_k,
                 // Shamir share material is only needed when clients can
                 // vanish mid-round (dropout/straggler injection) — the
-                // paper's §5 experiments assume full delivery, and the
-                // O(n³) share distribution is priced for per-round
-                // cohorts, not huge fleets.
-                share_keys: cfg.failure_injection(),
+                // paper's §5 experiments assume full delivery. Even
+                // then, the one-off O(n³) all-pairs distribution is
+                // only for complete-graph (neighbors_k = 0) runs;
+                // k-regular runs re-share per round through the rekey
+                // registry instead.
+                share_keys: cfg.failure_injection() && cfg.neighbors_k == 0,
                 ..Default::default()
             };
             let (mut sec_clients, server) = full_setup(cfg.clients as u32, cfg.seed ^ 0x5eca, &sc);
@@ -154,6 +161,15 @@ impl Trainer {
             Some(Arc::new((sec_clients, server)))
         } else {
             None
+        };
+        // k-regular secure runs with dropout re-share Shamir material
+        // per round against the round's neighborhoods (Select phase)
+        // instead of the one-off all-pairs walk above
+        let rekey = match (&secagg, cfg.neighbors_k > 0 && cfg.failure_injection()) {
+            (Some(sec), true) => {
+                Some(crate::secagg::rekey::RekeyRegistry::new(sec.1.share_threshold))
+            }
+            _ => None,
         };
 
         let transport = Transport::new(
@@ -192,6 +208,7 @@ impl Trainer {
             mask_cache,
             client_workspaces: Default::default(),
             server_ws: Default::default(),
+            rekey,
         })
     }
 

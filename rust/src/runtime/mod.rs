@@ -27,6 +27,8 @@ pub mod executor;
 pub mod runner;
 
 pub use backend::{Backend, BackendKind, ModelRunner};
+#[doc(hidden)]
+pub use native::bench_dense_backward_input;
 pub use native::{NativeBackend, Workspace};
 
 #[cfg(feature = "pjrt")]

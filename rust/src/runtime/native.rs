@@ -36,10 +36,13 @@
 //! non-fused mul + add per `d_in`/row step), so the SIMD and scalar
 //! paths are bitwise interchangeable (`FEDSPARSE_NO_SIMD=1` forces
 //! scalar; `blocked_grad_bitwise_matches_scalar_reference` pins both).
-//! The input-delta kernel stays scalar: its per-`(row, i)` accumulator
-//! is a *dot product over `d_out`* — lane-parallelizing that sum would
-//! split it into partial sums and reorder the f32 adds, which is
-//! exactly the re-goldening event the contract forbids.
+//! The input-delta kernel's per-`(row, i)` accumulator is a *dot
+//! product over `d_out`* — lane-parallelizing that sum would split it
+//! into partial sums and reorder the f32 adds, which is exactly the
+//! re-goldening event the contract forbids. Its vector branch instead
+//! vectorizes across eight consecutive `i` via an AVX2 stride-`d_out`
+//! gather (`dense_backward_input` docs); each lane still runs the
+//! scalar add sequence, and non-AVX2 builds keep the scalar sweep.
 //!
 //! All buffers live in a reusable [`Workspace`], so steady-state
 //! `grad_into`/`eval_into` calls allocate nothing.
@@ -214,14 +217,20 @@ fn dense_backward_params(
 }
 
 /// Input delta of one layer: `dprev[r, i] = delta[r, :]·W[i, :]` where
-/// the ReLU was live (`a_prev[r, i] > 0`), else 0. Each weight row is
-/// loaded once per row block; every dot product accumulates over
-/// ascending `d_out`, like the scalar sweep.
+/// the ReLU was live (`a_prev[r, i] > 0`), else 0. Every dot product
+/// accumulates over ascending `d_out`, like the scalar sweep.
 ///
-/// Deliberately scalar: per `(r, i)` the accumulator is a single f32
-/// dot over `d_out` — lane-splitting that reduction would reorder its
-/// adds and re-golden every pinned test (module docs). Vectorizing
-/// *across* `i` would need stride-`d_out` gathers, which SSE2 lacks.
+/// The vector branch keeps each per-`(r, i)` accumulator a *single*
+/// f32 lane (never lane-splitting the `d_out` reduction, which would
+/// reorder its adds and re-golden every pinned test) and instead
+/// vectorizes **across** eight consecutive `i`: one AVX2 `vgatherdps`
+/// pulls the stride-`d_out` column slice `W[i..i+8, o]`, which the
+/// row block shares, and each lane does `acc += delta[r, o] · w` for
+/// ascending `o` — the scalar op sequence exactly. Builds without a
+/// hardware gather (`F32x8::HAS_GATHER` false: SSE2 baseline, NEON,
+/// portable) and `FEDSPARSE_NO_SIMD=1` take the scalar sweep, which
+/// remains the parity reference.
+#[allow(clippy::too_many_arguments)]
 fn dense_backward_input(
     a_prev: &[f32],
     delta: &[f32],
@@ -230,15 +239,64 @@ fn dense_backward_input(
     batch: usize,
     d_in: usize,
     d_out: usize,
+    use_simd: bool,
 ) {
     debug_assert_eq!(a_prev.len(), batch * d_in);
     debug_assert_eq!(delta.len(), batch * d_out);
     debug_assert_eq!(dprev.len(), batch * d_in);
     dprev.fill(0.0);
+    let gather = use_simd && simd::F32x8::HAS_GATHER && d_in >= 8;
     let mut r0 = 0;
     while r0 < batch {
         let rb = (batch - r0).min(ROW_BLOCK);
-        for i in 0..d_in {
+        let mut i0 = 0;
+        if gather {
+            let idx = simd::GatherIdx::stride(d_out);
+            while i0 + 8 <= d_in {
+                // ReLU liveness per (row, lane); dead lanes are
+                // computed and discarded at the store (the gather loads
+                // stay in-bounds regardless: (i0+7)·d_out + o < len)
+                let mut live = [[false; 8]; ROW_BLOCK];
+                let mut row_any = [false; ROW_BLOCK];
+                let mut any = false;
+                for r in 0..rb {
+                    for (l, lv) in live[r].iter_mut().enumerate() {
+                        // a_prev > 0 ⟺ pre-activation > 0 (ReLU stored)
+                        *lv = a_prev[(r0 + r) * d_in + i0 + l] > 0.0;
+                        row_any[r] |= *lv;
+                    }
+                    any |= row_any[r];
+                }
+                if any {
+                    let mut acc = [simd::F32x8::splat(0.0); ROW_BLOCK];
+                    for o in 0..d_out {
+                        // W[i0..i0+8, o], shared by the whole row block
+                        let wv = simd::F32x8::gather(&w[i0 * d_out + o..], idx);
+                        for r in 0..rb {
+                            if row_any[r] {
+                                let dv = simd::F32x8::splat(delta[(r0 + r) * d_out + o]);
+                                acc[r] = acc[r].add(dv.mul(wv));
+                            }
+                        }
+                    }
+                    let mut out = [0f32; 8];
+                    for r in 0..rb {
+                        if row_any[r] {
+                            acc[r].store(&mut out);
+                            for (l, &lv) in live[r].iter().enumerate() {
+                                if lv {
+                                    dprev[(r0 + r) * d_in + i0 + l] = out[l];
+                                }
+                            }
+                        }
+                    }
+                }
+                i0 += 8;
+            }
+        }
+        // scalar sweep: the whole range when gather is off, the
+        // `d_in % 8` tail when it is on
+        for i in i0..d_in {
             let mut live = [false; ROW_BLOCK];
             let mut any = false;
             for r in 0..rb {
@@ -264,6 +322,24 @@ fn dense_backward_input(
         }
         r0 += rb;
     }
+}
+
+/// Bench-only entry to the backward-input kernel (`benches/
+/// bench_kernels.rs` times the gather vs. scalar branches directly);
+/// not part of the backend API.
+#[doc(hidden)]
+#[allow(clippy::too_many_arguments)]
+pub fn bench_dense_backward_input(
+    a_prev: &[f32],
+    delta: &[f32],
+    w: &[f32],
+    dprev: &mut [f32],
+    batch: usize,
+    d_in: usize,
+    d_out: usize,
+    use_simd: bool,
+) {
+    dense_backward_input(a_prev, delta, w, dprev, batch, d_in, d_out, use_simd);
 }
 
 /// MLP forward/backward on flat parameter vectors.
@@ -465,6 +541,7 @@ impl Backend for NativeBackend {
                         b,
                         d_in,
                         d_out,
+                        self.use_simd,
                     );
                 }
             }
@@ -774,6 +851,56 @@ mod tests {
                             meta.name,
                             grads_new[i],
                             grads_ref[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_backward_input_bitwise_matches_scalar_at_remainder_widths() {
+        // The gather branch vectorizes across eight consecutive `i`,
+        // so the kernel-level remainder axis is d_in: 7/8/9 pin
+        // below/at/above one gather group, 65 a full tile run plus 1.
+        // Batches 1/3/4/17 cover the ROW_BLOCK remainders. On AVX2
+        // builds use_simd=true takes the real vgatherdps path; on
+        // others HAS_GATHER routes both calls through the scalar
+        // sweep, which must be equal trivially. ReLU-dead cells
+        // (a_prev ≤ 0) must stay exactly 0 in both branches.
+        let mut rng = Rng::new(0x9a77);
+        for &d_in in &[7usize, 8, 9, 65] {
+            for &d_out in &[3usize, 9] {
+                for &batch in &[1usize, 3, 4, 17] {
+                    let a_prev: Vec<f32> = (0..batch * d_in)
+                        .map(|_| {
+                            // ~1/3 dead lanes: zeros and negatives both
+                            // count as ReLU-dead
+                            match rng.below(3) {
+                                0 => 0.0,
+                                1 => -rng.normal_f32(1.0).abs(),
+                                _ => rng.normal_f32(1.0).abs() + 1e-3,
+                            }
+                        })
+                        .collect();
+                    let delta: Vec<f32> =
+                        (0..batch * d_out).map(|_| rng.normal_f32(0.5)).collect();
+                    let w: Vec<f32> = (0..d_in * d_out).map(|_| rng.normal_f32(0.3)).collect();
+                    let mut out_simd = vec![f32::NAN; batch * d_in];
+                    let mut out_scalar = vec![f32::NAN; batch * d_in];
+                    dense_backward_input(
+                        &a_prev, &delta, &w, &mut out_simd, batch, d_in, d_out, true,
+                    );
+                    dense_backward_input(
+                        &a_prev, &delta, &w, &mut out_scalar, batch, d_in, d_out, false,
+                    );
+                    for i in 0..out_simd.len() {
+                        assert_eq!(
+                            out_simd[i].to_bits(),
+                            out_scalar[i].to_bits(),
+                            "d_in={d_in} d_out={d_out} batch={batch} cell={i}: {} vs {}",
+                            out_simd[i],
+                            out_scalar[i]
                         );
                     }
                 }

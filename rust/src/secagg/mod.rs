@@ -11,6 +11,9 @@
 //!   sparsified-secagg graph replacing the complete pair graph)
 //! * [`shamir`] — Shamir secret sharing (Bonawitz-style dropout
 //!   recovery, the paper's SA baseline substrate)
+//! * [`rekey`] — per-round neighborhood-local Shamir re-keying of DH
+//!   exponents (O(n·k) share material; secrets only at current
+//!   neighbors)
 //! * [`protocol`] — client/server round protocol gluing it together
 
 pub mod bignum;
@@ -19,6 +22,7 @@ pub mod kdf;
 pub mod mask;
 pub mod neighborhood;
 pub mod protocol;
+pub mod rekey;
 pub mod shamir;
 pub mod sparse_mask;
 
@@ -26,6 +30,7 @@ pub use dh::{DhKeyPair, DhParams};
 pub use mask::PairwiseMasker;
 pub use neighborhood::Neighborhood;
 pub use protocol::{recover_pair_keys, recover_pair_keys_in, SecAggClient, SecAggConfig, SecAggServer};
+pub use rekey::{recover_pair_keys_rekeyed, RekeyRegistry, RekeyStats};
 pub use sparse_mask::{
     mask_sparsify, mask_sparsify_into, CaseCensus, MaskScratch, MaskSparsifyConfig, MaskedUpdate,
 };

@@ -4,11 +4,17 @@
 //!
 //! The complete pair-mask graph costs O(cohort²) pair streams per
 //! round; at 10k+ clients that wall dominates everything. This module
-//! replaces it with a **circulant ring**: the round's cohort is
-//! shuffled by a PRNG seeded from `(run_seed, round)`, laid on a ring,
-//! and every client masks against the `half` positions on each side —
-//! a uniform-degree (`2·half`-regular) symmetric graph, deterministic
-//! per `(seed, round)` so any round replays bit-for-bit.
+//! replaces it with a **circulant ring**: each member's ring position
+//! is its rank under a per-`(run_seed, round, member)` hash
+//! (consistent-hash ordering), and every client masks against the
+//! `half` positions on each side — a uniform-degree (`2·half`-regular)
+//! symmetric graph, deterministic per `(seed, round)` so any round
+//! replays bit-for-bit. Hashing members *independently* (rather than
+//! shuffling the cohort, which permutes everything when one member
+//! changes) makes churn local: a join/leave moves only the ring window
+//! around the changed member, so per-round Shamir re-keying
+//! ([`crate::secagg::rekey`]) re-shares only the affected
+//! neighborhoods.
 //!
 //! Uniform degree is load-bearing: Eq. 4's σ depends on the
 //! participant count `x`, and both endpoints of a pair *and* the
@@ -20,18 +26,29 @@
 //! to the pre-neighborhood behavior, which is what keeps the golden
 //! secagg tests pinned.
 
-use crate::util::rng::Rng;
-
-/// Domain constant mixed into the neighborhood shuffle seed (distinct
+/// Domain constant mixed into the neighborhood ring hash (distinct
 /// from the selection/transport/keygen constants).
 const NEIGHBORHOOD_SALT: u64 = 0x6e65_6967;
+
+/// A member's ring rank: the SplitMix64 finalizer over the
+/// `(seed, round, member)` mix. Each member hashes independently of
+/// the rest of the cohort, which is what makes the ring order a
+/// consistent hash — one member joining or leaving shifts only the
+/// ring window around its own position.
+fn ring_rank(base: u64, cid: u32) -> u64 {
+    let mut z = base.wrapping_add((cid as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
 
 /// One round's mask topology over the selected cohort.
 #[derive(Clone, Debug)]
 pub struct Neighborhood {
     /// The cohort, in selection (ascending id) order.
     members: Vec<u32>,
-    /// Ring order (seeded shuffle of `members`); empty when complete.
+    /// Ring order (members sorted by consistent hash); empty when
+    /// complete.
     ring: Vec<u32>,
     /// Ring position per member, aligned with `members`.
     pos: Vec<usize>,
@@ -58,11 +75,12 @@ impl Neighborhood {
         if k == 0 || n < 2 || 2 * half >= n - 1 {
             return Self::complete(selected);
         }
+        // consistent-hash ring order: sort by per-member hash (id
+        // tie-break for the negligible collision case); round is mixed
+        // into the hash base so the ring still varies per round
+        let base = seed ^ NEIGHBORHOOD_SALT ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         let mut ring = selected.to_vec();
-        let mut rng = Rng::new(
-            seed ^ NEIGHBORHOOD_SALT ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15),
-        );
-        rng.shuffle(&mut ring);
+        ring.sort_unstable_by_key(|&cid| (ring_rank(base, cid), cid));
         // members is sorted (selection order); map each to its ring slot
         let members = selected.to_vec();
         let mut pos = vec![0usize; n];
@@ -207,6 +225,33 @@ mod tests {
             sel.iter().any(|&id| a.neighbors_of(id) != c.neighbors_of(id)),
             "round must reshuffle the ring"
         );
+    }
+
+    #[test]
+    fn churn_shifts_only_the_local_ring_window() {
+        // consistent-hash ordering: removing one member may change the
+        // neighbor sets of only the members whose ±half ring window
+        // spanned the removed slot — 2·half of them — not the whole
+        // cohort (a shuffled ring would re-pair nearly everyone)
+        let sel = cohort(64);
+        let a = Neighborhood::build(&sel, 8, 5, 3);
+        let without: Vec<u32> = sel.iter().copied().filter(|&c| c != 20).collect();
+        let b = Neighborhood::build(&without, 8, 5, 3);
+        let changed = without
+            .iter()
+            .filter(|&&c| a.neighbors_of(c) != b.neighbors_of(c))
+            .count();
+        assert!(changed >= 1, "the departed member's neighbors must re-pair");
+        assert!(
+            changed <= a.degree(),
+            "churn changed {changed} neighborhoods (degree {})",
+            a.degree()
+        );
+        // joins are the same mechanism in reverse
+        let rejoin = Neighborhood::build(&sel, 8, 5, 3);
+        for &c in &sel {
+            assert_eq!(a.neighbors_of(c), rejoin.neighbors_of(c));
+        }
     }
 
     #[test]

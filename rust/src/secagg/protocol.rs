@@ -34,9 +34,12 @@ pub struct SecAggConfig {
     pub mask_ratio_k: f64,
     /// Shamir reconstruction threshold for dropout recovery.
     pub share_threshold: usize,
-    /// Distribute Shamir shares of every pair key at setup. O(n³)
-    /// share material — fine for protocol tests (n ≤ 10), turned off
-    /// for 100-client training runs where the paper assumes no dropout.
+    /// Distribute Shamir shares of every pair key at setup — the
+    /// original one-off all-pairs walk (O(n³) share material), kept
+    /// byte-identical for `neighbors_k = 0` runs. k-regular runs turn
+    /// this off and use per-round neighborhood-local re-keying instead
+    /// ([`crate::secagg::rekey`]: O(n·k) shares per round, secrets
+    /// only at current neighbors).
     pub share_keys: bool,
 }
 
@@ -53,9 +56,20 @@ impl Default for SecAggConfig {
 }
 
 /// Pair key = 32-byte symmetric seed both ends derive from the DH
-/// shared secret; what gets Shamir-shared for dropout recovery.
-fn pair_key(shared_secret: &[u8]) -> [u8; 32] {
+/// shared secret; what gets Shamir-shared for dropout recovery
+/// (crate-visible: the re-keying recovery path derives the same bytes
+/// from a reconstructed exponent).
+pub(crate) fn pair_key(shared_secret: &[u8]) -> [u8; 32] {
     super::kdf::hkdf32(b"fedsparse-pairkey", shared_secret, b"")
+}
+
+/// Fixed Shamir width (bytes) for a group's private exponents: the
+/// high-bit force in [`DhKeyPair::generate`] can carry into bit
+/// `priv_bits`, so cover `priv_bits + 1` bits, rounded up to whole
+/// 16-bit limbs (toy 48-bit group → 8 bytes, RFC 3526 → 34).
+pub(crate) fn exponent_share_width(params: &DhParams) -> usize {
+    let w = (params.priv_bits + 1).div_ceil(8);
+    w + (w & 1)
 }
 
 /// One federated participant's secagg state.
@@ -211,6 +225,15 @@ impl SecAggClient {
         self.held_shares.get(&(owner, peer))
     }
 
+    /// This client's DH private exponent as fixed-width bytes — the
+    /// secret material the per-round re-keying registry
+    /// ([`crate::secagg::rekey`]) Shamir-shares among the round's
+    /// neighbors. Crate-internal: the raw exponent never crosses the
+    /// public API.
+    pub(crate) fn private_share_bytes(&self) -> Vec<u8> {
+        self.keypair.private_bytes_be(exponent_share_width(&self.params))
+    }
+
     /// Attach a shared per-round mask-stream cache (simulation-only
     /// speedup; see [`crate::secagg::mask::MaskCache`]). Every masker
     /// subsequently built by [`Self::masker_for`] carries it.
@@ -225,6 +248,12 @@ pub struct SecAggServer {
     pub range: MaskRange,
     pub mask_ratio_k: f64,
     pub share_threshold: usize,
+    /// DH group parameters — needed to recompute pair keys from a
+    /// re-keying-recovered private exponent.
+    pub(crate) params: Arc<DhParams>,
+    /// Every participant's DH public key (index = client id; the same
+    /// `Arc` the clients share).
+    pub(crate) publics: Arc<Vec<BigUint>>,
 }
 
 impl SecAggServer {
@@ -485,10 +514,13 @@ pub fn recover_pair_keys_in(
 /// Pair keys themselves are **not** materialized here — clients derive
 /// them lazily from the shared public-key vector ([`SecAggClient`]),
 /// so with `share_keys: false` setup is O(n). The Shamir loop below is
-/// the one remaining all-pairs walk (O(n³) share material); it only
-/// runs under failure injection, and replacing it with per-round
-/// neighborhood-local share re-keying is tracked as future work in the
-/// ROADMAP.
+/// the original one-off all-pairs walk (O(n³) share material): it now
+/// runs only for `neighbors_k = 0` runs under failure injection, where
+/// it stays byte-identical to the pre-re-keying design (keypairs draw
+/// from `rng` before the loop, so skipping it never perturbs the key
+/// streams). k-regular runs skip it and re-share per round through
+/// [`crate::secagg::rekey::RekeyRegistry`] instead — O(n·k) share
+/// material scoped to each round's neighborhoods.
 pub fn full_setup(n: u32, seed: u64, cfg: &SecAggConfig) -> (Vec<SecAggClient>, SecAggServer) {
     assert!(n >= 2, "secagg needs ≥2 participants");
     let params = Arc::new(if cfg.full_dh {
@@ -542,6 +574,8 @@ pub fn full_setup(n: u32, seed: u64, cfg: &SecAggConfig) -> (Vec<SecAggClient>, 
         range: cfg.range,
         mask_ratio_k: cfg.mask_ratio_k,
         share_threshold: t,
+        params,
+        publics,
     };
     (clients, server)
 }

@@ -1,0 +1,215 @@
+//! Per-round neighborhood-local Shamir re-keying.
+//!
+//! The original recovery design distributed Shamir shares of every
+//! pair key across **all** pairs at setup (`full_setup` with
+//! `share_keys: true`) — O(n³) share material, every client holding
+//! material for every pair, forever. This module replaces that for
+//! k-regular runs: each round, every cohort member's DH private
+//! exponent is re-shared among exactly its current neighbors
+//! `N_r(u)` (one share per neighbor, evaluated at `x = neighbor_id +
+//! 1`), so
+//!
+//! * setup and re-key are O(n·k) — Σ_u |N_r(u)| shares per round, not
+//!   n·(n−1);
+//! * a client's secret is only ever held by its *current* neighbors —
+//!   leaving a neighborhood revokes access, because the next re-share
+//!   draws a fresh polynomial the old shares don't lie on;
+//! * churn (join/leave between re-key calls) re-shares only the
+//!   neighborhoods whose holder set actually changed — the
+//!   consistent-hash ring ([`super::neighborhood`]) keeps those local
+//!   to the churned member.
+//!
+//! Sharing the *exponent* rather than each pair key keeps the material
+//! per owner O(k) instead of O(k²) and still recovers exactly the same
+//! pair-key bytes: reconstructing `x_u` lets the server recompute
+//! `pub_v^{x_u} mod p` and run it through the same HKDF both endpoints
+//! use ([`protocol::pair_key`]), so cancellation is bit-identical to
+//! the shared-pair-key path. `neighbors_k = 0` runs never construct a
+//! registry and keep the one-off all-pairs setup byte-identical.
+
+use std::collections::HashMap;
+
+use crate::util::rng::Rng;
+
+use super::dh::DhKeyPair;
+use super::neighborhood::Neighborhood;
+use super::protocol::{pair_key, SecAggClient, SecAggServer};
+use super::shamir::{self, Share};
+
+/// Domain constant mixed into each owner's re-share polynomial seed
+/// (distinct from the selection/transport/keygen/neighborhood
+/// constants).
+const REKEY_SALT: u64 = 0x7265_6b65_79;
+
+/// What one [`RekeyRegistry::rekey_for`] call did — the counting
+/// surface the O(n·k) acceptance tests and benches pin.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RekeyStats {
+    /// Owners whose secret was (re-)shared this call.
+    pub reshared_owners: usize,
+    /// Shares distributed this call (Σ over reshared owners of
+    /// |N_r(owner)|).
+    pub shares_distributed: usize,
+    /// Owners dropped because they left the cohort.
+    pub dropped_owners: usize,
+    /// Owners whose holder set was unchanged — their existing shares
+    /// stay valid (the secret is round-independent), so nothing moves.
+    pub carried_owners: usize,
+}
+
+/// One owner's live share material: who holds a share, and the shares
+/// themselves (in the simulation the registry plays the wire; holders
+/// are recorded so tests can assert the secret exists *only* at
+/// `N_r(owner)`).
+struct RekeyEntry {
+    /// Holder ids, ascending ([`Neighborhood::neighbors_into`] order).
+    holders: Vec<u32>,
+    /// Per-holder share vector, aligned with `holders`; inner Vec is
+    /// one [`Share`] per 16-bit limb of the exponent.
+    shares: Vec<Vec<Share>>,
+    /// Reconstruction threshold this entry was split with (the
+    /// configured threshold, capped by the neighbor count for
+    /// degenerate tiny cohorts).
+    t: usize,
+}
+
+/// Server-side registry of the current round's share placement.
+///
+/// Owned by the coordinator (`Trainer`) for k-regular secure runs with
+/// failure injection; [`Self::rekey_for`] runs in the Select phase
+/// after the round's topology is built, and
+/// [`recover_pair_keys_rekeyed`] replaces
+/// [`super::protocol::recover_pair_keys_in`] in Unmask/Recover.
+pub struct RekeyRegistry {
+    threshold: usize,
+    /// Bumped every re-key call and mixed into the polynomial seed, so
+    /// a churn re-share within the same round never reuses a
+    /// polynomial with new evaluation points.
+    epoch: u64,
+    entries: HashMap<u32, RekeyEntry>,
+}
+
+impl RekeyRegistry {
+    pub fn new(threshold: usize) -> Self {
+        assert!(threshold >= 1, "threshold must be ≥ 1");
+        Self { threshold, epoch: 0, entries: HashMap::new() }
+    }
+
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    /// Current holder set for `owner`'s secret (ascending), if shared.
+    pub fn holders_of(&self, owner: u32) -> Option<&[u32]> {
+        self.entries.get(&owner).map(|e| e.holders.as_slice())
+    }
+
+    /// Owners with live share material, ascending.
+    pub fn owners(&self) -> Vec<u32> {
+        let mut v: Vec<u32> = self.entries.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Re-key the registry against `topo` (the round's topology over
+    /// its cohort): drop owners that left the cohort, keep owners
+    /// whose neighbor set is unchanged (their shares remain valid),
+    /// and re-share everyone else among exactly their current
+    /// neighbors — fresh polynomial per owner per call.
+    ///
+    /// O(n·k): Σ_u |N_r(u)| shares move per full re-key, and a churn
+    /// call touches only the affected neighborhoods.
+    pub fn rekey_for(
+        &mut self,
+        clients: &[SecAggClient],
+        topo: &Neighborhood,
+        round: u64,
+        seed: u64,
+    ) -> RekeyStats {
+        self.epoch += 1;
+        let members = topo.members();
+        let before = self.entries.len();
+        self.entries.retain(|owner, _| members.binary_search(owner).is_ok());
+        let mut stats =
+            RekeyStats { dropped_owners: before - self.entries.len(), ..Default::default() };
+        let mut neighbors = Vec::new();
+        for &owner in members {
+            topo.neighbors_into(owner, &mut neighbors);
+            if let Some(e) = self.entries.get(&owner) {
+                if e.holders == neighbors {
+                    stats.carried_owners += 1;
+                    continue;
+                }
+            }
+            let secret = clients[owner as usize].private_share_bytes();
+            let xs: Vec<u64> = neighbors.iter().map(|&v| v as u64 + 1).collect();
+            let t = self.threshold.min(xs.len());
+            let mut rng = Rng::new(
+                seed ^ REKEY_SALT
+                    ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ (owner as u64).wrapping_mul(0xD6E8_FEB8_6659_FD93)
+                    ^ self.epoch.wrapping_mul(0xA24B_AED4_963E_E407),
+            );
+            let limb_shares = shamir::split_bytes_at(&secret, &xs, t, &mut rng);
+            // transpose limb-major → holder-major, the shape a holder
+            // would receive on the wire
+            let shares: Vec<Vec<Share>> = (0..xs.len())
+                .map(|h| limb_shares.iter().map(|l| l[h]).collect())
+                .collect();
+            stats.reshared_owners += 1;
+            stats.shares_distributed += xs.len();
+            self.entries.insert(owner, RekeyEntry { holders: neighbors.clone(), shares, t });
+        }
+        stats
+    }
+}
+
+/// Dropout recovery against a re-keyed registry: for each dead client
+/// `u`, gather ≥ `t` shares from its *surviving holders* (which are
+/// exactly its round neighbors), reconstruct the DH exponent, and
+/// rederive the pair key for every surviving neighbor `v` — the same
+/// bytes [`SecAggClient::pair_key_with`] produces, so mask
+/// cancellation is unchanged.
+///
+/// Returns `None` when some dead client has fewer than `t` surviving
+/// holders — the caller must abort the round rather than apply a
+/// mask-corrupted aggregate. (Shares live only in `u`'s neighborhood
+/// now, so the quorum is over |N_r(u) ∩ survivors|, not all
+/// survivors.)
+pub fn recover_pair_keys_rekeyed(
+    registry: &RekeyRegistry,
+    server: &SecAggServer,
+    survivors: &[u32],
+    dead: &[u32],
+    topo: &Neighborhood,
+) -> Option<HashMap<(u32, u32), [u8; 32]>> {
+    let mut recovered = HashMap::new();
+    for &u in dead {
+        let entry = registry.entries.get(&u)?;
+        let contributing: Vec<&Vec<Share>> = entry
+            .holders
+            .iter()
+            .zip(&entry.shares)
+            .filter(|(h, _)| survivors.contains(h))
+            .map(|(_, s)| s)
+            .take(entry.t)
+            .collect();
+        if contributing.len() < entry.t {
+            return None;
+        }
+        let n_limbs = contributing[0].len();
+        // transpose holder-major → limb-major for reconstruction
+        let limbs: Vec<Vec<Share>> = (0..n_limbs)
+            .map(|l| contributing.iter().map(|s| s[l]).collect())
+            .collect();
+        let exponent = shamir::reconstruct_bytes(&limbs);
+        let kp = DhKeyPair::from_private_bytes_be(&server.params, &exponent);
+        for &v in survivors {
+            if topo.are_neighbors(u, v) {
+                let secret = kp.shared_secret(&server.params, &server.publics[v as usize]);
+                recovered.insert((v, u), pair_key(&secret));
+            }
+        }
+    }
+    Some(recovered)
+}

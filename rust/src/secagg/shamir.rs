@@ -81,6 +81,62 @@ pub fn split(secret: u64, n: usize, t: usize, rng: &mut crate::util::rng::Rng) -
         .collect()
 }
 
+/// Split `secret` (< P) into shares at the explicit evaluation points
+/// `xs` (distinct, nonzero mod P) with threshold `t` — the per-round
+/// re-keying path ([`crate::secagg::rekey`]), where the share holders
+/// are a round's neighbor ids rather than `1..=n`. A fresh
+/// degree-(t−1) polynomial is drawn from `rng` on every call, so
+/// re-sharing the same secret at new points never reuses a polynomial.
+pub fn split_at(secret: u64, xs: &[u64], t: usize, rng: &mut crate::util::rng::Rng) -> Vec<Share> {
+    assert!(secret < P, "secret out of field");
+    assert!(t >= 1 && t <= xs.len(), "bad threshold t={t} n={}", xs.len());
+    let coeffs: Vec<u64> = std::iter::once(secret)
+        .chain((1..t).map(|_| rng.below(P)))
+        .collect();
+    xs.iter()
+        .map(|&x| {
+            assert!(x % P != 0, "evaluation point must be nonzero");
+            let mut y = 0u64;
+            for &c in coeffs.iter().rev() {
+                y = add(mul(y, x % P), c);
+            }
+            Share { x, y }
+        })
+        .collect()
+}
+
+/// Share an even-length byte string limb-wise at explicit evaluation
+/// points: 16-bit LE limbs (trivially < P), each split independently
+/// with its own polynomial. Outer Vec is per-limb, inner per point —
+/// [`split_seed`]'s shape generalized to arbitrary widths and holder
+/// sets (re-keying shares DH exponents, whose width depends on the
+/// group's `priv_bits`).
+pub fn split_bytes_at(
+    secret: &[u8],
+    xs: &[u64],
+    t: usize,
+    rng: &mut crate::util::rng::Rng,
+) -> Vec<Vec<Share>> {
+    assert!(secret.len() % 2 == 0, "secret must be an even number of bytes");
+    (0..secret.len() / 2)
+        .map(|i| {
+            let limb = u16::from_le_bytes([secret[2 * i], secret[2 * i + 1]]) as u64;
+            split_at(limb, xs, t, rng)
+        })
+        .collect()
+}
+
+/// Reconstruct the byte string shared by [`split_bytes_at`] (≥ t
+/// shares per limb, same holder subset across limbs).
+pub fn reconstruct_bytes(limbs: &[Vec<Share>]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(limbs.len() * 2);
+    for shares in limbs {
+        let v = reconstruct(shares) as u16;
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
 /// Reconstruct the secret from ≥ t shares (Lagrange at x=0).
 /// Shares must have distinct x; extra shares beyond t are fine.
 pub fn reconstruct(shares: &[Share]) -> u64 {
@@ -174,6 +230,56 @@ mod tests {
         let shares = split_seed(&seed, 6, 4, &mut rng);
         let subset: Vec<Vec<Share>> = shares.iter().map(|l| l[1..5].to_vec()).collect();
         assert_eq!(reconstruct_seed(&subset), seed);
+    }
+
+    #[test]
+    fn split_at_roundtrips_at_sparse_points() {
+        // neighbor-id-shaped evaluation points: sparse, unordered gaps
+        let mut rng = Rng::new(6);
+        let xs = [3u64, 17, 4, 901, 12];
+        for _ in 0..20 {
+            let secret = rng.below(P);
+            let shares = split_at(secret, &xs, 3, &mut rng);
+            assert_eq!(shares.len(), xs.len());
+            for (s, &x) in shares.iter().zip(&xs) {
+                assert_eq!(s.x, x);
+            }
+            assert_eq!(reconstruct(&shares[..3]), secret);
+            assert_eq!(reconstruct(&shares[2..]), secret);
+        }
+    }
+
+    #[test]
+    fn split_at_matches_split_on_contiguous_points() {
+        // same polynomial (same rng stream) evaluated at 1..=n must
+        // give exactly split()'s shares
+        let xs: Vec<u64> = (1..=5).collect();
+        let a = split(777, 5, 3, &mut Rng::new(7));
+        let b = split_at(777, &xs, 3, &mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn bytes_roundtrip_at_explicit_points() {
+        let mut rng = Rng::new(8);
+        let secret: Vec<u8> = (0..8).map(|i| (i * 31 + 5) as u8).collect();
+        let xs = [9u64, 2, 40, 11];
+        let limbs = split_bytes_at(&secret, &xs, 2, &mut rng);
+        assert_eq!(limbs.len(), 4);
+        let subset: Vec<Vec<Share>> = limbs.iter().map(|l| l[1..3].to_vec()).collect();
+        assert_eq!(reconstruct_bytes(&subset), secret);
+    }
+
+    #[test]
+    #[should_panic(expected = "even number of bytes")]
+    fn odd_byte_widths_rejected() {
+        split_bytes_at(&[1, 2, 3], &[1, 2], 2, &mut Rng::new(9));
+    }
+
+    #[test]
+    #[should_panic(expected = "evaluation point must be nonzero")]
+    fn zero_evaluation_point_rejected() {
+        split_at(1, &[0], 1, &mut Rng::new(10));
     }
 
     #[test]

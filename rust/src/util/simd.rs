@@ -4,12 +4,14 @@
 //! fallback, selected by `cfg` at compile time:
 //!
 //! * [`F32x8`] — eight f32 lanes (AVX2 `__m256`, else two SSE2
-//!   `__m128`s, else a `[f32; 8]` loop) — the blocked-matmul axpy
-//!   sweeps (`runtime::native`) and the Top-k abs-scan
+//!   `__m128`s, else two NEON `float32x4_t`s on aarch64, else a
+//!   `[f32; 8]` loop) — the blocked-matmul axpy sweeps
+//!   (`runtime::native`), the backward-input gather dot
+//!   ([`F32x8::gather`], AVX2 only), and the Top-k abs-scan
 //!   (`sparse::topk`);
 //! * [`U32x8`] — eight u32 lanes, used through [`LaneFilter`] for the
 //!   σ-filter's integer compare + compress (`secagg::mask`);
-//! * [`U32x4`] — four u32 lanes (always 128-bit on x86_64), the
+//! * [`U32x4`] — four u32 lanes (128-bit on x86_64 and aarch64), the
 //!   four-blocks-per-dispatch ChaCha core (`util::chacha`).
 //!
 //! ## The bitwise contract (PERF.md)
@@ -96,6 +98,41 @@ mod lanes {
             unsafe {
                 let mask = _mm256_set1_ps(f32::from_bits(0x7fff_ffff));
                 Self(_mm256_and_ps(self.0, mask))
+            }
+        }
+
+        /// This build has a hardware strided gather (`vgatherdps`);
+        /// kernels gate their gather branch on this so non-AVX2
+        /// targets keep the scalar sweep (see [`Self::gather`]).
+        pub const HAS_GATHER: bool = true;
+
+        /// Lanes `s[0], s[stride], …, s[7·stride]` in one `vgatherdps`
+        /// (`s.len() > 7·stride`). A gather is eight independent
+        /// loads, so this is bitwise-exact like [`Self::load`].
+        #[inline]
+        pub fn gather(s: &[f32], idx: GatherIdx) -> Self {
+            debug_assert!(s.len() > idx.1);
+            unsafe { Self(_mm256_i32gather_ps::<4>(s.as_ptr(), idx.0)) }
+        }
+    }
+
+    /// Prebuilt index vector for [`F32x8::gather`]: lane l reads
+    /// element `l·stride` (built once per kernel call, reused per
+    /// gather).
+    #[derive(Clone, Copy)]
+    pub struct GatherIdx(__m256i, usize);
+
+    impl GatherIdx {
+        /// Indices `[0, stride, …, 7·stride]`; `7·stride` must fit in
+        /// i32 (model dims are far below that).
+        #[inline]
+        pub fn stride(stride: usize) -> Self {
+            let s = stride as i32;
+            unsafe {
+                Self(
+                    _mm256_setr_epi32(0, s, 2 * s, 3 * s, 4 * s, 5 * s, 6 * s, 7 * s),
+                    7 * stride,
+                )
             }
         }
     }
@@ -189,6 +226,42 @@ mod lanes {
                 let mask = _mm_set1_ps(f32::from_bits(0x7fff_ffff));
                 Self(_mm_and_ps(self.0, mask), _mm_and_ps(self.1, mask))
             }
+        }
+
+        /// SSE2 has no strided gather; kernels gating on this take
+        /// their scalar branch (the lane-by-lane fallback below only
+        /// serves the parity tests).
+        pub const HAS_GATHER: bool = false;
+
+        /// Lanes `s[0], s[stride], …, s[7·stride]` loaded one by one
+        /// (`s.len() > 7·stride`).
+        #[inline]
+        pub fn gather(s: &[f32], idx: GatherIdx) -> Self {
+            let st = idx.0;
+            let a = [
+                s[0],
+                s[st],
+                s[2 * st],
+                s[3 * st],
+                s[4 * st],
+                s[5 * st],
+                s[6 * st],
+                s[7 * st],
+            ];
+            Self::load(&a)
+        }
+    }
+
+    /// Stride handle for [`F32x8::gather`] (no hardware gather on this
+    /// target — the fallback indexes lane by lane).
+    #[derive(Clone, Copy)]
+    pub struct GatherIdx(usize);
+
+    impl GatherIdx {
+        /// Indices `[0, stride, …, 7·stride]`.
+        #[inline]
+        pub fn stride(stride: usize) -> Self {
+            Self(stride)
         }
     }
 
@@ -289,11 +362,208 @@ mod sse_u32x4 {
     }
 }
 
-/// Scalar fallback for non-x86_64 targets: same API, plain loops. The
-/// kernels built on these types stay bitwise identical by the same
-/// argument (per-lane ops in the same order), just without the
-/// hardware parallelism.
-#[cfg(not(target_arch = "x86_64"))]
+/// aarch64 NEON variant: the same eight-lane API over paired 128-bit
+/// quads (`float32x4_t`/`uint32x4_t`), mirroring the SSE2 twin. NEON
+/// is baseline on aarch64, so no feature gate is needed; `vmulq_f32` /
+/// `vaddq_f32` are the plain (non-fused) ops, preserving the
+/// mul-then-add rounding contract. Kept compiling by the CI
+/// `cargo check --target aarch64-unknown-linux-gnu` leg.
+#[allow(unused_unsafe)]
+#[cfg(target_arch = "aarch64")]
+mod lanes {
+    use core::arch::aarch64::*;
+
+    /// Eight f32 lanes (two NEON `float32x4_t` halves).
+    #[derive(Clone, Copy)]
+    pub struct F32x8(float32x4_t, float32x4_t);
+
+    impl F32x8 {
+        #[inline]
+        pub fn splat(v: f32) -> Self {
+            unsafe {
+                let h = vdupq_n_f32(v);
+                Self(h, h)
+            }
+        }
+
+        /// Load eight lanes from the head of `s` (`s.len() >= 8`).
+        #[inline]
+        pub fn load(s: &[f32]) -> Self {
+            debug_assert!(s.len() >= 8);
+            unsafe { Self(vld1q_f32(s.as_ptr()), vld1q_f32(s.as_ptr().add(4))) }
+        }
+
+        /// Store the eight lanes to the head of `s` (`s.len() >= 8`).
+        #[inline]
+        pub fn store(self, s: &mut [f32]) {
+            debug_assert!(s.len() >= 8);
+            unsafe {
+                vst1q_f32(s.as_mut_ptr(), self.0);
+                vst1q_f32(s.as_mut_ptr().add(4), self.1);
+            }
+        }
+
+        #[inline]
+        pub fn add(self, o: Self) -> Self {
+            unsafe { Self(vaddq_f32(self.0, o.0), vaddq_f32(self.1, o.1)) }
+        }
+
+        #[inline]
+        pub fn mul(self, o: Self) -> Self {
+            unsafe { Self(vmulq_f32(self.0, o.0), vmulq_f32(self.1, o.1)) }
+        }
+
+        /// Per-lane |x| (sign-bit clear — bitwise `f32::abs`; done in
+        /// the integer domain so NaN payloads survive like on x86).
+        #[inline]
+        pub fn abs(self) -> Self {
+            unsafe {
+                let mask = vdupq_n_u32(0x7fff_ffff);
+                Self(
+                    vreinterpretq_f32_u32(vandq_u32(vreinterpretq_u32_f32(self.0), mask)),
+                    vreinterpretq_f32_u32(vandq_u32(vreinterpretq_u32_f32(self.1), mask)),
+                )
+            }
+        }
+
+        /// NEON has no strided gather; kernels gating on this take
+        /// their scalar branch (the lane-by-lane fallback below only
+        /// serves the parity tests).
+        pub const HAS_GATHER: bool = false;
+
+        /// Lanes `s[0], s[stride], …, s[7·stride]` loaded one by one
+        /// (`s.len() > 7·stride`).
+        #[inline]
+        pub fn gather(s: &[f32], idx: GatherIdx) -> Self {
+            let st = idx.0;
+            let a = [
+                s[0],
+                s[st],
+                s[2 * st],
+                s[3 * st],
+                s[4 * st],
+                s[5 * st],
+                s[6 * st],
+                s[7 * st],
+            ];
+            Self::load(&a)
+        }
+    }
+
+    /// Stride handle for [`F32x8::gather`] (no hardware gather on this
+    /// target — the fallback indexes lane by lane).
+    #[derive(Clone, Copy)]
+    pub struct GatherIdx(usize);
+
+    impl GatherIdx {
+        /// Indices `[0, stride, …, 7·stride]`.
+        #[inline]
+        pub fn stride(stride: usize) -> Self {
+            Self(stride)
+        }
+    }
+
+    /// Eight u32 lanes (two NEON `uint32x4_t` halves).
+    #[derive(Clone, Copy)]
+    pub struct U32x8(uint32x4_t, uint32x4_t);
+
+    impl U32x8 {
+        #[inline]
+        pub fn splat(v: u32) -> Self {
+            unsafe {
+                let h = vdupq_n_u32(v);
+                Self(h, h)
+            }
+        }
+
+        /// Load eight little-endian u32 lanes from 32 bytes (byte
+        /// loads + reinterpret, so no u32 alignment is assumed;
+        /// aarch64-unknown-linux-gnu is little-endian).
+        #[inline]
+        pub fn load_le(bytes: &[u8]) -> Self {
+            debug_assert!(bytes.len() >= 32);
+            unsafe {
+                Self(
+                    vreinterpretq_u32_u8(vld1q_u8(bytes.as_ptr())),
+                    vreinterpretq_u32_u8(vld1q_u8(bytes.as_ptr().add(16))),
+                )
+            }
+        }
+
+        #[inline]
+        pub fn xor(self, o: Self) -> Self {
+            unsafe { Self(veorq_u32(self.0, o.0), veorq_u32(self.1, o.1)) }
+        }
+
+        /// Bitmask (bit l ⟺ lane l) of `self > o` as signed i32 lanes.
+        /// NEON has no movemask: weight the all-ones compare lanes by
+        /// `[1, 2, 4, 8]` and horizontal-add each half into a nibble.
+        #[inline]
+        pub fn gt_i32_mask(self, o: Self) -> u32 {
+            unsafe {
+                let w = [1u32, 2, 4, 8];
+                let wv = vld1q_u32(w.as_ptr());
+                let lo = vcgtq_s32(vreinterpretq_s32_u32(self.0), vreinterpretq_s32_u32(o.0));
+                let hi = vcgtq_s32(vreinterpretq_s32_u32(self.1), vreinterpretq_s32_u32(o.1));
+                let lo = vaddvq_u32(vandq_u32(lo, wv));
+                let hi = vaddvq_u32(vandq_u32(hi, wv));
+                lo | (hi << 4)
+            }
+        }
+    }
+
+    /// Four u32 lanes (NEON `uint32x4_t`).
+    #[derive(Clone, Copy)]
+    pub struct U32x4(uint32x4_t);
+
+    impl U32x4 {
+        #[inline]
+        pub fn splat(v: u32) -> Self {
+            unsafe { Self(vdupq_n_u32(v)) }
+        }
+
+        #[inline]
+        pub fn from_array(a: [u32; 4]) -> Self {
+            unsafe { Self(vld1q_u32(a.as_ptr())) }
+        }
+
+        #[inline]
+        pub fn to_array(self) -> [u32; 4] {
+            let mut out = [0u32; 4];
+            unsafe { vst1q_u32(out.as_mut_ptr(), self.0) };
+            out
+        }
+
+        #[inline]
+        pub fn wrapping_add(self, o: Self) -> Self {
+            unsafe { Self(vaddq_u32(self.0, o.0)) }
+        }
+
+        #[inline]
+        pub fn xor(self, o: Self) -> Self {
+            unsafe { Self(veorq_u32(self.0, o.0)) }
+        }
+
+        /// Per-lane rotate-left by `n` bits (`0 < n < 32`). `USHL`
+        /// with a negative per-lane shift count is a logical right
+        /// shift, giving the two halves of the rotate.
+        #[inline]
+        pub fn rotl(self, n: u32) -> Self {
+            debug_assert!(n > 0 && n < 32);
+            unsafe {
+                let l = vshlq_u32(self.0, vdupq_n_s32(n as i32));
+                let r = vshlq_u32(self.0, vdupq_n_s32(n as i32 - 32));
+                Self(vorrq_u32(l, r))
+            }
+        }
+    }
+}
+
+/// Scalar fallback for targets without a lane module (neither x86_64
+/// nor aarch64): same API, plain loops. The kernels built on these
+/// types stay bitwise identical by the same argument (per-lane ops in
+/// the same order), just without the hardware parallelism.
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
 mod lanes {
     /// Eight f32 lanes (portable array fallback).
     #[derive(Clone, Copy)]
@@ -345,6 +615,40 @@ mod lanes {
                 *x = f32::from_bits(x.to_bits() & 0x7fff_ffff);
             }
             Self(a)
+        }
+
+        /// No hardware gather on the portable fallback; kernels gating
+        /// on this take their scalar branch.
+        pub const HAS_GATHER: bool = false;
+
+        /// Lanes `s[0], s[stride], …, s[7·stride]` loaded one by one
+        /// (`s.len() > 7·stride`).
+        #[inline]
+        pub fn gather(s: &[f32], idx: GatherIdx) -> Self {
+            let st = idx.0;
+            Self([
+                s[0],
+                s[st],
+                s[2 * st],
+                s[3 * st],
+                s[4 * st],
+                s[5 * st],
+                s[6 * st],
+                s[7 * st],
+            ])
+        }
+    }
+
+    /// Stride handle for [`F32x8::gather`] (no hardware gather on this
+    /// target — the fallback indexes lane by lane).
+    #[derive(Clone, Copy)]
+    pub struct GatherIdx(usize);
+
+    impl GatherIdx {
+        /// Indices `[0, stride, …, 7·stride]`.
+        #[inline]
+        pub fn stride(stride: usize) -> Self {
+            Self(stride)
         }
     }
 
@@ -440,7 +744,7 @@ mod lanes {
     }
 }
 
-pub use lanes::{F32x8, U32x4, U32x8};
+pub use lanes::{F32x8, GatherIdx, U32x4, U32x8};
 
 /// `acc[i] += c · x[i]` over equal-length slices — the axpy inner loop
 /// of the blocked matmul kernels, eight accumulators per step with a
@@ -563,6 +867,30 @@ mod tests {
         F32x8::load(&vals).abs().store(&mut out);
         for i in 0..8 {
             assert_eq!(out[i].to_bits(), vals[i].to_bits() & 0x7fff_ffff, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn gather_matches_scalar_strided_indexing() {
+        // On AVX2 this exercises the real vgatherdps; elsewhere the
+        // lane-by-lane fallback. Either way a gather is eight plain
+        // loads, so lanes must be bit-identical to direct indexing.
+        let mut rng = Rng::new(0x6a7);
+        for stride in [1usize, 3, 9, 64] {
+            let data: Vec<f32> = (0..stride * 8 + 5).map(|_| rng.normal_f32(1.0)).collect();
+            let idx = GatherIdx::stride(stride);
+            for base in [0usize, 2, 5] {
+                let s = &data[base..];
+                let mut out = [0f32; 8];
+                F32x8::gather(s, idx).store(&mut out);
+                for (l, &got) in out.iter().enumerate() {
+                    assert_eq!(
+                        got.to_bits(),
+                        s[l * stride].to_bits(),
+                        "stride={stride} base={base} lane={l}"
+                    );
+                }
+            }
         }
     }
 

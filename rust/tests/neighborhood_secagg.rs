@@ -312,8 +312,14 @@ fn trainer_cfg() -> RunConfig {
 }
 
 /// Full secure `Trainer` run on a k-regular topology with failure
-/// injection: masks still cancel every round, and each dead client
-/// costs one neighborhood of recovered pairs, not one cohort.
+/// injection: masks still cancel every completed round, and each dead
+/// client costs one neighborhood of recovered pairs, not one cohort.
+///
+/// With per-round re-keying the Shamir quorum is neighborhood-scoped
+/// (shares of a dead client's secret live only at its round
+/// neighbors), so a round where every dead client keeps < t surviving
+/// neighbors legitimately aborts — those rounds are skipped, not
+/// failures.
 #[test]
 fn trainer_k_regular_run_recovers_neighborhood_local() {
     let mut cfg = trainer_cfg();
@@ -322,14 +328,20 @@ fn trainer_k_regular_run_recovers_neighborhood_local() {
     cfg.expose_aggregate = true;
     cfg.dropout_prob = 0.25;
     cfg.min_survivors = 2;
-    cfg.rounds = 4;
+    cfg.rounds = 6;
     let seed = cfg.seed;
     let k = cfg.neighbors_k;
     let mut trainer = Trainer::new(cfg).unwrap();
     let mut saw_dropout = false;
-    for round in 0..4 {
+    let mut completed = 0usize;
+    for round in 0..6 {
         let out = trainer.run_round(round).unwrap();
-        assert!(!out.aborted, "round {round} aborted unexpectedly");
+        if out.aborted {
+            // legitimate under neighborhood-scoped quorum; the trainer
+            // records and skips it (see Trainer::run)
+            continue;
+        }
+        completed += 1;
         let topo = Neighborhood::build(&out.selected, k, seed, round);
         assert!(!topo.is_complete(), "8-client cohort with k=4 must stay sparse");
         let dead: Vec<u32> = out
@@ -365,7 +377,8 @@ fn trainer_k_regular_run_recovers_neighborhood_local() {
             .fold(0.0f64, f64::max);
         assert!(max_err < 5e-3, "round {round}: mask residue {max_err}");
     }
-    assert!(saw_dropout, "this seed must produce dropouts");
+    assert!(completed >= 2, "too many aborted rounds for the properties to bite");
+    assert!(saw_dropout, "this seed must produce dropouts on some completed round");
 }
 
 /// The shard count is an execution detail: identical runs at shards=1

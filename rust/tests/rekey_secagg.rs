@@ -1,0 +1,190 @@
+//! Per-round neighborhood-local Shamir re-keying property tests.
+//!
+//! The PR's share-placement contract, pinned here:
+//!
+//! * after `rekey_for` at round r, shares of client u's secret exist
+//!   at **exactly** `N_r(u)` — no other client holds material for u,
+//!   and the total share count is Σ_u |N_r(u)| = n·k, not n·(n−1);
+//! * churn (a member leaving between re-key calls at the same round)
+//!   re-shares exactly the affected neighborhoods — the consistent-hash
+//!   ring keeps that to the departed member's ring window — and
+//!   everyone else's shares are carried;
+//! * dead-client recovery against the registry reconstructs the same
+//!   pair-key bytes both endpoints derive
+//!   ([`SecAggClient::pair_key_with`]), for exactly the (survivor,
+//!   dead) neighborhood edges;
+//! * a dead client with fewer than `t` surviving neighbors is
+//!   unrecoverable (`None`) — the quorum is neighborhood-scoped now.
+
+use fedsparse::secagg::neighborhood::Neighborhood;
+use fedsparse::secagg::protocol::{full_setup, SecAggClient, SecAggConfig, SecAggServer};
+use fedsparse::secagg::rekey::{recover_pair_keys_rekeyed, RekeyRegistry};
+
+fn setup(n: u32) -> (Vec<SecAggClient>, SecAggServer) {
+    // no setup-time all-pairs share walk: the registry is the only
+    // share distribution in this test
+    let sc = SecAggConfig { share_keys: false, ..Default::default() };
+    full_setup(n, 0x5eed, &sc)
+}
+
+/// ISSUE acceptance: at n = 64, k = 8, one full re-key distributes
+/// exactly 64·8 = 512 shares (not n·(n−1) = 4032), and every owner's
+/// holder set is exactly its round neighborhood.
+#[test]
+fn shares_exist_only_at_round_neighbors_and_count_nk() {
+    let n = 64u32;
+    let (clients, _server) = setup(n);
+    let selected: Vec<u32> = (0..n).collect();
+    let topo = Neighborhood::build(&selected, 8, 9, 5);
+    assert!(!topo.is_complete());
+    assert_eq!(topo.degree(), 8);
+
+    let mut reg = RekeyRegistry::new(2);
+    let stats = reg.rekey_for(&clients, &topo, 5, 9);
+    assert_eq!(stats.reshared_owners, 64);
+    assert_eq!(stats.shares_distributed, 512, "Σ_u |N_r(u)| = n·k, not n·(n−1) = 4032");
+    assert_eq!(stats.dropped_owners, 0);
+    assert_eq!(stats.carried_owners, 0);
+
+    assert_eq!(reg.owners(), selected, "every cohort member's secret is shared");
+    for &c in &selected {
+        let holders = reg.holders_of(c).expect("owner has an entry");
+        assert_eq!(
+            holders,
+            topo.neighbors_of(c).as_slice(),
+            "client {c}: shares must sit at exactly N_r({c})"
+        );
+        assert!(!holders.contains(&c), "client {c} must not hold its own secret");
+    }
+}
+
+/// A member leaving between re-key calls (same round, same seed)
+/// re-shares exactly the neighborhoods whose holder set changed — the
+/// departed member's ring window, at most `degree` owners — and
+/// carries everyone else's shares untouched.
+#[test]
+fn churn_reshares_exactly_the_affected_neighborhoods() {
+    let n = 64u32;
+    let (clients, _server) = setup(n);
+    let selected: Vec<u32> = (0..n).collect();
+    let round = 3u64;
+    let seed = 11u64;
+    let topo = Neighborhood::build(&selected, 8, seed, round);
+    let mut reg = RekeyRegistry::new(2);
+    reg.rekey_for(&clients, &topo, round, seed);
+
+    // client 20 leaves; same round ⇒ surviving members keep their ring
+    // ranks, so only the window around 20's old slot changes
+    let leaver = 20u32;
+    let reduced: Vec<u32> = selected.iter().copied().filter(|&c| c != leaver).collect();
+    let topo2 = Neighborhood::build(&reduced, 8, seed, round);
+    let changed: Vec<u32> = reduced
+        .iter()
+        .copied()
+        .filter(|&c| topo2.neighbors_of(c) != topo.neighbors_of(c))
+        .collect();
+    assert!(!changed.is_empty(), "the leaver's ring window must shift");
+    assert!(
+        changed.len() <= topo2.degree(),
+        "churn must stay local: {} neighborhoods changed, degree is {}",
+        changed.len(),
+        topo2.degree()
+    );
+
+    let stats = reg.rekey_for(&clients, &topo2, round, seed);
+    assert_eq!(stats.dropped_owners, 1, "exactly the leaver's entry is dropped");
+    assert_eq!(
+        stats.reshared_owners,
+        changed.len(),
+        "re-share exactly the owners whose neighbor set changed"
+    );
+    assert_eq!(stats.carried_owners, reduced.len() - changed.len());
+    assert_eq!(
+        stats.shares_distributed,
+        changed.len() * topo2.degree(),
+        "churn share traffic is one ring window, not a cohort re-key"
+    );
+
+    assert!(reg.holders_of(leaver).is_none(), "no live material for a departed member");
+    for &c in &reduced {
+        assert_eq!(
+            reg.holders_of(c).expect("owner has an entry"),
+            topo2.neighbors_of(c).as_slice(),
+            "client {c}: holders must track the current topology"
+        );
+    }
+}
+
+/// Dead-client recovery still reconstructs under churn: re-key, lose a
+/// member, re-key at the next round, then kill clients — the recovered
+/// pair keys byte-equal what the live endpoints derive, for exactly
+/// the (survivor, dead) neighborhood edges.
+#[test]
+fn dead_client_recovery_reconstructs_under_churn() {
+    let n = 32u32;
+    let (clients, server) = setup(n);
+    let selected: Vec<u32> = (0..n).collect();
+    let seed = 7u64;
+    let mut reg = RekeyRegistry::new(2);
+
+    // round 1 over the full cohort, then client 9 churns out and
+    // round 2 re-keys over the reduced cohort (new ring, new
+    // polynomials where holder sets moved)
+    let topo1 = Neighborhood::build(&selected, 6, seed, 1);
+    reg.rekey_for(&clients, &topo1, 1, seed);
+    let reduced: Vec<u32> = selected.iter().copied().filter(|&c| c != 9).collect();
+    let topo2 = Neighborhood::build(&reduced, 6, seed, 2);
+    reg.rekey_for(&clients, &topo2, 2, seed);
+
+    // two mid-round deaths; everyone else survives
+    let dead = vec![4u32, 17];
+    let survivors: Vec<u32> = reduced.iter().copied().filter(|c| !dead.contains(c)).collect();
+    let recovered = recover_pair_keys_rekeyed(&reg, &server, &survivors, &dead, &topo2)
+        .expect("degree-6 neighborhoods with 2 deaths must meet a t=2 quorum");
+
+    let expected_edges: usize = dead
+        .iter()
+        .map(|&u| topo2.neighbors_of(u).iter().filter(|v| survivors.contains(v)).count())
+        .sum();
+    assert_eq!(recovered.len(), expected_edges, "recovery walks the dead neighborhoods only");
+    assert!(expected_edges < dead.len() * survivors.len());
+    for (&(v, u), key) in &recovered {
+        assert!(dead.contains(&u) && survivors.contains(&v));
+        assert!(topo2.are_neighbors(u, v));
+        assert_eq!(
+            *key,
+            clients[v as usize].pair_key_with(u),
+            "recovered pair key ({v},{u}) must byte-equal the live endpoint's"
+        );
+    }
+}
+
+/// The quorum is over |N_r(u) ∩ survivors| now, not all survivors:
+/// when a dead client's neighborhood is wiped out below `t`, recovery
+/// must refuse (the round aborts) rather than fabricate keys.
+#[test]
+fn recovery_refuses_below_neighborhood_quorum() {
+    let n = 32u32;
+    let (clients, server) = setup(n);
+    let selected: Vec<u32> = (0..n).collect();
+    let topo = Neighborhood::build(&selected, 6, 13, 4);
+    let mut reg = RekeyRegistry::new(3);
+    reg.rekey_for(&clients, &topo, 4, 13);
+
+    // kill u; exclude all but 2 of its 6 neighbors from the survivor
+    // set — plenty of survivors overall, but < t = 3 holders of u's
+    // shares remain
+    let u = 5u32;
+    let neighbors = topo.neighbors_of(u);
+    let keep: Vec<u32> = neighbors.iter().copied().take(2).collect();
+    let survivors: Vec<u32> = selected
+        .iter()
+        .copied()
+        .filter(|&c| c != u && (!neighbors.contains(&c) || keep.contains(&c)))
+        .collect();
+    assert!(survivors.len() > reg.threshold(), "cohort-wide quorum would have passed");
+    assert!(
+        recover_pair_keys_rekeyed(&reg, &server, &survivors, &[u], &topo).is_none(),
+        "2 surviving holders < t = 3 must abort recovery"
+    );
+}
