@@ -1,9 +1,14 @@
 //! Sparse codec benchmarks (Eq. 6 wire path): encode / decode /
 //! scatter-add / deflate, at Fig.1 sparsity rates over the MNIST-MLP
-//! update size.
+//! update size — plus the quantized-wire fast path (bitpacked v1
+//! frame: SIMD vs scalar pack/unpack, pool-parallel decode+fold).
 
-use fedsparse::sparse::codec::SparseVec;
+use std::sync::{Arc, Mutex};
+
+use fedsparse::sparse::codec::{fold_f32_range, SparseVec};
+use fedsparse::sparse::quant::{pack_codes_with, quantize, unpack_codes_with, QuantConfig};
 use fedsparse::util::bench::{black_box, Bench};
+use fedsparse::util::pool::ThreadPool;
 use fedsparse::util::rng::Rng;
 
 fn sparse_update(seed: u64, n: usize, s: f64) -> SparseVec {
@@ -52,6 +57,65 @@ fn main() {
     let dense = sparse_update(2, n, 1.0);
     b.bench_throughput("from_dense/full", n as u64, || {
         black_box(SparseVec::from_dense(&dense.to_dense()));
+    });
+
+    // --- quantized wire fast path (ISSUE 8) -------------------------
+    // 4-bit codes over a 10%-dense 159k-dim update: the SIMD bitpack
+    // kernels vs their bitwise-identical scalar references
+    let sv = sparse_update(3, n, 0.1);
+    let mut qrng = Rng::new(4);
+    let q = quantize(&sv, QuantConfig { bits: 4 }, &mut qrng);
+    let nnz = q.nnz() as u64;
+    let mut packed = Vec::new();
+    for (name, simd) in [("pack_simd", true), ("pack_scalar", false)] {
+        b.bench_throughput(&format!("quant159k/{name}"), nnz, || {
+            pack_codes_with(&q.codes, q.bits, &mut packed, simd);
+            black_box(&packed);
+        });
+    }
+    pack_codes_with(&q.codes, q.bits, &mut packed, false);
+    let mut codes = Vec::new();
+    for (name, simd) in [("unpack_simd", true), ("unpack_scalar", false)] {
+        b.bench_throughput(&format!("quant159k/{name}"), nnz, || {
+            unpack_codes_with(&packed, nnz as usize, q.bits, &mut codes, simd).unwrap();
+            black_box(&codes);
+        });
+    }
+    let qframe = q.encode();
+    println!(
+        "codec/quant159k: nnz={} bits={} wire={}B f32_wire={}B",
+        q.nnz(),
+        q.bits,
+        qframe.len(),
+        sv.encode().len()
+    );
+
+    // pool-parallel fused decode+fold: 10 f32 payloads × 4 range
+    // shards on a 4-worker pool, the Collect-phase hot loop
+    let payloads: Arc<Vec<Vec<u8>>> =
+        Arc::new((0..10).map(|i| sparse_update(10 + i, n, 0.1).encode()).collect());
+    let pool = ThreadPool::new(4);
+    let shards = 4usize;
+    let starts: Vec<usize> = (0..=shards).map(|s| s * n / shards).collect();
+    b.bench_throughput("decode_fold_parallel", nnz * 10, || {
+        let tasks: Vec<Mutex<(u32, u32, Vec<f32>)>> = (0..shards)
+            .map(|s| {
+                Mutex::new((starts[s] as u32, starts[s + 1] as u32, vec![
+                    0f32;
+                    starts[s + 1] - starts[s]
+                ]))
+            })
+            .collect();
+        let p = Arc::clone(&payloads);
+        let out = pool.map_shared(tasks, move |t: &Mutex<(u32, u32, Vec<f32>)>| {
+            let t = &mut *t.lock().unwrap();
+            let (start, end) = (t.0, t.1);
+            for bytes in p.iter() {
+                fold_f32_range(bytes, start, end, &mut t.2).unwrap();
+            }
+            std::mem::take(&mut t.2)
+        });
+        black_box(out);
     });
 
     b.finish();

@@ -12,6 +12,14 @@
 //! and the actual wire bytes our codec produced (strictly smaller),
 //! plus per-round accuracy so the "cost to reach 95% of convergence
 //! accuracy" query (Table 2's row definition) is answerable post-hoc.
+//!
+//! `up_wire` measures the bytes that actually crossed the transport:
+//! with `quant_bits` set that is the bitpacked quantized v1 frame
+//! (header + delta-varint indices + b-bit codes — see
+//! [`crate::sparse::quant`]), not a dequantized f32 encoding; with
+//! `quant_bits` unset it is the f32 [`crate::sparse::codec`] frame,
+//! byte-identical to the pre-quantized-wire encoder. Secure rounds
+//! always meter f32 frames (masks are f32 sums; see PERF.md).
 
 use crate::sparse::codec;
 

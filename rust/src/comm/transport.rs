@@ -18,6 +18,14 @@
 //!   are the actual wire bytes delivered.
 //! * Failure draws are a pure function of `(plan seed, round, client)`,
 //!   so any run — including which clients die where — replays exactly.
+//! * The transport is payload-format-agnostic: a frame's bytes may be
+//!   an f32 [`crate::sparse::codec`] encoding, a bitpacked quantized
+//!   frame ([`crate::sparse::quant`]), or a masked secure payload —
+//!   it carries and meters them identically. Delivered buffers are
+//!   moved (never copied) from client encode through to the server
+//!   fold, which recycles them; a dropped client's buffer dies here,
+//!   which is the only round path that lets a wire buffer leave the
+//!   reuse pool.
 
 use crate::comm::channel::NetworkModel;
 use crate::util::rng::Rng;

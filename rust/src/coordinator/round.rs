@@ -31,8 +31,13 @@
 //! refcount bump and Apply is copy-on-write). Collect is *streaming*:
 //! each delivered payload folds into the range-sharded accumulator on
 //! arrival, so the coordinator never buffers the cohort's decoded
-//! payloads. In steady state neither side heap-allocates anything
-//! model-sized (`tests/alloc_steady_state.rs`). Secure-mode pair-mask
+//! payloads; with `shards > 1` and a multi-worker pool the fold fans
+//! out one task per shard, each range-walking the raw wire bytes with
+//! the fused decode+fold kernels in ascending client id — bitwise
+//! equal to the serial fold. Quantized uplinks ship raw codes and
+//! dequantize on fold. In steady state neither side heap-allocates
+//! anything model-sized — encoded wire buffers recycle through the
+//! [`WorkspacePool`] (`tests/alloc_steady_state.rs`). Secure-mode pair-mask
 //! generation — client masking and server dead-mask recovery — fans
 //! out per pair over the worker pool under a pinned serial reduction
 //! order, and the shards merge in ascending shard id, so results stay
@@ -71,6 +76,7 @@ use crate::secagg::rekey::recover_pair_keys_rekeyed;
 use crate::secagg::sparse_mask::{MaskScratch, MaskedUpdate};
 use crate::sparse::codec::SparseVec;
 use crate::sparse::dynamic::DynamicRate;
+use crate::sparse::quant::QuantizedSparse;
 use crate::sparse::flat::SparsifyOut;
 use crate::sparse::momentum::MomentumCorrector;
 use crate::sparse::residual::ResidualStore;
@@ -121,9 +127,20 @@ pub struct ClientWorkspace {
 /// and returns it afterwards, so the pool grows to the worker pool's
 /// concurrency during the first round and then every later round
 /// reuses the same allocations.
+///
+/// The pool also recycles the **wire buffers**: an encoded payload has
+/// to be moved (client → transport → Delivery → fold), so it cannot
+/// live inside a [`ClientWorkspace`] — instead encode acquires a warm
+/// byte buffer here and the Collect fold releases it after the payload
+/// is consumed. Steady state: the same cohort-count of buffers cycles
+/// every round and the encode path allocates nothing
+/// (`tests/alloc_steady_state.rs`). A failure-injected client's buffer
+/// dies inside the transport and is re-grown on a later acquire — a
+/// k-sized, sub-model-sized cost only paid on failure rounds.
 #[derive(Default)]
 pub struct WorkspacePool {
     free: Mutex<Vec<ClientWorkspace>>,
+    wire: Mutex<Vec<Vec<u8>>>,
 }
 
 impl WorkspacePool {
@@ -133,6 +150,15 @@ impl WorkspacePool {
 
     fn release(&self, ws: ClientWorkspace) {
         self.free.lock().unwrap().push(ws);
+    }
+
+    fn acquire_wire(&self) -> Vec<u8> {
+        self.wire.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    fn release_wire(&self, mut buf: Vec<u8>) {
+        buf.clear();
+        self.wire.lock().unwrap().push(buf);
     }
 }
 
@@ -167,6 +193,9 @@ pub struct ServerWorkspace {
     pub(crate) sharded: ShardedAccumulator,
     /// Wire-decode scratch (k-sized, reused).
     pub(crate) decode: SparseVec,
+    /// Quantized-frame decode scratch (k-sized, reused; only touched
+    /// when `quant_bits` is set).
+    pub(crate) qdecode: QuantizedSparse,
     /// Post-merge flat aggregate (model-sized, reused).
     pub(crate) agg: Vec<f32>,
     /// Audit-mode plaintext f64 sum (model-sized, reused; empty unless
@@ -395,8 +424,10 @@ impl ClientPipeline {
     }
 
     /// [`Self::run`] against explicit scratch. Every step writes into
-    /// `ws` buffers; the only per-call allocations are the k-sized
-    /// wire payload (and the audit vector when enabled).
+    /// `ws` buffers and the wire payload encodes into a recycled
+    /// [`WorkspacePool`] byte buffer, so the steady-state encode path
+    /// allocates nothing beyond the k-sized sparse gather (and the
+    /// audit vector when enabled).
     fn run_in(&self, job: ClientJob, ws: &mut ClientWorkspace) -> Result<ClientResult> {
         let ClientJob { cid, indices, residual, mut fresh, mut rate, momentum, mut momentum_fresh } =
             job;
@@ -516,28 +547,36 @@ impl ClientPipeline {
             // shared pre-round store stays untouched for the rollback
             // snapshot (CoW; see `super::client`)
             fresh.store_from(&residual, &ws.masked.residual);
+            // secure mode always ships f32 values: the pair masks are
+            // f32 sums, so there is no code space to quantize in (the
+            // config validator rejects secure + quant_bits)
+            let mut wire = self.workspaces.acquire_wire();
+            ws.masked.payload.encode_into(&mut wire);
             // secagg is only built in secure mode, where transmitted
             // positions are always counted sparsely
-            (ws.masked.payload.encode(), ws.masked.payload.nnz())
+            (wire, ws.masked.payload.nnz())
         } else {
             fresh.store_from(&residual, &ws.sparsify.residual);
             let sv = SparseVec::from_dense(&ws.sparsify.sparse);
-            // QSGD-style stochastic quantization (lossy; the
-            // server receives the dequantized values)
-            let sv = if let Some(bits) = self.quant_bits {
+            let counted =
+                if self.algorithm.is_sparse() || self.secure { sv.nnz() } else { self.m };
+            let mut wire = self.workspaces.acquire_wire();
+            if let Some(bits) = self.quant_bits {
+                // QSGD-style stochastic quantization — the codes
+                // themselves ship (bitpacked v1 frame) and the server
+                // dequantizes on fold, bitwise identical to the old
+                // client-side dequantize + f32 round-trip
                 let mut qrng = Rng::new(self.seed ^ 0x9a_17 ^ (cid as u64) << 16 ^ round);
                 let q = crate::sparse::quant::quantize(
                     &sv,
                     crate::sparse::quant::QuantConfig { bits },
                     &mut qrng,
                 );
-                crate::sparse::quant::dequantize(&q)
+                q.encode_into(&mut wire);
             } else {
-                sv
-            };
-            let counted =
-                if self.algorithm.is_sparse() || self.secure { sv.nnz() } else { self.m };
-            (sv.encode(), counted)
+                sv.encode_into(&mut wire);
+            }
+            (wire, counted)
         };
         let encode_s = sw.elapsed_secs();
         Ok(ClientResult {
@@ -838,20 +877,29 @@ impl Trainer {
 
         let mut delivered: HashMap<u32, Delivery> =
             outcome.delivered.into_iter().map(|d| (d.cid, d)).collect();
-        let ws = &mut self.server_ws;
-        ws.sharded.reset(m, self.cfg.shards);
         let mut survivors = Vec::with_capacity(delivered.len());
         let mut rolled_back = Vec::new();
+        // delivered payloads in ascending-client-id order: `results`
+        // is in selection order and selection sorts ids — the pinned
+        // fold order both the serial and parallel paths apply
+        let mut payloads: Vec<(u32, Vec<u8>)> = Vec::with_capacity(delivered.len());
         for r in results {
             match delivered.remove(&r.cid) {
                 Some(d) => {
-                    SparseVec::decode_into(&d.bytes, &mut ws.decode)
-                        .map_err(|e| anyhow!("client {} payload: {e}", r.cid))?;
-                    ws.sharded.fold(&ws.decode);
+                    payloads.push((r.cid, d.bytes));
                     survivors.push(r);
                 }
                 None => rolled_back.push(r),
             }
+        }
+        self.server_ws.sharded.reset(m, self.cfg.shards);
+        // the pool-parallel fold is bitwise-equal to the serial one
+        // (each position lives in exactly one shard and sees the same
+        // ascending-cid op sequence), so this gate is pure scheduling
+        if self.cfg.shards > 1 && self.client_pool.size() > 1 && !payloads.is_empty() {
+            self.fold_payloads_parallel(m, payloads)?;
+        } else {
+            self.fold_payloads_serial(payloads)?;
         }
         let mut dead = outcome.dropped.clone();
         dead.extend_from_slice(&outcome.timed_out);
@@ -864,6 +912,100 @@ impl Trainer {
             rolled_back,
             round_time_s: outcome.round_time_s,
         })
+    }
+
+    /// Serial Collect fold: decode each delivered payload into the
+    /// warm [`ServerWorkspace`] scratch and stream it into the sharded
+    /// accumulator, ascending client id. Quantized frames dequantize
+    /// on fold (`code·scale/levels` — the exact client-side
+    /// [`crate::sparse::quant::dequantize`] expression). Consumed wire
+    /// buffers recycle back into the [`WorkspacePool`].
+    fn fold_payloads_serial(&mut self, payloads: Vec<(u32, Vec<u8>)>) -> Result<()> {
+        let quant = self.cfg.quant_bits.is_some();
+        let ws = &mut self.server_ws;
+        for (cid, bytes) in payloads {
+            if quant {
+                QuantizedSparse::decode_into(&bytes, &mut ws.qdecode)
+                    .map_err(|e| anyhow!("client {cid} payload: {e}"))?;
+                ws.sharded.fold_quant(&ws.qdecode);
+            } else {
+                SparseVec::decode_into(&bytes, &mut ws.decode)
+                    .map_err(|e| anyhow!("client {cid} payload: {e}"))?;
+                ws.sharded.fold(&ws.decode);
+            }
+            self.client_workspaces.release_wire(bytes);
+        }
+        Ok(())
+    }
+
+    /// Pool-parallel Collect fold: one task per shard, each owning its
+    /// moved-out shard buffer and walking every payload restricted to
+    /// its coordinate range via the fused decode+fold kernels
+    /// ([`crate::sparse::codec::fold_f32_range`] /
+    /// [`crate::sparse::quant::fold_quant_range`]), in ascending
+    /// client id. Bitwise-equal to [`Self::fold_payloads_serial`]: a
+    /// position lives in exactly one shard, so its f32 op sequence is
+    /// the serial one, and the shard merge stays a pure ascending-id
+    /// concatenation (PERF.md shard-merge contract, extended to the
+    /// parallel fold by `tests/neighborhood_secagg.rs`). Runs on
+    /// [`ThreadPool::map_shared`], so it is safe at any pool size and
+    /// the caller participates.
+    fn fold_payloads_parallel(&mut self, m: usize, payloads: Vec<(u32, Vec<u8>)>) -> Result<()> {
+        let shards = self.server_ws.sharded.shards();
+        let tasks: Vec<Mutex<(u32, u32, Vec<f32>)>> = (0..shards)
+            .map(|s| Mutex::new(self.server_ws.sharded.take_range_buf(s)))
+            .collect();
+        let quant = self.cfg.quant_bits.is_some();
+        let payloads = Arc::new(payloads);
+        let p = Arc::clone(&payloads);
+        let outcomes = self.client_pool.map_shared(
+            tasks,
+            move |t: &Mutex<(u32, u32, Vec<f32>)>| {
+                let t = &mut *t.lock().unwrap();
+                let (start, end) = (t.0, t.1);
+                let mut err: Option<String> = None;
+                for (cid, bytes) in p.iter() {
+                    let r = if quant {
+                        crate::sparse::quant::fold_quant_range(bytes, start, end, &mut t.2)
+                    } else {
+                        crate::sparse::codec::fold_f32_range(bytes, start, end, &mut t.2)
+                    };
+                    match r {
+                        Ok(n) if n as usize == m => {}
+                        Ok(n) => {
+                            err = Some(format!("client {cid} payload: dimension {n} != {m}"));
+                            break;
+                        }
+                        Err(e) => {
+                            err = Some(format!("client {cid} payload: {e}"));
+                            break;
+                        }
+                    }
+                }
+                (std::mem::take(&mut t.2), err)
+            },
+        );
+        let mut first_err = None;
+        for (s, (buf, err)) in outcomes.into_iter().enumerate() {
+            // buffers are moved back, never copied — the accumulator
+            // stays warm for the next round
+            self.server_ws.sharded.put_range_buf(s, buf);
+            if first_err.is_none() {
+                first_err = err;
+            }
+        }
+        // best-effort wire-buffer recycle: a helper thread may still
+        // hold the Arc for an instant after the last result lands, in
+        // which case the buffers simply drop (k-sized, rare)
+        if let Ok(payloads) = Arc::try_unwrap(payloads) {
+            for (_, bytes) in payloads {
+                self.client_workspaces.release_wire(bytes);
+            }
+        }
+        match first_err {
+            Some(e) => Err(anyhow!(e)),
+            None => Ok(()),
+        }
     }
 
     /// Phase 5 — the survivors' payloads are already folded into the

@@ -24,6 +24,7 @@
 //! (`tests/alloc_steady_state.rs`).
 
 use crate::sparse::codec::SparseVec;
+use crate::sparse::quant::{QuantConfig, QuantizedSparse};
 
 /// A model-sized accumulator stored as `S` contiguous range shards.
 #[derive(Default)]
@@ -87,6 +88,39 @@ impl ShardedAccumulator {
         self.cursor = 0;
     }
 
+    /// [`Self::fold`] for a quantized uplink: `acc[i] += code·scale/levels`
+    /// per entry — the exact expression [`crate::sparse::quant::dequantize`]
+    /// evaluates client-side, so dequantize-on-fold is bitwise
+    /// identical to folding a client-dequantized f32 payload.
+    pub fn fold_quant(&mut self, q: &QuantizedSparse) {
+        assert_eq!(q.n as usize, self.n, "accumulator size mismatch");
+        let levels = QuantConfig { bits: q.bits }.levels() as f32;
+        let mut s = self.cursor.min(self.bufs.len() - 1);
+        for (&i, &c) in q.indices.iter().zip(&q.codes) {
+            let i = i as usize;
+            if i < self.starts[s] || i >= self.starts[s + 1] {
+                s = self.shard_of(i);
+            }
+            self.bufs[s][i - self.starts[s]] += c as f32 / levels * q.scale;
+        }
+        self.cursor = 0;
+    }
+
+    /// Move shard `s`'s buffer out for a pool-parallel fold task,
+    /// returning its `[start, end)` coordinate range with it. The task
+    /// folds range-restricted payload walks into the buffer and hands
+    /// it back through [`Self::put_range_buf`] — moved, never copied,
+    /// so the parallel Collect stays allocation-free in steady state.
+    pub(crate) fn take_range_buf(&mut self, s: usize) -> (u32, u32, Vec<f32>) {
+        (self.starts[s] as u32, self.starts[s + 1] as u32, std::mem::take(&mut self.bufs[s]))
+    }
+
+    /// Restore shard `s`'s buffer after a parallel fold task.
+    pub(crate) fn put_range_buf(&mut self, s: usize, buf: Vec<f32>) {
+        debug_assert_eq!(buf.len(), self.starts[s + 1] - self.starts[s]);
+        self.bufs[s] = buf;
+    }
+
     /// `acc[i] -= x` — the dead-mask cancellation sink
     /// ([`crate::secagg::SecAggServer::cancel_dead_masks_pooled_sink`]).
     pub fn sub_at(&mut self, i: u32, x: f32) {
@@ -142,6 +176,40 @@ mod tests {
             assert!(
                 serial.iter().zip(&merged).all(|(a, b)| a.to_bits() == b.to_bits()),
                 "shards={shards}: merge diverged from serial"
+            );
+        }
+    }
+
+    #[test]
+    fn fold_quant_is_bitwise_equal_to_folding_dequantized() {
+        use crate::sparse::quant::{dequantize, quantize};
+        let n = 997usize;
+        let mut rng = Rng::new(77);
+        let quants: Vec<QuantizedSparse> = (0..5)
+            .map(|i| {
+                let p = payload(n as u32, 70 + i, 0.05);
+                quantize(&p, QuantConfig { bits: 4 }, &mut rng)
+            })
+            .collect();
+        // reference: the old client-side-dequantize path
+        let mut reference = ShardedAccumulator::default();
+        reference.reset(n, 1);
+        for q in &quants {
+            reference.fold(&dequantize(q));
+        }
+        let mut want = Vec::new();
+        reference.merge_into(&mut want);
+        for shards in [1usize, 2, 3, 8] {
+            let mut acc = ShardedAccumulator::default();
+            acc.reset(n, shards);
+            for q in &quants {
+                acc.fold_quant(q);
+            }
+            let mut got = Vec::new();
+            acc.merge_into(&mut got);
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "shards={shards}: dequantize-on-fold diverged"
             );
         }
     }

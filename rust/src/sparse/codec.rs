@@ -75,18 +75,22 @@ impl SparseVec {
     /// indices + raw f32 LE values.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(8 + self.nnz() * 6);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// [`encode`](Self::encode) into a caller-owned buffer (cleared
+    /// first) — the client pipeline's zero-alloc encode path, which
+    /// reuses one warm [`crate::coordinator::ClientWorkspace`] buffer
+    /// per worker instead of allocating a payload per client per round.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
         out.extend_from_slice(&self.n.to_le_bytes());
         out.extend_from_slice(&(self.nnz() as u32).to_le_bytes());
-        let mut prev = 0u32;
-        for &i in &self.indices {
-            let delta = i - prev; // indices sorted ascending
-            write_varint(&mut out, delta as u64);
-            prev = i;
-        }
+        encode_indices(&self.indices, out);
         for &v in &self.values {
             out.extend_from_slice(&v.to_le_bytes());
         }
-        out
     }
 
     /// Decode [`encode`](Self::encode) output.
@@ -110,33 +114,14 @@ impl SparseVec {
         }
         let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
         let nnz = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
-        let mut pos = 8usize;
-        out.indices.reserve(nnz);
-        let mut prev = 0u32;
-        for _ in 0..nnz {
-            let (delta, used) = match read_varint(&bytes[pos..]) {
-                Some(x) => x,
-                None => {
-                    out.indices.clear();
-                    return Err(CodecError::Truncated);
-                }
-            };
-            pos += used;
-            let idx = match prev.checked_add(delta as u32) {
-                Some(i) if i < n => i,
-                Some(_) => {
-                    out.indices.clear();
-                    return Err(CodecError::Corrupt("index out of range"));
-                }
-                None => {
-                    out.indices.clear();
-                    return Err(CodecError::Corrupt("index overflow"));
-                }
-            };
-            out.indices.push(idx);
-            prev = idx;
-        }
-        if bytes.len() < pos + nnz * 4 {
+        let pos = 8 + match decode_indices(&bytes[8..], nnz, n, &mut out.indices) {
+            Ok(used) => used,
+            Err(e) => {
+                out.indices.clear();
+                return Err(e);
+            }
+        };
+        if bytes.len() < pos || bytes.len() - pos < nnz * 4 {
             out.indices.clear();
             return Err(CodecError::Truncated);
         }
@@ -174,6 +159,115 @@ pub enum CodecError {
     Truncated,
     #[error("corrupt sparse payload: {0}")]
     Corrupt(&'static str),
+}
+
+/// Delta-encode sorted indices as varints — the index section shared
+/// by the f32 ([`SparseVec::encode_into`]) and quantized
+/// ([`crate::sparse::quant::QuantizedSparse::encode_into`]) frames.
+pub(crate) fn encode_indices(indices: &[u32], out: &mut Vec<u8>) {
+    let mut prev = 0u32;
+    for &i in indices {
+        let delta = i - prev; // indices sorted ascending
+        write_varint(out, delta as u64);
+        prev = i;
+    }
+}
+
+/// Checked delta-varint index walk: calls `f(k, idx)` for each of the
+/// `nnz` entries (all `idx < n`), returning the bytes consumed. The
+/// non-materializing core shared by [`decode_indices`] and the fused
+/// decode+fold range kernels ([`fold_f32_range`],
+/// [`crate::sparse::quant::fold_quant_range`]).
+pub(crate) fn walk_indices(
+    bytes: &[u8],
+    nnz: usize,
+    n: u32,
+    mut f: impl FnMut(usize, u32),
+) -> Result<usize, CodecError> {
+    // every index needs ≥ 1 varint byte, so an nnz larger than the
+    // remaining payload is corrupt — checked up front, so a garbage
+    // header fails fast (and callers can reserve safely)
+    if nnz > bytes.len() {
+        return Err(CodecError::Truncated);
+    }
+    let mut pos = 0usize;
+    let mut prev = 0u32;
+    for k in 0..nnz {
+        let (delta, used) = match read_varint(&bytes[pos..]) {
+            Some(x) => x,
+            None => return Err(CodecError::Truncated),
+        };
+        pos += used;
+        // reject before narrowing: `delta as u32` would silently wrap
+        // a > u32::MAX varint into a small, in-range-looking delta
+        if delta > u32::MAX as u64 {
+            return Err(CodecError::Corrupt("delta overflow"));
+        }
+        let idx = match prev.checked_add(delta as u32) {
+            Some(i) if i < n => i,
+            Some(_) => return Err(CodecError::Corrupt("index out of range")),
+            None => return Err(CodecError::Corrupt("index overflow")),
+        };
+        f(k, idx);
+        prev = idx;
+    }
+    Ok(pos)
+}
+
+/// Decode `nnz` delta-varint indices (all `< n`) from `bytes` into
+/// `out` (cleared first), returning the bytes consumed. On error `out`
+/// may hold a partial prefix — callers clear it (the "no partial
+/// output" contract lives at the frame level).
+pub(crate) fn decode_indices(
+    bytes: &[u8],
+    nnz: usize,
+    n: u32,
+    out: &mut Vec<u32>,
+) -> Result<usize, CodecError> {
+    out.clear();
+    if nnz > bytes.len() {
+        return Err(CodecError::Truncated);
+    }
+    out.reserve(nnz);
+    walk_indices(bytes, nnz, n, |_, idx| out.push(idx))
+}
+
+/// Fused decode+fold for the pool-parallel Collect: stream the f32
+/// frame's entries whose index lies in `[start, end)` straight into
+/// `acc` (`acc[idx - start] += v`), materializing nothing. Returns the
+/// frame's dense dimension `n`. Index validation is identical to
+/// [`SparseVec::decode_into`] (every index of the frame is checked, in
+/// and out of range), and the in-range adds happen in frame order, so
+/// a union of range folds over a partition of `[0, n)` applies exactly
+/// the serial fold's per-position f32 op sequence — the bitwise
+/// contract the parallel sharded Collect rests on (PERF.md).
+pub fn fold_f32_range(
+    bytes: &[u8],
+    start: u32,
+    end: u32,
+    acc: &mut [f32],
+) -> Result<u32, CodecError> {
+    if bytes.len() < 8 {
+        return Err(CodecError::Truncated);
+    }
+    let n = u32::from_le_bytes(bytes[0..4].try_into().unwrap());
+    let nnz = u32::from_le_bytes(bytes[4..8].try_into().unwrap()) as usize;
+    let idx_bytes = &bytes[8..];
+    // first walk finds (and validates) the index section so the value
+    // section offset is known; the second fuses the range fold
+    let used = walk_indices(idx_bytes, nnz, n, |_, _| {})?;
+    let values = &idx_bytes[used..];
+    if values.len() < nnz * 4 {
+        return Err(CodecError::Truncated);
+    }
+    walk_indices(idx_bytes, nnz, n, |k, idx| {
+        if idx >= start && idx < end {
+            let off = 4 * k;
+            let v = f32::from_le_bytes(values[off..off + 4].try_into().unwrap());
+            acc[(idx - start) as usize] += v;
+        }
+    })?;
+    Ok(n)
 }
 
 fn write_varint(out: &mut Vec<u8>, mut v: u64) {
@@ -325,6 +419,101 @@ mod tests {
             SparseVec::decode(&bytes),
             Err(CodecError::Corrupt(_))
         ));
+    }
+
+    #[test]
+    fn decode_rejects_wrapping_varint_delta() {
+        // regression: a delta > u32::MAX used to be narrowed with `as
+        // u32` BEFORE the overflow guard, so e.g. 1<<32 wrapped to 0
+        // and decoded as a valid small index
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&10u32.to_le_bytes()); // n
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // nnz
+        write_varint(&mut bytes, 1u64 << 32); // wraps to delta 0
+        bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        assert_eq!(
+            SparseVec::decode(&bytes),
+            Err(CodecError::Corrupt("delta overflow"))
+        );
+        // u32::MAX itself still overflows prev+delta, not the varint
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&10u32.to_le_bytes());
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        write_varint(&mut bytes, 5);
+        write_varint(&mut bytes, u32::MAX as u64);
+        bytes.extend_from_slice(&[0u8; 8]);
+        assert_eq!(
+            SparseVec::decode(&bytes),
+            Err(CodecError::Corrupt("index overflow"))
+        );
+    }
+
+    #[test]
+    fn decode_bounds_nnz_by_payload_length() {
+        // a garbage header claiming nnz = u32::MAX must fail fast
+        // (Truncated) instead of reserving gigabytes
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&100u32.to_le_bytes());
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes());
+        bytes.extend_from_slice(&[0x01; 16]);
+        assert_eq!(SparseVec::decode(&bytes), Err(CodecError::Truncated));
+    }
+
+    #[test]
+    fn encode_into_matches_encode_and_reuses_buffer() {
+        let a = random_sparse(21, 10_000, 0.02);
+        let b = random_sparse(22, 10_000, 0.01);
+        let mut buf = Vec::new();
+        a.encode_into(&mut buf);
+        assert_eq!(buf, a.encode());
+        let cap = buf.capacity();
+        b.encode_into(&mut buf); // smaller payload: no regrowth
+        assert_eq!(buf, b.encode());
+        assert_eq!(buf.capacity(), cap);
+    }
+
+    #[test]
+    fn f32_frame_bytes_are_pinned() {
+        // golden: the quantized-wire fast path must leave the
+        // `quant_bits = None` encoding byte-identical — this is the
+        // exact frame layout from before the quantized frame existed
+        let sv = SparseVec {
+            n: 10,
+            indices: vec![1, 3, 9],
+            values: vec![1.0, -2.0, 0.5],
+        };
+        let golden: Vec<u8> = vec![
+            10, 0, 0, 0, // n LE
+            3, 0, 0, 0, // nnz LE
+            1, 2, 6, // delta varints
+            0, 0, 128, 63, // 1.0f32 LE
+            0, 0, 0, 192, // -2.0f32 LE
+            0, 0, 0, 63, // 0.5f32 LE
+        ];
+        assert_eq!(sv.encode(), golden);
+    }
+
+    #[test]
+    fn fold_f32_range_partition_matches_add_into() {
+        let sv = random_sparse(31, 4096, 0.05);
+        let bytes = sv.encode();
+        let mut want = vec![0f32; 4096];
+        sv.add_into(&mut want);
+        for cuts in [vec![0u32, 4096], vec![0, 1, 7, 100, 4095, 4096]] {
+            let mut got = vec![0f32; 4096];
+            for w in cuts.windows(2) {
+                let (s, e) = (w[0], w[1]);
+                let n =
+                    fold_f32_range(&bytes, s, e, &mut got[s as usize..e as usize]).unwrap();
+                assert_eq!(n, 4096);
+            }
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "range-fold partition diverged at cuts {cuts:?}"
+            );
+        }
+        // validation parity: truncated bytes fail in any range
+        assert!(fold_f32_range(&bytes[..bytes.len() - 2], 0, 4096, &mut [0.0; 4096]).is_err());
     }
 
     #[test]

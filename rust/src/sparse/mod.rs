@@ -22,7 +22,7 @@ pub mod topk;
 
 pub use codec::SparseVec;
 pub use momentum::{warmup_rate, MomentumCorrector};
-pub use quant::{dequantize, quantize, QuantConfig};
+pub use quant::{dequantize, quantize, QuantConfig, QuantizedSparse};
 pub use stc::stc_sparsify;
 pub use dynamic::DynamicRate;
 pub use flat::{flat_topk_sparsify, flat_topk_sparsify_into};

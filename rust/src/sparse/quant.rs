@@ -7,8 +7,40 @@
 //! with *stochastic rounding*, which keeps the quantizer unbiased
 //! (E[Q(x)] = x) — the property QSGD's convergence proof needs.
 
-use crate::sparse::codec::SparseVec;
+//! ## The quantized wire frame (v1)
+//!
+//! [`QuantizedSparse::encode_into`] ships the codes themselves instead
+//! of dequantized f32s, so `quant_bits` changes real wire bytes:
+//!
+//! ```text
+//! [0]      frame version (1)
+//! [1]      bits b (2..=8)
+//! [2..6]   n    u32 LE
+//! [6..10]  nnz  u32 LE
+//! [10..14] scale f32 LE
+//! [14..]   delta-varint indices (shared with the f32 frame)
+//! then     bitpacked codes: biased unsigned (code + levels) fields of
+//!          b bits, 32/b codes per u32 word LSB-first, words LE;
+//!          ceil(nnz / (32/b)) words, padding bits zero
+//! ```
+//!
+//! Codes pack word-aligned (`32/b` per u32, the last word's tail
+//! zero-padded) so the pack/unpack kernels vectorize on
+//! [`crate::util::simd::U32x8`] shifts: eight words per step, one
+//! vector shl/shr+mask per field position. The scalar branch is the
+//! `FEDSPARSE_NO_SIMD` fallback and the bitwise parity reference
+//! (PERF.md) — both branches produce identical bytes/codes.
+//!
+//! The server dequantizes on fold (`code as f32 / levels * scale`,
+//! [`crate::coordinator::ShardedAccumulator::fold_quant`]) — the exact
+//! expression [`dequantize`] evaluates client-side, so shipping codes
+//! is bitwise identical to yesterday's dequantize-then-encode-f32
+//! path. Secure mode stays on f32 values: pair masks are f32 sums and
+//! cancellation happens in f32 space (boundary documented in PERF.md).
+
+use crate::sparse::codec::{self, CodecError, SparseVec};
 use crate::util::rng::Rng;
+use crate::util::simd::U32x8;
 
 /// Quantization config: bits per value (2..=8 supported).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,7 +56,7 @@ impl QuantConfig {
 }
 
 /// A quantized sparse update: indices + signed level codes + scale.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug, PartialEq, Default)]
 pub struct QuantizedSparse {
     pub n: u32,
     pub indices: Vec<u32>,
@@ -32,6 +64,259 @@ pub struct QuantizedSparse {
     pub codes: Vec<i8>,
     pub scale: f32,
     pub bits: u8,
+}
+
+/// Version byte at the head of the quantized wire frame.
+pub const QUANT_FRAME_VERSION: u8 = 1;
+
+/// Codes per packed u32 word: `32 / b` (the word tail past
+/// `cpw·b` bits stays zero).
+#[inline]
+fn codes_per_word(bits: u8) -> usize {
+    32 / bits as usize
+}
+
+impl QuantizedSparse {
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Packed-code section size in bytes for `nnz` codes at `bits`.
+    pub fn packed_bytes(nnz: usize, bits: u8) -> usize {
+        nnz.div_ceil(codes_per_word(bits)) * 4
+    }
+
+    /// Encode the v1 quantized wire frame (see the module doc for the
+    /// layout) into a caller-owned buffer (cleared first) — the
+    /// zero-alloc twin of [`SparseVec::encode_into`].
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.push(QUANT_FRAME_VERSION);
+        out.push(self.bits);
+        out.extend_from_slice(&self.n.to_le_bytes());
+        out.extend_from_slice(&(self.nnz() as u32).to_le_bytes());
+        out.extend_from_slice(&self.scale.to_le_bytes());
+        codec::encode_indices(&self.indices, out);
+        pack_codes_with(&self.codes, self.bits, out, crate::util::simd::enabled());
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(14 + self.nnz() * 4);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Decode [`encode`](Self::encode) output into a caller-owned
+    /// frame, reusing its buffers (the coordinator's streaming-Collect
+    /// scratch). On error `out` is left cleared, never partially
+    /// decoded.
+    pub fn decode_into(bytes: &[u8], out: &mut QuantizedSparse) -> Result<(), CodecError> {
+        out.n = 0;
+        out.scale = 0.0;
+        out.bits = 0;
+        out.indices.clear();
+        out.codes.clear();
+        if bytes.len() < 14 {
+            return Err(CodecError::Truncated);
+        }
+        if bytes[0] != QUANT_FRAME_VERSION {
+            return Err(CodecError::Corrupt("frame version"));
+        }
+        let bits = bytes[1];
+        if !(2..=8).contains(&bits) {
+            return Err(CodecError::Corrupt("bits out of range"));
+        }
+        let n = u32::from_le_bytes(bytes[2..6].try_into().unwrap());
+        let nnz = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+        let scale = f32::from_le_bytes(bytes[10..14].try_into().unwrap());
+        let pos = 14 + match codec::decode_indices(&bytes[14..], nnz, n, &mut out.indices) {
+            Ok(used) => used,
+            Err(e) => {
+                out.indices.clear();
+                return Err(e);
+            }
+        };
+        if let Err(e) =
+            unpack_codes_with(&bytes[pos..], nnz, bits, &mut out.codes, crate::util::simd::enabled())
+        {
+            out.indices.clear();
+            out.codes.clear();
+            return Err(e);
+        }
+        out.n = n;
+        out.scale = scale;
+        out.bits = bits;
+        Ok(())
+    }
+
+    pub fn decode(bytes: &[u8]) -> Result<Self, CodecError> {
+        let mut out = Self::default();
+        Self::decode_into(bytes, &mut out)?;
+        Ok(out)
+    }
+}
+
+/// Fused decode+dequantize+fold for the pool-parallel Collect: stream
+/// the quantized frame's entries whose index lies in `[start, end)`
+/// into `acc` as `acc[idx - start] += code as f32 / levels * scale` —
+/// the exact [`dequantize`] expression, evaluated server-side. Returns
+/// the frame's dense dimension `n`. Every index of the frame is
+/// validated ([`codec::walk_indices`] guards); each code is validated
+/// by the one shard whose range contains its index, so a partition of
+/// `[0, n)` validates every code exactly once.
+pub fn fold_quant_range(
+    bytes: &[u8],
+    start: u32,
+    end: u32,
+    acc: &mut [f32],
+) -> Result<u32, CodecError> {
+    if bytes.len() < 14 {
+        return Err(CodecError::Truncated);
+    }
+    if bytes[0] != QUANT_FRAME_VERSION {
+        return Err(CodecError::Corrupt("frame version"));
+    }
+    let bits = bytes[1];
+    if !(2..=8).contains(&bits) {
+        return Err(CodecError::Corrupt("bits out of range"));
+    }
+    let n = u32::from_le_bytes(bytes[2..6].try_into().unwrap());
+    let nnz = u32::from_le_bytes(bytes[6..10].try_into().unwrap()) as usize;
+    let scale = f32::from_le_bytes(bytes[10..14].try_into().unwrap());
+    let idx_bytes = &bytes[14..];
+    let used = codec::walk_indices(idx_bytes, nnz, n, |_, _| {})?;
+    let codes = &idx_bytes[used..];
+    let cpw = codes_per_word(bits);
+    if codes.len() < nnz.div_ceil(cpw) * 4 {
+        return Err(CodecError::Truncated);
+    }
+    let b = bits as u32;
+    let mask = (1u32 << b) - 1;
+    let levels = QuantConfig { bits }.levels() as i32;
+    let top = (2 * levels) as u32;
+    let levels_f = levels as f32;
+    let mut bad = false;
+    codec::walk_indices(idx_bytes, nnz, n, |k, idx| {
+        if idx >= start && idx < end {
+            let word =
+                u32::from_le_bytes(codes[(k / cpw) * 4..(k / cpw) * 4 + 4].try_into().unwrap());
+            let raw = (word >> ((k % cpw) as u32 * b)) & mask;
+            if raw > top {
+                bad = true;
+            } else {
+                acc[(idx - start) as usize] += (raw as i32 - levels) as f32 / levels_f * scale;
+            }
+        }
+    })?;
+    if bad {
+        return Err(CodecError::Corrupt("code out of range"));
+    }
+    Ok(n)
+}
+
+/// Bitpack signed codes (each in `[-levels, levels]`) as biased
+/// unsigned `code + levels` fields, `32/bits` per u32 word LSB-first,
+/// words appended LE. The SIMD branch fills eight words per step — one
+/// [`U32x8`] shl+or per field position, lane `w` accumulating word
+/// `w` — and is bitwise identical to the scalar branch (the
+/// `FEDSPARSE_NO_SIMD` fallback and parity reference).
+pub fn pack_codes_with(codes: &[i8], bits: u8, out: &mut Vec<u8>, use_simd: bool) {
+    let levels = QuantConfig { bits }.levels() as i32;
+    let cpw = codes_per_word(bits);
+    let b = bits as u32;
+    let mut i = 0usize;
+    if use_simd {
+        while i + 8 * cpw <= codes.len() {
+            let mut acc = U32x8::splat(0);
+            for j in 0..cpw {
+                let lanes: [u32; 8] =
+                    std::array::from_fn(|w| (codes[i + w * cpw + j] as i32 + levels) as u32);
+                acc = acc.or(U32x8::from_array(lanes).shl(j as u32 * b));
+            }
+            for word in acc.to_array() {
+                out.extend_from_slice(&word.to_le_bytes());
+            }
+            i += 8 * cpw;
+        }
+    }
+    while i < codes.len() {
+        let take = cpw.min(codes.len() - i);
+        let mut word = 0u32;
+        for j in 0..take {
+            word |= ((codes[i + j] as i32 + levels) as u32) << (j as u32 * b);
+        }
+        out.extend_from_slice(&word.to_le_bytes());
+        i += take;
+    }
+}
+
+/// Unpack `nnz` bitpacked codes from `bytes` into `out` (cleared
+/// first). Rejects fields outside the biased range `0..=2·levels` and
+/// nonzero padding past the last code — a corrupt frame never yields
+/// out-of-budget codes. SIMD branch mirrors [`pack_codes_with`]: eight
+/// words per step, one [`U32x8`] shr+and per field position; identical
+/// output and acceptance to the scalar branch.
+pub fn unpack_codes_with(
+    bytes: &[u8],
+    nnz: usize,
+    bits: u8,
+    out: &mut Vec<i8>,
+    use_simd: bool,
+) -> Result<(), CodecError> {
+    let levels = QuantConfig { bits }.levels() as i32;
+    let cpw = codes_per_word(bits);
+    let words = nnz.div_ceil(cpw);
+    out.clear();
+    if bytes.len() < words * 4 {
+        return Err(CodecError::Truncated);
+    }
+    let b = bits as u32;
+    let mask = (1u32 << b) - 1;
+    let top = (2 * levels) as u32; // biased codes are 0..=2·levels
+    out.reserve(nnz);
+    let mut w = 0usize;
+    if use_simd {
+        while (w + 8) * cpw <= nnz {
+            let v = U32x8::load_le(&bytes[w * 4..]);
+            let base = out.len();
+            out.resize(base + 8 * cpw, 0);
+            let mut bad = false;
+            for j in 0..cpw {
+                let fields = v.shr(j as u32 * b).and(U32x8::splat(mask)).to_array();
+                for (l, &raw) in fields.iter().enumerate() {
+                    bad |= raw > top;
+                    out[base + l * cpw + j] = (raw as i32 - levels) as i8;
+                }
+            }
+            if bad {
+                out.clear();
+                return Err(CodecError::Corrupt("code out of range"));
+            }
+            w += 8;
+        }
+    }
+    let mut i = w * cpw;
+    while i < nnz {
+        let word = u32::from_le_bytes(bytes[w * 4..w * 4 + 4].try_into().unwrap());
+        let take = cpw.min(nnz - i);
+        for j in 0..take {
+            let raw = (word >> (j as u32 * b)) & mask;
+            if raw > top {
+                out.clear();
+                return Err(CodecError::Corrupt("code out of range"));
+            }
+            out.push((raw as i32 - levels) as i8);
+        }
+        // bits past the last code of the final word must be zero —
+        // one canonical encoding per payload
+        if take < cpw && (word >> (take as u32 * b)) != 0 {
+            out.clear();
+            return Err(CodecError::Corrupt("nonzero padding"));
+        }
+        w += 1;
+        i += take;
+    }
+    Ok(())
 }
 
 /// Stochastically quantize a sparse vector's values.
@@ -155,5 +440,120 @@ mod tests {
     #[should_panic(expected = "outside 2..=8")]
     fn bad_bits_rejected() {
         QuantConfig { bits: 1 }.levels();
+    }
+
+    /// A quantized update with exactly `nnz` entries at spread-out
+    /// sorted indices.
+    fn random_quant(seed: u64, nnz: usize, bits: u8) -> QuantizedSparse {
+        let mut rng = Rng::new(seed);
+        let n = (nnz as u32 * 7).max(16);
+        let v = SparseVec {
+            n,
+            indices: (0..nnz as u32).map(|i| i * 7 + (seed as u32 % 7)).collect(),
+            values: (0..nnz).map(|_| rng.normal_f32(1.0)).collect(),
+        };
+        quantize(&v, QuantConfig { bits }, &mut rng)
+    }
+
+    #[test]
+    fn wire_roundtrip_matches_client_side_dequantize() {
+        // encode → decode → server-side dequantize must be bitwise
+        // equal to dequantizing the original client-side — the parity
+        // that keeps the plain-path goldens pinned when quant_bits is
+        // set. Lane-remainder nnz values per the PERF.md contract.
+        for bits in [2u8, 4, 8] {
+            for nnz in [0usize, 1, 7, 8, 9, 1590] {
+                let q = random_quant(100 + nnz as u64, nnz, bits);
+                let bytes = q.encode();
+                let d = QuantizedSparse::decode(&bytes)
+                    .unwrap_or_else(|e| panic!("bits={bits} nnz={nnz}: {e}"));
+                assert_eq!(d, q, "bits={bits} nnz={nnz}");
+                let (dv, qv) = (dequantize(&d), dequantize(&q));
+                assert_eq!(dv.indices, qv.indices);
+                assert!(
+                    dv.values.iter().zip(&qv.values).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "bits={bits} nnz={nnz}: dequantized values diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_simd_bitwise_matches_scalar() {
+        for bits in 2u8..=8 {
+            for nnz in [0usize, 1, 7, 8, 9, 17, 64, 65, 1590] {
+                let q = random_quant(7 * nnz as u64 + bits as u64, nnz, bits);
+                let mut packed_simd = Vec::new();
+                let mut packed_scalar = Vec::new();
+                pack_codes_with(&q.codes, bits, &mut packed_simd, true);
+                pack_codes_with(&q.codes, bits, &mut packed_scalar, false);
+                assert_eq!(packed_simd, packed_scalar, "bits={bits} nnz={nnz}: pack");
+                let mut up_simd = Vec::new();
+                let mut up_scalar = Vec::new();
+                unpack_codes_with(&packed_simd, nnz, bits, &mut up_simd, true).unwrap();
+                unpack_codes_with(&packed_scalar, nnz, bits, &mut up_scalar, false).unwrap();
+                assert_eq!(up_simd, up_scalar, "bits={bits} nnz={nnz}: unpack");
+                assert_eq!(up_simd, q.codes, "bits={bits} nnz={nnz}: roundtrip");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_into_reuses_buffers_and_clears_on_error() {
+        let a = random_quant(31, 1000, 4);
+        let b = random_quant(32, 500, 4);
+        let mut scratch = QuantizedSparse::default();
+        QuantizedSparse::decode_into(&a.encode(), &mut scratch).unwrap();
+        assert_eq!(scratch, a);
+        let cap = scratch.indices.capacity();
+        QuantizedSparse::decode_into(&b.encode(), &mut scratch).unwrap();
+        assert_eq!(scratch, b);
+        assert_eq!(scratch.indices.capacity(), cap);
+        let bytes = a.encode();
+        assert_eq!(
+            QuantizedSparse::decode_into(&bytes[..bytes.len() - 2], &mut scratch),
+            Err(CodecError::Truncated)
+        );
+        assert_eq!(scratch.nnz(), 0);
+        assert!(scratch.codes.is_empty());
+        assert_eq!(scratch.n, 0);
+    }
+
+    #[test]
+    fn decode_rejects_bad_version_bits_and_out_of_budget_codes() {
+        let q = random_quant(41, 64, 4);
+        let good = q.encode();
+        let mut bad = good.clone();
+        bad[0] = 2; // unknown version
+        assert_eq!(QuantizedSparse::decode(&bad), Err(CodecError::Corrupt("frame version")));
+        let mut bad = good.clone();
+        bad[1] = 9; // bits outside 2..=8
+        assert_eq!(QuantizedSparse::decode(&bad), Err(CodecError::Corrupt("bits out of range")));
+        // a packed field of all-ones (= 2·levels + 1) is out of budget
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] = 0xff;
+        assert!(matches!(QuantizedSparse::decode(&bad), Err(CodecError::Corrupt(_))));
+    }
+
+    #[test]
+    fn quant_frame_at_4_bits_is_under_45_percent_of_f32_frame() {
+        // the acceptance ratio, asserted at the codec level: same
+        // support, 4-bit codes vs f32 values
+        let mut rng = Rng::new(51);
+        let mut dense = vec![0f32; 159_010];
+        for v in dense.iter_mut() {
+            if rng.next_f64() < 0.01 {
+                *v = rng.normal_f32(1.0);
+            }
+        }
+        let sv = SparseVec::from_dense(&dense);
+        let q = quantize(&sv, QuantConfig { bits: 4 }, &mut rng);
+        let f32_bytes = sv.encode().len();
+        let q_bytes = q.encode().len();
+        assert!(
+            (q_bytes as f64) <= 0.45 * f32_bytes as f64,
+            "quantized frame {q_bytes} vs f32 frame {f32_bytes}"
+        );
     }
 }

@@ -167,6 +167,43 @@ mod lanes {
                 _mm256_movemask_ps(_mm256_castsi256_ps(gt)) as u32 & 0xff
             }
         }
+
+        #[inline]
+        pub fn from_array(a: [u32; 8]) -> Self {
+            unsafe { Self(_mm256_loadu_si256(a.as_ptr() as *const __m256i)) }
+        }
+
+        #[inline]
+        pub fn to_array(self) -> [u32; 8] {
+            let mut a = [0u32; 8];
+            unsafe { _mm256_storeu_si256(a.as_mut_ptr() as *mut __m256i, self.0) };
+            a
+        }
+
+        #[inline]
+        pub fn and(self, o: Self) -> Self {
+            unsafe { Self(_mm256_and_si256(self.0, o.0)) }
+        }
+
+        #[inline]
+        pub fn or(self, o: Self) -> Self {
+            unsafe { Self(_mm256_or_si256(self.0, o.0)) }
+        }
+
+        /// Lane-wise logical shift left by a runtime count (`n < 32`) —
+        /// the bitpack kernel's field placement shift.
+        #[inline]
+        pub fn shl(self, n: u32) -> Self {
+            debug_assert!(n < 32);
+            unsafe { Self(_mm256_sll_epi32(self.0, _mm_cvtsi32_si128(n as i32))) }
+        }
+
+        /// Lane-wise logical shift right by a runtime count (`n < 32`).
+        #[inline]
+        pub fn shr(self, n: u32) -> Self {
+            debug_assert!(n < 32);
+            unsafe { Self(_mm256_srl_epi32(self.0, _mm_cvtsi32_si128(n as i32))) }
+        }
     }
 
     pub use super::sse_u32x4::U32x4;
@@ -302,6 +339,57 @@ mod lanes {
                 let lo = _mm_movemask_ps(_mm_castsi128_ps(_mm_cmpgt_epi32(self.0, o.0))) as u32;
                 let hi = _mm_movemask_ps(_mm_castsi128_ps(_mm_cmpgt_epi32(self.1, o.1))) as u32;
                 (lo & 0xf) | ((hi & 0xf) << 4)
+            }
+        }
+
+        #[inline]
+        pub fn from_array(a: [u32; 8]) -> Self {
+            unsafe {
+                Self(
+                    _mm_loadu_si128(a.as_ptr() as *const __m128i),
+                    _mm_loadu_si128(a.as_ptr().add(4) as *const __m128i),
+                )
+            }
+        }
+
+        #[inline]
+        pub fn to_array(self) -> [u32; 8] {
+            let mut a = [0u32; 8];
+            unsafe {
+                _mm_storeu_si128(a.as_mut_ptr() as *mut __m128i, self.0);
+                _mm_storeu_si128(a.as_mut_ptr().add(4) as *mut __m128i, self.1);
+            }
+            a
+        }
+
+        #[inline]
+        pub fn and(self, o: Self) -> Self {
+            unsafe { Self(_mm_and_si128(self.0, o.0), _mm_and_si128(self.1, o.1)) }
+        }
+
+        #[inline]
+        pub fn or(self, o: Self) -> Self {
+            unsafe { Self(_mm_or_si128(self.0, o.0), _mm_or_si128(self.1, o.1)) }
+        }
+
+        /// Lane-wise logical shift left by a runtime count (`n < 32`) —
+        /// the bitpack kernel's field placement shift.
+        #[inline]
+        pub fn shl(self, n: u32) -> Self {
+            debug_assert!(n < 32);
+            unsafe {
+                let c = _mm_cvtsi32_si128(n as i32);
+                Self(_mm_sll_epi32(self.0, c), _mm_sll_epi32(self.1, c))
+            }
+        }
+
+        /// Lane-wise logical shift right by a runtime count (`n < 32`).
+        #[inline]
+        pub fn shr(self, n: u32) -> Self {
+            debug_assert!(n < 32);
+            unsafe {
+                let c = _mm_cvtsi32_si128(n as i32);
+                Self(_mm_srl_epi32(self.0, c), _mm_srl_epi32(self.1, c))
             }
         }
     }
@@ -510,6 +598,53 @@ mod lanes {
                 lo | (hi << 4)
             }
         }
+
+        #[inline]
+        pub fn from_array(a: [u32; 8]) -> Self {
+            unsafe { Self(vld1q_u32(a.as_ptr()), vld1q_u32(a.as_ptr().add(4))) }
+        }
+
+        #[inline]
+        pub fn to_array(self) -> [u32; 8] {
+            let mut a = [0u32; 8];
+            unsafe {
+                vst1q_u32(a.as_mut_ptr(), self.0);
+                vst1q_u32(a.as_mut_ptr().add(4), self.1);
+            }
+            a
+        }
+
+        #[inline]
+        pub fn and(self, o: Self) -> Self {
+            unsafe { Self(vandq_u32(self.0, o.0), vandq_u32(self.1, o.1)) }
+        }
+
+        #[inline]
+        pub fn or(self, o: Self) -> Self {
+            unsafe { Self(vorrq_u32(self.0, o.0), vorrq_u32(self.1, o.1)) }
+        }
+
+        /// Lane-wise logical shift left by a runtime count (`n < 32`) —
+        /// the bitpack kernel's field placement shift. NEON shifts by a
+        /// signed per-lane count vector (negative = right).
+        #[inline]
+        pub fn shl(self, n: u32) -> Self {
+            debug_assert!(n < 32);
+            unsafe {
+                let c = vdupq_n_s32(n as i32);
+                Self(vshlq_u32(self.0, c), vshlq_u32(self.1, c))
+            }
+        }
+
+        /// Lane-wise logical shift right by a runtime count (`n < 32`).
+        #[inline]
+        pub fn shr(self, n: u32) -> Self {
+            debug_assert!(n < 32);
+            unsafe {
+                let c = vdupq_n_s32(-(n as i32));
+                Self(vshlq_u32(self.0, c), vshlq_u32(self.1, c))
+            }
+        }
     }
 
     /// Four u32 lanes (NEON `uint32x4_t`).
@@ -691,6 +826,57 @@ mod lanes {
                 }
             }
             m
+        }
+
+        #[inline]
+        pub fn from_array(a: [u32; 8]) -> Self {
+            Self(a)
+        }
+
+        #[inline]
+        pub fn to_array(self) -> [u32; 8] {
+            self.0
+        }
+
+        #[inline]
+        pub fn and(self, o: Self) -> Self {
+            let mut a = self.0;
+            for (x, y) in a.iter_mut().zip(&o.0) {
+                *x &= *y;
+            }
+            Self(a)
+        }
+
+        #[inline]
+        pub fn or(self, o: Self) -> Self {
+            let mut a = self.0;
+            for (x, y) in a.iter_mut().zip(&o.0) {
+                *x |= *y;
+            }
+            Self(a)
+        }
+
+        /// Lane-wise logical shift left by a runtime count (`n < 32`) —
+        /// the bitpack kernel's field placement shift.
+        #[inline]
+        pub fn shl(self, n: u32) -> Self {
+            debug_assert!(n < 32);
+            let mut a = self.0;
+            for x in a.iter_mut() {
+                *x <<= n;
+            }
+            Self(a)
+        }
+
+        /// Lane-wise logical shift right by a runtime count (`n < 32`).
+        #[inline]
+        pub fn shr(self, n: u32) -> Self {
+            debug_assert!(n < 32);
+            let mut a = self.0;
+            for x in a.iter_mut() {
+                *x >>= n;
+            }
+            Self(a)
         }
     }
 
@@ -942,6 +1128,32 @@ mod tests {
                         lane < bound,
                         "bound {bound} lane {lane}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn u32x8_bit_ops_match_scalar() {
+        let mut rng = Rng::new(0x0b17);
+        for _ in 0..50 {
+            let a: [u32; 8] = std::array::from_fn(|_| rng.next_u64() as u32);
+            let b: [u32; 8] = std::array::from_fn(|_| rng.next_u64() as u32);
+            let av = U32x8::from_array(a);
+            let bv = U32x8::from_array(b);
+            assert_eq!(av.to_array(), a);
+            let and = av.and(bv).to_array();
+            let or = av.or(bv).to_array();
+            for i in 0..8 {
+                assert_eq!(and[i], a[i] & b[i]);
+                assert_eq!(or[i], a[i] | b[i]);
+            }
+            for n in [0u32, 1, 2, 7, 8, 15, 31] {
+                let shl = av.shl(n).to_array();
+                let shr = av.shr(n).to_array();
+                for i in 0..8 {
+                    assert_eq!(shl[i], a[i] << n, "shl {n} lane {i}");
+                    assert_eq!(shr[i], a[i] >> n, "shr {n} lane {i}");
                 }
             }
         }

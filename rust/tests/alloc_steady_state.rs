@@ -25,6 +25,14 @@
 //! (`Trainer::run_round`), asserting **zero** large allocations in
 //! steady state for plain and secure modes alike.
 //!
+//! The encode path is part of the audited loop: clients encode into
+//! recycled `WorkspacePool` wire buffers (`SparseVec::encode_into` /
+//! `QuantizedSparse::encode_into`), the buffers travel by move through
+//! the transport, and the Collect fold releases them back to the pool
+//! — so after warm-up the wire path allocates nothing at all on clean
+//! rounds. Scenario (d) drives the quantized (`--quant-bits 4`) frame
+//! through the same audit.
+//!
 //! This file is its own test binary (one test), so no parallel test
 //! pollutes the counter.
 
@@ -194,4 +202,29 @@ fn steady_state_round_allocates_nothing_model_sized() {
              no longer exercises the rollback path (adjust seed/dropout_prob)"
         );
     }
+
+    // --- (d) quantized wire fast path ------------------------------
+    // the bitpacked frame rides the same recycled wire buffers and the
+    // server dequantizes on fold into the warm qdecode scratch, so the
+    // quantized engine must be exactly as allocation-free as the f32
+    // one (quantize itself is kept-entry-scaled: codes are nnz bytes)
+    let mut qcfg = cfg(false);
+    qcfg.quant_bits = Some(4);
+    let mut trainer = Trainer::new(qcfg).unwrap();
+    let m = trainer.model_params();
+    for round in 0..2u64 {
+        trainer.run_round(round).unwrap();
+    }
+    let rounds = 3u64;
+    let count = count_large(m, rounds, |round| {
+        let out = trainer.run_round(round).unwrap();
+        assert!(!out.aborted);
+    });
+    assert_eq!(
+        count, 0,
+        "quant: {count} model-sized (≥{} B) allocations across {rounds} steady-state \
+         quantized rounds — the bitpacked encode/decode-fold path must run entirely \
+         on recycled wire buffers and the warm qdecode scratch",
+        m * 3
+    );
 }

@@ -1,0 +1,161 @@
+//! Wire-codec robustness properties: decoding attacker- or
+//! line-noise-shaped bytes must never panic, never abort (no
+//! unbounded allocation from a garbage header), and never leave
+//! partial output in the reused scratch — every malformed input is a
+//! clean `Err`. Covers the f32 frame, the deflate-compressed frame,
+//! and the bitpacked quantized v1 frame, under seeded truncations,
+//! bit flips, and pure-garbage buffers.
+//!
+//! The properties are deliberately asymmetric:
+//! * **Truncation** of a valid frame is *always* an error (every
+//!   suffix of the byte stream is load-bearing).
+//! * **Bit flips** may legitimately still decode — flipping a bit
+//!   inside an f32 value or the scale field yields a different but
+//!   well-formed frame — so flips only assert no-panic and
+//!   cleared-output-on-`Err`.
+
+use fedsparse::sparse::codec::SparseVec;
+use fedsparse::sparse::quant::{quantize, QuantConfig, QuantizedSparse};
+use fedsparse::util::rng::Rng;
+
+fn sample_sparse(seed: u64, n: u32, frac: f64) -> SparseVec {
+    let mut rng = Rng::new(seed);
+    let dense: Vec<f32> = (0..n)
+        .map(|_| if rng.next_f64() < frac { rng.normal_f32(1.0) } else { 0.0 })
+        .collect();
+    SparseVec::from_dense(&dense)
+}
+
+/// Decode `bytes` as an f32 frame into a dirty scratch and check the
+/// partial-output contract: `Err` ⇒ scratch fully cleared.
+fn check_f32(bytes: &[u8]) -> bool {
+    let mut out = SparseVec {
+        n: 123,
+        indices: vec![1, 2, 3],
+        values: vec![0.5, 0.25, 0.125],
+    };
+    let ok = SparseVec::decode_into(bytes, &mut out).is_ok();
+    if !ok {
+        assert_eq!(out.n, 0, "partial n after f32 decode error");
+        assert!(out.indices.is_empty(), "partial indices after f32 decode error");
+        assert!(out.values.is_empty(), "partial values after f32 decode error");
+    }
+    ok
+}
+
+/// Same contract for the quantized v1 frame.
+fn check_quant(bytes: &[u8]) -> bool {
+    let mut out = QuantizedSparse {
+        n: 123,
+        indices: vec![1, 2, 3],
+        codes: vec![1, -2, 3],
+        scale: 7.0,
+        bits: 4,
+    };
+    let ok = QuantizedSparse::decode_into(bytes, &mut out).is_ok();
+    if !ok {
+        assert_eq!(out.n, 0, "partial n after quant decode error");
+        assert!(out.indices.is_empty(), "partial indices after quant decode error");
+        assert!(out.codes.is_empty(), "partial codes after quant decode error");
+    }
+    ok
+}
+
+#[test]
+fn every_truncation_of_a_valid_frame_errors() {
+    let sv = sample_sparse(11, 4096, 0.03);
+    let f32_frame = sv.encode();
+    let mut qrng = Rng::new(12);
+    let q = quantize(&sv, QuantConfig { bits: 4 }, &mut qrng);
+    let quant_frame = q.encode();
+
+    for cut in 0..f32_frame.len() {
+        assert!(
+            !check_f32(&f32_frame[..cut]),
+            "f32 frame truncated to {cut}/{} bytes decoded",
+            f32_frame.len()
+        );
+    }
+    for cut in 0..quant_frame.len() {
+        assert!(
+            !check_quant(&quant_frame[..cut]),
+            "quant frame truncated to {cut}/{} bytes decoded",
+            quant_frame.len()
+        );
+    }
+}
+
+#[test]
+fn seeded_bit_flips_never_panic_and_errors_leave_no_partial_output() {
+    let sv = sample_sparse(21, 2048, 0.05);
+    let f32_frame = sv.encode();
+    let mut qrng = Rng::new(22);
+    let q = quantize(&sv, QuantConfig { bits: 3 }, &mut qrng);
+    let quant_frame = q.encode();
+
+    let mut rng = Rng::new(0xf11b);
+    for _ in 0..2000 {
+        let mut mutant = f32_frame.clone();
+        // 1-3 random bit flips
+        for _ in 0..(1 + rng.below(3)) {
+            let byte = rng.below(mutant.len() as u64) as usize;
+            mutant[byte] ^= 1 << rng.below(8);
+        }
+        check_f32(&mutant);
+        let mut mutant = quant_frame.clone();
+        for _ in 0..(1 + rng.below(3)) {
+            let byte = rng.below(mutant.len() as u64) as usize;
+            mutant[byte] ^= 1 << rng.below(8);
+        }
+        check_quant(&mutant);
+    }
+}
+
+#[test]
+fn pure_garbage_never_panics() {
+    let mut rng = Rng::new(0x6a5b);
+    for _ in 0..2000 {
+        let len = rng.below(257) as usize;
+        let garbage: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+        check_f32(&garbage);
+        check_quant(&garbage);
+        // compressed path: garbage is both an invalid deflate stream
+        // and, when it inflates, usually an invalid frame — either way
+        // the contract is Err-or-valid, never a panic
+        let _ = SparseVec::decode_compressed(&garbage);
+    }
+}
+
+#[test]
+fn garbage_headers_cannot_drive_huge_allocations() {
+    // nnz = u32::MAX with a tiny body: the codec must bound nnz by the
+    // remaining payload length *before* reserving, or a 16-byte frame
+    // could request gigabytes.
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&100u32.to_le_bytes());
+    frame.extend_from_slice(&u32::MAX.to_le_bytes());
+    frame.extend_from_slice(&[0u8; 8]);
+    assert!(!check_f32(&frame));
+
+    let mut qframe = vec![1u8, 4]; // version, bits
+    qframe.extend_from_slice(&100u32.to_le_bytes());
+    qframe.extend_from_slice(&u32::MAX.to_le_bytes());
+    qframe.extend_from_slice(&1.0f32.to_le_bytes());
+    qframe.extend_from_slice(&[0u8; 8]);
+    assert!(!check_quant(&qframe));
+}
+
+#[test]
+fn truncated_compressed_frames_error() {
+    let sv = sample_sparse(31, 1024, 0.05);
+    let comp = sv.encode_compressed();
+    // decoded interior truncations: the inflated stream is a truncated
+    // raw frame, which the inner decoder must reject
+    for cut in [0, 1, comp.len() / 4, comp.len() / 2, comp.len() - 1] {
+        assert!(
+            SparseVec::decode_compressed(&comp[..cut]).is_err(),
+            "compressed frame truncated to {cut}/{} bytes decoded",
+            comp.len()
+        );
+    }
+}

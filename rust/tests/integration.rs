@@ -98,6 +98,83 @@ fn secure_equals_plain_aggregation_in_expectation() {
 }
 
 #[test]
+fn quantized_wire_shrinks_uplink_at_equal_nnz() {
+    // ISSUE 8 acceptance: at --quant-bits 4 the per-round uplink wire
+    // bytes must be ≤ 45% of the f32 encoding at identical nnz. Round
+    // 0 starts from the same seeded global model in both runs, so the
+    // sparsification (and hence the nnz vector) is identical and only
+    // the wire format differs.
+    let run = |bits: Option<u8>| {
+        let mut cfg = native_cfg("mnist_mlp");
+        cfg.rounds = 1;
+        cfg.eval_every = 99;
+        cfg.quant_bits = bits;
+        cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+        let mut t = Trainer::new(cfg).unwrap();
+        let out = t.run_round(0).unwrap();
+        assert!(!out.aborted);
+        (out.nnz.clone(), t.ledger.rounds[0].up_wire)
+    };
+    let (nnz_f32, wire_f32) = run(None);
+    let (nnz_q4, wire_q4) = run(Some(4));
+    assert_eq!(nnz_f32, nnz_q4, "quantization must not change the transmitted support");
+    assert!(nnz_f32.iter().all(|&n| n > 0));
+    assert!(
+        wire_q4 * 100 <= wire_f32 * 45,
+        "4-bit wire {wire_q4} > 45% of f32 wire {wire_f32}"
+    );
+}
+
+#[test]
+fn quantized_training_learns_and_is_deterministic() {
+    // codes ship on the wire and dequantize on fold — the run must
+    // still learn, and replay bit-for-bit per seed
+    let run = || {
+        let mut cfg = native_cfg("mnist_mlp");
+        cfg.rounds = 15;
+        cfg.eval_every = 15;
+        cfg.quant_bits = Some(4);
+        cfg.algorithm = Algorithm::FlatSparse { s: 0.1 };
+        let mut t = Trainer::new(cfg).unwrap();
+        let summary = t.run().unwrap();
+        (t.global.data.clone(), summary.final_accuracy)
+    };
+    let (a, acc) = run();
+    let (b, _) = run();
+    assert_eq!(a, b, "quantized run must replay exactly");
+    assert!(acc > 0.3, "quantized path broke learning: acc {acc}");
+}
+
+#[test]
+fn parallel_collect_is_bitwise_equal_to_serial() {
+    // the pool-parallel sharded fold (shards > 1, workers > 1) must be
+    // bit-for-bit the serial streaming fold, f32 and quantized alike
+    let run = |shards: usize, workers: usize, bits: Option<u8>| {
+        let mut cfg = native_cfg("mnist_mlp");
+        cfg.rounds = 3;
+        cfg.eval_every = 99;
+        cfg.shards = shards;
+        cfg.client_workers = workers;
+        cfg.quant_bits = bits;
+        cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+        let mut t = Trainer::new(cfg).unwrap();
+        t.run().unwrap();
+        t.global.data.clone()
+    };
+    for bits in [None, Some(4)] {
+        let want = run(1, 1, bits);
+        for (shards, workers) in [(2, 4), (4, 4), (4, 1), (1, 4)] {
+            let got = run(shards, workers, bits);
+            assert!(
+                want.iter().zip(&got).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "bits {bits:?}, shards {shards} × workers {workers}: \
+                 parallel Collect diverged from serial"
+            );
+        }
+    }
+}
+
+#[test]
 fn fedavg_baseline_runs_dense() {
     let mut cfg = native_cfg("mnist_mlp");
     cfg.rounds = 2;

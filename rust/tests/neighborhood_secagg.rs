@@ -409,3 +409,47 @@ fn shard_count_does_not_change_the_run_bitwise() {
         "global models diverged across shard counts"
     );
 }
+
+/// ISSUE 8 acceptance: the pool-parallel Collect fold (one range-walk
+/// task per shard on `ThreadPool::map_shared`) is an execution detail
+/// too — at every (shards, pool size) combination the secure run with
+/// failure injection is bitwise identical to the serial fold
+/// (shards=1, workers=1). The parallel path only engages when both
+/// shards > 1 and workers > 1; the grid covers both gate sides.
+#[test]
+fn parallel_collect_is_bitwise_equal_to_serial_at_any_pool_size() {
+    let run = |shards: usize, workers: usize| {
+        let mut cfg = trainer_cfg();
+        cfg.shards = shards;
+        cfg.client_workers = workers;
+        cfg.expose_aggregate = true;
+        cfg.dropout_prob = 0.25;
+        cfg.min_survivors = 2;
+        cfg.rounds = 3;
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut aggs = Vec::new();
+        for r in 0..3 {
+            aggs.push(t.run_round(r).unwrap().aggregate);
+        }
+        (aggs, t.global.data.clone())
+    };
+    let (want_aggs, want_global) = run(1, 1);
+    for shards in [1usize, 2, 4] {
+        for workers in [1usize, 4] {
+            let (aggs, global) = run(shards, workers);
+            for (round, (a, b)) in want_aggs.iter().zip(&aggs).enumerate() {
+                let diff =
+                    a.iter().zip(b).filter(|(x, y)| x.to_bits() != y.to_bits()).count();
+                assert_eq!(
+                    diff, 0,
+                    "shards={shards} workers={workers} round {round}: \
+                     {diff} aggregate positions differ from the serial fold"
+                );
+            }
+            assert!(
+                want_global.iter().zip(&global).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "shards={shards} workers={workers}: global diverged from serial"
+            );
+        }
+    }
+}
