@@ -1,0 +1,241 @@
+//! Seeded network-chaos injection: packet loss, duplication,
+//! reordering, and slow links — the transport-level failure surface
+//! beyond the crash/straggle fates of
+//! [`crate::comm::transport::FailurePlan`].
+//!
+//! Every draw is a pure function of `(seed, round, cid)`, so a chaos
+//! run replays bit-for-bit from its seed — the chaos-soak CI job
+//! reprints exactly this seed on failure and the failing round can be
+//! re-run locally with the same knobs. Each failure mode draws from its
+//! *own* sub-stream (a per-mode label mixed into the seed), so turning
+//! one knob never shifts another mode's draws: a run with
+//! `loss_prob = 0.3` sees the same duplication pattern whether
+//! reordering is on or off.
+//!
+//! Semantics (shared by the in-process and socket transports — both
+//! evaluate the same [`LinkFate`], which is what makes their survivor
+//! sets identical by construction):
+//!
+//! * **loss** — each transmission attempt is independently lost with
+//!   `loss_prob`; the sender retries up to `max_retries` times. A frame
+//!   whose every attempt is lost never reaches the server and the
+//!   client is classified as dropped (the server cannot distinguish a
+//!   black-holed link from a crashed client). Surviving retries cost
+//!   simulated time: each lost attempt adds one full delivery duration.
+//! * **duplication** — the frame is delivered twice; the server dedups
+//!   by client id (first copy wins, the duplicate is discarded and not
+//!   metered). On the socket transports the duplicate actually crosses
+//!   the wire.
+//! * **reordering** — the frame arrives out of send order (on the
+//!   socket transports it is physically delayed behind later sends; the
+//!   server's resequencing fold restores ascending-cid order, which is
+//!   why reordering never changes the aggregate — see PERF.md).
+//! * **slow link** — delivery time is multiplied by `slow_factor`,
+//!   which can push a frame past a finite straggler deadline.
+
+use crate::util::rng::Rng;
+
+// Per-mode sub-stream labels (arbitrary constants).
+const LABEL_LOSS: u64 = 0x6c_6f_73_73; // "loss"
+const LABEL_DUP: u64 = 0x64_75_70; // "dup"
+const LABEL_REORDER: u64 = 0x72_65_6f_72; // "reor"
+const LABEL_SLOW: u64 = 0x73_6c_6f_77; // "slow"
+
+/// Seeded chaos knobs. All probabilities are per `(round, cid)` frame.
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosPlan {
+    /// Per-attempt transmission-loss probability (0.0 = off).
+    pub loss_prob: f64,
+    /// Probability the frame is delivered twice.
+    pub dup_prob: f64,
+    /// Probability the frame arrives out of send order.
+    pub reorder_prob: f64,
+    /// Probability the link runs at `slow_factor`× delivery time.
+    pub slow_prob: f64,
+    /// Delivery-time multiplier for slow links (≥ 1).
+    pub slow_factor: f64,
+    /// Retransmission attempts after a lost one; a frame losing all
+    /// `max_retries + 1` attempts never arrives.
+    pub max_retries: u32,
+    /// Chaos seed (independent of the [`FailurePlan`] seed).
+    ///
+    /// [`FailurePlan`]: crate::comm::transport::FailurePlan
+    pub seed: u64,
+}
+
+/// What the chaos plan decided about one frame's link.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkFate {
+    /// Leading transmission attempts lost; the frame arrives on attempt
+    /// `lost_attempts` unless that exceeds `max_retries`.
+    pub lost_attempts: u32,
+    /// Frame is delivered twice (server dedups).
+    pub duplicate: bool,
+    /// `Some(slots)` = frame is reordered: held back ~`slots` delivery
+    /// slots behind later sends.
+    pub reorder: Option<u32>,
+    /// Delivery-time multiplier (1.0, or `slow_factor` on a slow link).
+    pub slow_mult: f64,
+}
+
+impl LinkFate {
+    /// A clear link: nothing lost, duplicated, reordered, or slowed.
+    pub fn clear() -> Self {
+        Self { lost_attempts: 0, duplicate: false, reorder: None, slow_mult: 1.0 }
+    }
+}
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        Self::none()
+    }
+}
+
+impl ChaosPlan {
+    /// No chaos: every link is clear. [`Self::link_fate`] takes a
+    /// zero-cost path (no RNG work).
+    pub fn none() -> Self {
+        Self {
+            loss_prob: 0.0,
+            dup_prob: 0.0,
+            reorder_prob: 0.0,
+            slow_prob: 0.0,
+            slow_factor: 4.0,
+            max_retries: 3,
+            seed: 0,
+        }
+    }
+
+    /// Is any chaos mode live?
+    pub fn enabled(&self) -> bool {
+        self.loss_prob > 0.0
+            || self.dup_prob > 0.0
+            || self.reorder_prob > 0.0
+            || self.slow_prob > 0.0
+    }
+
+    /// Can chaos alone make a frame vanish (loss exhausting every
+    /// retry)? Rounds then need rollback snapshots even with the
+    /// crash/straggle plan disabled.
+    pub fn can_drop(&self) -> bool {
+        self.loss_prob > 0.0
+    }
+
+    fn stream(&self, label: u64, round: u64, cid: u32) -> Rng {
+        Rng::new(
+            self.seed
+                ^ label.wrapping_mul(0xA076_1D64_78BD_642F)
+                ^ ((cid as u64) << 32)
+                ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        )
+    }
+
+    /// Decide one frame's link fate. Pure in `(seed, round, cid)` —
+    /// replayable, and independent per failure mode (per-mode
+    /// sub-streams).
+    pub fn link_fate(&self, round: u64, cid: u32) -> LinkFate {
+        if !self.enabled() {
+            return LinkFate::clear();
+        }
+        let mut lost_attempts = 0u32;
+        if self.loss_prob > 0.0 {
+            let mut r = self.stream(LABEL_LOSS, round, cid);
+            while lost_attempts <= self.max_retries && r.next_f64() < self.loss_prob {
+                lost_attempts += 1;
+            }
+        }
+        let duplicate =
+            self.dup_prob > 0.0 && self.stream(LABEL_DUP, round, cid).next_f64() < self.dup_prob;
+        let reorder = if self.reorder_prob > 0.0 {
+            let mut r = self.stream(LABEL_REORDER, round, cid);
+            (r.next_f64() < self.reorder_prob).then(|| 1 + r.below(15) as u32)
+        } else {
+            None
+        };
+        let slow_mult = if self.slow_prob > 0.0
+            && self.stream(LABEL_SLOW, round, cid).next_f64() < self.slow_prob
+        {
+            self.slow_factor
+        } else {
+            1.0
+        };
+        LinkFate { lost_attempts, duplicate, reorder, slow_mult }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn busy_plan(seed: u64) -> ChaosPlan {
+        ChaosPlan {
+            loss_prob: 0.4,
+            dup_prob: 0.4,
+            reorder_prob: 0.4,
+            slow_prob: 0.4,
+            seed,
+            ..ChaosPlan::none()
+        }
+    }
+
+    #[test]
+    fn disabled_plan_is_always_clear() {
+        let p = ChaosPlan::none();
+        assert!(!p.enabled() && !p.can_drop());
+        for round in 0..4 {
+            for cid in 0..8 {
+                assert_eq!(p.link_fate(round, cid), LinkFate::clear());
+            }
+        }
+    }
+
+    #[test]
+    fn fate_is_deterministic_and_varies() {
+        let p = busy_plan(7);
+        for round in 0..4 {
+            for cid in 0..16 {
+                assert_eq!(p.link_fate(round, cid), p.link_fate(round, cid));
+            }
+        }
+        // every mode actually fires somewhere in a modest sweep
+        let fates: Vec<LinkFate> =
+            (0..64).flat_map(|r| (0..16).map(move |c| (r, c))).map(|(r, c)| p.link_fate(r, c)).collect();
+        assert!(fates.iter().any(|f| f.lost_attempts > 0));
+        assert!(fates.iter().any(|f| f.duplicate));
+        assert!(fates.iter().any(|f| f.reorder.is_some()));
+        assert!(fates.iter().any(|f| f.slow_mult > 1.0));
+        assert!(fates.iter().any(|f| *f == LinkFate::clear()));
+    }
+
+    #[test]
+    fn modes_draw_from_independent_streams() {
+        // turning reordering on must not change the loss/dup/slow draws
+        let without = ChaosPlan { reorder_prob: 0.0, ..busy_plan(11) };
+        let with = ChaosPlan { reorder_prob: 0.9, ..busy_plan(11) };
+        for round in 0..8 {
+            for cid in 0..16 {
+                let a = without.link_fate(round, cid);
+                let b = with.link_fate(round, cid);
+                assert_eq!(a.lost_attempts, b.lost_attempts);
+                assert_eq!(a.duplicate, b.duplicate);
+                assert_eq!(a.slow_mult, b.slow_mult);
+            }
+        }
+    }
+
+    #[test]
+    fn certain_loss_exhausts_retries() {
+        let p = ChaosPlan { loss_prob: 1.0, max_retries: 3, seed: 1, ..ChaosPlan::none() };
+        let f = p.link_fate(0, 0);
+        assert!(f.lost_attempts > p.max_retries, "all attempts lost");
+    }
+
+    #[test]
+    fn reorder_slots_are_bounded_and_positive() {
+        let p = ChaosPlan { reorder_prob: 1.0, seed: 3, ..ChaosPlan::none() };
+        for cid in 0..64 {
+            let slots = p.link_fate(0, cid).reorder.expect("certain reorder");
+            assert!((1..=15).contains(&slots));
+        }
+    }
+}

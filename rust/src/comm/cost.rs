@@ -20,6 +20,13 @@
 //! `quant_bits` unset it is the f32 [`crate::sparse::codec`] frame,
 //! byte-identical to the pre-quantized-wire encoder. Secure rounds
 //! always meter f32 frames (masks are f32 sums; see PERF.md).
+//!
+//! `up_framed` additionally counts the socket framing overhead: payload
+//! bytes plus the fixed [`crate::comm::frame::HEADER_LEN`]-byte header
+//! per delivered uplink. It is metered identically on every transport
+//! (the in-process twin charges the same header it would put on a real
+//! socket), so ledgers stay comparable across `--transport` choices
+//! while `up_wire` stays pinned to the payload-only golden values.
 
 use crate::sparse::codec;
 
@@ -31,6 +38,9 @@ pub struct RoundCost {
     pub up_paper: u64,
     /// Actual encoded upload bytes.
     pub up_wire: u64,
+    /// `up_wire` plus socket frame headers (0 when a path predates
+    /// framed metering).
+    pub up_framed: u64,
     /// Paper-model download bytes (dense model broadcast).
     pub down_paper: u64,
     /// Eval accuracy observed after this round (NaN when not evaled).
@@ -74,23 +84,40 @@ impl CostLedger {
             .sum();
         let up_wire: u64 = wire_bytes.iter().map(|&b| b as u64).sum();
         let down_paper = codec::dense_cost_bytes(m) * client_nnz.len() as u64;
-        self.rounds.push(RoundCost { round, up_paper, up_wire, down_paper, accuracy });
+        self.rounds.push(RoundCost {
+            round,
+            up_paper,
+            up_wire,
+            up_framed: 0,
+            down_paper,
+            accuracy,
+        });
     }
 
     /// Record a round with per-client paper costs already computed
     /// (algorithm-specific wire formats: STC codebook, quantized, …).
+    /// `framed` = actual framed socket bytes (payload + headers) for
+    /// the round's delivered uplinks.
     pub fn record_with_costs(
         &mut self,
         round: u64,
         up_paper_per_client: &[u64],
         wire_bytes: &[usize],
+        framed: u64,
         accuracy: f64,
     ) {
         let up_paper = up_paper_per_client.iter().sum();
         let up_wire = wire_bytes.iter().map(|&b| b as u64).sum();
         let down_paper =
             codec::dense_cost_bytes(self.model_params) * up_paper_per_client.len() as u64;
-        self.rounds.push(RoundCost { round, up_paper, up_wire, down_paper, accuracy });
+        self.rounds.push(RoundCost {
+            round,
+            up_paper,
+            up_wire,
+            up_framed: framed,
+            down_paper,
+            accuracy,
+        });
     }
 
     pub fn total_up_paper(&self) -> u64 {
@@ -99,6 +126,11 @@ impl CostLedger {
 
     pub fn total_up_wire(&self) -> u64 {
         self.rounds.iter().map(|r| r.up_wire).sum()
+    }
+
+    /// Total framed socket bytes (payload + frame headers).
+    pub fn total_up_framed(&self) -> u64 {
+        self.rounds.iter().map(|r| r.up_framed).sum()
     }
 
     pub fn total_down_paper(&self) -> u64 {
@@ -201,6 +233,17 @@ mod tests {
         let l = ledger_with(&[f64::NAN, 0.5, f64::NAN, 0.7]);
         assert!((l.converged_accuracy(10) - 0.6).abs() < 1e-12);
         assert_eq!(l.rounds_to_reach(0.6), Some(4));
+    }
+
+    #[test]
+    fn framed_meter_accumulates() {
+        let mut l = CostLedger::new(1000);
+        l.record_with_costs(0, &[1200], &[900], 919, f64::NAN);
+        assert_eq!(l.rounds[0].up_framed, 919);
+        // plain record() predates framed metering
+        l.record(1, &[100], &[900], false, f64::NAN);
+        assert_eq!(l.rounds[1].up_framed, 0);
+        assert_eq!(l.total_up_framed(), 919);
     }
 
     #[test]

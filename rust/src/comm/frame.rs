@@ -1,0 +1,213 @@
+//! The socket wire frame: length-delimited, versioned, round-tagged.
+//!
+//! Every uplink that crosses a real socket ([`crate::comm::socket`]) is
+//! wrapped in one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       1     magic    0xF5
+//! 1       1     version  1
+//! 2       1     kind     1 = Uplink
+//! 3       8     round    u64 LE  (stale-round frames are discarded)
+//! 11      4     cid      u32 LE
+//! 15      4     len      u32 LE  payload byte length
+//! 19      len   payload  opaque bytes — an f32 codec frame
+//!                        ([`crate::sparse::codec`]), a bitpacked
+//!                        quantized frame ([`crate::sparse::quant`]),
+//!                        or a masked secure payload
+//! ```
+//!
+//! The frame is transport-framing only: the payload stays byte-identical
+//! to what the in-process transport carries, which is what lets the
+//! conformance suite pin all transports to the same payload bytes. The
+//! 19-byte header is the per-uplink wire overhead metered as
+//! `up_framed` in [`crate::comm::cost`] (identically on every
+//! transport, socket or not, so the ledgers stay comparable).
+//!
+//! Decoding is strict: wrong magic/version/kind, an oversized length
+//! field, or a mid-frame EOF are errors — never a silent partial read.
+//! A clean EOF *between* frames is the normal end-of-connection signal
+//! (`Ok(None)`).
+
+use std::io::{self, Read, Write};
+
+/// First byte of every frame.
+pub const MAGIC: u8 = 0xF5;
+/// Wire-format version this build speaks.
+pub const VERSION: u8 = 1;
+/// Frame kind: one client upload.
+pub const KIND_UPLINK: u8 = 1;
+/// Fixed header size in bytes (see the module-level layout).
+pub const HEADER_LEN: usize = 19;
+/// Upper bound on the length field — a garbage header must not drive a
+/// multi-gigabyte buffer reserve (same defense as the payload codecs).
+pub const MAX_PAYLOAD: usize = 1 << 26; // 64 MiB
+
+/// Decoded frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: u8,
+    pub round: u64,
+    pub cid: u32,
+    pub len: u32,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum FrameError {
+    #[error("io: {0}")]
+    Io(#[from] io::Error),
+    #[error("bad magic byte 0x{0:02x}")]
+    BadMagic(u8),
+    #[error("unsupported frame version {0}")]
+    BadVersion(u8),
+    #[error("unknown frame kind {0}")]
+    BadKind(u8),
+    #[error("frame payload length {0} exceeds the {MAX_PAYLOAD}-byte cap")]
+    TooLarge(u32),
+    #[error("connection closed mid-frame")]
+    Truncated,
+}
+
+/// Total on-the-wire size of a frame carrying `payload_len` bytes.
+pub fn framed_len(payload_len: usize) -> usize {
+    HEADER_LEN + payload_len
+}
+
+/// Serialize a header into its 19 wire bytes.
+pub fn encode_header(round: u64, cid: u32, payload_len: u32) -> [u8; HEADER_LEN] {
+    let mut h = [0u8; HEADER_LEN];
+    h[0] = MAGIC;
+    h[1] = VERSION;
+    h[2] = KIND_UPLINK;
+    h[3..11].copy_from_slice(&round.to_le_bytes());
+    h[11..15].copy_from_slice(&cid.to_le_bytes());
+    h[15..19].copy_from_slice(&payload_len.to_le_bytes());
+    h
+}
+
+/// Write one complete frame; returns the bytes put on the wire
+/// (`framed_len(payload.len())`).
+pub fn write_frame<W: Write>(w: &mut W, round: u64, cid: u32, payload: &[u8]) -> io::Result<usize> {
+    debug_assert!(payload.len() <= MAX_PAYLOAD);
+    w.write_all(&encode_header(round, cid, payload.len() as u32))?;
+    w.write_all(payload)?;
+    Ok(framed_len(payload.len()))
+}
+
+/// Read one frame into `payload` (cleared first). `Ok(None)` on a clean
+/// EOF at a frame boundary — the peer closed after its last frame; any
+/// EOF inside a frame is [`FrameError::Truncated`].
+pub fn read_frame<R: Read>(
+    r: &mut R,
+    payload: &mut Vec<u8>,
+) -> Result<Option<FrameHeader>, FrameError> {
+    payload.clear();
+    let mut header = [0u8; HEADER_LEN];
+    // the first byte distinguishes clean close from a truncated frame
+    match r.read(&mut header[..1]) {
+        Ok(0) => return Ok(None),
+        Ok(_) => {}
+        Err(e) => return Err(e.into()),
+    }
+    read_exact_or_truncated(r, &mut header[1..])?;
+    if header[0] != MAGIC {
+        return Err(FrameError::BadMagic(header[0]));
+    }
+    if header[1] != VERSION {
+        return Err(FrameError::BadVersion(header[1]));
+    }
+    if header[2] != KIND_UPLINK {
+        return Err(FrameError::BadKind(header[2]));
+    }
+    let hdr = FrameHeader {
+        kind: header[2],
+        round: u64::from_le_bytes(header[3..11].try_into().unwrap()),
+        cid: u32::from_le_bytes(header[11..15].try_into().unwrap()),
+        len: u32::from_le_bytes(header[15..19].try_into().unwrap()),
+    };
+    if hdr.len as usize > MAX_PAYLOAD {
+        return Err(FrameError::TooLarge(hdr.len));
+    }
+    payload.resize(hdr.len as usize, 0);
+    read_exact_or_truncated(r, payload)?;
+    Ok(Some(hdr))
+}
+
+fn read_exact_or_truncated<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), FrameError> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated
+        } else {
+            FrameError::Io(e)
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn frame_bytes(round: u64, cid: u32, payload: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_frame(&mut out, round, cid, payload).unwrap();
+        out
+    }
+
+    #[test]
+    fn round_trips() {
+        let payload = b"sparse payload bytes".to_vec();
+        let wire = frame_bytes(7, 42, &payload);
+        assert_eq!(wire.len(), framed_len(payload.len()));
+        let mut cursor = &wire[..];
+        let mut got = Vec::new();
+        let hdr = read_frame(&mut cursor, &mut got).unwrap().unwrap();
+        assert_eq!(hdr, FrameHeader { kind: KIND_UPLINK, round: 7, cid: 42, len: 20 });
+        assert_eq!(got, payload);
+        // clean EOF after the frame
+        assert!(read_frame(&mut cursor, &mut got).unwrap().is_none());
+    }
+
+    #[test]
+    fn multiple_frames_on_one_stream() {
+        let mut wire = frame_bytes(1, 0, b"aa");
+        wire.extend(frame_bytes(1, 0, b"bbb")); // duplicate cid is legal framing
+        let mut cursor = &wire[..];
+        let mut got = Vec::new();
+        assert_eq!(read_frame(&mut cursor, &mut got).unwrap().unwrap().len, 2);
+        assert_eq!(read_frame(&mut cursor, &mut got).unwrap().unwrap().len, 3);
+        assert!(read_frame(&mut cursor, &mut got).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_corrupt_headers() {
+        let good = frame_bytes(3, 9, b"payload");
+        let mut bad = good.clone();
+        bad[0] = 0x00;
+        let mut got = Vec::new();
+        assert!(matches!(read_frame(&mut &bad[..], &mut got), Err(FrameError::BadMagic(0))));
+        let mut bad = good.clone();
+        bad[1] = 99;
+        assert!(matches!(read_frame(&mut &bad[..], &mut got), Err(FrameError::BadVersion(99))));
+        let mut bad = good.clone();
+        bad[2] = 7;
+        assert!(matches!(read_frame(&mut &bad[..], &mut got), Err(FrameError::BadKind(7))));
+    }
+
+    #[test]
+    fn rejects_oversized_length() {
+        let mut hdr = encode_header(0, 0, (MAX_PAYLOAD + 1) as u32).to_vec();
+        hdr.extend_from_slice(&[0u8; 4]);
+        let mut got = Vec::new();
+        assert!(matches!(read_frame(&mut &hdr[..], &mut got), Err(FrameError::TooLarge(_))));
+    }
+
+    #[test]
+    fn every_strict_prefix_is_truncated() {
+        let wire = frame_bytes(5, 3, b"0123456789");
+        let mut got = Vec::new();
+        for cut in 1..wire.len() {
+            let r = read_frame(&mut &wire[..cut], &mut got);
+            assert!(matches!(r, Err(FrameError::Truncated)), "prefix {cut} must not parse");
+        }
+    }
+}

@@ -1,18 +1,32 @@
-//! Communication accounting + simulated network (DESIGN.md S16).
+//! Communication accounting + network layer (DESIGN.md S16).
 //!
 //! * [`cost`] — the paper's §5.2 analytic cost model (Eq. 6-8) and the
 //!   per-round ledger behind Table 2
 //! * [`channel`] — bandwidth/latency model turning bytes into simulated
 //!   wall-clock round time (the §5.1 "from the perspective of time"
 //!   argument)
-//! * [`transport`] — the in-process uplink actually carrying encoded
-//!   payloads, with seeded dropout/straggler failure injection (the
-//!   round engine's Collect phase)
+//! * [`transport`] — the [`transport::Uplink`] trait every Collect
+//!   barrier runs through, plus the in-process implementation with
+//!   seeded dropout/straggler failure injection — the deterministic
+//!   twin the golden tests pin
+//! * [`chaos`] — seeded network chaos (loss, duplication, reordering,
+//!   slow links), pure in `(seed, round, cid)` so runs replay
+//! * [`frame`] — the length-delimited socket wire frame
+//! * [`socket`] — real TCP / Unix-domain-socket uplink carrying the
+//!   same payload bytes (conformance-pinned against the twin)
 
 pub mod channel;
+pub mod chaos;
 pub mod cost;
+pub mod frame;
+pub mod socket;
 pub mod transport;
 
 pub use channel::NetworkModel;
+pub use chaos::{ChaosPlan, LinkFate};
 pub use cost::{CostLedger, RoundCost};
-pub use transport::{CollectResult, Delivery, FailurePlan, Fate, Transport, UplinkFrame};
+pub use socket::{SocketOptions, SocketTransport};
+pub use transport::{
+    effective_fate, Accepted, CollectResult, Delivery, EffectiveFate, FailurePlan, Fate, Transport,
+    Uplink, UplinkFrame,
+};

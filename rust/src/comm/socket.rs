@@ -1,0 +1,762 @@
+//! Real-wire uplink: the same payload bytes the in-process transport
+//! carries, framed ([`crate::comm::frame`]) over TCP or Unix-domain
+//! sockets.
+//!
+//! One [`SocketTransport`] owns a listening socket for its lifetime
+//! (bound at construction, UDS path unlinked on drop). Each Collect
+//! barrier is a full connection lifecycle: client sender threads
+//! connect, write their frame(s), and close; an acceptor thread hands
+//! every accepted connection to a reader that validates frame headers
+//! (stale-round frames are discarded at the door) and pushes payloads
+//! into a [`BoundedQueue`] — readers block when the consumer falls
+//! behind, so a fast cohort cannot balloon server memory
+//! (backpressure). The caller's thread consumes the queue under a
+//! real timer deadline and folds payloads through the sink.
+//!
+//! **Determinism on a real wire.** Who survives, when they "arrive"
+//! (simulated seconds), and what the round costs are all decided by the
+//! same pure [`effective_fate`] the in-process twin evaluates — the
+//! socket layer *enacts* those decisions (a crash/loss-fated sender
+//! never transmits; a duplicate-fated sender writes its frame twice; a
+//! reorder-fated sender is physically held back behind later sends)
+//! rather than re-deciding them from racy wall-clock measurements. TCP
+//! arrival order is nondeterministic, so the consumer **resequences**:
+//! it knows the deliver-fated client ids (ascending), parks
+//! out-of-order arrivals, and invokes the sink for the longest
+//! contiguous prefix as frames land — the sink sees ascending client
+//! id, the pinned fold order, making the folded aggregate bitwise
+//! equal to the in-process run (PERF.md; pinned by
+//! `tests/transport_conformance.rs`).
+//!
+//! The real timer ([`SocketOptions::accept_deadline`]) is a hang
+//! backstop, not the straggler deadline — straggler classification is
+//! plan time. Per the deadline boundary contract
+//! ([`FailurePlan::on_time`]), the queue is always checked **before**
+//! the timer ([`BoundedQueue::pop_until`]): a frame that landed at the
+//! deadline is never discarded by the timer that noticed the time. A
+//! deliver-fated frame still missing when the backstop expires (a
+//! genuine hang — impossible under plan semantics) is classified as a
+//! straggler so the round degrades or aborts cleanly instead of
+//! wedging.
+
+use std::collections::{BTreeMap, HashMap, HashSet, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+#[cfg(unix)]
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+#[cfg(unix)]
+use std::sync::atomic::AtomicU64;
+use std::sync::{mpsc, Condvar, Mutex};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::comm::chaos::ChaosPlan;
+use crate::comm::channel::NetworkModel;
+use crate::comm::frame;
+use crate::comm::transport::{
+    effective_fate, Accepted, CollectResult, Delivery, FailurePlan, Fate, Uplink, UplinkFrame,
+};
+
+/// Socket-layer knobs (all real time, not simulated time).
+#[derive(Clone, Copy, Debug)]
+pub struct SocketOptions {
+    /// Hang backstop: how long the consumer waits for deliver-fated
+    /// frames before classifying the missing ones as stragglers.
+    pub accept_deadline: Duration,
+    /// Uplink queue capacity in frames; readers block (backpressure)
+    /// when the fold falls this far behind.
+    pub queue_cap: usize,
+    /// Physical hold-back per reorder slot when enacting a
+    /// reorder-fated frame.
+    pub reorder_slot_ms: u64,
+}
+
+impl Default for SocketOptions {
+    fn default() -> Self {
+        Self { accept_deadline: Duration::from_secs(5), queue_cap: 64, reorder_slot_ms: 3 }
+    }
+}
+
+/// Blocking MPSC queue with a bounded capacity: `push` blocks when
+/// full (backpressure into the socket readers), `pop_until` blocks
+/// until an item, the deadline, or close — **checking the queue before
+/// the timer**, so an item that made it in by the deadline is returned
+/// even when the call happens after expiry (the off-by-frame deadline
+/// fix; see the module docs).
+pub struct BoundedQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+struct QueueState<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    cap: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            state: Mutex::new(QueueState { items: VecDeque::new(), closed: false, cap: cap.max(1) }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        }
+    }
+
+    /// Blocks while full; returns false (item discarded) once closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.items.len() >= st.cap && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Non-blocking pop.
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        let item = st.items.pop_front();
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// Pop, waiting until `deadline`. Queue before timer: if an item is
+    /// already queued this returns it even when `deadline` has passed;
+    /// `None` only when the queue is empty *and* the deadline expired
+    /// (or the queue was closed while empty).
+    pub fn pop_until(&self, deadline: Instant) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Close: wakes every blocked producer (push → false) and consumer.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Where senders connect.
+#[derive(Clone, Debug)]
+enum Endpoint {
+    Tcp(SocketAddr),
+    #[cfg(unix)]
+    Uds(PathBuf),
+}
+
+impl Endpoint {
+    /// Connect with a short bounded retry (the acceptor thread may not
+    /// be polling yet). Write timeout bounds a wedged peer.
+    fn connect(&self, write_timeout: Duration) -> io::Result<Conn> {
+        let mut last = io::Error::new(io::ErrorKind::NotConnected, "no connect attempt");
+        for _ in 0..40 {
+            let attempt = match self {
+                Endpoint::Tcp(addr) => TcpStream::connect(addr).map(Conn::Tcp),
+                #[cfg(unix)]
+                Endpoint::Uds(path) => UnixStream::connect(path).map(Conn::Uds),
+            };
+            match attempt {
+                Ok(conn) => {
+                    conn.set_write_timeout(write_timeout)?;
+                    return Ok(conn);
+                }
+                Err(e) => last = e,
+            }
+            thread::sleep(Duration::from_millis(5));
+        }
+        Err(last)
+    }
+}
+
+/// The server-side listening socket (the transport's lifetime-long
+/// half of the connection lifecycle).
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Uds(UnixListener, PathBuf),
+}
+
+impl Listener {
+    fn accept(&self) -> io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Uds(l, _) => l.accept().map(|(s, _)| Conn::Uds(s)),
+        }
+    }
+}
+
+impl Drop for Listener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Listener::Uds(_, path) = self {
+            let _ = std::fs::remove_file(path);
+        }
+    }
+}
+
+/// One accepted or connected stream.
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Uds(UnixStream),
+}
+
+impl Conn {
+    fn set_blocking_with_read_timeout(&self, timeout: Duration) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(timeout))
+            }
+            #[cfg(unix)]
+            Conn::Uds(s) => {
+                s.set_nonblocking(false)?;
+                s.set_read_timeout(Some(timeout))
+            }
+        }
+    }
+
+    fn set_write_timeout(&self, timeout: Duration) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.set_write_timeout(Some(timeout)),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.set_write_timeout(Some(timeout)),
+        }
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Uds(s) => s.flush(),
+        }
+    }
+}
+
+/// What one sender thread does with its frame, decided purely from the
+/// frame's [`effective_fate`] before any thread spawns.
+enum SendAction {
+    /// Crash-, loss-exhausted-, or straggle-fated: never transmit (the
+    /// server would not have accepted it; keeping it off the wire keeps
+    /// the survivor set exactly the plan's).
+    Skip,
+    /// Deliver-fated: hold back `delay` (enacting reorder/slow/retry
+    /// physics), then write `copies` copies of the frame.
+    Send { delay: Duration, copies: u32 },
+}
+
+/// Framed uplink over a real socket — see the module docs.
+pub struct SocketTransport {
+    pub network: NetworkModel,
+    plan: FailurePlan,
+    chaos: ChaosPlan,
+    opts: SocketOptions,
+    listener: Listener,
+    endpoint: Endpoint,
+    kind: &'static str,
+}
+
+#[cfg(unix)]
+static UDS_COUNTER: AtomicU64 = AtomicU64::new(0);
+
+impl SocketTransport {
+    /// TCP on a loopback ephemeral port.
+    pub fn tcp(network: NetworkModel, plan: FailurePlan, chaos: ChaosPlan) -> Result<Self> {
+        Self::tcp_with(network, plan, chaos, SocketOptions::default())
+    }
+
+    pub fn tcp_with(
+        network: NetworkModel,
+        plan: FailurePlan,
+        chaos: ChaosPlan,
+        opts: SocketOptions,
+    ) -> Result<Self> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", 0)).context("bind tcp uplink listener")?;
+        listener.set_nonblocking(true).context("nonblocking tcp listener")?;
+        let addr = listener.local_addr().context("tcp listener local addr")?;
+        Ok(Self {
+            network,
+            plan,
+            chaos,
+            opts,
+            listener: Listener::Tcp(listener),
+            endpoint: Endpoint::Tcp(addr),
+            kind: "tcp",
+        })
+    }
+
+    /// Unix-domain socket on a fresh temp path (unlinked on drop).
+    #[cfg(unix)]
+    pub fn uds(network: NetworkModel, plan: FailurePlan, chaos: ChaosPlan) -> Result<Self> {
+        Self::uds_with(network, plan, chaos, SocketOptions::default())
+    }
+
+    #[cfg(unix)]
+    pub fn uds_with(
+        network: NetworkModel,
+        plan: FailurePlan,
+        chaos: ChaosPlan,
+        opts: SocketOptions,
+    ) -> Result<Self> {
+        let path = std::env::temp_dir().join(format!(
+            "fedsparse-uds-{}-{}.sock",
+            std::process::id(),
+            UDS_COUNTER.fetch_add(1, Ordering::Relaxed),
+        ));
+        let _ = std::fs::remove_file(&path);
+        let listener = UnixListener::bind(&path)
+            .with_context(|| format!("bind uds uplink listener at {}", path.display()))?;
+        listener.set_nonblocking(true).context("nonblocking uds listener")?;
+        Ok(Self {
+            network,
+            plan,
+            chaos,
+            opts,
+            listener: Listener::Uds(listener, path.clone()),
+            endpoint: Endpoint::Uds(path),
+            kind: "uds",
+        })
+    }
+}
+
+/// Reader half of one accepted connection: frames in, queue out.
+/// Stale-round (or malformed) frames are discarded; a closed queue
+/// (consumer done) ends the reader.
+fn read_conn(mut conn: Conn, round: u64, q: &BoundedQueue<(u32, Vec<u8>)>, timeout: Duration) {
+    if conn.set_blocking_with_read_timeout(timeout).is_err() {
+        return;
+    }
+    let mut buf = Vec::new();
+    loop {
+        match frame::read_frame(&mut conn, &mut buf) {
+            Ok(Some(hdr)) => {
+                if hdr.round != round {
+                    continue; // stale: a previous round's late duplicate
+                }
+                if !q.push((hdr.cid, std::mem::take(&mut buf))) {
+                    break;
+                }
+            }
+            Ok(None) | Err(_) => break,
+        }
+    }
+}
+
+impl Uplink for SocketTransport {
+    fn collect_with(
+        &mut self,
+        round: u64,
+        down_bytes: u64,
+        frames: Vec<UplinkFrame>,
+        sink: &mut dyn FnMut(Delivery),
+    ) -> Result<CollectResult> {
+        let mut out = CollectResult::default();
+        let down_s = self.network.download_time(down_bytes);
+        let slot = Duration::from_millis(self.opts.reorder_slot_ms);
+
+        // ---- pure classification, identical to the in-process twin --
+        // `expected` = deliver-fated cids ascending (frames arrive in
+        // ascending submission order); `meta` = their plan arrival
+        // times + framed sizes for the resequencing fold below.
+        let mut expected: Vec<u32> = Vec::new();
+        let mut meta: HashMap<u32, (f64, usize)> = HashMap::new();
+        let mut senders: Vec<(u32, Vec<u8>, SendAction)> = Vec::with_capacity(frames.len());
+        for f in frames {
+            let base = down_s + self.network.upload_time(f.paper_bytes);
+            let eff = effective_fate(&self.plan, &self.chaos, round, f.cid, base);
+            match eff.fate {
+                Fate::Deliver { at_s } => {
+                    out.round_time_s = out.round_time_s.max(at_s);
+                    if eff.link.duplicate {
+                        out.duplicates += 1;
+                    }
+                    if eff.link.reorder.is_some() {
+                        out.reordered += 1;
+                    }
+                    expected.push(f.cid);
+                    meta.insert(f.cid, (at_s, frame::framed_len(f.bytes.len())));
+                    // enact the chaos physically: reordered frames are
+                    // held back behind later sends, lossy links pay a
+                    // beat per lost attempt, slow links one extra slot
+                    let mut delay = Duration::ZERO;
+                    if let Some(slots) = eff.link.reorder {
+                        delay += slot * slots;
+                    }
+                    delay += Duration::from_millis(2) * eff.link.lost_attempts;
+                    if eff.link.slow_mult > 1.0 {
+                        delay += slot;
+                    }
+                    let copies = if eff.link.duplicate { 2 } else { 1 };
+                    senders.push((f.cid, f.bytes, SendAction::Send { delay, copies }));
+                }
+                Fate::Drop => {
+                    if eff.chaos_lost {
+                        out.chaos_lost += 1;
+                    }
+                    out.dropped.push(f.cid);
+                    senders.push((f.cid, f.bytes, SendAction::Skip));
+                }
+                Fate::Timeout { .. } => {
+                    out.timed_out.push(f.cid);
+                    senders.push((f.cid, f.bytes, SendAction::Skip));
+                }
+            }
+        }
+        if (!out.timed_out.is_empty() || !out.dropped.is_empty())
+            && self.plan.straggler_timeout_s.is_finite()
+        {
+            out.round_time_s = out.round_time_s.max(self.plan.straggler_timeout_s);
+        }
+
+        // ---- real wire: acceptor + readers + senders + consumer -----
+        let queue = BoundedQueue::new(self.opts.queue_cap);
+        let stop = AtomicBool::new(false);
+        let (spent_tx, spent_rx) = mpsc::channel::<Vec<u8>>();
+        let io_timeout = self.opts.accept_deadline;
+        let endpoint = &self.endpoint;
+        let listener = &self.listener;
+
+        thread::scope(|s| {
+            let q = &queue;
+            let stop = &stop;
+            // acceptor: nonblocking poll so it can wind down when the
+            // barrier closes; each accepted connection gets a reader
+            s.spawn(move || loop {
+                if stop.load(Ordering::Acquire) {
+                    break;
+                }
+                match listener.accept() {
+                    Ok(conn) => {
+                        s.spawn(move || read_conn(conn, round, q, io_timeout));
+                    }
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            });
+            // senders: one per selected client, enacting its fate; the
+            // wire buffer comes back through `spent` either way so the
+            // caller's pool stays warm
+            for (cid, bytes, action) in senders {
+                let tx = spent_tx.clone();
+                s.spawn(move || {
+                    if let SendAction::Send { delay, copies } = action {
+                        if !delay.is_zero() {
+                            thread::sleep(delay);
+                        }
+                        if let Ok(mut conn) = endpoint.connect(io_timeout) {
+                            for _ in 0..copies {
+                                if frame::write_frame(&mut conn, round, cid, &bytes).is_err() {
+                                    break;
+                                }
+                            }
+                            let _ = conn.flush();
+                        }
+                    }
+                    let _ = tx.send(bytes);
+                });
+            }
+            drop(spent_tx);
+
+            // consumer (this thread): resequencing streaming fold —
+            // park out-of-order arrivals, sink the longest contiguous
+            // prefix of `expected`, so the sink sees ascending cid
+            let deadline = Instant::now() + self.opts.accept_deadline;
+            let mut pending: BTreeMap<u32, Vec<u8>> = BTreeMap::new();
+            let mut arrived: HashSet<u32> = HashSet::new();
+            let mut next = 0usize;
+            let mut handle = |cid: u32,
+                              payload: Vec<u8>,
+                              pending: &mut BTreeMap<u32, Vec<u8>>,
+                              arrived: &mut HashSet<u32>,
+                              next: &mut usize| {
+                // dedup by cid (first copy wins) and ignore unexpected
+                // senders — both indistinguishable from replays
+                if !meta.contains_key(&cid) || !arrived.insert(cid) {
+                    return;
+                }
+                pending.insert(cid, payload);
+                while *next < expected.len() {
+                    let want = expected[*next];
+                    match pending.remove(&want) {
+                        Some(bytes) => {
+                            let (at_s, framed) = meta[&want];
+                            out.delivered.push(Accepted { cid: want, at_s, framed });
+                            sink(Delivery { cid: want, bytes, at_s });
+                            *next += 1;
+                        }
+                        None => break,
+                    }
+                }
+            };
+            while next < expected.len() {
+                match queue.pop_until(deadline) {
+                    Some((cid, payload)) => {
+                        handle(cid, payload, &mut pending, &mut arrived, &mut next)
+                    }
+                    None => break,
+                }
+            }
+            // drain-after-expiry: anything already queued when the
+            // backstop fired still made it in time
+            while next < expected.len() {
+                match queue.try_pop() {
+                    Some((cid, payload)) => {
+                        handle(cid, payload, &mut pending, &mut arrived, &mut next)
+                    }
+                    None => break,
+                }
+            }
+            // leftover parked frames: all are expected cids beyond the
+            // contiguous prefix — BTreeMap iteration keeps the total
+            // sink order ascending
+            for (cid, bytes) in std::mem::take(&mut pending) {
+                let (at_s, framed) = meta[&cid];
+                out.delivered.push(Accepted { cid, at_s, framed });
+                sink(Delivery { cid, bytes, at_s });
+            }
+            // backstop: a deliver-fated frame that never physically
+            // arrived (hang/failure) degrades to a straggler
+            for &cid in &expected {
+                if !arrived.contains(&cid) {
+                    out.timed_out.push(cid);
+                }
+            }
+            out.timed_out.sort_unstable();
+
+            // wind down: close the queue (unblocks readers mid-push),
+            // stop the acceptor; scope joins every thread
+            stop.store(true, Ordering::Release);
+            queue.close();
+        });
+
+        out.spent = spent_rx.try_iter().collect();
+        Ok(out)
+    }
+
+    fn plan(&self) -> &FailurePlan {
+        &self.plan
+    }
+
+    fn chaos(&self) -> &ChaosPlan {
+        &self.chaos
+    }
+
+    fn kind(&self) -> &'static str {
+        self.kind
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    fn frames(n: u32) -> Vec<UplinkFrame> {
+        (0..n)
+            .map(|cid| UplinkFrame {
+                cid,
+                bytes: vec![cid as u8; 64 + cid as usize],
+                paper_bytes: 100,
+            })
+            .collect()
+    }
+
+    fn run(
+        t: &mut SocketTransport,
+        round: u64,
+        fr: Vec<UplinkFrame>,
+    ) -> (CollectResult, Vec<Delivery>) {
+        let mut got = Vec::new();
+        let out = t.collect_with(round, 1_000, fr, &mut |d| got.push(d)).unwrap();
+        (out, got)
+    }
+
+    #[test]
+    fn bounded_queue_backpressure_blocks_push() {
+        let q = BoundedQueue::new(1);
+        assert!(q.push(1));
+        let landed = AtomicUsize::new(0);
+        thread::scope(|s| {
+            s.spawn(|| {
+                assert!(q.push(2)); // blocks until the pop below
+                landed.store(1, Ordering::SeqCst);
+            });
+            thread::sleep(Duration::from_millis(30));
+            assert_eq!(landed.load(Ordering::SeqCst), 0, "push must block while full");
+            assert_eq!(q.try_pop(), Some(1));
+        });
+        assert_eq!(landed.load(Ordering::SeqCst), 1);
+        assert_eq!(q.try_pop(), Some(2));
+    }
+
+    #[test]
+    fn pop_until_checks_queue_before_timer() {
+        // the off-by-frame deadline fix: an item queued by the deadline
+        // is returned even when the call happens after expiry
+        let q = BoundedQueue::new(4);
+        assert!(q.push(7));
+        let past = Instant::now() - Duration::from_millis(50);
+        assert_eq!(q.pop_until(past), Some(7), "queue before timer");
+        assert_eq!(q.pop_until(past), None, "then the expired timer rules");
+    }
+
+    #[test]
+    fn queue_close_unblocks_producers_and_consumers() {
+        let q = BoundedQueue::new(1);
+        assert!(q.push(1));
+        thread::scope(|s| {
+            s.spawn(|| {
+                assert!(!q.push(2), "push into a closed queue reports false");
+            });
+            thread::sleep(Duration::from_millis(20));
+            q.close();
+        });
+        // close with an item still queued: consumer drains, then None
+        assert_eq!(q.try_pop(), Some(1));
+        assert_eq!(q.pop_until(Instant::now() + Duration::from_secs(1)), None);
+    }
+
+    #[test]
+    fn tcp_delivers_ascending_with_payloads_intact() {
+        let mut t =
+            SocketTransport::tcp(NetworkModel::default(), FailurePlan::none(), ChaosPlan::none())
+                .unwrap();
+        for round in 0..2 {
+            // two rounds on one transport: the listener persists
+            let (out, got) = run(&mut t, round, frames(6));
+            assert_eq!(got.len(), 6);
+            for (i, d) in got.iter().enumerate() {
+                assert_eq!(d.cid, i as u32, "sink order is ascending cid");
+                assert_eq!(d.bytes, vec![i as u8; 64 + i], "payload bytes intact");
+            }
+            assert_eq!(out.delivered.len(), 6);
+            for a in &out.delivered {
+                assert_eq!(a.framed, 64 + a.cid as usize + frame::HEADER_LEN);
+            }
+            assert!(out.dropped.is_empty() && out.timed_out.is_empty());
+            // all sender buffers recycle back
+            assert_eq!(out.spent.len(), 6);
+        }
+    }
+
+    #[test]
+    fn tcp_duplicates_are_deduplicated() {
+        let chaos = ChaosPlan { dup_prob: 1.0, seed: 3, ..ChaosPlan::none() };
+        let mut t =
+            SocketTransport::tcp(NetworkModel::default(), FailurePlan::none(), chaos).unwrap();
+        let (out, got) = run(&mut t, 0, frames(5));
+        assert_eq!(got.len(), 5, "each cid folded exactly once");
+        assert_eq!(out.duplicates, 5);
+        assert_eq!(out.delivered.len(), 5);
+    }
+
+    #[test]
+    fn tcp_matches_inproc_classification_and_bytes() {
+        use crate::comm::transport::Transport;
+        let plan = FailurePlan { dropout_prob: 0.3, seed: 41, ..FailurePlan::none() };
+        let chaos =
+            ChaosPlan { loss_prob: 0.3, reorder_prob: 0.6, seed: 43, ..ChaosPlan::none() };
+        let mut inproc = Transport::with_chaos(NetworkModel::default(), plan, chaos);
+        let mut tcp =
+            SocketTransport::tcp(NetworkModel::default(), plan, chaos).unwrap();
+        let mut got_a = Vec::new();
+        let a = inproc.collect_with(1, 1_000, frames(10), &mut |d| got_a.push(d)).unwrap();
+        let mut got_b = Vec::new();
+        let b = tcp.collect_with(1, 1_000, frames(10), &mut |d| got_b.push(d)).unwrap();
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(a.timed_out, b.timed_out);
+        assert_eq!(a.chaos_lost, b.chaos_lost);
+        assert_eq!(a.reordered, b.reordered);
+        assert_eq!(a.round_time_s.to_bits(), b.round_time_s.to_bits());
+        assert_eq!(got_a.len(), got_b.len());
+        for (x, y) in got_a.iter().zip(&got_b) {
+            assert_eq!(x.cid, y.cid);
+            assert_eq!(x.bytes, y.bytes, "payload bytes identical across transports");
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+        }
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_delivers_ascending_with_payloads_intact() {
+        let mut t =
+            SocketTransport::uds(NetworkModel::default(), FailurePlan::none(), ChaosPlan::none())
+                .unwrap();
+        let (out, got) = run(&mut t, 0, frames(4));
+        assert_eq!(got.len(), 4);
+        for (i, d) in got.iter().enumerate() {
+            assert_eq!(d.cid, i as u32);
+            assert_eq!(d.bytes, vec![i as u8; 64 + i]);
+        }
+        assert_eq!(out.delivered.len(), 4);
+        assert_eq!(t.kind(), "uds");
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn uds_socket_path_is_unlinked_on_drop() {
+        let t =
+            SocketTransport::uds(NetworkModel::default(), FailurePlan::none(), ChaosPlan::none())
+                .unwrap();
+        let path = match &t.listener {
+            Listener::Uds(_, p) => p.clone(),
+            _ => unreachable!(),
+        };
+        assert!(path.exists());
+        drop(t);
+        assert!(!path.exists(), "drop unlinks the socket file");
+    }
+}

@@ -1,44 +1,74 @@
-//! In-process uplink transport with failure injection — the Collect
-//! phase's substrate.
+//! The uplink transport abstraction and its in-process implementation
+//! — the Collect phase's substrate.
 //!
 //! [`crate::comm::channel::NetworkModel`] prices a byte; this module
 //! actually *carries* the bytes: each selected client hands the
 //! transport its encoded payload ([`UplinkFrame`]), and the transport
-//! decides — deterministically, from a seeded [`FailurePlan`] — whether
-//! that upload arrives, arrives late (straggler past the collect
-//! deadline), or never arrives at all (client crashed mid-round). The
-//! server side of the round only ever sees [`CollectResult::delivered`];
+//! decides — deterministically, from a seeded [`FailurePlan`] plus a
+//! seeded [`ChaosPlan`] — whether that upload arrives, arrives late
+//! (straggler past the collect deadline), or never arrives at all
+//! (client crashed mid-round, or packet loss exhausted every retry).
+//! Delivered payloads stream through the caller's sink in **ascending
+//! client id**; the server side of the round only ever sees what the
+//! sink received plus [`CollectResult`]'s survivor metadata —
 //! everything downstream (aggregation, secure-mask recovery, metrics)
 //! operates on survivors.
+//!
+//! Two implementations share the [`Uplink`] trait:
+//!
+//! * [`Transport`] here — the in-process deterministic-test twin: no
+//!   sockets, simulated time only. Every golden test pins against it.
+//! * [`crate::comm::socket::SocketTransport`] — the same payload bytes
+//!   framed over real TCP / Unix-domain sockets
+//!   ([`crate::comm::frame`]), with a resequencing streaming fold that
+//!   restores ascending-cid sink order.
+//!
+//! Both evaluate the same pure [`effective_fate`] per `(round, cid)`,
+//! which is what makes their survivor sets, arrival times, and folded
+//! aggregates identical by construction (pinned by
+//! `tests/transport_conformance.rs`).
 //!
 //! Fidelity notes:
 //! * Delivery *time* uses the paper's §5.2 cost model bytes (so the
 //!   simulated round time stays comparable to §5.1's argument), while
 //!   the *metered* bytes handed to the [`crate::comm::cost::CostLedger`]
-//!   are the actual wire bytes delivered.
+//!   are the actual wire bytes delivered (`up_wire` = payload bytes,
+//!   `up_framed` = payload + socket frame header — metered identically
+//!   on every transport).
 //! * Failure draws are a pure function of `(plan seed, round, client)`,
 //!   so any run — including which clients die where — replays exactly.
+//! * The deadline boundary contract: an upload landing **exactly at**
+//!   the straggler deadline is delivered ([`FailurePlan::on_time`] is
+//!   `at_s <= deadline`); only strictly-later arrivals time out. The
+//!   socket transport's timer layer drains its queue before honoring
+//!   deadline expiry for the same reason — a frame that made it in
+//!   time is never discarded by the timer that noticed the time.
 //! * The transport is payload-format-agnostic: a frame's bytes may be
 //!   an f32 [`crate::sparse::codec`] encoding, a bitpacked quantized
 //!   frame ([`crate::sparse::quant`]), or a masked secure payload —
 //!   it carries and meters them identically. Delivered buffers are
-//!   moved (never copied) from client encode through to the server
-//!   fold, which recycles them; a dropped client's buffer dies here,
-//!   which is the only round path that lets a wire buffer leave the
-//!   reuse pool.
+//!   moved (never copied) from client encode through the sink to the
+//!   server fold, which recycles them; an undelivered client's buffer
+//!   comes back via [`CollectResult::spent`] so the reuse pool keeps
+//!   it warm.
 
+use anyhow::Result;
+
+use crate::comm::chaos::{ChaosPlan, LinkFate};
 use crate::comm::channel::NetworkModel;
+use crate::comm::frame;
 use crate::util::rng::Rng;
 
 /// What the transport decided about one client's upload.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Fate {
-    /// Arrived before the deadline, at simulated time `at_s`.
+    /// Arrived at or before the deadline, at simulated time `at_s`.
     Deliver { at_s: f64 },
-    /// Client crashed before its upload left (never delivers).
+    /// Client crashed before its upload left — or chaos loss ate every
+    /// transmission attempt (never delivers either way).
     Drop,
-    /// Upload exists but lands after the collect deadline; the server
-    /// has already closed the round.
+    /// Upload exists but lands strictly after the collect deadline;
+    /// the server has already closed the round.
     Timeout { at_s: f64 },
 }
 
@@ -82,31 +112,93 @@ impl FailurePlan {
         self.dropout_prob > 0.0 || self.straggler_timeout_s.is_finite()
     }
 
-    /// Decide one client's fate this round. `base_time_s` is the
-    /// failure-free delivery time (download + upload under the network
-    /// model). Pure in `(seed, round, cid)` — replayable.
-    pub fn fate(&self, round: u64, cid: u32, base_time_s: f64) -> Fate {
+    /// The deadline boundary contract, in one place so the simulated
+    /// and timer-driven paths cannot disagree: an arrival **at** the
+    /// deadline is on time; only strictly-later arrivals straggle.
+    pub fn on_time(&self, at_s: f64) -> bool {
+        at_s <= self.straggler_timeout_s
+    }
+
+    /// The raw (pre-deadline-classification) delivery time for one
+    /// client this round: `None` = the client crashed, `Some(at_s)` =
+    /// its upload would land at `at_s` (base delivery time times the
+    /// seeded straggler jitter). Pure in `(seed, round, cid)`.
+    pub fn raw_time(&self, round: u64, cid: u32, base_time_s: f64) -> Option<f64> {
         if !self.enabled() {
-            return Fate::Deliver { at_s: base_time_s };
+            return Some(base_time_s);
         }
         let mut rng = Rng::new(
             self.seed ^ ((cid as u64) << 32) ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15),
         );
         if rng.next_f64() < self.dropout_prob {
-            return Fate::Drop;
+            return None;
         }
         let jitter = if self.straggler_scale > 0.0 {
             -(1.0 - rng.next_f64()).ln() * self.straggler_scale
         } else {
             0.0
         };
-        let at_s = base_time_s * (1.0 + jitter);
-        if at_s > self.straggler_timeout_s {
-            Fate::Timeout { at_s }
-        } else {
-            Fate::Deliver { at_s }
+        Some(base_time_s * (1.0 + jitter))
+    }
+
+    /// Decide one client's fate this round. `base_time_s` is the
+    /// failure-free delivery time (download + upload under the network
+    /// model). Pure in `(seed, round, cid)` — replayable.
+    pub fn fate(&self, round: u64, cid: u32, base_time_s: f64) -> Fate {
+        match self.raw_time(round, cid, base_time_s) {
+            None => Fate::Drop,
+            Some(at_s) if self.on_time(at_s) => Fate::Deliver { at_s },
+            Some(at_s) => Fate::Timeout { at_s },
         }
     }
+}
+
+/// One client's `(round, cid)` outcome with the crash/straggle plan
+/// and the chaos plan composed — the single classification both
+/// transports evaluate, so they cannot diverge.
+#[derive(Clone, Copy, Debug)]
+pub struct EffectiveFate {
+    pub fate: Fate,
+    /// The chaos draw behind the fate (duplication/reorder enactment).
+    pub link: LinkFate,
+    /// True when `fate` is [`Fate::Drop`] *because* chaos loss ate
+    /// every transmission attempt (as opposed to a client crash).
+    pub chaos_lost: bool,
+}
+
+/// Compose the crash/straggle [`FailurePlan`] with the [`ChaosPlan`]
+/// for one frame. Pure in `(seeds, round, cid)`:
+///
+/// * plan says crash → `Drop` (chaos never resurrects a dead client);
+/// * chaos loss exhausts `max_retries` → `Drop` (`chaos_lost`);
+/// * otherwise the raw delivery time is stretched by the slow-link
+///   multiplier and one extra full delivery per lost attempt, then
+///   classified against the deadline via [`FailurePlan::on_time`] —
+///   so a slow link or lossy retries can turn a would-be delivery
+///   into a straggler.
+///
+/// With chaos disabled the time math is skipped entirely, keeping the
+/// plan-only path bitwise identical to the pre-chaos transport.
+pub fn effective_fate(
+    plan: &FailurePlan,
+    chaos: &ChaosPlan,
+    round: u64,
+    cid: u32,
+    base_time_s: f64,
+) -> EffectiveFate {
+    let link = chaos.link_fate(round, cid);
+    let Some(mut at_s) = plan.raw_time(round, cid, base_time_s) else {
+        return EffectiveFate { fate: Fate::Drop, link, chaos_lost: false };
+    };
+    if link.lost_attempts > chaos.max_retries {
+        return EffectiveFate { fate: Fate::Drop, link, chaos_lost: true };
+    }
+    if chaos.enabled() {
+        at_s = at_s * link.slow_mult * (1.0 + link.lost_attempts as f64);
+    }
+    let fate =
+        if plan.on_time(at_s) { Fate::Deliver { at_s } } else { Fate::Timeout { at_s } };
+    EffectiveFate { fate, link, chaos_lost: false }
 }
 
 /// One client's upload as handed to the transport.
@@ -120,7 +212,9 @@ pub struct UplinkFrame {
     pub paper_bytes: u64,
 }
 
-/// A frame that made it to the server before the deadline.
+/// A frame the sink receives: one payload that made it to the server
+/// in time. Sinks are invoked in ascending client id on every
+/// transport (the socket path resequences arrivals to guarantee it).
 #[derive(Clone, Debug)]
 pub struct Delivery {
     pub cid: u32,
@@ -129,14 +223,30 @@ pub struct Delivery {
     pub at_s: f64,
 }
 
-/// What one Collect phase yielded.
+/// Survivor metadata for one delivered upload (the payload itself went
+/// through the sink).
+#[derive(Clone, Copy, Debug)]
+pub struct Accepted {
+    pub cid: u32,
+    /// Simulated arrival time, seconds from round start.
+    pub at_s: f64,
+    /// Framed wire size: payload + the socket frame header
+    /// ([`crate::comm::frame::HEADER_LEN`]), metered identically on
+    /// every transport as `up_framed`.
+    pub framed: usize,
+}
+
+/// What one Collect phase yielded. Payloads are not here — they
+/// streamed through the sink; this is the classification record.
 #[derive(Clone, Debug, Default)]
 pub struct CollectResult {
-    /// Frames that arrived in time, in send (selection) order. The
-    /// caller meters these bytes into the cost ledger (failed uploads
-    /// never reached the server, so they are not metered).
-    pub delivered: Vec<Delivery>,
-    /// Clients that crashed (no upload ever existed server-side).
+    /// Uploads that arrived in time, ascending client id (their
+    /// payloads went through the sink in this same order). The caller
+    /// meters these into the cost ledger (failed uploads never reached
+    /// the server, so they are not metered).
+    pub delivered: Vec<Accepted>,
+    /// Clients that crashed — or whose frame chaos loss black-holed
+    /// (no upload ever arrived server-side; indistinguishable there).
     pub dropped: Vec<u32>,
     /// Clients whose upload landed after the deadline (excluded).
     pub timed_out: Vec<u32>,
@@ -145,36 +255,113 @@ pub struct CollectResult {
     /// upload was still missing at close (the server cannot know a
     /// crashed client will never send, so it waits the deadline out).
     pub round_time_s: f64,
+    /// Delivered frames that arrived twice (chaos duplication; the
+    /// extra copy was deduplicated and not metered).
+    pub duplicates: usize,
+    /// Delivered frames that arrived out of send order (chaos
+    /// reordering; resequenced before folding, so the aggregate is
+    /// unaffected).
+    pub reordered: usize,
+    /// How many of `dropped` were chaos loss (every retry lost) rather
+    /// than client crashes.
+    pub chaos_lost: usize,
+    /// Sender-side wire buffers the transport is done with (undelivered
+    /// frames here; socket senders also return transmitted buffers).
+    /// The caller recycles them into its pool.
+    pub spent: Vec<Vec<u8>>,
+}
+
+/// The uplink carrying one round's Collect barrier. Implementations
+/// must invoke `sink` once per surviving upload in **ascending client
+/// id** (the pinned fold order — PERF.md), classify failures from the
+/// same pure [`effective_fate`], and meter identically; the
+/// conformance suite holds every implementation to all three.
+pub trait Uplink: Send {
+    /// Run one Collect barrier: every client first downloads the dense
+    /// model (`down_bytes`), then uploads its frame; the plans decide
+    /// who survives. `frames` arrive in ascending-cid submission order.
+    fn collect_with(
+        &mut self,
+        round: u64,
+        down_bytes: u64,
+        frames: Vec<UplinkFrame>,
+        sink: &mut dyn FnMut(Delivery),
+    ) -> Result<CollectResult>;
+
+    fn plan(&self) -> &FailurePlan;
+
+    fn chaos(&self) -> &ChaosPlan;
+
+    /// Can this transport fail to deliver an upload? (Gates the round
+    /// engine's snapshot/rollback machinery.)
+    fn failure_enabled(&self) -> bool {
+        self.plan().enabled() || self.chaos().can_drop()
+    }
+
+    /// `"inproc"` / `"tcp"` / `"uds"` — for logs and labels.
+    fn kind(&self) -> &'static str;
 }
 
 /// The in-process uplink: prices deliveries with the [`NetworkModel`]
-/// and filters them through the [`FailurePlan`].
+/// and filters them through [`effective_fate`]. No sockets, no real
+/// time — the deterministic-test twin every golden test pins against.
 #[derive(Clone, Copy, Debug)]
 pub struct Transport {
     pub network: NetworkModel,
     pub plan: FailurePlan,
+    pub chaos: ChaosPlan,
 }
 
 impl Transport {
     pub fn new(network: NetworkModel, plan: FailurePlan) -> Self {
-        Self { network, plan }
+        Self { network, plan, chaos: ChaosPlan::none() }
     }
 
-    /// Run one Collect barrier: every client first downloads the dense
-    /// model (`down_bytes`), then uploads its frame; the plan decides
-    /// who survives. Frames keep their submission order.
-    pub fn collect(&self, round: u64, down_bytes: u64, frames: Vec<UplinkFrame>) -> CollectResult {
+    pub fn with_chaos(network: NetworkModel, plan: FailurePlan, chaos: ChaosPlan) -> Self {
+        Self { network, plan, chaos }
+    }
+}
+
+impl Uplink for Transport {
+    fn collect_with(
+        &mut self,
+        round: u64,
+        down_bytes: u64,
+        frames: Vec<UplinkFrame>,
+        sink: &mut dyn FnMut(Delivery),
+    ) -> Result<CollectResult> {
         let mut out = CollectResult::default();
         let down_s = self.network.download_time(down_bytes);
-        for frame in frames {
-            let base = down_s + self.network.upload_time(frame.paper_bytes);
-            match self.plan.fate(round, frame.cid, base) {
+        for f in frames {
+            let base = down_s + self.network.upload_time(f.paper_bytes);
+            let eff = effective_fate(&self.plan, &self.chaos, round, f.cid, base);
+            match eff.fate {
                 Fate::Deliver { at_s } => {
                     out.round_time_s = out.round_time_s.max(at_s);
-                    out.delivered.push(Delivery { cid: frame.cid, bytes: frame.bytes, at_s });
+                    if eff.link.duplicate {
+                        out.duplicates += 1;
+                    }
+                    if eff.link.reorder.is_some() {
+                        out.reordered += 1;
+                    }
+                    out.delivered.push(Accepted {
+                        cid: f.cid,
+                        at_s,
+                        framed: frame::framed_len(f.bytes.len()),
+                    });
+                    sink(Delivery { cid: f.cid, bytes: f.bytes, at_s });
                 }
-                Fate::Drop => out.dropped.push(frame.cid),
-                Fate::Timeout { .. } => out.timed_out.push(frame.cid),
+                Fate::Drop => {
+                    if eff.chaos_lost {
+                        out.chaos_lost += 1;
+                    }
+                    out.dropped.push(f.cid);
+                    out.spent.push(f.bytes);
+                }
+                Fate::Timeout { .. } => {
+                    out.timed_out.push(f.cid);
+                    out.spent.push(f.bytes);
+                }
             }
         }
         // the server holds the barrier open until the deadline when any
@@ -185,7 +372,19 @@ impl Transport {
         {
             out.round_time_s = out.round_time_s.max(self.plan.straggler_timeout_s);
         }
-        out
+        Ok(out)
+    }
+
+    fn plan(&self) -> &FailurePlan {
+        &self.plan
+    }
+
+    fn chaos(&self) -> &ChaosPlan {
+        &self.chaos
+    }
+
+    fn kind(&self) -> &'static str {
+        "inproc"
     }
 }
 
@@ -199,17 +398,33 @@ mod tests {
             .collect()
     }
 
+    fn run(
+        t: &mut Transport,
+        round: u64,
+        down: u64,
+        frames: Vec<UplinkFrame>,
+    ) -> (CollectResult, Vec<Delivery>) {
+        let mut got = Vec::new();
+        let out = t.collect_with(round, down, frames, &mut |d| got.push(d)).unwrap();
+        (out, got)
+    }
+
     #[test]
     fn disabled_plan_delivers_everything_at_model_time() {
-        let t = Transport::new(NetworkModel::default(), FailurePlan::none());
-        let out = t.collect(3, 1_000, frames(5, 2_000));
+        let mut t = Transport::new(NetworkModel::default(), FailurePlan::none());
+        let (out, got) = run(&mut t, 3, 1_000, frames(5, 2_000));
         assert_eq!(out.delivered.len(), 5);
         assert!(out.dropped.is_empty() && out.timed_out.is_empty());
+        assert_eq!(out.duplicates + out.reordered + out.chaos_lost, 0);
         // identical to the pre-transport NetworkModel barrier formula
         let expect = NetworkModel::default().round_time(1_000, &[2_000; 5]);
         assert!((out.round_time_s - expect).abs() < 1e-12);
-        let wire: usize = out.delivered.iter().map(|d| d.bytes.len()).sum();
+        let wire: usize = got.iter().map(|d| d.bytes.len()).sum();
         assert_eq!(wire, 5 * 2_000);
+        // framed metering = payload + header, per delivery
+        for a in &out.delivered {
+            assert_eq!(a.framed, 2_000 + frame::HEADER_LEN);
+        }
     }
 
     #[test]
@@ -229,10 +444,12 @@ mod tests {
     #[test]
     fn certain_dropout_kills_all_uplinks() {
         let plan = FailurePlan { dropout_prob: 1.0, seed: 1, ..FailurePlan::none() };
-        let t = Transport::new(NetworkModel::default(), plan);
-        let out = t.collect(0, 100, frames(4, 100));
-        assert!(out.delivered.is_empty());
+        let mut t = Transport::new(NetworkModel::default(), plan);
+        let (out, got) = run(&mut t, 0, 100, frames(4, 100));
+        assert!(out.delivered.is_empty() && got.is_empty());
         assert_eq!(out.dropped, vec![0, 1, 2, 3]);
+        // undelivered buffers come back for pool recycling
+        assert_eq!(out.spent.len(), 4);
     }
 
     #[test]
@@ -245,16 +462,16 @@ mod tests {
             seed: 2,
             ..FailurePlan::none()
         };
-        let t = Transport::new(NetworkModel::default(), plan);
-        let out = t.collect(0, 100, frames(2, 100));
+        let mut t = Transport::new(NetworkModel::default(), plan);
+        let (out, _) = run(&mut t, 0, 100, frames(2, 100));
         assert_eq!(out.dropped.len(), 2);
         assert!((out.round_time_s - 10.0).abs() < 1e-12, "{}", out.round_time_s);
         // with no deadline the simulation closes on the last delivery
-        let t2 = Transport::new(
+        let mut t2 = Transport::new(
             NetworkModel::default(),
             FailurePlan { dropout_prob: 1.0, seed: 2, ..FailurePlan::none() },
         );
-        assert_eq!(t2.collect(0, 100, frames(2, 100)).round_time_s, 0.0);
+        assert_eq!(run(&mut t2, 0, 100, frames(2, 100)).0.round_time_s, 0.0);
     }
 
     #[test]
@@ -267,8 +484,8 @@ mod tests {
             seed: 9,
             ..FailurePlan::none()
         };
-        let t = Transport::new(NetworkModel::default(), plan);
-        let out = t.collect(1, 1_000, frames(3, 1_000));
+        let mut t = Transport::new(NetworkModel::default(), plan);
+        let (out, _) = run(&mut t, 1, 1_000, frames(3, 1_000));
         assert!(out.delivered.is_empty());
         assert_eq!(out.timed_out.len(), 3);
         // the server waited the deadline out
@@ -285,8 +502,8 @@ mod tests {
             seed: 11,
             ..FailurePlan::none()
         };
-        let t = Transport::new(NetworkModel::default(), plan);
-        let out = t.collect(2, 1_000, frames(6, 10_000));
+        let mut t = Transport::new(NetworkModel::default(), plan);
+        let (out, _) = run(&mut t, 2, 1_000, frames(6, 10_000));
         assert_eq!(out.delivered.len(), 6);
         // stragglers are slower than the failure-free barrier
         let base = NetworkModel::default().round_time(1_000, &[10_000; 6]);
@@ -296,12 +513,123 @@ mod tests {
     #[test]
     fn delivery_order_is_submission_order() {
         let plan = FailurePlan { dropout_prob: 0.4, seed: 3, ..FailurePlan::none() };
-        let t = Transport::new(NetworkModel::default(), plan);
-        let out = t.collect(5, 100, frames(10, 100));
-        let cids: Vec<u32> = out.delivered.iter().map(|d| d.cid).collect();
+        let mut t = Transport::new(NetworkModel::default(), plan);
+        let (out, got) = run(&mut t, 5, 100, frames(10, 100));
+        let cids: Vec<u32> = got.iter().map(|d| d.cid).collect();
         let mut sorted = cids.clone();
         sorted.sort_unstable();
-        assert_eq!(cids, sorted, "survivor order must stay deterministic");
+        assert_eq!(cids, sorted, "sink order must stay ascending cid");
+        assert_eq!(
+            cids,
+            out.delivered.iter().map(|a| a.cid).collect::<Vec<_>>(),
+            "metadata order matches sink order"
+        );
         assert_eq!(out.delivered.len() + out.dropped.len(), 10);
+    }
+
+    #[test]
+    fn exact_deadline_arrival_is_delivered() {
+        // straggler_scale = 0 → at_s is exactly the modeled time, so a
+        // deadline set to that instant hits the boundary case: AT the
+        // deadline delivers, one ulp past does not
+        let n = NetworkModel::default();
+        let at = n.download_time(1_000) + n.upload_time(2_000);
+        let exactly = FailurePlan {
+            straggler_timeout_s: at,
+            straggler_scale: 0.0,
+            seed: 5,
+            ..FailurePlan::none()
+        };
+        assert!(exactly.on_time(at));
+        let mut t = Transport::new(n, exactly);
+        let (out, _) = run(&mut t, 0, 1_000, frames(1, 2_000));
+        assert_eq!(out.delivered.len(), 1, "frame AT the deadline is on time");
+        assert!(out.timed_out.is_empty());
+
+        let one_ulp_short = FailurePlan {
+            straggler_timeout_s: f64::from_bits(at.to_bits() - 1),
+            ..exactly
+        };
+        assert!(!one_ulp_short.on_time(at));
+        let mut t = Transport::new(n, one_ulp_short);
+        let (out, _) = run(&mut t, 0, 1_000, frames(1, 2_000));
+        assert!(out.delivered.is_empty());
+        assert_eq!(out.timed_out, vec![0], "one ulp past the deadline straggles");
+    }
+
+    #[test]
+    fn chaos_dup_and_reorder_never_change_survivors() {
+        let plan = FailurePlan { dropout_prob: 0.3, seed: 13, ..FailurePlan::none() };
+        let chaos = ChaosPlan { dup_prob: 1.0, reorder_prob: 1.0, seed: 17, ..ChaosPlan::none() };
+        let mut plain = Transport::new(NetworkModel::default(), plan);
+        let mut noisy = Transport::with_chaos(NetworkModel::default(), plan, chaos);
+        let (a, got_a) = run(&mut plain, 2, 100, frames(8, 100));
+        let (b, got_b) = run(&mut noisy, 2, 100, frames(8, 100));
+        let ids = |g: &[Delivery]| g.iter().map(|d| d.cid).collect::<Vec<_>>();
+        assert_eq!(ids(&got_a), ids(&got_b), "dup/reorder are delivery-neutral");
+        assert_eq!(a.dropped, b.dropped);
+        assert_eq!(b.duplicates, b.delivered.len(), "every delivery arrived twice");
+        assert_eq!(b.reordered, b.delivered.len());
+        assert_eq!(a.duplicates + a.reordered, 0);
+        // times are also untouched (dup/reorder don't slow the link)
+        for (x, y) in a.delivered.iter().zip(&b.delivered) {
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn chaos_loss_exhaustion_classifies_as_dropped() {
+        let chaos = ChaosPlan { loss_prob: 0.6, max_retries: 1, seed: 23, ..ChaosPlan::none() };
+        let mut t =
+            Transport::with_chaos(NetworkModel::default(), FailurePlan::none(), chaos);
+        let (out, got) = run(&mut t, 0, 100, frames(32, 100));
+        assert!(out.chaos_lost > 0, "p=0.6 over 32 clients loses someone");
+        assert_eq!(out.chaos_lost, out.dropped.len(), "no crashes configured");
+        assert_eq!(got.len() + out.dropped.len(), 32);
+        assert_eq!(out.spent.len(), out.dropped.len());
+        // surviving retries cost time: some delivery is slower than base
+        let base = NetworkModel::default().download_time(100)
+            + NetworkModel::default().upload_time(100);
+        assert!(out.delivered.iter().any(|a| a.at_s > base * 1.5));
+    }
+
+    #[test]
+    fn slow_links_can_cross_the_deadline() {
+        let n = NetworkModel::default();
+        let base = n.download_time(100) + n.upload_time(100);
+        // deadline admits every on-model delivery but no 4× slow link
+        let plan = FailurePlan {
+            straggler_timeout_s: base * 2.0,
+            straggler_scale: 0.0,
+            seed: 29,
+            ..FailurePlan::none()
+        };
+        let chaos = ChaosPlan { slow_prob: 0.5, slow_factor: 4.0, seed: 31, ..ChaosPlan::none() };
+        let mut t = Transport::with_chaos(n, plan, chaos);
+        let (out, _) = run(&mut t, 0, 100, frames(32, 100));
+        assert!(!out.timed_out.is_empty(), "some slow link crossed the deadline");
+        assert!(!out.delivered.is_empty(), "p=0.5 leaves clear links too");
+        // exactly the slow ones straggled
+        for &cid in &out.timed_out {
+            assert!(chaos.link_fate(0, cid).slow_mult > 1.0);
+        }
+    }
+
+    #[test]
+    fn failure_enabled_accounts_for_chaos_loss() {
+        let t = Transport::new(NetworkModel::default(), FailurePlan::none());
+        assert!(!t.failure_enabled());
+        let t = Transport::with_chaos(
+            NetworkModel::default(),
+            FailurePlan::none(),
+            ChaosPlan { dup_prob: 0.5, ..ChaosPlan::none() },
+        );
+        assert!(!t.failure_enabled(), "dup alone cannot lose an upload");
+        let t = Transport::with_chaos(
+            NetworkModel::default(),
+            FailurePlan::none(),
+            ChaosPlan { loss_prob: 0.1, ..ChaosPlan::none() },
+        );
+        assert!(t.failure_enabled(), "loss can black-hole an upload");
     }
 }

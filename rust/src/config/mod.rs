@@ -35,6 +35,38 @@ impl Partition {
     }
 }
 
+/// Which uplink carries the encoded payloads (the Collect barrier).
+/// All three are conformance-pinned to identical payload bytes,
+/// survivor sets, and metering (`tests/transport_conformance.rs`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process function call — the deterministic-test twin.
+    InProc,
+    /// Framed TCP over localhost (ephemeral port).
+    Tcp,
+    /// Framed Unix-domain socket (unix only).
+    Uds,
+}
+
+impl TransportKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "inproc" => Some(Self::InProc),
+            "tcp" => Some(Self::Tcp),
+            "uds" => Some(Self::Uds),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::InProc => "inproc",
+            Self::Tcp => "tcp",
+            Self::Uds => "uds",
+        }
+    }
+}
+
 /// Full run configuration. Defaults reproduce the paper's §5 setting:
 /// 100 clients, 10 selected per round, 5 local iterations, batch 50.
 #[derive(Clone, Debug)]
@@ -118,6 +150,27 @@ pub struct RunConfig {
     /// carry forward) when fewer uploads than this arrive.
     pub min_survivors: usize,
 
+    /// Which uplink carries the Collect barrier.
+    pub transport: TransportKind,
+    /// Chaos: per-attempt packet-loss probability (`[0,1)`; a frame
+    /// losing all retries never arrives → the client is dropped).
+    pub chaos_loss: f64,
+    /// Chaos: frame-duplication probability (server dedups by cid).
+    pub chaos_dup: f64,
+    /// Chaos: out-of-order-arrival probability (the resequencing fold
+    /// restores ascending-cid order — never changes the aggregate).
+    pub chaos_reorder: f64,
+    /// Chaos: slow-link probability (delivery time × factor below).
+    pub chaos_slow: f64,
+    /// Delivery-time multiplier for slow links (≥ 1).
+    pub chaos_slow_factor: f64,
+    /// Retransmission attempts after a lost one.
+    pub chaos_retries: u32,
+    /// Socket transports: real-time hang backstop per Collect barrier
+    /// (milliseconds). Straggler classification stays simulated-time;
+    /// this only bounds genuine wedges.
+    pub socket_deadline_ms: u64,
+
     /// PJRT executor threads.
     pub exec_workers: usize,
     /// Client-side worker threads (sparsify/mask/encode).
@@ -158,6 +211,14 @@ impl Default for RunConfig {
             dropout_prob: 0.0,
             straggler_timeout_s: f64::INFINITY,
             min_survivors: 1,
+            transport: TransportKind::InProc,
+            chaos_loss: 0.0,
+            chaos_dup: 0.0,
+            chaos_reorder: 0.0,
+            chaos_slow: 0.0,
+            chaos_slow_factor: 4.0,
+            chaos_retries: 3,
+            socket_deadline_ms: 5_000,
             exec_workers: 4,
             client_workers: 4,
         }
@@ -242,13 +303,34 @@ impl RunConfig {
                     .into(),
             );
         }
+        for (name, p) in [
+            ("chaos_loss", self.chaos_loss),
+            ("chaos_dup", self.chaos_dup),
+            ("chaos_reorder", self.chaos_reorder),
+            ("chaos_slow", self.chaos_slow),
+        ] {
+            if !(0.0..1.0).contains(&p) {
+                return Err(format!("{name} {p} outside [0,1)"));
+            }
+        }
+        if self.chaos_slow_factor < 1.0 || !self.chaos_slow_factor.is_finite() {
+            return Err(format!("chaos_slow_factor {} must be ≥ 1", self.chaos_slow_factor));
+        }
+        if self.transport == TransportKind::Uds && !cfg!(unix) {
+            return Err("transport uds requires a unix platform".into());
+        }
+        if self.socket_deadline_ms == 0 {
+            return Err("socket_deadline_ms must be ≥ 1".into());
+        }
         Ok(())
     }
 
-    /// Is transport failure injection (dropout and/or straggler
-    /// deadline) live for this run?
+    /// Is transport failure injection (dropout, straggler deadline,
+    /// and/or chaos loss — everything that can remove a client from
+    /// the round) live for this run? Gates rollback snapshots and, in
+    /// secure mode, Shamir share material for mask recovery.
     pub fn failure_injection(&self) -> bool {
-        self.dropout_prob > 0.0 || self.straggler_timeout_s.is_finite()
+        self.dropout_prob > 0.0 || self.straggler_timeout_s.is_finite() || self.chaos_loss > 0.0
     }
 
     /// Short label for metric files: `thgs-s0.1-noniid-4` etc.
@@ -356,6 +438,47 @@ mod tests {
         assert!(c.validate().is_err());
         c.shards = 8;
         c.neighbors_k = 12;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn transport_parsing() {
+        assert_eq!(TransportKind::parse("inproc"), Some(TransportKind::InProc));
+        assert_eq!(TransportKind::parse("tcp"), Some(TransportKind::Tcp));
+        assert_eq!(TransportKind::parse("uds"), Some(TransportKind::Uds));
+        assert_eq!(TransportKind::parse("quic"), None);
+        assert_eq!(TransportKind::Tcp.label(), "tcp");
+    }
+
+    #[test]
+    fn chaos_knobs_validate() {
+        let mut c = RunConfig::default();
+        c.chaos_loss = 0.3;
+        assert!(c.validate().is_ok());
+        assert!(c.failure_injection(), "chaos loss can remove clients");
+        c.chaos_loss = 1.0;
+        assert!(c.validate().is_err(), "certain loss rejected");
+        c.chaos_loss = 0.0;
+        assert!(!c.failure_injection());
+        c.chaos_reorder = -0.1;
+        assert!(c.validate().is_err());
+        c.chaos_reorder = 0.5;
+        c.chaos_slow_factor = 0.5;
+        assert!(c.validate().is_err(), "slow factor below 1 rejected");
+        c.chaos_slow_factor = 4.0;
+        assert!(c.validate().is_ok());
+        c.socket_deadline_ms = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn secure_chaos_loss_needs_surviving_pair() {
+        let mut c = RunConfig::default();
+        c.secure = true;
+        c.chaos_loss = 0.2;
+        c.min_survivors = 1;
+        assert!(c.validate().is_err(), "chaos loss counts as failure injection");
+        c.min_survivors = 2;
         assert!(c.validate().is_ok());
     }
 

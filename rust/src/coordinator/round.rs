@@ -9,8 +9,9 @@
 //! LocalTrain      E local SGD iterations per client (backend)    ┐ ClientPipeline,
 //! Sparsify/Encode residual fold + Eq.2 rate + Top-k (+ masks)    ┘ parallel per client
 //!                 + wire codec                                   → Vec<ClientResult>
-//! Collect         in-process transport: dropout/straggler        → Collected
-//!                 injection, survivor filter, wire metering
+//! Collect         transport (in-process / TCP / UDS): dropout,   → Collected
+//!                 straggler + chaos injection, survivor filter,
+//!                 wire metering
 //! Unmask/Recover  [secure] Shamir-reconstruct dead clients'      → Aggregated
 //!                 pair keys, cancel orphaned masks
 //! Apply           commit survivor state, FedAvg mean over        → RoundScratch
@@ -60,12 +61,12 @@
 //! aborts: the global model and every selected client roll back, and
 //! only the communication that actually happened is metered.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
-use crate::comm::transport::{Delivery, UplinkFrame};
+use crate::comm::transport::{Delivery, Uplink, UplinkFrame};
 use crate::data::Dataset;
 use crate::metrics::recorder::{PhaseTimings, RoundRecord};
 use crate::models::params::ParamVector;
@@ -321,6 +322,10 @@ struct Collected {
     rolled_back: Vec<ClientResult>,
     /// Simulated communication wall-clock of the round barrier.
     round_time_s: f64,
+    /// Framed socket bytes (payload + frame headers) the delivered
+    /// uplinks put on the wire — metered identically on every
+    /// transport (`up_framed` in the ledger).
+    framed: u64,
 }
 
 /// Phase 5 output marker: the unmasked sum itself lives in the
@@ -336,6 +341,8 @@ struct RoundScratch {
     survivors: Vec<u32>,
     nnz: Vec<usize>,
     wire: Vec<usize>,
+    /// Framed socket bytes for the round (see [`Collected::framed`]).
+    framed: u64,
     loss_sum: f64,
     rate_sum: f64,
 }
@@ -611,7 +618,7 @@ impl Trainer {
         let cohort = self.phase_select(round);
         // Failure rollback needs pre-round state; skip the copies
         // entirely on the (default) failure-free path.
-        let snapshots: HashMap<u32, ClientSnapshot> = if self.transport.plan.enabled() {
+        let snapshots: HashMap<u32, ClientSnapshot> = if self.transport.failure_enabled() {
             cohort
                 .selected
                 .iter()
@@ -701,7 +708,7 @@ impl Trainer {
             .iter()
             .map(|&n| self.cfg.algorithm.paper_cost_bytes(n, m, self.cfg.quant_bits))
             .collect();
-        self.ledger.record_with_costs(round, &ups, &scratch.wire, accuracy);
+        self.ledger.record_with_costs(round, &ups, &scratch.wire, scratch.framed, accuracy);
         let rc = self.ledger.rounds.last().unwrap();
 
         let k = scratch.survivors.len();
@@ -848,16 +855,18 @@ impl Trainer {
         results.into_iter().collect()
     }
 
-    /// Phase 4 — move every encoded payload into the transport; the
+    /// Phase 4 — move every encoded payload into the transport
+    /// (in-process twin or a real socket, per `--transport`); the
     /// seeded failure plan decides who survives. Delivered frames are
     /// decoded server-side and **streamed** straight into the sharded
-    /// accumulator: each payload folds in on arrival and its decoded
-    /// form is immediately recycled, so the coordinator holds O(model)
-    /// accumulator memory instead of O(cohort × k_sparse) buffered
-    /// payloads. The transport delivers in submission (= selection)
-    /// order — pinned by `delivery_order_is_submission_order` — so the
-    /// streaming fold is bitwise identical to buffering all payloads
-    /// and summing them afterwards.
+    /// accumulator: the transport's sink folds each payload on arrival
+    /// and its decoded form is immediately recycled, so the coordinator
+    /// holds O(model) accumulator memory instead of O(cohort ×
+    /// k_sparse) buffered payloads. Every [`Uplink`] sinks in ascending
+    /// client id (the socket path resequences to guarantee it) — the
+    /// pinned fold order, so the streaming fold is bitwise identical to
+    /// buffering all payloads and summing them afterwards, on any
+    /// transport.
     fn phase_collect(
         &mut self,
         cohort: &Cohort,
@@ -873,33 +882,67 @@ impl Trainer {
             })
             .collect();
         let down_bytes = crate::sparse::codec::dense_cost_bytes(m);
-        let outcome = self.transport.collect(cohort.round, down_bytes, frames);
-
-        let mut delivered: HashMap<u32, Delivery> =
-            outcome.delivered.into_iter().map(|d| (d.cid, d)).collect();
-        let mut survivors = Vec::with_capacity(delivered.len());
-        let mut rolled_back = Vec::new();
-        // delivered payloads in ascending-client-id order: `results`
-        // is in selection order and selection sorts ids — the pinned
-        // fold order both the serial and parallel paths apply
-        let mut payloads: Vec<(u32, Vec<u8>)> = Vec::with_capacity(delivered.len());
-        for r in results {
-            match delivered.remove(&r.cid) {
-                Some(d) => {
-                    payloads.push((r.cid, d.bytes));
-                    survivors.push(r);
-                }
-                None => rolled_back.push(r),
-            }
-        }
-        self.server_ws.sharded.reset(m, self.cfg.shards);
+        let quant = self.cfg.quant_bits.is_some();
         // the pool-parallel fold is bitwise-equal to the serial one
         // (each position lives in exactly one shard and sees the same
-        // ascending-cid op sequence), so this gate is pure scheduling
-        if self.cfg.shards > 1 && self.client_pool.size() > 1 && !payloads.is_empty() {
+        // ascending-cid op sequence), so this gate is pure scheduling;
+        // it buffers the delivered payloads and fans out post-barrier
+        let parallel = self.cfg.shards > 1 && self.client_pool.size() > 1;
+        self.server_ws.sharded.reset(m, self.cfg.shards);
+
+        let mut payloads: Vec<(u32, Vec<u8>)> = Vec::new();
+        let mut fold_err: Option<anyhow::Error> = None;
+        // the sink borrows server/client workspaces while the transport
+        // holds `&mut self`'s transport field — disjoint by destructure
+        let Trainer { transport, server_ws, client_workspaces, .. } = self;
+        let mut sink = |d: Delivery| {
+            if parallel {
+                payloads.push((d.cid, d.bytes));
+                return;
+            }
+            // serial streaming fold: decode into warm scratch, fold,
+            // recycle the wire buffer. Quantized frames dequantize on
+            // fold (`code·scale/levels` — the exact client-side
+            // [`crate::sparse::quant::dequantize`] expression). First
+            // decode error wins; later payloads still recycle.
+            if fold_err.is_none() {
+                let folded = if quant {
+                    QuantizedSparse::decode_into(&d.bytes, &mut server_ws.qdecode)
+                        .map(|_| server_ws.sharded.fold_quant(&server_ws.qdecode))
+                } else {
+                    SparseVec::decode_into(&d.bytes, &mut server_ws.decode)
+                        .map(|_| server_ws.sharded.fold(&server_ws.decode))
+                };
+                if let Err(e) = folded {
+                    fold_err = Some(anyhow!("client {} payload: {e}", d.cid));
+                }
+            }
+            client_workspaces.release_wire(d.bytes);
+        };
+        let outcome = transport.collect_with(cohort.round, down_bytes, frames, &mut sink)?;
+        if let Some(e) = fold_err {
+            return Err(e);
+        }
+        // undelivered (and socket sender-side) wire buffers come back
+        // through `spent` — recycle them so dropped clients don't cost
+        // the pool its warm buffers
+        for bytes in outcome.spent {
+            self.client_workspaces.release_wire(bytes);
+        }
+        if parallel && !payloads.is_empty() {
             self.fold_payloads_parallel(m, payloads)?;
-        } else {
-            self.fold_payloads_serial(payloads)?;
+        }
+
+        let delivered: HashSet<u32> = outcome.delivered.iter().map(|a| a.cid).collect();
+        let framed: u64 = outcome.delivered.iter().map(|a| a.framed as u64).sum();
+        let mut survivors = Vec::with_capacity(delivered.len());
+        let mut rolled_back = Vec::new();
+        for r in results {
+            if delivered.contains(&r.cid) {
+                survivors.push(r);
+            } else {
+                rolled_back.push(r);
+            }
         }
         let mut dead = outcome.dropped.clone();
         dead.extend_from_slice(&outcome.timed_out);
@@ -911,31 +954,8 @@ impl Trainer {
             stragglers: outcome.timed_out,
             rolled_back,
             round_time_s: outcome.round_time_s,
+            framed,
         })
-    }
-
-    /// Serial Collect fold: decode each delivered payload into the
-    /// warm [`ServerWorkspace`] scratch and stream it into the sharded
-    /// accumulator, ascending client id. Quantized frames dequantize
-    /// on fold (`code·scale/levels` — the exact client-side
-    /// [`crate::sparse::quant::dequantize`] expression). Consumed wire
-    /// buffers recycle back into the [`WorkspacePool`].
-    fn fold_payloads_serial(&mut self, payloads: Vec<(u32, Vec<u8>)>) -> Result<()> {
-        let quant = self.cfg.quant_bits.is_some();
-        let ws = &mut self.server_ws;
-        for (cid, bytes) in payloads {
-            if quant {
-                QuantizedSparse::decode_into(&bytes, &mut ws.qdecode)
-                    .map_err(|e| anyhow!("client {cid} payload: {e}"))?;
-                ws.sharded.fold_quant(&ws.qdecode);
-            } else {
-                SparseVec::decode_into(&bytes, &mut ws.decode)
-                    .map_err(|e| anyhow!("client {cid} payload: {e}"))?;
-                ws.sharded.fold(&ws.decode);
-            }
-            self.client_workspaces.release_wire(bytes);
-        }
-        Ok(())
     }
 
     /// Pool-parallel Collect fold: one task per shard, each owning its
@@ -943,7 +963,7 @@ impl Trainer {
     /// its coordinate range via the fused decode+fold kernels
     /// ([`crate::sparse::codec::fold_f32_range`] /
     /// [`crate::sparse::quant::fold_quant_range`]), in ascending
-    /// client id. Bitwise-equal to [`Self::fold_payloads_serial`]: a
+    /// client id. Bitwise-equal to the serial streaming sink fold: a
     /// position lives in exactly one shard, so its f32 op sequence is
     /// the serial one, and the shard merge stays a pure ascending-id
     /// concatenation (PERF.md shard-merge contract, extended to the
@@ -1106,6 +1126,7 @@ impl Trainer {
         mut snapshots: HashMap<u32, ClientSnapshot>,
     ) -> (RoundScratch, Vec<u32>, Vec<u32>, f64) {
         let mut scratch = RoundScratch::default();
+        scratch.framed = collected.framed;
         for r in collected.survivors {
             let cs = &mut self.clients[r.cid as usize];
             cs.commit_round(
@@ -1183,7 +1204,7 @@ impl Trainer {
             .iter()
             .map(|&n| self.cfg.algorithm.paper_cost_bytes(n, m, self.cfg.quant_bits))
             .collect();
-        self.ledger.record_with_costs(cohort.round, &ups, &wire, f64::NAN);
+        self.ledger.record_with_costs(cohort.round, &ups, &wire, collected.framed, f64::NAN);
         let rc = self.ledger.rounds.last().unwrap();
         self.recorder.push(RoundRecord {
             round: cohort.round,

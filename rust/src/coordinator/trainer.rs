@@ -2,8 +2,9 @@
 //!
 //! One [`Trainer`] owns the global model, the client fleet, the
 //! compute backend (native or PJRT, see [`crate::runtime`]), the
-//! in-process uplink transport and (optionally) the secure-aggregation
-//! state. Rounds run through the phased engine in
+//! uplink transport (in-process twin, TCP, or UDS — `--transport`) and
+//! (optionally) the secure-aggregation state. Rounds run through the
+//! phased engine in
 //! [`super::round`]:
 //!
 //! ```text
@@ -19,7 +20,10 @@
 //! * **Collect** — the transport carries the encoded uplinks; a seeded
 //!   [`FailurePlan`](crate::comm::transport::FailurePlan) injects
 //!   client crashes (`dropout_prob`) and past-deadline stragglers
-//!   (`straggler_timeout_s`); survivors only from here on
+//!   (`straggler_timeout_s`), and a seeded
+//!   [`ChaosPlan`](crate::comm::chaos::ChaosPlan) injects packet loss,
+//!   duplication, reordering, and slow links; survivors only from
+//!   here on
 //! * **Unmask/Recover** — server sum over survivors; in secure mode,
 //!   Shamir-reconstruct dead clients' pair keys and cancel their
 //!   orphaned masks (aborting below `min_survivors` / quorum)
@@ -34,9 +38,11 @@ use std::sync::Arc;
 use anyhow::{anyhow, Context, Result};
 
 use crate::comm::channel::NetworkModel;
+use crate::comm::chaos::ChaosPlan;
 use crate::comm::cost::CostLedger;
-use crate::comm::transport::{FailurePlan, Transport, DEFAULT_STRAGGLER_SCALE};
-use crate::config::{Partition, RunConfig};
+use crate::comm::socket::{SocketOptions, SocketTransport};
+use crate::comm::transport::{FailurePlan, Transport, Uplink, DEFAULT_STRAGGLER_SCALE};
+use crate::config::{Partition, RunConfig, TransportKind};
 use crate::data::{iid_partition, noniid_partition, Dataset, DatasetKind, Split};
 use crate::metrics::recorder::{Recorder, RunSummary};
 use crate::models::manifest::Manifest;
@@ -71,8 +77,11 @@ pub struct Trainer {
     pub(crate) client_pool: Arc<ThreadPool>,
     pub recorder: Recorder,
     pub ledger: CostLedger,
-    /// The in-process uplink (network model + failure plan).
-    pub transport: Transport,
+    /// The uplink carrying the Collect barrier: the in-process twin
+    /// (default) or a real TCP/UDS socket, per `cfg.transport`. All
+    /// implementations share the network model, failure plan, and
+    /// chaos plan semantics (conformance-pinned).
+    pub transport: Box<dyn Uplink>,
     pub(crate) base_rate: f64,
     pub(crate) mask_cache: crate::secagg::mask::MaskCache,
     /// Per-worker client scratch, reused across rounds (the warm
@@ -172,19 +181,46 @@ impl Trainer {
             _ => None,
         };
 
-        let transport = Transport::new(
-            NetworkModel::default(),
-            FailurePlan {
-                dropout_prob: cfg.dropout_prob,
-                straggler_timeout_s: cfg.straggler_timeout_s,
-                straggler_scale: if cfg.straggler_timeout_s.is_finite() {
-                    DEFAULT_STRAGGLER_SCALE
-                } else {
-                    0.0
-                },
-                seed: cfg.seed ^ 0xfa11,
+        let network = NetworkModel::default();
+        let plan = FailurePlan {
+            dropout_prob: cfg.dropout_prob,
+            straggler_timeout_s: cfg.straggler_timeout_s,
+            straggler_scale: if cfg.straggler_timeout_s.is_finite() {
+                DEFAULT_STRAGGLER_SCALE
+            } else {
+                0.0
             },
-        );
+            seed: cfg.seed ^ 0xfa11,
+        };
+        // chaos draws from its own seed stream so turning it on never
+        // shifts the crash/straggle fates
+        let chaos = ChaosPlan {
+            loss_prob: cfg.chaos_loss,
+            dup_prob: cfg.chaos_dup,
+            reorder_prob: cfg.chaos_reorder,
+            slow_prob: cfg.chaos_slow,
+            slow_factor: cfg.chaos_slow_factor,
+            max_retries: cfg.chaos_retries,
+            seed: cfg.seed ^ 0xc4a05,
+        };
+        let sock_opts = SocketOptions {
+            accept_deadline: std::time::Duration::from_millis(cfg.socket_deadline_ms),
+            ..SocketOptions::default()
+        };
+        let transport: Box<dyn Uplink> = match cfg.transport {
+            TransportKind::InProc => Box::new(Transport::with_chaos(network, plan, chaos)),
+            TransportKind::Tcp => Box::new(
+                SocketTransport::tcp_with(network, plan, chaos, sock_opts)
+                    .context("open tcp uplink")?,
+            ),
+            #[cfg(unix)]
+            TransportKind::Uds => Box::new(
+                SocketTransport::uds_with(network, plan, chaos, sock_opts)
+                    .context("open uds uplink")?,
+            ),
+            #[cfg(not(unix))]
+            TransportKind::Uds => return Err(anyhow!("uds transport requires unix")),
+        };
 
         let layer_spans = meta.layer_spans();
         let label = cfg.run_label();

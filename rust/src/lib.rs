@@ -20,9 +20,12 @@
 //! Select           C·K of N clients, seeded
 //! LocalTrain       parallel local SGD (E iterations) per client
 //! Sparsify/Encode  residual fold + Eq.2 rate + Top-k (+ pairwise masks) + codec
-//! Collect          in-process transport carries the uplinks; a seeded
-//!                  FailurePlan injects crashes (dropout_prob) and
-//!                  past-deadline stragglers (straggler_timeout_s)
+//! Collect          the transport (in-process twin, TCP, or UDS — all
+//!                  conformance-pinned) carries the framed uplinks; a
+//!                  seeded FailurePlan injects crashes (dropout_prob)
+//!                  and past-deadline stragglers (straggler_timeout_s),
+//!                  a seeded ChaosPlan injects loss/dup/reorder/slow
+//!                  links
 //! Unmask/Recover   [secure] Shamir-reconstruct dead clients' pair keys,
 //!                  cancel their orphaned masks (abort below min_survivors)
 //! Apply            global ← global + Σ/|survivors|

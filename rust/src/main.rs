@@ -16,7 +16,7 @@
 use std::path::PathBuf;
 use std::process::ExitCode;
 
-use fedsparse::config::{Partition, RunConfig};
+use fedsparse::config::{Partition, RunConfig, TransportKind};
 use fedsparse::coordinator::{Algorithm, Trainer};
 use fedsparse::models::manifest::Manifest;
 use fedsparse::runtime::BackendKind;
@@ -48,6 +48,11 @@ const TRAIN_SPEC: &[ArgSpec] = &[
     ArgSpec::opt("dropout", "", "0.0", "per-round client crash probability (failure injection)"),
     ArgSpec::opt("straggler-timeout", "", "0", "collect deadline in simulated seconds (0 = none)"),
     ArgSpec::opt("min-survivors", "", "1", "abort the round below this many delivered uploads"),
+    ArgSpec::opt("transport", "", "inproc", "uplink: inproc | tcp | uds (framed sockets)"),
+    ArgSpec::opt("chaos-loss", "", "0.0", "chaos: per-attempt packet-loss probability"),
+    ArgSpec::opt("chaos-dup", "", "0.0", "chaos: frame duplication probability"),
+    ArgSpec::opt("chaos-reorder", "", "0.0", "chaos: out-of-order arrival probability"),
+    ArgSpec::opt("chaos-slow", "", "0.0", "chaos: slow-link probability (4x delivery time)"),
     ArgSpec::opt("backend", "b", "auto", "auto | native | pjrt (AOT artifacts)"),
     ArgSpec::opt("workers", "w", "4", "PJRT executor threads"),
     ArgSpec::opt("artifacts", "", "artifacts", "AOT artifacts directory"),
@@ -138,6 +143,12 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     let st: f64 = args.get_parsed("straggler-timeout")?;
     cfg.straggler_timeout_s = if st > 0.0 { st } else { f64::INFINITY };
     cfg.min_survivors = args.get_parsed("min-survivors")?;
+    cfg.transport = TransportKind::parse(args.get("transport").unwrap_or("inproc"))
+        .ok_or_else(|| anyhow::anyhow!("bad --transport (inproc | tcp | uds)"))?;
+    cfg.chaos_loss = args.get_parsed("chaos-loss")?;
+    cfg.chaos_dup = args.get_parsed("chaos-dup")?;
+    cfg.chaos_reorder = args.get_parsed("chaos-reorder")?;
+    cfg.chaos_slow = args.get_parsed("chaos-slow")?;
     Ok(cfg)
 }
 
@@ -148,7 +159,7 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
     let out = args.get("out").unwrap_or("").to_string();
 
     println!(
-        "fedsparse train: {} on {} | {} | {} clients ({}/round, E={}) | {} rounds{}",
+        "fedsparse train: {} on {} | {} | {} clients ({}/round, E={}) | {} rounds{}{}",
         cfg.model,
         cfg.dataset,
         cfg.algorithm.label(),
@@ -157,6 +168,11 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
         cfg.local_iters,
         cfg.rounds,
         if cfg.secure { " | SECURE" } else { "" },
+        if cfg.transport != TransportKind::InProc {
+            format!(" | wire {}", cfg.transport.label())
+        } else {
+            String::new()
+        },
     );
     let sw = Stopwatch::start();
     let mut trainer = Trainer::new(cfg)?;

@@ -1,0 +1,129 @@
+//! Chaos soak: socket-transport end-to-end runs across a seeded chaos
+//! matrix. CI drives this with `FEDSPARSE_CHAOS_*` env knobs (see
+//! `.github/workflows/ci.yml`); locally it runs one moderate mix with
+//! the default seed list. Every run must either complete with the
+//! correct aggregate (bitwise-equal to the in-process twin under the
+//! same seeds) or abort cleanly at quorum (global model untouched).
+//! Failure messages reprint the exact replay line.
+
+mod common;
+
+use common::{assert_conformant, drive, secure_chaos_cfg};
+use fedsparse::config::TransportKind;
+use fedsparse::coordinator::Trainer;
+
+fn env_f64(name: &str, default: f64) -> f64 {
+    std::env::var(name)
+        .ok()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(default)
+}
+
+fn soak_seeds() -> Vec<u64> {
+    std::env::var("FEDSPARSE_CHAOS_SEEDS")
+        .ok()
+        .map(|v| v.split(',').filter_map(|s| s.trim().parse().ok()).collect::<Vec<u64>>())
+        .filter(|v| !v.is_empty())
+        .unwrap_or_else(|| vec![11, 23, 47])
+}
+
+/// The soak proper: for every seed in the matrix, a secure 4-round
+/// TCP run must match its in-process twin observable-for-observable,
+/// and every round must either apply an aggregate or abort cleanly.
+#[test]
+fn chaos_soak_tcp_matches_inproc_twin() {
+    let loss = env_f64("FEDSPARSE_CHAOS_LOSS", 0.3);
+    let dup = env_f64("FEDSPARSE_CHAOS_DUP", 0.0);
+    let reorder = env_f64("FEDSPARSE_CHAOS_REORDER", 0.5);
+    let slow = env_f64("FEDSPARSE_CHAOS_SLOW", 0.0);
+
+    for seed in soak_seeds() {
+        let replay = format!(
+            "replay: FEDSPARSE_CHAOS_SEEDS={seed} FEDSPARSE_CHAOS_LOSS={loss} \
+             FEDSPARSE_CHAOS_DUP={dup} FEDSPARSE_CHAOS_REORDER={reorder} \
+             FEDSPARSE_CHAOS_SLOW={slow} \
+             cargo test --release --test chaos_soak -- --nocapture"
+        );
+        let mut cfg = secure_chaos_cfg(seed);
+        cfg.chaos_loss = loss;
+        cfg.chaos_dup = dup;
+        cfg.chaos_reorder = reorder;
+        cfg.chaos_slow = slow;
+
+        let inproc = drive(cfg.clone(), TransportKind::InProc);
+        let tcp = drive(cfg, TransportKind::Tcp);
+        assert_conformant(&replay, &inproc, &tcp);
+
+        let mut aborted = 0usize;
+        for s in &inproc.0 {
+            if s.aborted {
+                aborted += 1;
+                assert!(
+                    s.agg_bits.is_empty(),
+                    "round {} aborted but still exposed an aggregate — {replay}",
+                    s.round
+                );
+            } else {
+                assert!(
+                    !s.agg_bits.is_empty(),
+                    "round {} completed without an aggregate — {replay}",
+                    s.round
+                );
+            }
+        }
+        println!(
+            "chaos soak seed {seed}: {} rounds ({aborted} aborted at quorum) \
+             conformant across inproc/tcp",
+            inproc.0.len()
+        );
+    }
+}
+
+/// Quorum-abort path over a real socket: with crash + loss rates so
+/// hostile that a full cohort essentially never survives, every round
+/// must abort cleanly — no error, no partial apply, global model
+/// bitwise-untouched — and the socket run must still match the twin.
+#[test]
+fn chaos_soak_high_loss_aborts_cleanly_at_quorum() {
+    let mut cfg = secure_chaos_cfg(5);
+    cfg.chaos_loss = 0.8;
+    cfg.dropout_prob = 0.85;
+    // require the full cohort: any crash/exhausted-retry loss aborts
+    cfg.min_survivors = cfg.clients_per_round;
+    let replay = "replay: seed 5, chaos_loss 0.8, dropout 0.85, min_survivors = cohort";
+
+    let inproc = drive(cfg.clone(), TransportKind::InProc);
+    let tcp_cfg = {
+        let mut c = cfg.clone();
+        c.transport = TransportKind::Tcp;
+        c
+    };
+    let mut t = Trainer::new(tcp_cfg).unwrap();
+    let init: Vec<u32> = t.global.data.iter().map(|v| v.to_bits()).collect();
+    let mut snaps = Vec::new();
+    for r in 0..cfg.rounds {
+        let out = t.run_round(r).unwrap_or_else(|e| {
+            panic!("quorum abort must be clean, round {r} errored: {e} — {replay}")
+        });
+        assert!(
+            out.aborted,
+            "round {r} kept a full cohort under a near-certain-failure plan — {replay}"
+        );
+        assert!(out.aggregate.is_empty(), "aborted round {r} exposed an aggregate");
+        let cost = *t.ledger.rounds.last().unwrap();
+        snaps.push(common::RoundSnapshot {
+            round: r,
+            aborted: out.aborted,
+            survivors: out.survivors.clone(),
+            dropped: out.dropped.clone(),
+            stragglers: out.stragglers.clone(),
+            agg_bits: Vec::new(),
+            up_wire: cost.up_wire,
+            up_framed: cost.up_framed,
+        });
+    }
+    let final_bits: Vec<u32> = t.global.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(init, final_bits, "aborted rounds must leave the global model untouched");
+    let tcp = (snaps, final_bits);
+    assert_conformant(replay, &inproc, &tcp);
+}

@@ -1,0 +1,154 @@
+//! Shared transport-conformance harness (used by the
+//! `transport_conformance` and `chaos_soak` integration tests).
+//!
+//! One `drive()` runs a full multi-round `Trainer` over a chosen
+//! `--transport` and snapshots everything the conformance contract
+//! pins: per-round survivor/dropped/straggler sets, abort flags, the
+//! aggregate's exact f32 bits, and the ledger's payload + framed byte
+//! meters. Two transports conform iff their snapshot vectors are
+//! equal element-for-element.
+#![allow(dead_code)] // each test crate uses a subset of the harness
+
+use fedsparse::config::{RunConfig, TransportKind};
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::runtime::BackendKind;
+
+/// Everything a round exposes that must be identical across
+/// transports under the same (seed, plan, chaos) triple.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RoundSnapshot {
+    pub round: u64,
+    pub aborted: bool,
+    pub survivors: Vec<u32>,
+    pub dropped: Vec<u32>,
+    pub stragglers: Vec<u32>,
+    /// Exact bits of the applied aggregate (empty on aborted rounds
+    /// or when `expose_aggregate` is off).
+    pub agg_bits: Vec<u32>,
+    /// Payload bytes metered this round (the golden `up_wire` meter).
+    pub up_wire: u64,
+    /// Payload + frame-header bytes (`up_framed`) — must match across
+    /// transports because the in-process twin charges the same header
+    /// a real socket writes.
+    pub up_framed: u64,
+}
+
+/// Run `cfg` over `kind` for `cfg.rounds` rounds and snapshot each
+/// round, plus the final global model bits.
+pub fn drive(mut cfg: RunConfig, kind: TransportKind) -> (Vec<RoundSnapshot>, Vec<u32>) {
+    cfg.transport = kind;
+    let rounds = cfg.rounds;
+    let mut t = Trainer::new(cfg).unwrap_or_else(|e| panic!("trainer({kind:?}): {e}"));
+    let mut snaps = Vec::with_capacity(rounds as usize);
+    for r in 0..rounds {
+        let out = t
+            .run_round(r)
+            .unwrap_or_else(|e| panic!("round {r} over {kind:?}: {e}"));
+        let cost = *t.ledger.rounds.last().expect("round recorded a cost row");
+        snaps.push(RoundSnapshot {
+            round: r,
+            aborted: out.aborted,
+            survivors: out.survivors.clone(),
+            dropped: out.dropped.clone(),
+            stragglers: out.stragglers.clone(),
+            agg_bits: out.aggregate.iter().map(|v| v.to_bits()).collect(),
+            up_wire: cost.up_wire,
+            up_framed: cost.up_framed,
+        });
+    }
+    let global_bits = t.global.data.iter().map(|v| v.to_bits()).collect();
+    (snaps, global_bits)
+}
+
+/// Assert two transport runs produced identical snapshots, with a
+/// failure message that names the divergent round and field.
+pub fn assert_conformant(
+    label: &str,
+    (a, ga): &(Vec<RoundSnapshot>, Vec<u32>),
+    (b, gb): &(Vec<RoundSnapshot>, Vec<u32>),
+) {
+    assert_eq!(a.len(), b.len(), "{label}: round counts differ");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(
+            x.aborted, y.aborted,
+            "{label}: round {} abort flags differ",
+            x.round
+        );
+        assert_eq!(
+            x.survivors, y.survivors,
+            "{label}: round {} survivor sets differ",
+            x.round
+        );
+        assert_eq!(
+            x.dropped, y.dropped,
+            "{label}: round {} dropped sets differ",
+            x.round
+        );
+        assert_eq!(
+            x.stragglers, y.stragglers,
+            "{label}: round {} straggler sets differ",
+            x.round
+        );
+        assert_eq!(
+            x.agg_bits, y.agg_bits,
+            "{label}: round {} aggregates differ bitwise",
+            x.round
+        );
+        assert_eq!(
+            x.up_wire, y.up_wire,
+            "{label}: round {} up_wire meters differ",
+            x.round
+        );
+        assert_eq!(
+            x.up_framed, y.up_framed,
+            "{label}: round {} up_framed meters differ",
+            x.round
+        );
+    }
+    assert_eq!(ga, gb, "{label}: final global models differ bitwise");
+}
+
+/// Secure chaos config: the acceptance-criterion scenario. 4 secure
+/// rounds, k-regular mask neighborhoods, seeded crashes + packet loss
+/// + reordering, sharded fold, small native-backend model.
+pub fn secure_chaos_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::smoke("mnist_mlp");
+    cfg.backend = BackendKind::Native;
+    cfg.data_dir = None;
+    cfg.secure = true;
+    cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+    cfg.seed = seed;
+    cfg.clients = 12;
+    cfg.clients_per_round = 6;
+    cfg.rounds = 4;
+    cfg.eval_every = 99;
+    cfg.expose_aggregate = true;
+    cfg.neighbors_k = 3;
+    cfg.mask_ratio_k = 0.5;
+    cfg.dropout_prob = 0.25;
+    cfg.min_survivors = 2;
+    cfg.shards = 2;
+    cfg.chaos_loss = 0.3;
+    cfg.chaos_reorder = 0.5;
+    cfg
+}
+
+/// Plain (non-secure) quantized-wire chaos config: exercises the
+/// bitpacked codec path plus duplication and slow links.
+pub fn quantized_chaos_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::smoke("mnist_mlp");
+    cfg.backend = BackendKind::Native;
+    cfg.data_dir = None;
+    cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+    cfg.seed = seed;
+    cfg.rounds = 3;
+    cfg.eval_every = 99;
+    cfg.expose_aggregate = true;
+    cfg.quant_bits = Some(4);
+    cfg.dropout_prob = 0.2;
+    cfg.min_survivors = 1;
+    cfg.chaos_dup = 0.4;
+    cfg.chaos_slow = 0.3;
+    cfg.chaos_reorder = 0.3;
+    cfg
+}

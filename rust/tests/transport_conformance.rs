@@ -1,0 +1,156 @@
+//! Transport conformance suite: one shared harness drives identical
+//! runs over the in-process twin, TCP, and (unix) UDS transports and
+//! pins that every observable — payload bytes metered, framed bytes
+//! metered, survivor/dropped/straggler sets per FailurePlan seed, and
+//! the applied aggregate down to the f32 bit — is identical.
+//!
+//! This is the PR's acceptance criterion: a secure 4-round run over
+//! TCP localhost with k-regular neighborhoods, seeded dropouts, and
+//! chaos loss + reordering must produce an aggregate bitwise-equal to
+//! the in-process run with the same seeds. Conformance holds by
+//! construction (both transports evaluate the same pure
+//! `effective_fate`, and the socket consumer resequences to the same
+//! ascending-cid fold order) — these tests keep it that way.
+
+mod common;
+
+use common::{assert_conformant, drive, quantized_chaos_cfg, secure_chaos_cfg};
+use fedsparse::config::TransportKind;
+
+/// The acceptance scenario: secure, neighbors_k = 3, dropout 0.25,
+/// chaos loss 0.3 + reorder 0.5, sharded fold, 4 rounds.
+#[test]
+fn secure_chaos_run_is_bitwise_identical_across_transports() {
+    let cfg = secure_chaos_cfg(2024);
+    let inproc = drive(cfg.clone(), TransportKind::InProc);
+    let tcp = drive(cfg.clone(), TransportKind::Tcp);
+    assert_conformant("secure inproc vs tcp", &inproc, &tcp);
+    #[cfg(unix)]
+    {
+        let uds = drive(cfg, TransportKind::Uds);
+        assert_conformant("secure inproc vs uds", &inproc, &uds);
+    }
+
+    // the scenario must actually exercise the interesting paths: at
+    // least one applied aggregate and at least one removed client
+    assert!(
+        inproc.0.iter().any(|s| !s.aborted && !s.agg_bits.is_empty()),
+        "no round applied an aggregate — scenario too hostile, retune seeds"
+    );
+    assert!(
+        inproc.0.iter().any(|s| !s.dropped.is_empty() || !s.stragglers.is_empty()),
+        "no client was ever removed — scenario too gentle, retune seeds"
+    );
+}
+
+/// The quantized bitpacked wire path under duplication, slow links,
+/// and reordering: dup frames must be deduped (first copy wins, bytes
+/// not double-metered), slow links only shift simulated time.
+#[test]
+fn quantized_chaos_run_is_bitwise_identical_across_transports() {
+    let cfg = quantized_chaos_cfg(7);
+    let inproc = drive(cfg.clone(), TransportKind::InProc);
+    let tcp = drive(cfg.clone(), TransportKind::Tcp);
+    assert_conformant("quantized inproc vs tcp", &inproc, &tcp);
+    #[cfg(unix)]
+    {
+        let uds = drive(cfg, TransportKind::Uds);
+        assert_conformant("quantized inproc vs uds", &inproc, &uds);
+    }
+    assert!(
+        inproc.0.iter().any(|s| !s.aborted && !s.agg_bits.is_empty()),
+        "no round applied an aggregate — scenario too hostile, retune seeds"
+    );
+}
+
+/// With failure injection and chaos off, every transport delivers the
+/// full cohort and the framed meter is exactly the payload meter plus
+/// one frame header per survivor.
+#[test]
+fn clean_run_framed_meter_is_payload_plus_headers() {
+    let mut cfg = secure_chaos_cfg(11);
+    cfg.dropout_prob = 0.0;
+    cfg.chaos_loss = 0.0;
+    cfg.chaos_reorder = 0.0;
+    cfg.rounds = 2;
+    let header = fedsparse::comm::frame::HEADER_LEN as u64;
+
+    for kind in [TransportKind::InProc, TransportKind::Tcp] {
+        let (snaps, _) = drive(cfg.clone(), kind);
+        for s in &snaps {
+            assert!(!s.aborted, "{kind:?}: clean round {} aborted", s.round);
+            assert_eq!(
+                s.survivors.len(),
+                cfg.clients_per_round,
+                "{kind:?}: clean round {} lost clients",
+                s.round
+            );
+            assert_eq!(
+                s.up_framed,
+                s.up_wire + header * s.survivors.len() as u64,
+                "{kind:?}: round {} framed meter is not payload + headers",
+                s.round
+            );
+        }
+    }
+}
+
+/// The straggler deadline boundary, end to end: a frame landing
+/// exactly AT the deadline is delivered, one ulp past straggles — and
+/// both transports classify it the same way. Uses a deadline placed
+/// exactly on a client's simulated arrival time, discovered by
+/// probing the deadline-free run.
+#[test]
+fn deadline_boundary_classifies_identically_across_transports() {
+    use fedsparse::comm::chaos::ChaosPlan;
+    use fedsparse::comm::transport::{effective_fate, FailurePlan, Fate};
+
+    // reconstruct the trainer's plan for round 0 and find a client's
+    // exact simulated arrival time
+    let cfg = {
+        let mut c = secure_chaos_cfg(2024);
+        c.dropout_prob = 0.0;
+        c.chaos_loss = 0.0;
+        c.chaos_reorder = 0.0;
+        c
+    };
+    let probe_plan = FailurePlan {
+        dropout_prob: 0.0,
+        straggler_timeout_s: 1.0,
+        straggler_scale: fedsparse::comm::transport::DEFAULT_STRAGGLER_SCALE,
+        seed: cfg.seed ^ 0xfa11,
+    };
+    let at = probe_plan
+        .raw_time(0, 3, 0.25)
+        .expect("dropout is off, the client cannot crash");
+    assert!(at.is_finite() && at >= 0.25);
+
+    // AT the deadline: delivered on both the pure classifier and thus
+    // (by construction) on every transport
+    let mut plan = probe_plan;
+    plan.straggler_timeout_s = at;
+    let fate = effective_fate(&plan, &ChaosPlan::none(), 0, 3, 0.25);
+    assert!(
+        matches!(fate.fate, Fate::Deliver { at_s } if at_s == at),
+        "arrival exactly at the deadline must be delivered, got {:?}",
+        fate.fate
+    );
+
+    // one ulp before the arrival time: straggles
+    plan.straggler_timeout_s = f64::from_bits(at.to_bits() - 1);
+    let fate = effective_fate(&plan, &ChaosPlan::none(), 0, 3, 0.25);
+    assert!(
+        matches!(fate.fate, Fate::Timeout { .. }),
+        "arrival past the deadline must straggle, got {:?}",
+        fate.fate
+    );
+
+    // end-to-end: run with the deadline pinned to the boundary on both
+    // transports and require identical straggler sets
+    let mut run_cfg = cfg;
+    run_cfg.straggler_timeout_s = at;
+    run_cfg.rounds = 1;
+    let inproc = drive(run_cfg.clone(), TransportKind::InProc);
+    let tcp = drive(run_cfg, TransportKind::Tcp);
+    assert_conformant("deadline boundary inproc vs tcp", &inproc, &tcp);
+}
