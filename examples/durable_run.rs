@@ -1,0 +1,87 @@
+//! Durable runs: kill a checkpointed training job mid-way, resume it,
+//! and verify the result is bitwise-identical to an uninterrupted twin
+//! — then seal the run's outputs in a validated manifest.
+//!
+//!     cargo run --release --example durable_run
+//!
+//! Three `RunConfig` knobs make a run durable:
+//!
+//! * `checkpoint_dir` — where end-of-round snapshots land
+//!   (`ckpt_<round>.fsckpt`, atomic write → fsync → rename commits, so
+//!   a crash mid-save never corrupts the committed set);
+//! * `checkpoint_every` — commit cadence in applied rounds (aborted
+//!   rounds roll back and never commit);
+//! * `resume` — load the newest valid snapshot and continue from it.
+//!
+//! Resume is exact, not approximate: every RNG stream in the round
+//! loop is a pure function of (seed, round, client id), so restoring
+//! the cross-round state (model, residuals, rate controllers, momentum
+//! velocities, metrics) replays the remaining rounds bit-for-bit.
+
+use fedsparse::config::RunConfig;
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::io::manifest::{build_manifest, validate_manifest_file, write_manifest};
+use fedsparse::util::json::num;
+
+fn cfg() -> RunConfig {
+    let mut cfg = RunConfig::smoke("mnist_mlp");
+    cfg.data_dir = None; // synthetic corpus: runs from a clean checkout
+    cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+    cfg.rounds = 6;
+    cfg.eval_every = 2;
+    cfg.dynamic_rate = true;
+    cfg.momentum = 0.5;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join(format!("fedsparse-durable-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    // The uninterrupted twin: the reference answer.
+    let mut twin = Trainer::new(cfg())?;
+    twin.run()?;
+
+    // The same run, checkpointed and "killed" after round 3.
+    let mut killed_cfg = cfg();
+    killed_cfg.checkpoint_dir = Some(dir.join("ckpt"));
+    let mut killed = Trainer::new(killed_cfg.clone())?;
+    for round in 0..3 {
+        killed.run_round(round)?;
+    }
+    drop(killed); // stand-in for SIGKILL: no teardown path runs
+    println!("killed after 3 of 6 rounds; checkpoints in {:?}", dir.join("ckpt"));
+
+    // Resume: picks up at the newest snapshot and finishes the run.
+    let mut resumed_cfg = killed_cfg;
+    resumed_cfg.resume = true;
+    let mut resumed = Trainer::new(resumed_cfg)?;
+    println!("resumed at round {} of {}", resumed.start_round(), resumed.cfg.rounds);
+    resumed.run()?;
+
+    let twin_bits: Vec<u32> = twin.global.data.iter().map(|v| v.to_bits()).collect();
+    let resumed_bits: Vec<u32> = resumed.global.data.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(twin_bits, resumed_bits, "resumed model diverged from the twin");
+    println!("resumed model is bitwise-identical to the uninterrupted twin ✓");
+
+    // Seal the run's outputs in a self-describing manifest and
+    // validate it — the same contract `manifest_check` enforces in CI.
+    let csv = dir.join("resumed.csv");
+    resumed.recorder.write_csv(&csv)?;
+    let built = build_manifest(
+        "example-run",
+        "durable-run-example",
+        vec![
+            ("rounds".to_string(), num(resumed.cfg.rounds as f64)),
+            ("resumed_at_round".to_string(), num(resumed.start_round() as f64)),
+        ],
+        &[(csv.clone(), "resumed.csv".to_string())],
+    );
+    let mpath = dir.join("MANIFEST.json");
+    write_manifest(&mpath, &built.manifest)?;
+    let issues = validate_manifest_file(&mpath);
+    assert!(issues.is_empty(), "manifest failed validation: {issues:?}");
+    println!("run manifest written + validated: {}", mpath.display());
+    Ok(())
+}

@@ -65,6 +65,27 @@ fn load(path: &Path) -> Result<json::Value, String> {
     json::parse(&text).map_err(|e| format!("parse {}: {e}", path.display()))
 }
 
+/// Baseline provenance from `<baseline-dir>/MANIFEST.json` (the
+/// io::manifest directory manifest committed next to the baselines):
+/// which commit/toolchain produced them and whether quick mode was on.
+/// Best-effort — a missing or unparseable manifest returns `None` and
+/// never fails the gate.
+fn baseline_provenance(baseline_dir: &Path) -> Option<String> {
+    let doc = load(&baseline_dir.join("MANIFEST.json")).ok()?;
+    let meta = doc.get("meta")?;
+    let val = |key: &str| match meta.get(key) {
+        Some(json::Value::Str(s)) => s.clone(),
+        Some(v) => v.to_string(),
+        None => "unknown".to_string(),
+    };
+    Some(format!(
+        "baseline provenance: commit {} | toolchain {} | quick_mode {}\n\n",
+        val("commit"),
+        val("toolchain"),
+        val("quick_mode"),
+    ))
+}
+
 fn run() -> Result<ExitCode, String> {
     let args = match Args::parse_spec("bench_diff", SPEC, std::env::args().skip(1)) {
         Ok(a) => a,
@@ -131,6 +152,9 @@ fn run() -> Result<ExitCode, String> {
         ));
     }
     summary.push_str(&md);
+    if let Some(prov) = baseline_provenance(&baseline_dir) {
+        summary.push_str(&prov);
+    }
     if inflate_pct != 0.0 {
         summary.push_str(&format!(
             "\n(self-test mode: current numbers inflated by {inflate_pct}% before comparing)\n"

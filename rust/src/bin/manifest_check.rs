@@ -1,0 +1,125 @@
+//! `manifest_check` — emit and validate schema-versioned run
+//! manifests (see [`fedsparse::io::manifest`]).
+//!
+//! Two modes, composable in one invocation:
+//!
+//! * `--emit-dir DIR` builds a sealed directory manifest over `DIR`
+//!   (sorted scan, `--match` prefix filter, debris skipped), writes it
+//!   atomically, then validates what it just wrote.
+//! * `--check a.json,b.json` validates existing manifest files:
+//!   schema version, canonical `manifest_sha256`, and every named
+//!   artifact's existence/size/sha256.
+//!
+//! Exit codes mirror `bench_diff`: 0 = all manifests valid, 1 =
+//! validation failures, 2 = infrastructure error (unreadable
+//! directory, bad flags).
+//!
+//! ```text
+//! manifest_check --emit-dir bench-history --kind bench-history \
+//!     --run-id nightly-$SHA --meta commit=$SHA,toolchain=stable
+//! manifest_check --check results/run.csv.manifest.json
+//! ```
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use fedsparse::io::manifest::{directory_manifest, validate_manifest_file, write_manifest};
+use fedsparse::util::cli::{ArgSpec, Args, CliError};
+use fedsparse::util::json::{s, Value};
+
+const SPEC: &[ArgSpec] = &[
+    ArgSpec::opt("check", "c", "", "comma-separated manifest files to validate"),
+    ArgSpec::opt("emit-dir", "e", "", "build + write a directory manifest over this dir"),
+    ArgSpec::opt("out", "o", "", "emitted manifest path (default: <emit-dir>/MANIFEST.json)"),
+    ArgSpec::opt("kind", "", "directory", "manifest kind tag (e.g. bench-history, bench-run)"),
+    ArgSpec::opt("match", "", "", "emit: only include files whose name starts with this prefix"),
+    ArgSpec::opt("run-id", "", "manual", "run identifier recorded in the manifest"),
+    ArgSpec::opt("meta", "", "", "extra metadata, k=v[,k=v...] (values recorded as strings)"),
+];
+
+fn main() -> ExitCode {
+    let args = match Args::parse_spec("manifest_check", SPEC, std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(CliError::Help) => return ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            return ExitCode::from(2);
+        }
+    };
+    match run(&args) {
+        Ok(true) => ExitCode::SUCCESS,
+        Ok(false) => ExitCode::FAILURE,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// `Ok(true)` = everything validated, `Ok(false)` = validation
+/// failures (exit 1), `Err` = infra (exit 2).
+fn run(args: &Args) -> anyhow::Result<bool> {
+    let emit_dir = args.get("emit-dir").unwrap_or("");
+    let check = args.get("check").unwrap_or("");
+    if emit_dir.is_empty() && check.is_empty() {
+        anyhow::bail!("nothing to do: pass --emit-dir and/or --check (see --help)");
+    }
+
+    let mut all_valid = true;
+    let mut to_check: Vec<PathBuf> = check
+        .split(',')
+        .map(str::trim)
+        .filter(|p| !p.is_empty())
+        .map(PathBuf::from)
+        .collect();
+
+    if !emit_dir.is_empty() {
+        let dir = PathBuf::from(emit_dir);
+        let meta: Vec<(String, Value)> = args
+            .get("meta")
+            .unwrap_or("")
+            .split(',')
+            .filter_map(|kv| kv.split_once('='))
+            .map(|(k, v)| (k.trim().to_string(), s(v.trim())))
+            .collect();
+        let built = directory_manifest(
+            &dir,
+            args.get("kind").unwrap_or("directory"),
+            args.get("run-id").unwrap_or("manual"),
+            args.get("match").unwrap_or(""),
+            meta,
+        )
+        .map_err(|e| anyhow::anyhow!("scan {dir:?}: {e}"))?;
+        for (p, why) in &built.invalid {
+            eprintln!("warning: skipped unreadable artifact {p}: {why}");
+        }
+        let out = match args.get("out").unwrap_or("") {
+            "" => dir.join("MANIFEST.json"),
+            explicit => PathBuf::from(explicit),
+        };
+        write_manifest(&out, &built.manifest)
+            .map_err(|e| anyhow::anyhow!("write {out:?}: {e}"))?;
+        let n = built
+            .manifest
+            .get("artifacts")
+            .and_then(|a| a.as_array())
+            .map(|a| a.len())
+            .unwrap_or(0);
+        println!("emitted {} ({n} artifacts)", out.display());
+        to_check.push(out);
+    }
+
+    for path in &to_check {
+        let issues = validate_manifest_file(path);
+        if issues.is_empty() {
+            println!("OK    {}", path.display());
+        } else {
+            all_valid = false;
+            println!("FAIL  {}", path.display());
+            for issue in issues {
+                println!("      - {issue}");
+            }
+        }
+    }
+    Ok(all_valid)
+}

@@ -31,7 +31,11 @@
 use crate::sparse::codec;
 
 /// One round's communication record.
-#[derive(Clone, Copy, Debug, Default)]
+///
+/// `PartialEq` is field-wise with IEEE float semantics — a NaN
+/// `accuracy` (non-eval round) compares unequal; checkpoint round-trip
+/// tests compare `accuracy.to_bits()` instead.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct RoundCost {
     pub round: u64,
     /// Paper-model upload bytes summed over selected clients.

@@ -1,8 +1,18 @@
 //! INI-style config file support: `key = value` lines, `#`/`;`
 //! comments, optional `[section]` headers flattened to `section.key`.
 //! Used by `fedsparse train --config run.ini`; CLI flags override.
+//!
+//! [`to_map`] / [`apply_map`] round-trip a full [`RunConfig`] through
+//! the flat string map — the same representation the checkpoint
+//! layer's `config_digest` hashes and a run manifest embeds, so "the
+//! config a run used" has exactly one serialized form.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::config::{Partition, RunConfig, TransportKind};
+use crate::coordinator::algorithms::Algorithm;
+use crate::runtime::BackendKind;
 
 #[derive(Debug, thiserror::Error)]
 pub enum ConfigFileError {
@@ -47,6 +57,142 @@ pub fn load(path: &std::path::Path) -> Result<BTreeMap<String, String>, ConfigFi
     parse(&std::fs::read_to_string(path)?)
 }
 
+/// Serialize every [`RunConfig`] field to the flat string map.
+/// Conventions: optional paths serialize as `""` = None, optional
+/// counts as `0` = None, `straggler_timeout_s` uses `inf` for no
+/// deadline, and the algorithm uses its parseable
+/// [`Algorithm::spec`] form. [`apply_map`] inverts all of them.
+pub fn to_map(cfg: &RunConfig) -> BTreeMap<String, String> {
+    let mut m = BTreeMap::new();
+    let path_str = |p: &Option<PathBuf>| {
+        p.as_ref().map(|p| p.to_string_lossy().into_owned()).unwrap_or_default()
+    };
+    m.insert("model".into(), cfg.model.clone());
+    m.insert("dataset".into(), cfg.dataset.clone());
+    m.insert("backend".into(), cfg.backend.label().to_string());
+    m.insert("data_dir".into(), path_str(&cfg.data_dir));
+    m.insert("artifacts_dir".into(), cfg.artifacts_dir.to_string_lossy().into_owned());
+    m.insert("train_samples".into(), cfg.train_samples.unwrap_or(0).to_string());
+    m.insert("eval_samples".into(), cfg.eval_samples.to_string());
+    m.insert("clients".into(), cfg.clients.to_string());
+    m.insert("clients_per_round".into(), cfg.clients_per_round.to_string());
+    m.insert("local_iters".into(), cfg.local_iters.to_string());
+    m.insert("lr".into(), cfg.lr.to_string());
+    m.insert("rounds".into(), cfg.rounds.to_string());
+    m.insert("eval_every".into(), cfg.eval_every.to_string());
+    m.insert("partition".into(), cfg.partition.label());
+    m.insert("seed".into(), cfg.seed.to_string());
+    m.insert("algorithm".into(), cfg.algorithm.spec());
+    m.insert("secure".into(), cfg.secure.to_string());
+    m.insert("audit_secure_sum".into(), cfg.audit_secure_sum.to_string());
+    m.insert("expose_aggregate".into(), cfg.expose_aggregate.to_string());
+    m.insert("mask_ratio_k".into(), cfg.mask_ratio_k.to_string());
+    m.insert("neighbors_k".into(), cfg.neighbors_k.to_string());
+    m.insert("shards".into(), cfg.shards.to_string());
+    m.insert("dynamic_rate".into(), cfg.dynamic_rate.to_string());
+    m.insert("rate_alpha".into(), cfg.rate_alpha.to_string());
+    m.insert("rate_min".into(), cfg.rate_min.to_string());
+    m.insert("quant_bits".into(), cfg.quant_bits.unwrap_or(0).to_string());
+    m.insert("momentum".into(), cfg.momentum.to_string());
+    m.insert("warmup_rounds".into(), cfg.warmup_rounds.to_string());
+    m.insert("dropout_prob".into(), cfg.dropout_prob.to_string());
+    m.insert("straggler_timeout_s".into(), cfg.straggler_timeout_s.to_string());
+    m.insert("min_survivors".into(), cfg.min_survivors.to_string());
+    m.insert("transport".into(), cfg.transport.label().to_string());
+    m.insert("chaos_loss".into(), cfg.chaos_loss.to_string());
+    m.insert("chaos_dup".into(), cfg.chaos_dup.to_string());
+    m.insert("chaos_reorder".into(), cfg.chaos_reorder.to_string());
+    m.insert("chaos_slow".into(), cfg.chaos_slow.to_string());
+    m.insert("chaos_slow_factor".into(), cfg.chaos_slow_factor.to_string());
+    m.insert("chaos_retries".into(), cfg.chaos_retries.to_string());
+    m.insert("socket_deadline_ms".into(), cfg.socket_deadline_ms.to_string());
+    m.insert("exec_workers".into(), cfg.exec_workers.to_string());
+    m.insert("client_workers".into(), cfg.client_workers.to_string());
+    m.insert("checkpoint_dir".into(), path_str(&cfg.checkpoint_dir));
+    m.insert("checkpoint_every".into(), cfg.checkpoint_every.to_string());
+    m.insert("resume".into(), cfg.resume.to_string());
+    m
+}
+
+/// Overlay a parsed map onto a config. Every key [`to_map`] emits is
+/// accepted; unknown keys and unparseable values are errors naming
+/// the offending key.
+pub fn apply_map(cfg: &mut RunConfig, map: &BTreeMap<String, String>) -> Result<(), String> {
+    fn bad(key: &str, val: &str) -> String {
+        format!("config key {key:?}: cannot parse value {val:?}")
+    }
+    fn parse_num<T: std::str::FromStr>(key: &str, val: &str) -> Result<T, String> {
+        val.parse().map_err(|_| bad(key, val))
+    }
+    fn parse_bool(key: &str, val: &str) -> Result<bool, String> {
+        match val {
+            "true" | "1" | "yes" => Ok(true),
+            "false" | "0" | "no" => Ok(false),
+            _ => Err(bad(key, val)),
+        }
+    }
+    for (k, v) in map {
+        match k.as_str() {
+            "model" => cfg.model = v.clone(),
+            "dataset" => cfg.dataset = v.clone(),
+            "backend" => cfg.backend = BackendKind::parse(v).ok_or_else(|| bad(k, v))?,
+            "data_dir" => {
+                cfg.data_dir = if v.is_empty() { None } else { Some(PathBuf::from(v)) }
+            }
+            "artifacts_dir" => cfg.artifacts_dir = PathBuf::from(v),
+            "train_samples" => {
+                let n: usize = parse_num(k, v)?;
+                cfg.train_samples = if n == 0 { None } else { Some(n) };
+            }
+            "eval_samples" => cfg.eval_samples = parse_num(k, v)?,
+            "clients" => cfg.clients = parse_num(k, v)?,
+            "clients_per_round" => cfg.clients_per_round = parse_num(k, v)?,
+            "local_iters" => cfg.local_iters = parse_num(k, v)?,
+            "lr" => cfg.lr = parse_num(k, v)?,
+            "rounds" => cfg.rounds = parse_num(k, v)?,
+            "eval_every" => cfg.eval_every = parse_num(k, v)?,
+            "partition" => cfg.partition = Partition::parse(v).ok_or_else(|| bad(k, v))?,
+            "seed" => cfg.seed = parse_num(k, v)?,
+            "algorithm" => cfg.algorithm = Algorithm::parse(v).ok_or_else(|| bad(k, v))?,
+            "secure" => cfg.secure = parse_bool(k, v)?,
+            "audit_secure_sum" => cfg.audit_secure_sum = parse_bool(k, v)?,
+            "expose_aggregate" => cfg.expose_aggregate = parse_bool(k, v)?,
+            "mask_ratio_k" => cfg.mask_ratio_k = parse_num(k, v)?,
+            "neighbors_k" => cfg.neighbors_k = parse_num(k, v)?,
+            "shards" => cfg.shards = parse_num(k, v)?,
+            "dynamic_rate" => cfg.dynamic_rate = parse_bool(k, v)?,
+            "rate_alpha" => cfg.rate_alpha = parse_num(k, v)?,
+            "rate_min" => cfg.rate_min = parse_num(k, v)?,
+            "quant_bits" => {
+                let b: u8 = parse_num(k, v)?;
+                cfg.quant_bits = if b == 0 { None } else { Some(b) };
+            }
+            "momentum" => cfg.momentum = parse_num(k, v)?,
+            "warmup_rounds" => cfg.warmup_rounds = parse_num(k, v)?,
+            "dropout_prob" => cfg.dropout_prob = parse_num(k, v)?,
+            "straggler_timeout_s" => cfg.straggler_timeout_s = parse_num(k, v)?,
+            "min_survivors" => cfg.min_survivors = parse_num(k, v)?,
+            "transport" => cfg.transport = TransportKind::parse(v).ok_or_else(|| bad(k, v))?,
+            "chaos_loss" => cfg.chaos_loss = parse_num(k, v)?,
+            "chaos_dup" => cfg.chaos_dup = parse_num(k, v)?,
+            "chaos_reorder" => cfg.chaos_reorder = parse_num(k, v)?,
+            "chaos_slow" => cfg.chaos_slow = parse_num(k, v)?,
+            "chaos_slow_factor" => cfg.chaos_slow_factor = parse_num(k, v)?,
+            "chaos_retries" => cfg.chaos_retries = parse_num(k, v)?,
+            "socket_deadline_ms" => cfg.socket_deadline_ms = parse_num(k, v)?,
+            "exec_workers" => cfg.exec_workers = parse_num(k, v)?,
+            "client_workers" => cfg.client_workers = parse_num(k, v)?,
+            "checkpoint_dir" => {
+                cfg.checkpoint_dir = if v.is_empty() { None } else { Some(PathBuf::from(v)) }
+            }
+            "checkpoint_every" => cfg.checkpoint_every = parse_num(k, v)?,
+            "resume" => cfg.resume = parse_bool(k, v)?,
+            _ => return Err(format!("unknown config key {k:?}")),
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +226,51 @@ label = "quoted value"
     #[test]
     fn empty_ok() {
         assert!(parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_config_round_trips_through_map() {
+        use crate::sparse::thgs::ThgsConfig;
+        let mut cfg = RunConfig::default();
+        cfg.model = "mnist_mlp".into();
+        cfg.backend = BackendKind::Native;
+        cfg.data_dir = None;
+        cfg.train_samples = Some(2_000);
+        cfg.lr = 0.05;
+        cfg.algorithm = Algorithm::Thgs(ThgsConfig { s0: 0.2, alpha: 0.55, s_min: 0.015 });
+        cfg.partition = Partition::NonIid(4);
+        cfg.secure = true;
+        cfg.neighbors_k = 3;
+        cfg.quant_bits = None;
+        cfg.dropout_prob = 0.25;
+        cfg.min_survivors = 2;
+        cfg.transport = TransportKind::Tcp;
+        cfg.checkpoint_dir = Some(PathBuf::from("/tmp/run/ckpt"));
+        cfg.checkpoint_every = 3;
+        cfg.resume = true;
+        let map = to_map(&cfg);
+        assert_eq!(map["straggler_timeout_s"], "inf", "no-deadline form is parseable");
+        assert_eq!(map["checkpoint_dir"], "/tmp/run/ckpt");
+        assert_eq!(map["resume"], "true");
+        let mut restored = RunConfig::default();
+        apply_map(&mut restored, &map).unwrap();
+        assert_eq!(to_map(&restored), map, "to_map ∘ apply_map must be the identity");
+        assert!(restored.straggler_timeout_s.is_infinite());
+        assert_eq!(restored.checkpoint_dir, Some(PathBuf::from("/tmp/run/ckpt")));
+        assert_eq!(restored.checkpoint_every, 3);
+        assert!(restored.resume);
+    }
+
+    #[test]
+    fn apply_map_rejects_unknown_keys_and_bad_values() {
+        let mut cfg = RunConfig::default();
+        let mut map = BTreeMap::new();
+        map.insert("no_such_knob".to_string(), "1".to_string());
+        let err = apply_map(&mut cfg, &map).unwrap_err();
+        assert!(err.contains("no_such_knob"), "unhelpful error: {err}");
+        let mut map = BTreeMap::new();
+        map.insert("checkpoint_every".to_string(), "often".to_string());
+        let err = apply_map(&mut cfg, &map).unwrap_err();
+        assert!(err.contains("checkpoint_every"), "unhelpful error: {err}");
     }
 }

@@ -175,6 +175,17 @@ pub struct RunConfig {
     pub exec_workers: usize,
     /// Client-side worker threads (sparsify/mask/encode).
     pub client_workers: usize,
+
+    /// Durable runs: directory for end-of-round checkpoints
+    /// (`io::checkpoint`). None (default) = no checkpointing.
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Commit a checkpoint every N successfully applied rounds (the
+    /// final round always commits). Must be ≥ 1 when checkpointing.
+    pub checkpoint_every: u64,
+    /// Resume from the newest valid checkpoint in `checkpoint_dir`
+    /// instead of starting fresh (falls back to a fresh start, loudly,
+    /// when no valid checkpoint exists).
+    pub resume: bool,
 }
 
 impl Default for RunConfig {
@@ -221,6 +232,9 @@ impl Default for RunConfig {
             socket_deadline_ms: 5_000,
             exec_workers: 4,
             client_workers: 4,
+            checkpoint_dir: None,
+            checkpoint_every: 1,
+            resume: false,
         }
     }
 }
@@ -321,6 +335,20 @@ impl RunConfig {
         }
         if self.socket_deadline_ms == 0 {
             return Err("socket_deadline_ms must be ≥ 1".into());
+        }
+        if self.resume && self.checkpoint_dir.is_none() {
+            return Err(
+                "--resume needs --checkpoint-dir: resuming means loading the newest \
+                 checkpoint from that directory (and new checkpoints keep landing there)"
+                    .into(),
+            );
+        }
+        if self.checkpoint_dir.is_some() && self.checkpoint_every == 0 {
+            return Err(
+                "checkpoint_every must be ≥ 1 when --checkpoint-dir is set \
+                 (1 = commit after every applied round)"
+                    .into(),
+            );
         }
         Ok(())
     }
@@ -479,6 +507,26 @@ mod tests {
         c.min_survivors = 1;
         assert!(c.validate().is_err(), "chaos loss counts as failure injection");
         c.min_survivors = 2;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn checkpoint_knobs_validate_with_actionable_errors() {
+        let mut c = RunConfig::default();
+        c.resume = true;
+        let err = c.validate().expect_err("--resume without --checkpoint-dir must be rejected");
+        assert!(err.contains("--checkpoint-dir"), "unhelpful error: {err}");
+        c.checkpoint_dir = Some(PathBuf::from("/tmp/ckpt"));
+        assert!(c.validate().is_ok());
+        c.checkpoint_every = 0;
+        let err = c.validate().expect_err("checkpoint_every=0 must be rejected");
+        assert!(err.contains("checkpoint_every"), "unhelpful error: {err}");
+        c.checkpoint_every = 5;
+        assert!(c.validate().is_ok());
+        // checkpoint_every is only meaningful with a checkpoint dir;
+        // 0 without one validates (nothing will ever be committed).
+        let mut c = RunConfig::default();
+        c.checkpoint_every = 0;
         assert!(c.validate().is_ok());
     }
 

@@ -82,6 +82,19 @@ impl Algorithm {
         }
     }
 
+    /// The CLI/config-file spec form — unlike [`Self::label`], this
+    /// round-trips exactly through [`Self::parse`] (f32/f64 `Display`
+    /// is shortest-round-trip in Rust).
+    pub fn spec(&self) -> String {
+        match self {
+            Algorithm::FedAvg => "fedavg".into(),
+            Algorithm::FedProx { mu } => format!("fedprox:{mu}"),
+            Algorithm::FlatSparse { s } => format!("flat:{s}"),
+            Algorithm::Thgs(t) => format!("thgs:{},{},{}", t.s0, t.alpha, t.s_min),
+            Algorithm::Stc { s } => format!("stc:{s}"),
+        }
+    }
+
     /// Paper-model upload cost of one client's update under this
     /// algorithm (Eq. 6 / STC codebook form).
     pub fn paper_cost_bytes(&self, nnz: usize, m: usize, quant_bits: Option<u8>) -> u64 {
@@ -225,6 +238,20 @@ mod tests {
             Algorithm::Thgs(ThgsConfig::default()),
         ] {
             assert!(alg.label().len() > 3);
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_through_parse() {
+        for alg in [
+            Algorithm::FedAvg,
+            Algorithm::FedProx { mu: 0.035 },
+            Algorithm::FlatSparse { s: 0.001 },
+            Algorithm::Thgs(ThgsConfig { s0: 0.2, alpha: 0.55, s_min: 0.015 }),
+            Algorithm::Thgs(ThgsConfig::default()),
+            Algorithm::Stc { s: 0.07 },
+        ] {
+            assert_eq!(Algorithm::parse(&alg.spec()), Some(alg), "spec {}", alg.spec());
         }
     }
 }

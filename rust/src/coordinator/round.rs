@@ -727,6 +727,28 @@ impl Trainer {
             timings,
         });
 
+        // ---- Checkpoint (durable commit point) ---------------------
+        // Only applied rounds commit: an aborted round rolls the model
+        // and clients back, so checkpointing it would pin a next_round
+        // whose state the uninterrupted twin never passes through.
+        if self.ckpt.is_some() {
+            let every = self.cfg.checkpoint_every.max(1);
+            if (round + 1) % every == 0 || round + 1 == self.cfg.rounds {
+                let ck = self.build_checkpoint(round + 1);
+                let save_err = match &self.ckpt {
+                    Some(store) => store.save(&ck).err(),
+                    None => None,
+                };
+                if let Some(e) = save_err {
+                    eprintln!(
+                        "warning: checkpoint save failed ({e}); checkpointing disabled \
+                         for the rest of the run"
+                    );
+                    self.ckpt = None;
+                }
+            }
+        }
+
         Ok(RoundOutcome {
             round,
             selected: cohort.selected,

@@ -44,6 +44,7 @@ use crate::comm::socket::{SocketOptions, SocketTransport};
 use crate::comm::transport::{FailurePlan, Transport, Uplink, DEFAULT_STRAGGLER_SCALE};
 use crate::config::{Partition, RunConfig, TransportKind};
 use crate::data::{iid_partition, noniid_partition, Dataset, DatasetKind, Split};
+use crate::io::checkpoint::{config_digest, Checkpoint, CheckpointStore, ClientCheckpoint};
 use crate::metrics::recorder::{Recorder, RunSummary};
 use crate::models::manifest::Manifest;
 use crate::models::params::ParamVector;
@@ -97,6 +98,13 @@ pub struct Trainer {
     /// with failure injection; `neighbors_k = 0` runs keep the one-off
     /// all-pairs setup and leave this `None`.
     pub(crate) rekey: Option<crate::secagg::rekey::RekeyRegistry>,
+    /// End-of-round durable snapshot store (`--checkpoint-dir`);
+    /// `None` when checkpointing is off or was disabled after a save
+    /// failure (recorder-sink precedent: warn once, keep training).
+    pub(crate) ckpt: Option<CheckpointStore>,
+    /// First round [`Self::run`] executes: 0 for fresh runs, the
+    /// restored checkpoint's `next_round` under `--resume`.
+    start_round: u64,
 }
 
 impl Trainer {
@@ -226,7 +234,7 @@ impl Trainer {
         let label = cfg.run_label();
         let base_rate = base_rate_of(&cfg.algorithm);
 
-        Ok(Self {
+        let mut t = Self {
             client_pool: Arc::new(ThreadPool::new(cfg.client_workers)),
             recorder: Recorder::new(&label),
             ledger: CostLedger::new(m),
@@ -245,13 +253,154 @@ impl Trainer {
             client_workspaces: Default::default(),
             server_ws: Default::default(),
             rekey,
-        })
+            ckpt: None,
+            start_round: 0,
+        };
+        if let Some(dir) = t.cfg.checkpoint_dir.clone() {
+            let store = CheckpointStore::open(&dir)
+                .with_context(|| format!("open checkpoint dir {dir:?}"))?;
+            if t.cfg.resume {
+                match store.load_latest() {
+                    Some((ck, path)) => {
+                        t.restore_checkpoint(ck).with_context(|| format!("resume from {path:?}"))?;
+                    }
+                    None => eprintln!(
+                        "warning: --resume found no valid checkpoint under {dir:?} — \
+                         starting fresh"
+                    ),
+                }
+            }
+            t.ckpt = Some(store);
+        }
+        Ok(t)
+    }
+
+    /// The round [`Self::run`] starts from (non-zero exactly when a
+    /// `--resume` restored a checkpoint).
+    pub fn start_round(&self) -> u64 {
+        self.start_round
+    }
+
+    /// Snapshot all cross-round mutable state as of `next_round` (the
+    /// first round the restored run will execute). Everything else a
+    /// round reads — RNG streams, mask neighborhoods, failure fates —
+    /// is a pure function of (seed, round, client id) and is
+    /// reconstructed, not stored; see [`crate::io::checkpoint`].
+    pub fn build_checkpoint(&self, next_round: u64) -> Checkpoint {
+        Checkpoint {
+            label: self.cfg.run_label(),
+            seed: self.cfg.seed,
+            config_digest: config_digest(&self.cfg),
+            next_round,
+            global_tensors: self.global.tensors.clone(),
+            global_data: self.global.data.clone(),
+            clients: self
+                .clients
+                .iter()
+                .map(|c| ClientCheckpoint {
+                    last_loss: c.last_loss,
+                    participation: c.participation,
+                    residual_buf: c.residual.as_slice().to_vec(),
+                    residual_age: c.residual.ages().to_vec(),
+                    rate: c.rate.as_ref().map(|r| (r.rate(), r.loss_prev())),
+                    momentum_velocity: c.momentum.as_ref().map(|m| m.velocity().to_vec()),
+                })
+                .collect(),
+            rows: self.recorder.rows.clone(),
+            costs: self.ledger.rounds.clone(),
+        }
+    }
+
+    /// Overwrite the trainer's mutable state from a loaded checkpoint,
+    /// after validating it belongs to *this* run configuration. The
+    /// paranoid checks are cheap and the failure messages actionable —
+    /// a checkpoint from a different seed/config silently producing a
+    /// diverging continuation is the worst possible outcome.
+    fn restore_checkpoint(&mut self, ck: Checkpoint) -> Result<()> {
+        let label = self.cfg.run_label();
+        if ck.label != label {
+            return Err(anyhow!("checkpoint is for run {:?}, this run is {:?}", ck.label, label));
+        }
+        if ck.seed != self.cfg.seed {
+            return Err(anyhow!(
+                "checkpoint seed {} does not match --seed {}",
+                ck.seed,
+                self.cfg.seed
+            ));
+        }
+        let digest = config_digest(&self.cfg);
+        if ck.config_digest != digest {
+            return Err(anyhow!(
+                "checkpoint config digest {} does not match this run's {digest} \
+                 (same label+seed but some knob differs)",
+                ck.config_digest
+            ));
+        }
+        if ck.next_round > self.cfg.rounds {
+            return Err(anyhow!(
+                "checkpoint next_round {} is past --rounds {}",
+                ck.next_round,
+                self.cfg.rounds
+            ));
+        }
+        let m = self.global.data.len();
+        if ck.global_data.len() != m || ck.global_tensors != self.global.tensors {
+            return Err(anyhow!(
+                "checkpoint model shape ({} params) does not match this model ({m} params)",
+                ck.global_data.len()
+            ));
+        }
+        if ck.clients.len() != self.clients.len() {
+            return Err(anyhow!(
+                "checkpoint has {} clients, this run has {}",
+                ck.clients.len(),
+                self.clients.len()
+            ));
+        }
+        for (i, cc) in ck.clients.iter().enumerate() {
+            if cc.residual_buf.len() != m {
+                return Err(anyhow!(
+                    "client {i}: checkpointed residual has {} entries, model has {m}",
+                    cc.residual_buf.len()
+                ));
+            }
+            if cc.rate.is_some() != self.clients[i].rate.is_some() {
+                return Err(anyhow!(
+                    "client {i}: dynamic-rate state presence mismatch (--dynamic-rate differs?)"
+                ));
+            }
+            if cc.momentum_velocity.is_some() != self.clients[i].momentum.is_some() {
+                return Err(anyhow!(
+                    "client {i}: momentum state presence mismatch (--momentum differs?)"
+                ));
+            }
+        }
+        self.global = Arc::new(ParamVector { data: ck.global_data, tensors: ck.global_tensors });
+        for (c, cc) in self.clients.iter_mut().zip(ck.clients) {
+            c.last_loss = cc.last_loss;
+            c.participation = cc.participation;
+            Arc::make_mut(&mut c.residual).restore(&cc.residual_buf, &cc.residual_age);
+            if let (Some(ctrl), Some((rate, loss_prev))) = (c.rate.as_mut(), cc.rate) {
+                ctrl.restore(rate, loss_prev);
+            }
+            if let (Some(mc), Some(v)) = (c.momentum.as_mut(), cc.momentum_velocity) {
+                Arc::make_mut(mc).restore_velocity(&v);
+            }
+        }
+        self.recorder.rows = ck.rows;
+        self.ledger.rounds = ck.costs;
+        self.start_round = ck.next_round;
+        Ok(())
     }
 
     /// Drive the full run; returns the summary. Aborted rounds (too
-    /// many failures) are recorded and skipped, not fatal.
+    /// many failures) are recorded and skipped, not fatal. Under
+    /// `--resume` the loop picks up at the restored round — the
+    /// remaining rounds are bitwise-identical to the uninterrupted
+    /// twin's because every RNG stream is derived from
+    /// (seed, round, client id), never from a live generator.
     pub fn run(&mut self) -> Result<RunSummary> {
-        for round in 0..self.cfg.rounds {
+        for round in self.start_round..self.cfg.rounds {
             self.run_round(round)?;
         }
         Ok(self.recorder.summary())

@@ -1,0 +1,167 @@
+//! Atomic file commits: write-temp → fsync → rename.
+//!
+//! The contract: after [`commit_bytes`] returns `Ok`, the destination
+//! path holds exactly the given bytes and survives a crash or power
+//! loss at any later instant. If the process dies *during* the commit,
+//! the destination either still holds its previous contents (or does
+//! not exist yet) or already holds the complete new contents — never a
+//! prefix. The only possible debris is a sibling `<name>.tmp`, which
+//! every reader in this crate ignores.
+//!
+//! [`commit_bytes_torn`] is the same commit with a seeded crash
+//! injection point, in the same spirit as `FailurePlan`/`ChaosPlan`:
+//! tests drive the tear through every step of the commit and assert
+//! that the last committed state stays loadable
+//! (`tests/checkpoint_robustness.rs`).
+
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::util::rng::Rng;
+
+/// Where a simulated crash interrupts the commit sequence.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tear {
+    /// Crash mid-write: only the first `keep` bytes reach the temp
+    /// file. The destination is untouched.
+    Partial { keep: usize },
+    /// Crash after the temp file is fully written and synced but
+    /// before the rename. The destination is untouched.
+    BeforeRename,
+}
+
+/// Sibling temp path for `path` (`<name>.tmp` in the same directory,
+/// so the final rename never crosses a filesystem boundary).
+pub fn temp_path(path: &Path) -> PathBuf {
+    let mut name = path.file_name().unwrap_or_default().to_os_string();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Atomically commit `bytes` to `path`.
+pub fn commit_bytes(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    commit_bytes_torn(path, bytes, None).map(|_| ())
+}
+
+/// Atomically commit `bytes` to `path`, optionally crashing partway.
+///
+/// Returns `Ok(true)` when the commit completed and `Ok(false)` when a
+/// simulated [`Tear`] stopped it early (the destination is untouched;
+/// at most a `<name>.tmp` sibling is left behind, exactly like a real
+/// crash).
+pub fn commit_bytes_torn(path: &Path, bytes: &[u8], tear: Option<Tear>) -> std::io::Result<bool> {
+    let tmp = temp_path(path);
+    let mut f = OpenOptions::new().write(true).create(true).truncate(true).open(&tmp)?;
+    match tear {
+        Some(Tear::Partial { keep }) => {
+            let keep = keep.min(bytes.len());
+            f.write_all(&bytes[..keep])?;
+            f.sync_all()?;
+            return Ok(false);
+        }
+        Some(Tear::BeforeRename) => {
+            f.write_all(bytes)?;
+            f.sync_all()?;
+            return Ok(false);
+        }
+        None => {
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+    }
+    drop(f);
+    fs::rename(&tmp, path)?;
+    // Make the rename itself durable. Failure here is not a
+    // correctness problem for readers (the rename is already visible),
+    // so this is best-effort.
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = File::open(if dir.as_os_str().is_empty() { Path::new(".") } else { dir }) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(true)
+}
+
+/// Seeded torn-write injection plan: with probability `prob` per
+/// commit, tear the write at a seeded step. Draws are pure in
+/// `(seed, round)` — the same plan tears the same commits every run,
+/// so a red test reproduces from its seed alone.
+#[derive(Clone, Copy, Debug)]
+pub struct TornWritePlan {
+    pub prob: f64,
+    pub seed: u64,
+}
+
+impl TornWritePlan {
+    pub fn new(prob: f64, seed: u64) -> Self {
+        Self { prob, seed }
+    }
+
+    /// The tear (if any) for the commit tagged `round`, writing `len`
+    /// bytes. Pure in `(self.seed, round)`.
+    pub fn tear_for(&self, round: u64, len: usize) -> Option<Tear> {
+        if self.prob <= 0.0 {
+            return None;
+        }
+        let mut rng = Rng::new(self.seed ^ round.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x7042);
+        if rng.next_f64() >= self.prob {
+            return None;
+        }
+        if rng.below(2) == 0 {
+            Some(Tear::BeforeRename)
+        } else {
+            Some(Tear::Partial { keep: rng.below(len as u64 + 1) as usize })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("fedsparse-atomic-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn commit_replaces_previous_contents() {
+        let dir = tmp_dir("replace");
+        let p = dir.join("state.bin");
+        commit_bytes(&p, b"one").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"one");
+        commit_bytes(&p, b"two-longer").unwrap();
+        assert_eq!(fs::read(&p).unwrap(), b"two-longer");
+        assert!(!temp_path(&p).exists(), "completed commit must not leave a temp file");
+    }
+
+    #[test]
+    fn torn_commit_leaves_destination_untouched() {
+        let dir = tmp_dir("torn");
+        let p = dir.join("state.bin");
+        commit_bytes(&p, b"committed").unwrap();
+        for tear in [Tear::Partial { keep: 0 }, Tear::Partial { keep: 3 }, Tear::BeforeRename] {
+            let committed = commit_bytes_torn(&p, b"never-lands", Some(tear)).unwrap();
+            assert!(!committed);
+            assert_eq!(fs::read(&p).unwrap(), b"committed", "tear {tear:?} touched the target");
+        }
+        // A later untorn commit still lands over the debris.
+        assert!(commit_bytes_torn(&p, b"landed", None).unwrap());
+        assert_eq!(fs::read(&p).unwrap(), b"landed");
+    }
+
+    #[test]
+    fn torn_write_plan_is_pure_in_seed_and_round() {
+        let plan = TornWritePlan::new(0.7, 99);
+        for round in 0..64u64 {
+            assert_eq!(plan.tear_for(round, 1000), plan.tear_for(round, 1000));
+        }
+        let torn = (0..64u64).filter(|&r| plan.tear_for(r, 1000).is_some()).count();
+        assert!((20..=60).contains(&torn), "prob 0.7 of 64 commits tore {torn}");
+        let never = TornWritePlan::new(0.0, 99);
+        assert!((0..64u64).all(|r| never.tear_for(r, 1000).is_none()));
+    }
+}

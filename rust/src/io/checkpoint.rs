@@ -1,0 +1,566 @@
+//! Versioned, checksummed end-of-round training checkpoints.
+//!
+//! A checkpoint captures **everything that carries state across
+//! rounds**: the global parameter vector, every client's residual
+//! store (values + ages), momentum velocity, dynamic-rate controller
+//! state, loss/participation counters, plus the metrics rows and cost
+//! ledger recorded so far. Everything else the round loop touches is
+//! either pure in `(seed, round, cid)` (selection, dropout/chaos
+//! draws, mask PRG streams, quantizer RNG) or rebuilt from the config
+//! (thread pools, workspaces, transports, the secagg key setup) — so
+//! restoring a checkpoint and re-running the remaining rounds is
+//! bitwise-identical to the uninterrupted twin
+//! (`tests/checkpoint_resume.rs`).
+//!
+//! Deliberately **not** checkpointed: the per-round Shamir re-keying
+//! registry (`secagg/rekey.rs`). Its epoch-salted polynomials differ
+//! between the original and resumed runs, but reconstruction recovers
+//! each member's exact DH exponent bytes either way, so every derived
+//! pair key — and therefore every mask and every aggregate — is
+//! byte-identical. The resume tests pin this.
+//!
+//! ## On-disk format (`ckpt_<next_round:08>.fsckpt`, version 1)
+//!
+//! ```text
+//! magic    b"FSCP"                      4 bytes
+//! version  u32 LE (= 1)                 4 bytes
+//! body_len u64 LE                       8 bytes
+//! body_sha sha256(body)                32 bytes
+//! body     little-endian fields        body_len bytes
+//! ```
+//!
+//! All integers are little-endian; floats are stored as their IEEE-754
+//! bit patterns, so values (including NaN payloads) round-trip
+//! bitwise. Files are written via [`crate::io::atomic`], so a crash
+//! mid-save never leaves a torn file under the committed name. The
+//! loader is paranoid: magic/version/length/hash are validated before
+//! the body is parsed, every read is truncation-checked, and invalid
+//! files are quarantined (renamed `*.corrupt`, never deleted) while
+//! the loader falls back to the newest valid snapshot.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use sha2::{Digest, Sha256};
+
+use crate::comm::cost::RoundCost;
+use crate::config::RunConfig;
+use crate::io::atomic::{self, Tear, TornWritePlan};
+use crate::metrics::recorder::{PhaseTimings, RoundRecord};
+
+pub const MAGIC: &[u8; 4] = b"FSCP";
+pub const CHECKPOINT_VERSION: u32 = 1;
+/// magic + version + body_len + sha256
+const HEADER_LEN: usize = 4 + 4 + 8 + 32;
+
+#[derive(Debug, thiserror::Error)]
+pub enum CheckpointError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("truncated checkpoint ({0})")]
+    Truncated(&'static str),
+    #[error("bad magic — not a checkpoint file")]
+    BadMagic,
+    #[error("unsupported checkpoint version {0} (this build reads version {CHECKPOINT_VERSION})")]
+    UnsupportedVersion(u32),
+    #[error("checksum mismatch — checkpoint body is corrupt")]
+    HashMismatch,
+    #[error("malformed checkpoint ({0})")]
+    Malformed(&'static str),
+}
+
+/// Cross-round state of one client.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientCheckpoint {
+    pub last_loss: f64,
+    pub participation: u64,
+    pub residual_buf: Vec<f32>,
+    pub residual_age: Vec<u32>,
+    /// `(current rate, previous observed loss)` when dynamic rate is on.
+    pub rate: Option<(f64, Option<f64>)>,
+    pub momentum_velocity: Option<Vec<f32>>,
+}
+
+/// One end-of-round snapshot. `next_round` is the first round the
+/// resumed run executes; rows/costs cover rounds `0..next_round`
+/// (minus any aborted rounds that were rolled back after this commit —
+/// those replay deterministically).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub label: String,
+    pub seed: u64,
+    pub config_digest: String,
+    pub next_round: u64,
+    pub global_tensors: Vec<(usize, usize)>,
+    pub global_data: Vec<f32>,
+    pub clients: Vec<ClientCheckpoint>,
+    pub rows: Vec<RoundRecord>,
+    pub costs: Vec<RoundCost>,
+}
+
+/// sha256 digest of the training-relevant config: the sorted
+/// `key=value` lines from [`crate::config::file::to_map`] minus the
+/// durability knobs (`checkpoint_dir`/`checkpoint_every`/`resume`),
+/// which may legitimately differ between a run and its resume.
+pub fn config_digest(cfg: &RunConfig) -> String {
+    let mut text = String::new();
+    for (k, v) in crate::config::file::to_map(cfg) {
+        if matches!(k.as_str(), "checkpoint_dir" | "checkpoint_every" | "resume") {
+            continue;
+        }
+        text.push_str(&k);
+        text.push('=');
+        text.push_str(&v);
+        text.push('\n');
+    }
+    crate::io::manifest::sha256_hex(text.as_bytes())
+}
+
+// ---- encode ---------------------------------------------------------
+
+fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    put_u32(out, v.to_bits());
+}
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+fn put_str(out: &mut Vec<u8>, v: &str) {
+    put_u64(out, v.len() as u64);
+    out.extend_from_slice(v.as_bytes());
+}
+fn put_f32s(out: &mut Vec<u8>, v: &[f32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        put_f32(out, x);
+    }
+}
+fn put_u32s(out: &mut Vec<u8>, v: &[u32]) {
+    put_u64(out, v.len() as u64);
+    for &x in v {
+        put_u32(out, x);
+    }
+}
+
+/// Serialize a checkpoint to its complete file bytes (header + body).
+pub fn encode(ck: &Checkpoint) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_str(&mut body, &ck.label);
+    put_u64(&mut body, ck.seed);
+    put_str(&mut body, &ck.config_digest);
+    put_u64(&mut body, ck.next_round);
+
+    put_u64(&mut body, ck.global_tensors.len() as u64);
+    for &(off, len) in &ck.global_tensors {
+        put_u64(&mut body, off as u64);
+        put_u64(&mut body, len as u64);
+    }
+    put_f32s(&mut body, &ck.global_data);
+
+    put_u64(&mut body, ck.clients.len() as u64);
+    for c in &ck.clients {
+        put_f64(&mut body, c.last_loss);
+        put_u64(&mut body, c.participation);
+        put_f32s(&mut body, &c.residual_buf);
+        put_u32s(&mut body, &c.residual_age);
+        match c.rate {
+            None => put_u8(&mut body, 0),
+            Some((rate, loss_prev)) => {
+                put_u8(&mut body, 1);
+                put_f64(&mut body, rate);
+                match loss_prev {
+                    None => put_u8(&mut body, 0),
+                    Some(lp) => {
+                        put_u8(&mut body, 1);
+                        put_f64(&mut body, lp);
+                    }
+                }
+            }
+        }
+        match &c.momentum_velocity {
+            None => put_u8(&mut body, 0),
+            Some(v) => {
+                put_u8(&mut body, 1);
+                put_f32s(&mut body, v);
+            }
+        }
+    }
+
+    put_u64(&mut body, ck.rows.len() as u64);
+    for r in &ck.rows {
+        put_u64(&mut body, r.round);
+        put_f64(&mut body, r.train_loss);
+        put_f64(&mut body, r.eval_loss);
+        put_f64(&mut body, r.eval_accuracy);
+        put_u64(&mut body, r.up_bytes);
+        put_u64(&mut body, r.wire_bytes);
+        put_f64(&mut body, r.sim_time_s);
+        put_f64(&mut body, r.mean_rate);
+        put_u64(&mut body, r.survivors as u64);
+        put_u64(&mut body, r.recovered as u64);
+        let t = &r.timings;
+        for v in [
+            t.select_s,
+            t.train_s,
+            t.client_train_cpu_s,
+            t.client_encode_cpu_s,
+            t.mask_gen_s,
+            t.collect_s,
+            t.recover_s,
+            t.apply_s,
+            t.eval_s,
+        ] {
+            put_f64(&mut body, v);
+        }
+    }
+
+    put_u64(&mut body, ck.costs.len() as u64);
+    for c in &ck.costs {
+        put_u64(&mut body, c.round);
+        put_u64(&mut body, c.up_paper);
+        put_u64(&mut body, c.up_wire);
+        put_u64(&mut body, c.up_framed);
+        put_u64(&mut body, c.down_paper);
+        put_f64(&mut body, c.accuracy);
+    }
+
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len());
+    out.extend_from_slice(MAGIC);
+    put_u32(&mut out, CHECKPOINT_VERSION);
+    put_u64(&mut out, body.len() as u64);
+    let mut h = Sha256::new();
+    h.update(&body);
+    out.extend_from_slice(&h.finalize());
+    out.extend_from_slice(&body);
+    out
+}
+
+// ---- decode ---------------------------------------------------------
+
+/// Truncation-checked little-endian cursor over the body bytes.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CheckpointError> {
+        if self.remaining() < n {
+            return Err(CheckpointError::Truncated("body field"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, CheckpointError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, CheckpointError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, CheckpointError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32(&mut self) -> Result<f32, CheckpointError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64, CheckpointError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Element count for `elem_size`-byte items, guarded against
+    /// counts that could not possibly fit in the remaining bytes (so a
+    /// corrupt length can never trigger a huge allocation).
+    fn count(&mut self, elem_size: usize) -> Result<usize, CheckpointError> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(elem_size) {
+            Some(bytes) if bytes <= self.remaining() => Ok(n),
+            _ => Err(CheckpointError::Malformed("element count exceeds body size")),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, CheckpointError> {
+        let n = self.count(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| CheckpointError::Malformed("non-UTF-8 string"))
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>, CheckpointError> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn u32s(&mut self) -> Result<Vec<u32>, CheckpointError> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn opt(&mut self) -> Result<bool, CheckpointError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            _ => Err(CheckpointError::Malformed("option tag not 0/1")),
+        }
+    }
+}
+
+/// Parse and validate complete checkpoint file bytes.
+pub fn decode(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+    if bytes.len() < HEADER_LEN {
+        return Err(CheckpointError::Truncated("header"));
+    }
+    if &bytes[..4] != MAGIC {
+        return Err(CheckpointError::BadMagic);
+    }
+    let version = u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]);
+    if version != CHECKPOINT_VERSION {
+        return Err(CheckpointError::UnsupportedVersion(version));
+    }
+    let mut len8 = [0u8; 8];
+    len8.copy_from_slice(&bytes[8..16]);
+    let body_len = u64::from_le_bytes(len8) as usize;
+    let body = &bytes[HEADER_LEN..];
+    if body.len() < body_len {
+        return Err(CheckpointError::Truncated("body"));
+    }
+    if body.len() > body_len {
+        return Err(CheckpointError::Malformed("trailing bytes after body"));
+    }
+    let mut h = Sha256::new();
+    h.update(body);
+    if h.finalize().as_slice() != &bytes[16..48] {
+        return Err(CheckpointError::HashMismatch);
+    }
+
+    let mut r = Reader { buf: body, pos: 0 };
+    let label = r.string()?;
+    let seed = r.u64()?;
+    let config_digest = r.string()?;
+    let next_round = r.u64()?;
+
+    let n_tensors = r.count(16)?;
+    let mut global_tensors = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        let off = r.u64()? as usize;
+        let len = r.u64()? as usize;
+        global_tensors.push((off, len));
+    }
+    let global_data = r.f32s()?;
+
+    let n_clients = r.count(1)?;
+    let mut clients = Vec::with_capacity(n_clients);
+    for _ in 0..n_clients {
+        let last_loss = r.f64()?;
+        let participation = r.u64()?;
+        let residual_buf = r.f32s()?;
+        let residual_age = r.u32s()?;
+        if residual_buf.len() != residual_age.len() {
+            return Err(CheckpointError::Malformed("residual value/age length mismatch"));
+        }
+        let rate = if r.opt()? {
+            let rate = r.f64()?;
+            let loss_prev = if r.opt()? { Some(r.f64()?) } else { None };
+            Some((rate, loss_prev))
+        } else {
+            None
+        };
+        let momentum_velocity = if r.opt()? { Some(r.f32s()?) } else { None };
+        clients.push(ClientCheckpoint {
+            last_loss,
+            participation,
+            residual_buf,
+            residual_age,
+            rate,
+            momentum_velocity,
+        });
+    }
+
+    let n_rows = r.count(1)?;
+    let mut rows = Vec::with_capacity(n_rows);
+    for _ in 0..n_rows {
+        let round = r.u64()?;
+        let train_loss = r.f64()?;
+        let eval_loss = r.f64()?;
+        let eval_accuracy = r.f64()?;
+        let up_bytes = r.u64()?;
+        let wire_bytes = r.u64()?;
+        let sim_time_s = r.f64()?;
+        let mean_rate = r.f64()?;
+        let survivors = r.u64()? as usize;
+        let recovered = r.u64()? as usize;
+        let timings = PhaseTimings {
+            select_s: r.f64()?,
+            train_s: r.f64()?,
+            client_train_cpu_s: r.f64()?,
+            client_encode_cpu_s: r.f64()?,
+            mask_gen_s: r.f64()?,
+            collect_s: r.f64()?,
+            recover_s: r.f64()?,
+            apply_s: r.f64()?,
+            eval_s: r.f64()?,
+        };
+        rows.push(RoundRecord {
+            round,
+            train_loss,
+            eval_loss,
+            eval_accuracy,
+            up_bytes,
+            wire_bytes,
+            sim_time_s,
+            mean_rate,
+            survivors,
+            recovered,
+            timings,
+        });
+    }
+
+    let n_costs = r.count(1)?;
+    let mut costs = Vec::with_capacity(n_costs);
+    for _ in 0..n_costs {
+        costs.push(RoundCost {
+            round: r.u64()?,
+            up_paper: r.u64()?,
+            up_wire: r.u64()?,
+            up_framed: r.u64()?,
+            down_paper: r.u64()?,
+            accuracy: r.f64()?,
+        });
+    }
+
+    if r.remaining() != 0 {
+        return Err(CheckpointError::Malformed("trailing bytes in body"));
+    }
+    Ok(Checkpoint {
+        label,
+        seed,
+        config_digest,
+        next_round,
+        global_tensors,
+        global_data,
+        clients,
+        rows,
+        costs,
+    })
+}
+
+// ---- store ----------------------------------------------------------
+
+/// A directory of `ckpt_<next_round:08>.fsckpt` snapshots with
+/// atomic saves and a paranoid loader.
+#[derive(Debug)]
+pub struct CheckpointStore {
+    dir: PathBuf,
+    /// Seeded torn-write injection for robustness tests.
+    pub torn: Option<TornWritePlan>,
+}
+
+impl CheckpointStore {
+    /// Open (creating if needed) a checkpoint directory.
+    pub fn open(dir: &Path) -> std::io::Result<Self> {
+        fs::create_dir_all(dir)?;
+        Ok(Self { dir: dir.to_path_buf(), torn: None })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path_for(&self, next_round: u64) -> PathBuf {
+        self.dir.join(format!("ckpt_{next_round:08}.fsckpt"))
+    }
+
+    /// Atomically commit a snapshot. Returns `Ok(false)` when the
+    /// store's [`TornWritePlan`] simulated a crash mid-commit (the
+    /// previous snapshot set is untouched).
+    pub fn save(&self, ck: &Checkpoint) -> std::io::Result<bool> {
+        let bytes = encode(ck);
+        let tear = self.torn.as_ref().and_then(|p| p.tear_for(ck.next_round, bytes.len()));
+        atomic::commit_bytes_torn(&self.path_for(ck.next_round), &bytes, tear)
+    }
+
+    /// Like [`CheckpointStore::save`], but with an explicit tear — the
+    /// robustness suite drives the crash through every commit step.
+    pub fn save_with(&self, ck: &Checkpoint, tear: Option<Tear>) -> std::io::Result<bool> {
+        let bytes = encode(ck);
+        atomic::commit_bytes_torn(&self.path_for(ck.next_round), &bytes, tear)
+    }
+
+    /// Snapshot files present, newest (highest `next_round`) first.
+    /// `*.tmp` debris and quarantined `*.corrupt` files are ignored.
+    fn snapshots_newest_first(&self) -> Vec<(u64, PathBuf)> {
+        let mut found = Vec::new();
+        let entries = match fs::read_dir(&self.dir) {
+            Ok(e) => e,
+            Err(_) => return found,
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            let round = name
+                .strip_prefix("ckpt_")
+                .and_then(|s| s.strip_suffix(".fsckpt"))
+                .and_then(|s| s.parse::<u64>().ok());
+            if let Some(round) = round {
+                found.push((round, entry.path()));
+            }
+        }
+        found.sort_by(|a, b| b.0.cmp(&a.0));
+        found
+    }
+
+    /// Load the newest valid snapshot. Invalid files (torn, corrupt,
+    /// wrong version) are quarantined — renamed to `<name>.corrupt`,
+    /// never deleted — and the loader falls back to the next-newest
+    /// snapshot. Returns `None` when no valid snapshot exists.
+    pub fn load_latest(&self) -> Option<(Checkpoint, PathBuf)> {
+        for (_, path) in self.snapshots_newest_first() {
+            let parsed = fs::read(&path).map_err(CheckpointError::from).and_then(|b| decode(&b));
+            match parsed {
+                Ok(ck) => return Some((ck, path)),
+                Err(e) => {
+                    let mut quarantine = path.file_name().unwrap_or_default().to_os_string();
+                    quarantine.push(".corrupt");
+                    let qpath = path.with_file_name(quarantine);
+                    eprintln!(
+                        "warning: checkpoint {} is invalid ({e}); quarantining to {} and \
+                         falling back to the previous snapshot",
+                        path.display(),
+                        qpath.display()
+                    );
+                    if let Err(re) = fs::rename(&path, &qpath) {
+                        eprintln!("warning: could not quarantine {}: {re}", path.display());
+                    }
+                }
+            }
+        }
+        None
+    }
+}

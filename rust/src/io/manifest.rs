@@ -1,0 +1,354 @@
+//! Schema-versioned, sha256-addressed run manifests (ROADMAP open
+//! item 2: the contract layer that makes a fleet of runs auditable).
+//!
+//! A manifest is a canonical-JSON document:
+//!
+//! ```json
+//! {
+//!   "schema_version": "1.0.0",
+//!   "kind": "train-run",
+//!   "run_id": "...",
+//!   "env": {"arch": "x86_64", "os": "linux"},
+//!   "meta": {...},
+//!   "artifacts": [{"bytes": 123, "path": "run.csv", "sha256": "..."}],
+//!   "manifest_sha256": "..."
+//! }
+//! ```
+//!
+//! `manifest_sha256` is the sha256 of the manifest's own canonical
+//! serialization **with that key removed** — `util::json::Value`
+//! objects are `BTreeMap`s and `Display` emits sorted keys with no
+//! whitespace, so the canonical form is the only form. Artifact
+//! `path`s are resolved relative to the manifest file's directory at
+//! validation time. The directory builder scans in sorted order and
+//! reports unreadable files without aborting
+//! (`src/bin/manifest_check.rs` is the CLI over both halves).
+
+use std::fs;
+use std::io::Read;
+use std::path::{Path, PathBuf};
+
+use sha2::{Digest, Sha256};
+
+use crate::io::atomic;
+use crate::util::json::{self, arr, num, obj, s, Value};
+
+/// Bumped on breaking manifest-layout changes; validators accept any
+/// `1.x.y`.
+pub const SCHEMA_VERSION: &str = "1.0.0";
+
+pub fn sha256_hex(bytes: &[u8]) -> String {
+    let mut h = Sha256::new();
+    h.update(bytes);
+    let digest = h.finalize();
+    let mut out = String::with_capacity(64);
+    for b in digest {
+        out.push_str(&format!("{b:02x}"));
+    }
+    out
+}
+
+/// Streaming `(sha256_hex, byte_size)` of a file.
+pub fn file_sha256(path: &Path) -> std::io::Result<(String, u64)> {
+    let mut f = fs::File::open(path)?;
+    let mut h = Sha256::new();
+    let mut buf = [0u8; 64 * 1024];
+    let mut total = 0u64;
+    loop {
+        let n = f.read(&mut buf)?;
+        if n == 0 {
+            break;
+        }
+        h.update(&buf[..n]);
+        total += n as u64;
+    }
+    let digest = h.finalize();
+    let mut out = String::with_capacity(64);
+    for b in digest {
+        out.push_str(&format!("{b:02x}"));
+    }
+    Ok((out, total))
+}
+
+/// Canonical hash of a manifest document: sha256 over its canonical
+/// serialization with the `manifest_sha256` key removed.
+pub fn canonical_sha256(manifest: &Value) -> String {
+    let mut stripped = manifest.clone();
+    if let Value::Object(map) = &mut stripped {
+        map.remove("manifest_sha256");
+    }
+    sha256_hex(stripped.to_string().as_bytes())
+}
+
+/// Insert the canonical `manifest_sha256` into the document.
+pub fn seal(mut manifest: Value) -> Value {
+    let hash = canonical_sha256(&manifest);
+    if let Value::Object(map) = &mut manifest {
+        map.insert("manifest_sha256".to_string(), Value::Str(hash));
+    }
+    manifest
+}
+
+/// A built manifest plus the files the builder could not hash —
+/// reported, not fatal (the run's own artifacts should never abort
+/// the run).
+pub struct BuiltManifest {
+    pub manifest: Value,
+    /// `(path as recorded, reason)` for every skipped artifact.
+    pub invalid: Vec<(String, String)>,
+}
+
+/// Build a sealed manifest over an explicit artifact list. Each
+/// artifact is `(path on disk, path to record)` — record paths
+/// relative to wherever the manifest will live so validation can
+/// resolve them.
+pub fn build_manifest(
+    kind: &str,
+    run_id: &str,
+    meta: Vec<(String, Value)>,
+    artifacts: &[(PathBuf, String)],
+) -> BuiltManifest {
+    let mut invalid = Vec::new();
+    let mut entries = Vec::new();
+    for (disk, recorded) in artifacts {
+        match file_sha256(disk) {
+            Ok((hash, bytes)) => entries.push(obj(vec![
+                ("path", s(recorded)),
+                ("sha256", Value::Str(hash)),
+                ("bytes", num(bytes as f64)),
+            ])),
+            Err(e) => invalid.push((recorded.clone(), e.to_string())),
+        }
+    }
+    let manifest = obj(vec![
+        ("schema_version", s(SCHEMA_VERSION)),
+        ("kind", s(kind)),
+        ("run_id", s(run_id)),
+        (
+            "env",
+            obj(vec![("os", s(std::env::consts::OS)), ("arch", s(std::env::consts::ARCH))]),
+        ),
+        ("meta", Value::Object(meta.into_iter().collect())),
+        ("artifacts", arr(entries)),
+    ]);
+    BuiltManifest { manifest: seal(manifest), invalid }
+}
+
+/// Build a sealed manifest over a directory: files are scanned in
+/// sorted name order (deterministic on every platform), optionally
+/// filtered by name prefix; `MANIFEST*.json`, `*.tmp`, and `*.corrupt`
+/// are always skipped. Unreadable files land in
+/// [`BuiltManifest::invalid`] instead of aborting the scan.
+pub fn directory_manifest(
+    dir: &Path,
+    kind: &str,
+    run_id: &str,
+    prefix: &str,
+    meta: Vec<(String, Value)>,
+) -> std::io::Result<BuiltManifest> {
+    let mut names = Vec::new();
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        if !entry.file_type().map(|t| t.is_file()).unwrap_or(false) {
+            continue;
+        }
+        let name = entry.file_name().to_string_lossy().into_owned();
+        let skip = (name.starts_with("MANIFEST") && name.ends_with(".json"))
+            || name.ends_with(".tmp")
+            || name.ends_with(".corrupt");
+        if skip || (!prefix.is_empty() && !name.starts_with(prefix)) {
+            continue;
+        }
+        names.push(name);
+    }
+    names.sort();
+    let artifacts: Vec<(PathBuf, String)> =
+        names.into_iter().map(|n| (dir.join(&n), n)).collect();
+    Ok(build_manifest(kind, run_id, meta, &artifacts))
+}
+
+/// Atomically write a manifest document to `path`.
+pub fn write_manifest(path: &Path, manifest: &Value) -> std::io::Result<()> {
+    let mut text = manifest.to_string();
+    text.push('\n');
+    atomic::commit_bytes(path, text.as_bytes())
+}
+
+/// Validate a manifest file. Returns the list of problems found —
+/// empty means the manifest is internally consistent (schema version
+/// readable, canonical hash matches) and every artifact it names
+/// exists with the recorded size and sha256 (resolved relative to the
+/// manifest's directory).
+pub fn validate_manifest_file(path: &Path) -> Vec<String> {
+    let mut issues = Vec::new();
+    let text = match fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => return vec![format!("unreadable: {e}")],
+    };
+    let doc = match json::parse(&text) {
+        Ok(v) => v,
+        Err(e) => return vec![format!("not valid JSON: {e}")],
+    };
+    if doc.as_object().is_none() {
+        return vec!["top-level value is not an object".to_string()];
+    }
+
+    match doc.get("schema_version").and_then(|v| v.as_str()) {
+        None => issues.push("missing schema_version".to_string()),
+        Some(v) if v.split('.').next() == Some("1") => {}
+        Some(v) => issues.push(format!("unsupported schema_version {v:?} (this build reads 1.x)")),
+    }
+
+    match doc.get("manifest_sha256").and_then(|v| v.as_str()) {
+        None => issues.push("missing manifest_sha256".to_string()),
+        Some(recorded) => {
+            let actual = canonical_sha256(&doc);
+            if recorded != actual {
+                issues.push(format!(
+                    "manifest_sha256 mismatch: recorded {recorded}, canonical form hashes to \
+                     {actual}"
+                ));
+            }
+        }
+    }
+
+    let base = path.parent().unwrap_or_else(|| Path::new("."));
+    match doc.get("artifacts").and_then(|v| v.as_array()) {
+        None => issues.push("missing artifacts array".to_string()),
+        Some(items) => {
+            for (i, item) in items.iter().enumerate() {
+                let apath = item.get("path").and_then(|v| v.as_str());
+                let ahash = item.get("sha256").and_then(|v| v.as_str());
+                let abytes = item.get("bytes").and_then(|v| v.as_f64());
+                let (Some(apath), Some(ahash), Some(abytes)) = (apath, ahash, abytes) else {
+                    issues.push(format!("artifact #{i} is missing path/sha256/bytes"));
+                    continue;
+                };
+                let disk = base.join(apath);
+                match file_sha256(&disk) {
+                    Err(e) => issues.push(format!("artifact {apath}: unreadable ({e})")),
+                    Ok((hash, bytes)) => {
+                        if bytes != abytes as u64 {
+                            issues.push(format!(
+                                "artifact {apath}: size changed ({bytes} bytes on disk, manifest \
+                                 recorded {})",
+                                abytes as u64
+                            ));
+                        }
+                        if hash != ahash {
+                            issues.push(format!(
+                                "artifact {apath}: sha256 mismatch (disk {hash}, manifest \
+                                 recorded {ahash})"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    issues
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d =
+            std::env::temp_dir().join(format!("fedsparse-manifest-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn sha256_hex_matches_known_vector() {
+        // sha256("") — the canonical empty-input vector.
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+    }
+
+    #[test]
+    fn directory_manifest_round_trips_through_validation() {
+        let dir = tmp_dir("roundtrip");
+        fs::write(dir.join("b.csv"), "label,round\nx,0\n").unwrap();
+        fs::write(dir.join("a.csv"), "label,round\nx,1\n").unwrap();
+        fs::write(dir.join("skip.tmp"), "debris").unwrap();
+        let built = directory_manifest(
+            &dir,
+            "test-run",
+            "run-1",
+            "",
+            vec![("note".to_string(), s("unit test"))],
+        )
+        .unwrap();
+        assert!(built.invalid.is_empty());
+        let arts = built.manifest.get("artifacts").unwrap().as_array().unwrap();
+        let names: Vec<&str> =
+            arts.iter().map(|a| a.get("path").unwrap().as_str().unwrap()).collect();
+        assert_eq!(names, ["a.csv", "b.csv"], "sorted order, debris skipped");
+        let mpath = dir.join("MANIFEST.json");
+        write_manifest(&mpath, &built.manifest).unwrap();
+        assert_eq!(validate_manifest_file(&mpath), Vec::<String>::new());
+
+        // Tampering with an artifact is caught.
+        fs::write(dir.join("a.csv"), "label,round\nx,999\n").unwrap();
+        let issues = validate_manifest_file(&mpath);
+        assert!(
+            issues.iter().any(|i| i.contains("a.csv") && i.contains("sha256")),
+            "tamper not caught: {issues:?}"
+        );
+    }
+
+    #[test]
+    fn canonical_hash_ignores_its_own_key_and_pins_everything_else() {
+        let m = seal(obj(vec![("schema_version", s(SCHEMA_VERSION)), ("kind", s("t"))]));
+        assert_eq!(canonical_sha256(&m), m.get("manifest_sha256").unwrap().as_str().unwrap());
+        // Any other field change moves the hash.
+        let m2 = seal(obj(vec![("schema_version", s(SCHEMA_VERSION)), ("kind", s("u"))]));
+        assert_ne!(
+            m.get("manifest_sha256").unwrap().as_str().unwrap(),
+            m2.get("manifest_sha256").unwrap().as_str().unwrap()
+        );
+    }
+
+    #[test]
+    fn unreadable_files_reported_not_fatal() {
+        let dir = tmp_dir("invalid");
+        fs::write(dir.join("ok.json"), "{}").unwrap();
+        let built = build_manifest(
+            "t",
+            "r",
+            Vec::new(),
+            &[
+                (dir.join("ok.json"), "ok.json".to_string()),
+                (dir.join("missing.json"), "missing.json".to_string()),
+            ],
+        );
+        assert_eq!(built.invalid.len(), 1);
+        assert_eq!(built.invalid[0].0, "missing.json");
+        let arts = built.manifest.get("artifacts").unwrap().as_array().unwrap();
+        assert_eq!(arts.len(), 1, "valid artifact still recorded");
+    }
+
+    #[test]
+    fn validator_flags_corrupted_manifest_hash() {
+        let dir = tmp_dir("badhash");
+        let mut m = seal(obj(vec![
+            ("schema_version", s(SCHEMA_VERSION)),
+            ("artifacts", arr(vec![])),
+        ]));
+        if let Value::Object(map) = &mut m {
+            map.insert("manifest_sha256".to_string(), Value::Str("0".repeat(64)));
+        }
+        let mpath = dir.join("MANIFEST.json");
+        write_manifest(&mpath, &m).unwrap();
+        let issues = validate_manifest_file(&mpath);
+        assert!(
+            issues.iter().any(|i| i.contains("manifest_sha256 mismatch")),
+            "bad hash not caught: {issues:?}"
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! Durable-run I/O: atomic file commits, versioned + checksummed
+//! training checkpoints, and schema-versioned run manifests.
+//!
+//! The three layers compose into one contract (PERF.md §Durable runs):
+//!
+//! * [`atomic`] — write-temp → fsync → rename commits, so a crash at
+//!   any instant leaves either the old file, the new file, or a
+//!   `*.tmp` leftover that every reader ignores — never a torn file
+//!   under the final name. A seeded torn-write injection hook (same
+//!   spirit as `FailurePlan`/`ChaosPlan`) lets tests crash the commit
+//!   at every step.
+//! * [`checkpoint`] — end-of-round snapshots of everything that
+//!   carries state across rounds (global params, per-client
+//!   residual/momentum/rate stores, metrics + cost cursors). Because
+//!   every RNG stream in the repo is pure in `(seed, round, cid)`,
+//!   restoring this snapshot and re-running the remaining rounds is
+//!   bitwise-identical to never having been killed.
+//! * [`manifest`] — `schema_version`'d, sha256-addressed run
+//!   manifests (ROADMAP open item 2): what a run was, what it
+//!   emitted, and a canonical `manifest_sha256` over the whole
+//!   document so provenance is machine-checkable.
+
+pub mod atomic;
+pub mod checkpoint;
+pub mod manifest;

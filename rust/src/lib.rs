@@ -78,6 +78,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod io;
 pub mod metrics;
 pub mod models;
 pub mod runtime;

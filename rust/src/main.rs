@@ -18,9 +18,11 @@ use std::process::ExitCode;
 
 use fedsparse::config::{Partition, RunConfig, TransportKind};
 use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::io::manifest::{build_manifest, sha256_hex, write_manifest};
 use fedsparse::models::manifest::Manifest;
 use fedsparse::runtime::BackendKind;
 use fedsparse::util::cli::{usage, ArgSpec, Args, CliError};
+use fedsparse::util::json::{num, Value};
 use fedsparse::util::timer::{fmt_bytes, Stopwatch};
 
 const TRAIN_SPEC: &[ArgSpec] = &[
@@ -58,6 +60,10 @@ const TRAIN_SPEC: &[ArgSpec] = &[
     ArgSpec::opt("artifacts", "", "artifacts", "AOT artifacts directory"),
     ArgSpec::opt("data-dir", "", "data", "real-dataset directory (falls back to synthetic)"),
     ArgSpec::opt("out", "o", "", "CSV output path (append mode)"),
+    ArgSpec::opt("checkpoint-dir", "", "", "directory for durable end-of-round checkpoints"),
+    ArgSpec::opt("checkpoint-every", "", "1", "commit a checkpoint every N applied rounds"),
+    ArgSpec::opt("manifest", "", "", "run-manifest output path (default: <out>.manifest.json)"),
+    ArgSpec::flag("resume", "", "resume from the newest valid checkpoint in --checkpoint-dir"),
     ArgSpec::flag("secure", "s", "mask-sparsified secure aggregation (§3.2)"),
     ArgSpec::flag("dynamic-rate", "", "Eq.2 loss-driven sparsity rate"),
     ArgSpec::flag("quiet", "q", "suppress per-round lines"),
@@ -149,6 +155,10 @@ fn build_config(args: &Args) -> anyhow::Result<RunConfig> {
     cfg.chaos_dup = args.get_parsed("chaos-dup")?;
     cfg.chaos_reorder = args.get_parsed("chaos-reorder")?;
     cfg.chaos_slow = args.get_parsed("chaos-slow")?;
+    let ckdir = args.get("checkpoint-dir").unwrap_or("");
+    cfg.checkpoint_dir = (!ckdir.is_empty()).then(|| PathBuf::from(ckdir));
+    cfg.checkpoint_every = args.get_parsed("checkpoint-every")?;
+    cfg.resume = args.get_flag("resume");
     Ok(cfg)
 }
 
@@ -184,14 +194,29 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
         if trainer_is_synth(&trainer) { " (synthetic)" } else { " (real)" },
     );
 
+    let start_round = trainer.start_round();
+    if trainer.cfg.resume && start_round > 0 {
+        println!(
+            "resumed from checkpoint: continuing at round {start_round} of {}",
+            trainer.cfg.rounds
+        );
+    }
+
     if !out.is_empty() {
         // stream rows as rounds complete (append + flush per row): a
         // crashed or killed run leaves a parseable CSV prefix behind
         // instead of nothing
-        trainer.recorder.stream_to(PathBuf::from(&out))?;
+        if trainer.cfg.resume {
+            // reconcile the killed run's CSV with the restored rows
+            // (truncate torn/rolled-back tail, keep the header) so the
+            // resumed file matches the uninterrupted twin's
+            trainer.recorder.resume_stream_to(PathBuf::from(&out))?;
+        } else {
+            trainer.recorder.stream_to(PathBuf::from(&out))?;
+        }
     }
 
-    for round in 0..trainer.cfg.rounds {
+    for round in start_round..trainer.cfg.rounds {
         let out = trainer.run_round(round)?;
         if quiet {
             continue;
@@ -243,8 +268,71 @@ fn cmd_train(argv: impl Iterator<Item = String>) -> anyhow::Result<()> {
         fmt_bytes(summary.total_up_bytes),
         fmt_bytes(summary.total_wire_bytes),
     );
+    // grep-able determinism anchor: a resumed run and its
+    // uninterrupted twin print identical hashes (CI's crash-resume
+    // soak compares exactly this line)
+    let mut param_bytes = Vec::with_capacity(trainer.global.data.len() * 4);
+    for v in &trainer.global.data {
+        param_bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    let params_hash = sha256_hex(&param_bytes);
+    println!("final_params_sha256: {params_hash}");
     if !out.is_empty() {
         println!("rows streamed to {out}");
+    }
+
+    // self-describing run manifest (--manifest, or <out>.manifest.json
+    // next to the CSV)
+    let mpath = match args.get("manifest").unwrap_or("") {
+        "" if out.is_empty() => None,
+        "" => Some(PathBuf::from(format!("{out}.manifest.json"))),
+        explicit => Some(PathBuf::from(explicit)),
+    };
+    if let Some(mpath) = mpath {
+        let created = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let label = trainer.cfg.run_label();
+        let run_id = format!("{label}-seed{}-{created}", trainer.cfg.seed);
+        let config_map: std::collections::BTreeMap<String, Value> =
+            fedsparse::config::file::to_map(&trainer.cfg)
+                .into_iter()
+                .map(|(k, v)| (k, Value::Str(v)))
+                .collect();
+        let mut meta: Vec<(String, Value)> = vec![
+            ("config".into(), Value::Object(config_map)),
+            ("created_unix".into(), num(created as f64)),
+            ("resumed_at_round".into(), num(start_round as f64)),
+            ("final_params_sha256".into(), Value::Str(params_hash)),
+            ("rounds_recorded".into(), num(trainer.recorder.rows.len() as f64)),
+            ("total_wire_bytes".into(), num(trainer.ledger.total_up_wire() as f64)),
+            ("total_framed_bytes".into(), num(trainer.ledger.total_up_framed() as f64)),
+        ];
+        if summary.final_accuracy.is_finite() {
+            meta.push(("final_accuracy".into(), num(summary.final_accuracy)));
+        }
+        let mut artifacts: Vec<(PathBuf, String)> = Vec::new();
+        if !out.is_empty() {
+            let out_path = PathBuf::from(&out);
+            // record the CSV relative to the manifest when they share a
+            // directory (the relocatable common case), else absolute
+            let recorded = if out_path.parent() == mpath.parent() {
+                out_path.file_name().unwrap_or_default().to_string_lossy().into_owned()
+            } else {
+                std::fs::canonicalize(&out_path)
+                    .unwrap_or_else(|_| out_path.clone())
+                    .to_string_lossy()
+                    .into_owned()
+            };
+            artifacts.push((out_path, recorded));
+        }
+        let built = build_manifest("train-run", &run_id, meta, &artifacts);
+        for (p, why) in &built.invalid {
+            eprintln!("warning: manifest skipped artifact {p}: {why}");
+        }
+        write_manifest(&mpath, &built.manifest)?;
+        println!("run manifest: {}", mpath.display());
     }
     Ok(())
 }

@@ -82,7 +82,12 @@ impl PhaseTimings {
 }
 
 /// One row of a training-run trace.
-#[derive(Clone, Debug, Default)]
+///
+/// `PartialEq` is field-wise (IEEE semantics: any NaN field — e.g.
+/// `eval_loss` on non-eval rounds — makes rows compare unequal);
+/// bitwise comparisons, as in the resume-determinism tests, compare
+/// `to_bits()` per float field instead.
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct RoundRecord {
     pub round: u64,
     pub train_loss: f64,
@@ -154,6 +159,70 @@ impl Recorder {
     pub fn stream_to(&mut self, path: impl AsRef<Path>) -> std::io::Result<()> {
         let mut f = std::io::BufWriter::new(open_csv_append(path.as_ref())?);
         for r in &self.rows {
+            write_row(&mut f, &self.label, r)?;
+        }
+        f.flush()?;
+        self.sink = Some(f);
+        Ok(())
+    }
+
+    /// Re-attach a live CSV stream to the file a killed run left
+    /// behind (`--resume`). The file is reconciled with the restored
+    /// rows in `self.rows` before the sink attaches:
+    ///
+    /// * the existing header is kept (no duplicate header), after the
+    ///   same schema check as [`Self::append_csv`];
+    /// * complete, well-formed data lines are kept only while they
+    ///   agree (position + round number) with the restored rows — a
+    ///   torn trailing row, a malformed line, and rows from rounds
+    ///   *after* the checkpoint (rolled back by the kill, about to be
+    ///   re-run) are all truncated away;
+    /// * restored rows the file is missing are appended.
+    ///
+    /// A missing file degrades to [`Self::stream_to`]. After this
+    /// returns, file contents ≡ header + `self.rows`, and subsequent
+    /// pushes append — so a resumed run's CSV is identical to the
+    /// uninterrupted twin's (modulo wall-clock timing columns).
+    pub fn resume_stream_to(&mut self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if !path.exists() {
+            return self.stream_to(path);
+        }
+        let text = std::fs::read_to_string(path)?;
+        let Some(header_end) = text.find('\n').map(|i| i + 1) else {
+            // no complete header line (killed at creation): start over
+            std::fs::remove_file(path)?;
+            return self.stream_to(path);
+        };
+        if text[..header_end].trim_end() != Self::CSV_HEADER {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "refusing to resume into {path:?}: its header does not match the \
+                     current schema (was it written by an older version?)"
+                ),
+            ));
+        }
+        let n_cols = Self::CSV_HEADER.split(',').count();
+        let mut keep_bytes = header_end;
+        let mut kept = 0usize;
+        for line in text[header_end..].split_inclusive('\n') {
+            if !line.ends_with('\n') || kept >= self.rows.len() {
+                break; // torn trailing row / rolled-back rounds
+            }
+            let trimmed = line.trim_end();
+            let round_field = trimmed.split(',').nth(1).and_then(|f| f.parse::<u64>().ok());
+            if trimmed.split(',').count() != n_cols || round_field != Some(self.rows[kept].round) {
+                break; // malformed or divergent: rewrite from here
+            }
+            keep_bytes += line.len();
+            kept += 1;
+        }
+        let f = std::fs::OpenOptions::new().write(true).open(path)?;
+        f.set_len(keep_bytes as u64)?;
+        drop(f);
+        let mut f = std::io::BufWriter::new(std::fs::OpenOptions::new().append(true).open(path)?);
+        for r in &self.rows[kept..] {
             write_row(&mut f, &self.label, r)?;
         }
         f.flush()?;

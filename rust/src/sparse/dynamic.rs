@@ -39,6 +39,18 @@ impl DynamicRate {
         self.rate
     }
 
+    /// Previous observed loss (checkpoint serialization).
+    pub fn loss_prev(&self) -> Option<f64> {
+        self.loss_prev
+    }
+
+    /// Overwrite the evolving state from a checkpoint snapshot
+    /// (`alpha`/`total_rounds`/`r_min` are rebuilt from config).
+    pub fn restore(&mut self, rate: f64, loss_prev: Option<f64>) {
+        self.rate = rate;
+        self.loss_prev = loss_prev;
+    }
+
     /// β for a loss transition (Alg. 2 line 8). Positive when the loss
     /// dropped. Guards against division by ~0.
     pub fn beta(loss_prev: f64, loss_now: f64) -> f64 {

@@ -78,6 +78,17 @@ impl MomentumCorrector {
     pub fn velocity_norm(&self) -> f64 {
         self.velocity.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt()
     }
+
+    /// Velocity buffer (checkpoint serialization).
+    pub fn velocity(&self) -> &[f32] {
+        &self.velocity
+    }
+
+    /// Overwrite the velocity from a checkpoint snapshot.
+    pub fn restore_velocity(&mut self, v: &[f32]) {
+        self.velocity.clear();
+        self.velocity.extend_from_slice(v);
+    }
 }
 
 /// Warm-up schedule: exponentially tighten the sparsity rate from 1.0

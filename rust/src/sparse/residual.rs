@@ -106,6 +106,20 @@ impl ResidualStore {
     pub fn as_slice(&self) -> &[f32] {
         &self.buf
     }
+
+    /// Staleness counters (checkpoint serialization).
+    pub fn ages(&self) -> &[u32] {
+        &self.age
+    }
+
+    /// Overwrite both buffers from a checkpoint snapshot.
+    pub fn restore(&mut self, buf: &[f32], age: &[u32]) {
+        assert_eq!(buf.len(), age.len(), "residual value/age length mismatch");
+        self.buf.clear();
+        self.buf.extend_from_slice(buf);
+        self.age.clear();
+        self.age.extend_from_slice(age);
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,222 @@
+//! Resume determinism: a run killed mid-way and resumed from its
+//! newest checkpoint must finish bitwise-identical to the
+//! uninterrupted twin — in plain mode and in secure
+//! (k-regular, dropout + Shamir recovery) mode. This is the
+//! load-bearing contract of `io/checkpoint.rs`: every RNG stream is
+//! pure in (seed, round, cid), so restoring the cross-round mutable
+//! state is sufficient.
+
+use std::fs;
+use std::path::PathBuf;
+
+use fedsparse::config::RunConfig;
+use fedsparse::coordinator::{Algorithm, Trainer};
+use fedsparse::metrics::recorder::RoundRecord;
+use fedsparse::runtime::BackendKind;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fedsparse-resume-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// Plain-mode config exercising every piece of checkpointed client
+/// state: residuals (sparse algorithm), Eq. 2 rate controller, DGC
+/// momentum velocity.
+fn plain_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::smoke("mnist_mlp");
+    cfg.backend = BackendKind::Native;
+    cfg.data_dir = None;
+    cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+    cfg.seed = seed;
+    cfg.rounds = 6;
+    cfg.eval_every = 2;
+    cfg.dynamic_rate = true;
+    cfg.momentum = 0.5;
+    cfg
+}
+
+/// Secure k-regular config with failure injection: dropout, Shamir
+/// mask recovery, per-round re-keying, sharded fold. The re-keying
+/// registry is deliberately NOT checkpointed — this test is what pins
+/// that the reconstructed secrets are byte-identical anyway.
+fn secure_cfg(seed: u64) -> RunConfig {
+    let mut cfg = RunConfig::smoke("mnist_mlp");
+    cfg.backend = BackendKind::Native;
+    cfg.data_dir = None;
+    cfg.algorithm = Algorithm::FlatSparse { s: 0.05 };
+    cfg.seed = seed;
+    cfg.rounds = 6;
+    cfg.eval_every = 2;
+    cfg.secure = true;
+    cfg.clients = 12;
+    cfg.clients_per_round = 6;
+    cfg.neighbors_k = 3;
+    cfg.mask_ratio_k = 0.5;
+    cfg.dropout_prob = 0.25;
+    cfg.min_survivors = 2;
+    cfg.shards = 2;
+    cfg
+}
+
+fn global_bits(t: &Trainer) -> Vec<u32> {
+    t.global.data.iter().map(|v| v.to_bits()).collect()
+}
+
+/// Deterministic row fields only — the `timings` block is wall-clock
+/// and legitimately differs between twins. Floats compare by bits so
+/// NaN (non-eval rounds) compares equal.
+fn assert_rows_eq(label: &str, a: &[RoundRecord], b: &[RoundRecord]) {
+    assert_eq!(a.len(), b.len(), "{label}: row counts differ");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.round, y.round, "{label}: row order");
+        let r = x.round;
+        assert_eq!(x.train_loss.to_bits(), y.train_loss.to_bits(), "{label} r{r}: train_loss");
+        assert_eq!(x.eval_loss.to_bits(), y.eval_loss.to_bits(), "{label} r{r}: eval_loss");
+        assert_eq!(
+            x.eval_accuracy.to_bits(),
+            y.eval_accuracy.to_bits(),
+            "{label} r{r}: eval_accuracy"
+        );
+        assert_eq!(x.up_bytes, y.up_bytes, "{label} r{r}: up_bytes");
+        assert_eq!(x.wire_bytes, y.wire_bytes, "{label} r{r}: wire_bytes");
+        assert_eq!(x.sim_time_s.to_bits(), y.sim_time_s.to_bits(), "{label} r{r}: sim_time_s");
+        assert_eq!(x.mean_rate.to_bits(), y.mean_rate.to_bits(), "{label} r{r}: mean_rate");
+        assert_eq!(x.survivors, y.survivors, "{label} r{r}: survivors");
+        assert_eq!(x.recovered, y.recovered, "{label} r{r}: recovered");
+    }
+}
+
+fn assert_costs_eq(label: &str, a: &Trainer, b: &Trainer) {
+    assert_eq!(a.ledger.rounds.len(), b.ledger.rounds.len(), "{label}: cost row counts");
+    for (x, y) in a.ledger.rounds.iter().zip(&b.ledger.rounds) {
+        let r = x.round;
+        assert_eq!(x.round, y.round, "{label}: cost order");
+        assert_eq!(x.up_paper, y.up_paper, "{label} r{r}: up_paper");
+        assert_eq!(x.up_wire, y.up_wire, "{label} r{r}: up_wire");
+        assert_eq!(x.up_framed, y.up_framed, "{label} r{r}: up_framed");
+        assert_eq!(x.down_paper, y.down_paper, "{label} r{r}: down_paper");
+        assert_eq!(x.accuracy.to_bits(), y.accuracy.to_bits(), "{label} r{r}: accuracy");
+    }
+}
+
+/// Kill-then-resume twin comparison: run `cfg` uninterrupted, run it
+/// again but drop the trainer after `kill_after` rounds, resume from
+/// the checkpoint directory, and require bitwise-equal outcomes.
+fn twin_check(label: &str, cfg: RunConfig, kill_after: u64, checkpoint_every: u64) {
+    // the uninterrupted twin
+    let mut twin = Trainer::new(cfg.clone()).unwrap();
+    twin.run().unwrap();
+
+    // the killed run
+    let dir = tmp_dir(label);
+    let mut killed_cfg = cfg.clone();
+    killed_cfg.checkpoint_dir = Some(dir.clone());
+    killed_cfg.checkpoint_every = checkpoint_every;
+    let mut killed = Trainer::new(killed_cfg.clone()).unwrap();
+    for round in 0..kill_after {
+        killed.run_round(round).unwrap();
+    }
+    drop(killed); // SIGKILL stand-in: no graceful teardown path runs
+
+    // the resumed run
+    let mut resumed_cfg = killed_cfg;
+    resumed_cfg.resume = true;
+    let mut resumed = Trainer::new(resumed_cfg).unwrap();
+    let start = resumed.start_round();
+    assert!(
+        start > 0 && start <= kill_after,
+        "{label}: resumed at {start}, expected within (0, {kill_after}]"
+    );
+    resumed.run().unwrap();
+
+    assert_eq!(global_bits(&twin), global_bits(&resumed), "{label}: final global model bits");
+    assert_rows_eq(label, &twin.recorder.rows, &resumed.recorder.rows);
+    assert_costs_eq(label, &twin, &resumed);
+}
+
+#[test]
+fn plain_resume_is_bitwise_identical_to_twin() {
+    // checkpoint_every = 1, no failure injection: the resume point is
+    // exactly the kill point
+    let cfg = plain_cfg(17);
+    twin_check("plain", cfg.clone(), 3, 1);
+
+    let dir = tmp_dir("plain-exact");
+    let mut killed_cfg = cfg;
+    killed_cfg.checkpoint_dir = Some(dir);
+    let mut killed = Trainer::new(killed_cfg.clone()).unwrap();
+    for round in 0..3 {
+        killed.run_round(round).unwrap();
+    }
+    drop(killed);
+    let mut resumed_cfg = killed_cfg;
+    resumed_cfg.resume = true;
+    let resumed = Trainer::new(resumed_cfg).unwrap();
+    assert_eq!(resumed.start_round(), 3, "every round applied ⇒ resume at the kill point");
+}
+
+#[test]
+fn secure_resume_is_bitwise_identical_to_twin() {
+    // checkpoint_every = 2 and dropout: some rounds may abort (no
+    // commit), so the resume point is the newest applied commit ≤ 4 —
+    // the replayed rounds must land bit-identically too
+    twin_check("secure", secure_cfg(23), 4, 2);
+}
+
+#[test]
+fn resume_with_no_checkpoint_starts_fresh() {
+    let dir = tmp_dir("fresh");
+    let mut cfg = plain_cfg(5);
+    cfg.rounds = 2;
+    cfg.checkpoint_dir = Some(dir);
+    cfg.resume = true;
+    let t = Trainer::new(cfg).unwrap();
+    assert_eq!(t.start_round(), 0, "empty checkpoint dir ⇒ fresh start, not an error");
+}
+
+#[test]
+fn resume_rejects_mismatched_config() {
+    let dir = tmp_dir("mismatch");
+    let mut cfg = plain_cfg(7);
+    cfg.rounds = 3;
+    cfg.checkpoint_dir = Some(dir.clone());
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    t.run().unwrap();
+    drop(t);
+
+    // same label, different seed: must be refused, not silently resumed
+    let mut other = cfg;
+    other.seed = 8;
+    other.resume = true;
+    let err = Trainer::new(other).err().expect("seed mismatch accepted");
+    assert!(format!("{err:#}").contains("seed"), "unhelpful error: {err:#}");
+}
+
+#[test]
+fn aborted_rounds_do_not_commit_checkpoints() {
+    let dir = tmp_dir("abort");
+    let mut cfg = secure_cfg(31);
+    cfg.rounds = 3;
+    cfg.dropout_prob = 0.85;
+    cfg.min_survivors = cfg.clients_per_round; // any death aborts
+    cfg.checkpoint_dir = Some(dir.clone());
+    let mut t = Trainer::new(cfg).unwrap();
+    let mut aborted = 0;
+    for round in 0..3 {
+        if t.run_round(round).unwrap().aborted {
+            aborted += 1;
+        }
+    }
+    let snapshots = fs::read_dir(&dir)
+        .unwrap()
+        .flatten()
+        .filter(|e| e.file_name().to_string_lossy().ends_with(".fsckpt"))
+        .count();
+    assert_eq!(
+        snapshots as u64,
+        3 - aborted,
+        "exactly the applied rounds commit (aborted {aborted}/3)"
+    );
+}

@@ -1,0 +1,209 @@
+//! Checkpoint codec + store robustness: no input — truncated, torn,
+//! bit-flipped, or garbage — may panic the loader, and the store must
+//! always fall back to the newest *valid* snapshot (quarantining, not
+//! deleting, bad files).
+
+use std::fs;
+use std::path::PathBuf;
+
+use fedsparse::io::atomic::Tear;
+use fedsparse::io::checkpoint::{
+    decode, encode, Checkpoint, CheckpointError, CheckpointStore, ClientCheckpoint,
+};
+use fedsparse::metrics::recorder::{PhaseTimings, RoundRecord};
+use fedsparse::util::rng::Rng;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("fedsparse-ckpt-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&d);
+    fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// A representative checkpoint exercising every optional branch of the
+/// format. No NaN fields — `Checkpoint: PartialEq` is IEEE field-wise,
+/// so the round-trip assertion needs comparable values.
+fn sample_checkpoint(next_round: u64) -> Checkpoint {
+    Checkpoint {
+        label: format!("unit-run-{next_round}"),
+        seed: 42,
+        config_digest: "d".repeat(64),
+        next_round,
+        global_tensors: vec![(0, 6), (6, 2)],
+        global_data: vec![0.5, -1.25, 3.75, 0.0, -0.0, 2.5e-3, 1.0, -7.0],
+        clients: vec![
+            ClientCheckpoint {
+                last_loss: 0.75,
+                participation: 3,
+                residual_buf: vec![0.1, -0.2, 0.0, 4.5],
+                residual_age: vec![0, 2, 7, 1],
+                rate: Some((0.05, Some(1.5))),
+                momentum_velocity: Some(vec![0.01, -0.02, 0.03, 0.0]),
+            },
+            ClientCheckpoint {
+                last_loss: 1.25,
+                participation: 0,
+                residual_buf: vec![0.0; 4],
+                residual_age: vec![0; 4],
+                rate: Some((0.1, None)),
+                momentum_velocity: None,
+            },
+            ClientCheckpoint {
+                last_loss: 2.0,
+                participation: 9,
+                residual_buf: vec![1.0, 2.0, 3.0, 4.0],
+                residual_age: vec![1, 1, 1, 1],
+                rate: None,
+                momentum_velocity: None,
+            },
+        ],
+        rows: vec![RoundRecord {
+            round: next_round.saturating_sub(1),
+            train_loss: 0.9,
+            eval_loss: 0.8,
+            eval_accuracy: 0.65,
+            up_bytes: 1234,
+            wire_bytes: 999,
+            sim_time_s: 0.25,
+            mean_rate: 0.05,
+            survivors: 5,
+            recovered: 2,
+            timings: PhaseTimings::default(),
+        }],
+        costs: vec![fedsparse::comm::cost::RoundCost {
+            round: next_round.saturating_sub(1),
+            up_paper: 1234,
+            up_wire: 999,
+            up_framed: 1031,
+            down_paper: 4096,
+            accuracy: 0.65,
+        }],
+    }
+}
+
+#[test]
+fn round_trips_bitwise() {
+    let ck = sample_checkpoint(4);
+    let bytes = encode(&ck);
+    let back = decode(&bytes).unwrap();
+    assert_eq!(back, ck);
+    // encoding is deterministic: same checkpoint, same bytes
+    assert_eq!(encode(&back), bytes);
+}
+
+#[test]
+fn every_strict_prefix_errors_cleanly() {
+    let bytes = encode(&sample_checkpoint(2));
+    for cut in 0..bytes.len() {
+        let res = decode(&bytes[..cut]);
+        assert!(res.is_err(), "prefix of {cut}/{} bytes decoded successfully", bytes.len());
+    }
+}
+
+#[test]
+fn seeded_bit_flips_never_panic_and_always_err() {
+    let bytes = encode(&sample_checkpoint(3));
+    let mut rng = Rng::new(0xc4ec);
+    for _ in 0..2000 {
+        let mut b = bytes.clone();
+        let i = rng.below(b.len() as u64) as usize;
+        b[i] ^= 1 << rng.below(8);
+        // a single bit flip always lands in the magic, version,
+        // length, hash, or hashed body — every case must be rejected
+        assert!(decode(&b).is_err(), "bit flip at byte {i} went undetected");
+    }
+}
+
+#[test]
+fn garbage_never_panics() {
+    let mut rng = Rng::new(0x6a4b);
+    for len in [0usize, 1, 4, 47, 48, 49, 200, 4096] {
+        let buf: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let _ = decode(&buf);
+        // garbage with a plausible header prefix
+        let mut with_magic = buf.clone();
+        if with_magic.len() >= 8 {
+            with_magic[..4].copy_from_slice(b"FSCP");
+            with_magic[4..8].copy_from_slice(&1u32.to_le_bytes());
+        }
+        let _ = decode(&with_magic);
+    }
+}
+
+#[test]
+fn trailing_bytes_rejected() {
+    let mut bytes = encode(&sample_checkpoint(1));
+    bytes.push(0);
+    assert!(matches!(decode(&bytes), Err(CheckpointError::Malformed(_))));
+}
+
+#[test]
+fn unsupported_version_named_in_error() {
+    let mut bytes = encode(&sample_checkpoint(1));
+    bytes[4..8].copy_from_slice(&9u32.to_le_bytes());
+    assert!(matches!(decode(&bytes), Err(CheckpointError::UnsupportedVersion(9))));
+}
+
+#[test]
+fn loader_falls_back_to_newest_valid_snapshot() {
+    let dir = tmp_dir("fallback");
+    let store = CheckpointStore::open(&dir).unwrap();
+    assert!(store.save(&sample_checkpoint(1)).unwrap());
+    assert!(store.save(&sample_checkpoint(2)).unwrap());
+    // newest snapshot lands corrupted: flip a byte inside the sha256
+    let mut bad = encode(&sample_checkpoint(3));
+    bad[40] ^= 0xff;
+    fs::write(store.path_for(3), &bad).unwrap();
+
+    let (ck, path) = store.load_latest().expect("fallback snapshot");
+    assert_eq!(ck.next_round, 2, "fell back past the corrupt newest snapshot");
+    assert_eq!(path, store.path_for(2));
+    // the corrupt file was quarantined, not deleted
+    assert!(!store.path_for(3).exists());
+    let quarantined = dir.join("ckpt_00000003.fsckpt.corrupt");
+    assert!(quarantined.exists(), "corrupt snapshot preserved for forensics");
+    assert_eq!(fs::read(quarantined).unwrap(), bad);
+}
+
+#[test]
+fn loader_returns_none_on_empty_or_all_corrupt() {
+    let dir = tmp_dir("none");
+    let store = CheckpointStore::open(&dir).unwrap();
+    assert!(store.load_latest().is_none());
+    fs::write(store.path_for(1), b"not a checkpoint").unwrap();
+    assert!(store.load_latest().is_none());
+    assert!(dir.join("ckpt_00000001.fsckpt.corrupt").exists());
+}
+
+#[test]
+fn torn_write_at_every_commit_step_leaves_loadable_state() {
+    let dir = tmp_dir("torn");
+    let store = CheckpointStore::open(&dir).unwrap();
+    let a = sample_checkpoint(1);
+    assert!(store.save(&a).unwrap());
+
+    let b = sample_checkpoint(2);
+    let len = encode(&b).len();
+    let tears = [
+        Tear::Partial { keep: 0 },
+        Tear::Partial { keep: 1 },
+        Tear::Partial { keep: 16 },
+        Tear::Partial { keep: 47 },
+        Tear::Partial { keep: 48 },
+        Tear::Partial { keep: len / 2 },
+        Tear::Partial { keep: len - 1 },
+        Tear::BeforeRename,
+    ];
+    for tear in tears {
+        assert!(!store.save_with(&b, Some(tear)).unwrap(), "{tear:?} reported a full commit");
+        // the committed name was never touched; the newest valid
+        // snapshot is still A
+        let (ck, _) = store.load_latest().expect("prior snapshot survives the torn commit");
+        assert_eq!(ck, a, "torn commit ({tear:?}) disturbed the committed snapshot set");
+    }
+
+    // the retried (un-torn) commit goes through
+    assert!(store.save(&b).unwrap());
+    let (ck, _) = store.load_latest().unwrap();
+    assert_eq!(ck, b);
+}

@@ -57,3 +57,84 @@ fn partially_driven_trainer_leaves_parseable_csv_prefix() {
         assert_eq!(round, row.round);
     }
 }
+
+/// The `--resume` half of crash-safe metrics: `resume_stream_to`
+/// reconciles a killed run's CSV (possibly ending in a torn row, or
+/// holding rows from rounds the checkpoint rolled back) with the
+/// restored recorder — keeping the header, truncating the divergent
+/// tail, and appending the missing rows — so the resumed file ends up
+/// identical in shape to the uninterrupted twin's.
+#[test]
+fn kill_then_resume_csv_round_trip() {
+    use fedsparse::metrics::recorder::{Recorder, RoundRecord};
+    use std::io::Write;
+
+    let dir = std::env::temp_dir().join(format!("fedsparse-stream-resume-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("resume.csv");
+    let _ = std::fs::remove_file(&path);
+
+    let row = |round: u64| RoundRecord { round, survivors: 4, ..Default::default() };
+
+    // "killed" run: streams rounds 0..4, then dies mid-write of round 4
+    let mut first = Recorder::new("unit");
+    first.stream_to(&path).unwrap();
+    for r in 0..4 {
+        first.push(row(r));
+    }
+    drop(first);
+    {
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"unit,4,0.12").unwrap(); // torn row: no newline
+    }
+
+    // resume from a checkpoint taken after round 3: the recorder is
+    // restored with rows 0..3 — round 3 was recorded on disk but rolled
+    // back, and the torn round-4 fragment must go too
+    let mut resumed = Recorder::new("unit");
+    for r in 0..3 {
+        resumed.rows.push(row(r));
+    }
+    resumed.resume_stream_to(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_parseable(&text, 3, "unit");
+
+    // rounds 3..6 now re-run and append; no duplicate header, no
+    // duplicate rows
+    for r in 3..6 {
+        resumed.push(row(r));
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_parseable(&text, 6, "unit");
+    assert_eq!(text.matches("label,round").count(), 1, "exactly one header");
+}
+
+#[test]
+fn resume_stream_to_handles_missing_and_headerless_files() {
+    let dir = std::env::temp_dir().join(format!("fedsparse-stream-edge-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    use fedsparse::metrics::recorder::{Recorder, RoundRecord};
+
+    // missing file: behaves like stream_to (backlog written, header once)
+    let missing = dir.join("missing.csv");
+    let _ = std::fs::remove_file(&missing);
+    let mut rec = Recorder::new("unit");
+    rec.rows.push(RoundRecord { round: 0, ..Default::default() });
+    rec.resume_stream_to(&missing).unwrap();
+    assert_parseable(&std::fs::read_to_string(&missing).unwrap(), 1, "unit");
+
+    // a file killed mid-header (no newline at all): started over
+    let torn = dir.join("torn-header.csv");
+    std::fs::write(&torn, "label,rou").unwrap();
+    let mut rec = Recorder::new("unit");
+    rec.rows.push(RoundRecord { round: 0, ..Default::default() });
+    rec.resume_stream_to(&torn).unwrap();
+    assert_parseable(&std::fs::read_to_string(&torn).unwrap(), 1, "unit");
+
+    // a complete but foreign header: refused, not silently rewritten
+    let foreign = dir.join("foreign.csv");
+    std::fs::write(&foreign, "time,value\n1,2\n").unwrap();
+    let mut rec = Recorder::new("unit");
+    let err = rec.resume_stream_to(&foreign).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+}
